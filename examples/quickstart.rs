@@ -1,0 +1,42 @@
+//! Quickstart: train EdgeFLow for a handful of rounds and print the
+//! accuracy + communication summary.
+//!
+//! ```bash
+//! make artifacts            # once
+//! cargo run --release --example quickstart
+//! ```
+
+use edgeflow::config::{preset, Algorithm};
+use edgeflow::fl::runner::Runner;
+
+fn main() -> edgeflow::Result<()> {
+    edgeflow::util::logging::init(false);
+
+    // Start from a paper preset and scale it to a ~30 s CPU run.
+    let mut cfg = preset("table1_fashion_iid")?;
+    cfg.algorithm = Algorithm::EdgeFlowSeq;
+    cfg.rounds = 30;
+    cfg.eval_every = 5;
+    cfg.samples_per_client = 100;
+    cfg.test_samples = 400;
+
+    println!("config: {}", cfg.to_json().pretty());
+    let mut runner = Runner::new(cfg, "artifacts")?;
+    let report = runner.run()?;
+
+    println!("\n=== quickstart result ===");
+    println!("algorithm        : {}", report.algorithm);
+    println!("rounds           : {}", report.rounds);
+    println!("final accuracy   : {:.2}%", report.final_accuracy * 100.0);
+    println!("best accuracy    : {:.2}%", report.best_accuracy * 100.0);
+    println!("final train loss : {:.4}", report.final_loss);
+    println!(
+        "communication    : {} byte-hops total",
+        report.total_byte_hops
+    );
+    println!("\naccuracy curve (round, accuracy):");
+    for (round, acc) in report.metrics.accuracy_curve() {
+        println!("  {round:>4}  {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}

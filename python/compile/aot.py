@@ -1,0 +1,196 @@
+"""AOT pipeline: lower the L2 model to HLO text + init blobs + manifest.
+
+Runs once at build time (``make artifacts``); the Rust coordinator is
+self-contained afterwards.  Interchange format is **HLO text** — the image's
+xla_extension 0.5.1 rejects serialized protos from jax>=0.5 (64-bit
+instruction ids), while the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs in ``artifacts/``:
+  * ``<variant>_<opt>_k<K>_b<B>_local_update.hlo.txt``
+  * ``<variant>_eval_b<B>.hlo.txt``
+  * ``<variant>_<opt>_init.bin``   — f32 LE blob: params ++ bn ++ opt
+  * ``manifest.json``              — shapes, orders, executable table
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+(``--fast`` restricts to the MLP variants for quick CI runs;
+``--backend jnp`` swaps the Pallas kernels for the jnp oracle — used by the
+perf ablation in EXPERIMENTS.md §Perf.)
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Build matrix: variant -> (opts, K values, train batch, eval batch).
+# Pallas-kernel variants are the primary artifacts; *_jnp twins (identical
+# parameter layout) exist for long CPU runs and the §Perf backend ablation;
+# the full-width fashion_cnn/cifar_cnn are "paper-scale" reference builds.
+BUILD_MATRIX = {
+    "fashion_mlp": (("sgd", "adam"), (1, 2, 5, 10), 64, 100),
+    "cifar_mlp": (("adam",), (1, 2, 5, 10), 64, 100),
+    "fashion_cnn_slim": (("sgd", "adam"), (5,), 64, 100),
+    "cifar_cnn_slim": (("adam",), (5,), 64, 100),
+    "fashion_cnn_slim_jnp": (("sgd", "adam"), (5,), 64, 100),
+    "cifar_cnn_slim_jnp": (("adam",), (5,), 64, 100),
+    "fashion_cnn_slim_fast": (("sgd", "adam"), (5,), 64, 100),
+    "cifar_cnn_slim_fast": (("adam",), (1, 2, 5, 10), 64, 100),
+    "fashion_cnn": (("adam",), (5,), 64, 100),
+    "cifar_cnn": (("adam",), (5,), 64, 100),
+}
+FAST_VARIANTS = ("fashion_mlp", "cifar_mlp")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_local_update(spec: M.ModelSpec, opt: str, k: int, b: int) -> str:
+    """Lower K local steps (scan) to HLO text."""
+    h, w, c = spec.image
+
+    def fn(params, bn, opt_state, xs, ys, lr):
+        p, s, o, loss = M.local_update_value_and_grad(
+            spec, opt, params, bn, opt_state, xs, ys, lr
+        )
+        return tuple(p) + tuple(s) + tuple(o) + (loss,)
+
+    params = [_sds(s) for _, s in M.param_entries(spec)]
+    bn = [_sds(s) for _, s in M.bn_entries(spec)]
+    opt_state = [_sds(s) for _, s in M.opt_entries(spec, opt)]
+    xs = _sds((k, b, h, w, c))
+    ys = _sds((k, b), jnp.int32)
+    lr = _sds((), jnp.float32)
+    lowered = jax.jit(fn).lower(params, bn, opt_state, xs, ys, lr)
+    return to_hlo_text(lowered)
+
+
+def lower_eval(spec: M.ModelSpec, b: int) -> str:
+    """Lower single-batch evaluation to HLO text."""
+    h, w, c = spec.image
+
+    def fn(params, bn, x, y):
+        return M.eval_batch(spec, params, bn, x, y)
+
+    params = [_sds(s) for _, s in M.param_entries(spec)]
+    bn = [_sds(s) for _, s in M.bn_entries(spec)]
+    x = _sds((b, h, w, c))
+    y = _sds((b,), jnp.int32)
+    lowered = jax.jit(fn).lower(params, bn, x, y)
+    return to_hlo_text(lowered)
+
+
+def init_blob(spec: M.ModelSpec, opt: str, seed: int) -> bytes:
+    """Little-endian f32 concatenation of params ++ bn ++ opt_state."""
+    params, bn, opt_state = M.init_state(spec, opt, seed)
+    parts = [np.asarray(a, dtype="<f4").ravel() for a in params + bn + opt_state]
+    return np.concatenate(parts).tobytes() if parts else b""
+
+
+def variant_manifest(spec: M.ModelSpec, opts, ks, b_train, b_eval) -> dict:
+    ent = lambda pairs: [{"name": n, "shape": list(s)} for n, s in pairs]
+    execs = {
+        "eval": f"{spec.name}_eval_b{b_eval}.hlo.txt",
+        "local_update": {
+            opt: {
+                f"k{k}_b{b_train}": f"{spec.name}_{opt}_k{k}_b{b_train}_local_update.hlo.txt"
+                for k in ks
+            }
+            for opt in opts
+        },
+    }
+    return {
+        "arch": spec.arch,
+        "backend": "pallas" if spec.use_pallas else f"jnp/{spec.conv_impl}",
+        "image": list(spec.image),
+        "classes": spec.classes,
+        "train_batch": b_train,
+        "eval_batch": b_eval,
+        "k_values": list(ks),
+        "optimizers": list(opts),
+        "params": ent(M.param_entries(spec)),
+        "bn_state": ent(M.bn_entries(spec)),
+        "opt_state": {opt: ent(M.opt_entries(spec, opt)) for opt in opts},
+        "init_blob": {opt: f"{spec.name}_{opt}_init.bin" for opt in opts},
+        "executables": execs,
+        "io_contract": {
+            "local_update_inputs": "params ++ bn ++ opt ++ [xs(K,B,H,W,C) f32, ys(K,B) i32, lr() f32]",
+            "local_update_outputs": "params ++ bn ++ opt ++ [mean_loss() f32]",
+            "eval_inputs": "params ++ bn ++ [x(B,H,W,C) f32, y(B) i32]",
+            "eval_outputs": "[loss_sum() f32, correct() f32]",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--fast", action="store_true", help="MLP variants only")
+    ap.add_argument(
+        "--backend", choices=("auto", "pallas", "jnp"), default="auto",
+        help="kernel backend lowered into the HLO: auto = per-variant "
+        "(the registry's use_pallas flag), pallas/jnp = force override",
+    )
+    ap.add_argument("--seed", type=int, default=0, help="init parameter seed")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant subset to build"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(BUILD_MATRIX)
+    if args.fast:
+        names = [n for n in names if n in FAST_VARIANTS]
+    if args.only:
+        names = [n for n in names if n in set(args.only.split(","))]
+
+    manifest = {"version": 1, "backend": args.backend, "seed": args.seed,
+                "variants": {}}
+    for name in names:
+        opts, ks, b_train, b_eval = BUILD_MATRIX[name]
+        spec = M.VARIANTS[name]
+        if args.backend != "auto":
+            spec = dataclasses.replace(spec, use_pallas=(args.backend == "pallas"))
+        print(f"[aot] {name}: opts={opts} ks={ks} b={b_train}", flush=True)
+        for opt in opts:
+            for k in ks:
+                path = f"{name}_{opt}_k{k}_b{b_train}_local_update.hlo.txt"
+                text = lower_local_update(spec, opt, k, b_train)
+                with open(os.path.join(args.out, path), "w") as f:
+                    f.write(text)
+                print(f"[aot]   wrote {path} ({len(text)} chars)", flush=True)
+            blob = init_blob(spec, opt, args.seed)
+            with open(os.path.join(args.out, f"{name}_{opt}_init.bin"), "wb") as f:
+                f.write(blob)
+        epath = f"{name}_eval_b{b_eval}.hlo.txt"
+        with open(os.path.join(args.out, epath), "w") as f:
+            f.write(lower_eval(spec, b_eval))
+        print(f"[aot]   wrote {epath}", flush=True)
+        manifest["variants"][name] = variant_manifest(spec, opts, ks, b_train, b_eval)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] manifest with {len(manifest['variants'])} variants -> "
+          f"{args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for EdgeFLow.
+
+All kernels run under ``interpret=True`` so that they lower to plain HLO ops
+executable on the CPU PJRT client (real-TPU lowering would emit Mosaic
+custom-calls the CPU plugin cannot run).  Each kernel ships with a
+``jax.custom_vjp`` so the L2 model can be differentiated; backward passes
+reuse the forward kernels where the math allows (matmul) and fall back to
+fused jnp expressions for pure elementwise/reduction tails.
+
+Correctness oracle: :mod:`compile.kernels.ref` (pure jnp), enforced by
+``python/tests`` with hypothesis shape sweeps.
+"""
+
+from .matmul import pallas_matmul  # noqa: F401
+from .conv2d import pallas_conv2d_3x3_same  # noqa: F401
+from .norm import pallas_bn_scale_relu  # noqa: F401
+from .xent import pallas_softmax_xent  # noqa: F401

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for every Pallas kernel (the correctness contract).
+
+``python/tests`` asserts each kernel against these references with
+``assert_allclose`` under hypothesis-driven shape/dtype sweeps.  The
+references are intentionally the most direct jnp formulation — no tiling,
+no padding, no fusion — so a disagreement always implicates the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain ``a @ b`` with fp32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def ref_conv2d_3x3_same(x: jax.Array, w: jax.Array) -> jax.Array:
+    """3x3 SAME conv, NHWC x HWIO -> NHWC, via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def ref_bn_scale_relu(x, gamma, beta, mean, var, eps: float = 1e-5):
+    """relu((x - mean) / sqrt(var + eps) * gamma + beta), stats given."""
+    y = (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+    return jnp.maximum(y, 0.0)
+
+
+def ref_softmax_xent(logits, onehot):
+    """Per-sample -log softmax(logits)[label] from one-hot labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(onehot * logp, axis=-1)
+
+
+def ref_batch_stats(x):
+    """(mean, biased var) over all axes except the channel-last axis."""
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.mean(jnp.square(x - mean), axis=axes)
+    return mean, var
+
+
+def ref_maxpool2x2(x):
+    """2x2 max pooling, stride 2, NHWC; floor semantics on odd dims."""
+    n, h, w, c = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, : h2 * 2, : w2 * 2, :]
+    x = x.reshape(n, h2, 2, w2, 2, c)
+    return jnp.max(x, axis=(2, 4))

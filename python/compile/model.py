@@ -1,0 +1,406 @@
+"""Layer-2: the EdgeFLow learning model (paper §IV.A) in functional JAX.
+
+Architecture (paper-faithful): a six-layer CNN with 3x3 kernels, batch
+normalization after every convolution, 2x2 max-pooling after every second
+convolution, and two fully-connected layers ``(128, 10)``, trained with
+cross-entropy under SGD (the paper's analysis, Eq. 2) or Adam (the paper's
+experiments).  An MLP variant is provided for fast CPU-scale sweeps.
+
+Everything here is *build-time only*: :mod:`compile.aot` lowers
+``local_update`` (K local SGD/Adam steps as a ``lax.scan``, Eq. 2) and
+``eval_batch`` to HLO text that the Rust coordinator executes via PJRT.
+The compute hot spots route through the Layer-1 Pallas kernels; a pure-jnp
+backend (``use_pallas=False``) exists for A/B perf comparisons and as a
+secondary oracle for the full model.
+
+Parameter / state layout contract (what the Rust side relies on):
+  * ``init_state(spec, opt, seed)`` returns ``(params, bn_state, opt_state)``
+    — each a *list* of arrays in a fixed, documented order (see
+    ``param_names`` etc.); the manifest records names/shapes.
+  * ``local_update``  inputs: params ++ bn ++ opt ++ [xs, ys, lr]
+                      outputs: params' ++ bn' ++ opt' ++ [mean_loss]
+  * ``eval_batch``    inputs: params ++ bn ++ [x, y]
+                      outputs: [loss_sum, correct_count]
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    pallas_bn_scale_relu,
+    pallas_conv2d_3x3_same,
+    pallas_matmul,
+    pallas_softmax_xent,
+)
+from .kernels import ref
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static description of one model variant."""
+
+    name: str
+    arch: str  # "cnn6" | "mlp"
+    image: Tuple[int, int, int]  # (H, W, C)
+    classes: int = 10
+    conv_channels: Tuple[int, ...] = (16, 16, 32, 32, 64, 64)
+    fc_hidden: int = 128
+    mlp_hidden: Tuple[int, ...] = (128, 64)
+    use_pallas: bool = True
+    # Convolution lowering for the jnp backend: "lax" (lax.conv — optimal
+    # on modern XLA) or "im2col" (patches + matmul — 6.3x faster on the
+    # xla_extension 0.5.1 CPU runtime the Rust coordinator embeds, whose
+    # Eigen conv path predates the thunk runtime; see EXPERIMENTS.md §Perf).
+    conv_impl: str = "lax"
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def _he(rng, shape, fan_in):
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def param_entries(spec: ModelSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) of all trainable parameters."""
+    h, w, c = spec.image
+    entries = []
+    if spec.arch == "cnn6":
+        cin = c
+        for i, cout in enumerate(spec.conv_channels):
+            entries.append((f"conv{i}_w", (3, 3, cin, cout)))
+            entries.append((f"bn{i}_gamma", (cout,)))
+            entries.append((f"bn{i}_beta", (cout,)))
+            cin = cout
+        # three 2x2 pools (after conv 1, 3, 5) with floor semantics
+        fh, fw = h, w
+        for _ in range(3):
+            fh, fw = fh // 2, fw // 2
+        flat = fh * fw * spec.conv_channels[-1]
+        entries.append(("fc1_w", (flat, spec.fc_hidden)))
+        entries.append(("fc1_b", (spec.fc_hidden,)))
+        entries.append(("fc2_w", (spec.fc_hidden, spec.classes)))
+        entries.append(("fc2_b", (spec.classes,)))
+    elif spec.arch == "mlp":
+        din = h * w * c
+        for i, dh in enumerate(spec.mlp_hidden):
+            entries.append((f"fc{i}_w", (din, dh)))
+            entries.append((f"fc{i}_b", (dh,)))
+            din = dh
+        k = len(spec.mlp_hidden)
+        entries.append((f"fc{k}_w", (din, spec.classes)))
+        entries.append((f"fc{k}_b", (spec.classes,)))
+    else:
+        raise ValueError(f"unknown arch {spec.arch!r}")
+    return entries
+
+
+def bn_entries(spec: ModelSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) of BN running statistics (non-trainable)."""
+    if spec.arch != "cnn6":
+        return []
+    out = []
+    for i, cout in enumerate(spec.conv_channels):
+        out.append((f"bn{i}_mean", (cout,)))
+        out.append((f"bn{i}_var", (cout,)))
+    return out
+
+
+def opt_entries(spec: ModelSpec, opt: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) of optimizer state tensors."""
+    if opt == "sgd":
+        return []
+    if opt == "adam":
+        out = []
+        for n, s in param_entries(spec):
+            out.append((f"adam_m_{n}", s))
+        for n, s in param_entries(spec):
+            out.append((f"adam_v_{n}", s))
+        out.append(("adam_t", ()))
+        return out
+    raise ValueError(f"unknown optimizer {opt!r}")
+
+
+def init_state(spec: ModelSpec, opt: str, seed: int = 0):
+    """Initial (params, bn_state, opt_state) as lists of jnp arrays."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_entries(spec):
+        if name.endswith("_w"):
+            fan_in = int(np.prod(shape[:-1]))
+            params.append(jnp.asarray(_he(rng, shape, fan_in)))
+        elif "gamma" in name:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:  # beta, biases
+            params.append(jnp.zeros(shape, jnp.float32))
+    bn_state = []
+    for name, shape in bn_entries(spec):
+        bn_state.append(
+            jnp.ones(shape, jnp.float32)
+            if name.endswith("_var")
+            else jnp.zeros(shape, jnp.float32)
+        )
+    opt_state = [jnp.zeros(s, jnp.float32) for _, s in opt_entries(spec, opt)]
+    return params, bn_state, opt_state
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _dense(x, w, b, spec: ModelSpec):
+    y = pallas_matmul(x, w) if spec.use_pallas else ref.ref_matmul(x, w)
+    return y + b
+
+
+def _conv(x, w, spec: ModelSpec):
+    if spec.use_pallas:
+        return pallas_conv2d_3x3_same(x, w)
+    if spec.conv_impl == "im2col":
+        from .kernels.conv2d import im2col_3x3_same
+
+        n, h, wd, cin = x.shape
+        cout = w.shape[-1]
+        patches = im2col_3x3_same(x).reshape(n * h * wd, 9 * cin)
+        out = ref.ref_matmul(patches, w.reshape(9 * cin, cout))
+        return out.reshape(n, h, wd, cout)
+    return ref.ref_conv2d_3x3_same(x, w)
+
+
+def _bn_relu(x, gamma, beta, mean, var, spec: ModelSpec):
+    if spec.use_pallas:
+        return pallas_bn_scale_relu(x, gamma, beta, mean, var, BN_EPS)
+    return ref.ref_bn_scale_relu(x, gamma, beta, mean, var, BN_EPS)
+
+
+def forward(spec: ModelSpec, params, bn_state, x, train: bool):
+    """Compute logits.
+
+    Args:
+      spec: model variant.
+      params: trainable parameter list (order of :func:`param_entries`).
+      bn_state: running BN stats list (order of :func:`bn_entries`).
+      x: ``[B, H, W, C]`` batch.
+      train: batch statistics + running-stat update if True, running
+        statistics if False.
+
+    Returns:
+      (logits ``[B, classes]``, new_bn_state list)
+    """
+    if spec.arch == "mlp":
+        b = x.shape[0]
+        h = x.reshape(b, -1)
+        i = 0
+        nlayers = len(spec.mlp_hidden) + 1
+        for li in range(nlayers):
+            w, bia = params[i], params[i + 1]
+            i += 2
+            h = _dense(h, w, bia, spec)
+            if li < nlayers - 1:
+                h = jnp.maximum(h, 0.0)
+        return h, list(bn_state)
+
+    # cnn6
+    new_bn = []
+    h = x
+    pi = 0
+    for i in range(len(spec.conv_channels)):
+        w, gamma, beta = params[pi], params[pi + 1], params[pi + 2]
+        pi += 3
+        run_mean, run_var = bn_state[2 * i], bn_state[2 * i + 1]
+        h = _conv(h, w, spec)
+        if train:
+            mean, var = ref.ref_batch_stats(h)
+            new_bn.append(BN_MOMENTUM * run_mean + (1 - BN_MOMENTUM) * mean)
+            new_bn.append(BN_MOMENTUM * run_var + (1 - BN_MOMENTUM) * var)
+        else:
+            mean, var = run_mean, run_var
+            new_bn.append(run_mean)
+            new_bn.append(run_var)
+        h = _bn_relu(h, gamma, beta, mean, var, spec)
+        if i % 2 == 1:  # pool after every second conv
+            h = ref.ref_maxpool2x2(h)
+    b = h.shape[0]
+    h = h.reshape(b, -1)
+    h = _dense(h, params[pi], params[pi + 1], spec)
+    h = jnp.maximum(h, 0.0)
+    logits = _dense(h, params[pi + 2], params[pi + 3], spec)
+    return logits, new_bn
+
+
+def loss_and_bn(spec: ModelSpec, params, bn_state, x, y):
+    """Mean cross-entropy over the batch (train mode)."""
+    logits, new_bn = forward(spec, params, bn_state, x, train=True)
+    onehot = jax.nn.one_hot(y, spec.classes, dtype=logits.dtype)
+    if spec.use_pallas:
+        losses = pallas_softmax_xent(logits, onehot)
+    else:
+        losses = ref.ref_softmax_xent(logits, onehot)
+    return jnp.mean(losses), new_bn
+
+
+# ---------------------------------------------------------------------------
+# Optimizers + local update (paper Eq. 2, K steps)
+# ---------------------------------------------------------------------------
+
+
+def _sgd_step(params, grads, opt_state, lr):
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return new_params, opt_state
+
+
+def _adam_step(params, grads, opt_state, lr):
+    n = len(params)
+    m, v, t = opt_state[:n], opt_state[n : 2 * n], opt_state[2 * n]
+    t = t + 1.0
+    new_m = [ADAM_B1 * mi + (1 - ADAM_B1) * g for mi, g in zip(m, grads)]
+    new_v = [ADAM_B2 * vi + (1 - ADAM_B2) * g * g for vi, g in zip(v, grads)]
+    mhat_scale = 1.0 / (1.0 - ADAM_B1**t)
+    vhat_scale = 1.0 / (1.0 - ADAM_B2**t)
+    new_params = [
+        p - lr * (mi * mhat_scale) / (jnp.sqrt(vi * vhat_scale) + ADAM_EPS)
+        for p, mi, vi in zip(params, new_m, new_v)
+    ]
+    return new_params, new_m + new_v + [t]
+
+
+def local_update(spec: ModelSpec, opt: str, params, bn_state, opt_state, xs, ys, lr):
+    """K local training steps (Eq. 2) as one ``lax.scan``.
+
+    Args:
+      params/bn_state/opt_state: lists per the layout contract.
+      xs: ``[K, B, H, W, C]`` minibatches (one per local step).
+      ys: ``[K, B]`` int32 labels.
+      lr: scalar learning rate.
+
+    Returns:
+      (params', bn_state', opt_state', mean loss over the K steps)
+    """
+    grad_fn = jax.grad(
+        lambda p, bn, x, y: loss_and_bn(spec, p, bn, x, y), has_aux=True
+    )
+
+    def body(carry, batch):
+        params, bn_state, opt_state = carry
+        x, y = batch
+        grads, new_bn = grad_fn(params, bn_state, x, y)
+        loss, _ = loss_and_bn(spec, params, bn_state, x, y)
+        if opt == "sgd":
+            new_params, new_opt = _sgd_step(params, grads, opt_state, lr)
+        else:
+            new_params, new_opt = _adam_step(params, grads, opt_state, lr)
+        return (new_params, new_bn, new_opt), loss
+
+    (params, bn_state, opt_state), losses = jax.lax.scan(
+        body, (params, bn_state, opt_state), (xs, ys)
+    )
+    return params, bn_state, opt_state, jnp.mean(losses)
+
+
+def local_update_value_and_grad(spec, opt, params, bn_state, opt_state, xs, ys, lr):
+    """Same as :func:`local_update` but avoids the double forward.
+
+    ``jax.value_and_grad`` fuses the loss evaluation with the gradient —
+    used by the optimized artifacts; kept separate so tests can compare.
+    """
+    vg = jax.value_and_grad(
+        lambda p, bn, x, y: loss_and_bn(spec, p, bn, x, y), has_aux=True
+    )
+
+    def body(carry, batch):
+        params, bn_state, opt_state = carry
+        x, y = batch
+        (loss, new_bn), grads = vg(params, bn_state, x, y)
+        if opt == "sgd":
+            new_params, new_opt = _sgd_step(params, grads, opt_state, lr)
+        else:
+            new_params, new_opt = _adam_step(params, grads, opt_state, lr)
+        return (new_params, new_bn, new_opt), loss
+
+    (params, bn_state, opt_state), losses = jax.lax.scan(
+        body, (params, bn_state, opt_state), (xs, ys)
+    )
+    return params, bn_state, opt_state, jnp.mean(losses)
+
+
+def eval_batch(spec: ModelSpec, params, bn_state, x, y):
+    """Evaluation on one batch with running BN statistics.
+
+    Returns:
+      (loss_sum, correct_count) — both f32 scalars so the caller can
+      aggregate exactly over uneven final batches.
+    """
+    logits, _ = forward(spec, params, bn_state, x, train=False)
+    onehot = jax.nn.one_hot(y, spec.classes, dtype=logits.dtype)
+    if spec.use_pallas:
+        losses = pallas_softmax_xent(logits, onehot)
+    else:
+        losses = ref.ref_softmax_xent(logits, onehot)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == y).astype(jnp.float32))
+    return jnp.sum(losses), correct
+
+
+# ---------------------------------------------------------------------------
+# Variant registry (what aot.py builds)
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    "fashion_cnn": ModelSpec(
+        name="fashion_cnn", arch="cnn6", image=(28, 28, 1),
+        conv_channels=(16, 16, 32, 32, 64, 64), fc_hidden=128,
+    ),
+    "cifar_cnn": ModelSpec(
+        name="cifar_cnn", arch="cnn6", image=(32, 32, 3),
+        conv_channels=(16, 16, 32, 32, 64, 64), fc_hidden=128,
+    ),
+    "fashion_cnn_slim": ModelSpec(
+        name="fashion_cnn_slim", arch="cnn6", image=(28, 28, 1),
+        conv_channels=(8, 8, 16, 16, 32, 32), fc_hidden=64,
+    ),
+    "cifar_cnn_slim": ModelSpec(
+        name="cifar_cnn_slim", arch="cnn6", image=(32, 32, 3),
+        conv_channels=(8, 8, 16, 16, 32, 32), fc_hidden=64,
+    ),
+    # jnp-backend twins: identical parameter layout, XLA-native ops instead
+    # of interpret-mode Pallas (which is ~17x slower on the CNN hot path).
+    # *_jnp uses lax.conv (the modern-XLA-optimal lowering, kept for the
+    # backend ablation); *_fast uses im2col+matmul, 6.3x faster than lax.conv (92x vs interpret) on the Rust
+    # side's xla_extension 0.5.1 CPU runtime — the production CPU variant.
+    # See EXPERIMENTS.md §Perf for both measurements.
+    "fashion_cnn_slim_jnp": ModelSpec(
+        name="fashion_cnn_slim_jnp", arch="cnn6", image=(28, 28, 1),
+        conv_channels=(8, 8, 16, 16, 32, 32), fc_hidden=64, use_pallas=False,
+    ),
+    "cifar_cnn_slim_jnp": ModelSpec(
+        name="cifar_cnn_slim_jnp", arch="cnn6", image=(32, 32, 3),
+        conv_channels=(8, 8, 16, 16, 32, 32), fc_hidden=64, use_pallas=False,
+    ),
+    "fashion_cnn_slim_fast": ModelSpec(
+        name="fashion_cnn_slim_fast", arch="cnn6", image=(28, 28, 1),
+        conv_channels=(8, 8, 16, 16, 32, 32), fc_hidden=64, use_pallas=False,
+        conv_impl="im2col",
+    ),
+    "cifar_cnn_slim_fast": ModelSpec(
+        name="cifar_cnn_slim_fast", arch="cnn6", image=(32, 32, 3),
+        conv_channels=(8, 8, 16, 16, 32, 32), fc_hidden=64, use_pallas=False,
+        conv_impl="im2col",
+    ),
+    "fashion_mlp": ModelSpec(
+        name="fashion_mlp", arch="mlp", image=(28, 28, 1), mlp_hidden=(128, 64)
+    ),
+    "cifar_mlp": ModelSpec(
+        name="cifar_mlp", arch="mlp", image=(32, 32, 3), mlp_hidden=(256, 128)
+    ),
+}

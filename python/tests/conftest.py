@@ -1,0 +1,18 @@
+"""Shared pytest fixtures for the EdgeFLow python test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile.*` importable regardless of the pytest invocation cwd.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PYROOT = os.path.dirname(_HERE)
+if _PYROOT not in sys.path:
+    sys.path.insert(0, _PYROOT)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

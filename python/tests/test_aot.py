@@ -1,0 +1,160 @@
+"""AOT pipeline tests: HLO text validity, manifest/blob consistency,
+and an end-to-end lowered-vs-eager numerical check."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
+
+needs_artifacts = pytest.mark.skipif(
+    not HAVE_ARTIFACTS, reason="run `make artifacts` first"
+)
+
+
+def _nelems(entries):
+    return sum(int(np.prod(e["shape"])) if e["shape"] else 1 for e in entries)
+
+
+def test_hlo_text_roundtrip_small():
+    """Lowered HLO text must parse back through xla_client (the same
+    parser family the Rust xla crate uses)."""
+    spec = M.VARIANTS["fashion_mlp"]
+    text = aot.lower_eval(spec, 8)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # All parameters appear: params ++ bn ++ x ++ y
+    n_inputs = len(M.param_entries(spec)) + len(M.bn_entries(spec)) + 2
+    for i in range(n_inputs):
+        assert f"parameter({i})" in text, f"missing parameter({i})"
+
+
+def test_lowered_local_update_matches_eager():
+    """The exact artifact computation (lowered) == eager execution."""
+    spec = dataclasses.replace(M.VARIANTS["fashion_mlp"], use_pallas=True)
+    k, b = 2, 8
+    params, bn, opt = M.init_state(spec, "sgd", 0)
+    rng = np.random.default_rng(0)
+    h, w, c = spec.image
+    xs = jnp.asarray(rng.random((k, b, h, w, c)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, 10, (k, b)), jnp.int32)
+
+    def fn(params, bn, opt_state, xs, ys, lr):
+        p, s, o, loss = M.local_update_value_and_grad(
+            spec, "sgd", params, bn, opt_state, xs, ys, lr
+        )
+        return tuple(p) + tuple(s) + tuple(o) + (loss,)
+
+    eager = fn(params, bn, opt, xs, ys, jnp.float32(0.01))
+    compiled = jax.jit(fn)(params, bn, opt, xs, ys, jnp.float32(0.01))
+    for i, (a, b_) in enumerate(zip(eager, compiled)):
+        assert_allclose(a, b_, rtol=1e-5, atol=1e-6, err_msg=f"output {i}")
+
+
+def test_init_blob_deterministic():
+    spec = M.VARIANTS["fashion_mlp"]
+    assert aot.init_blob(spec, "sgd", 0) == aot.init_blob(spec, "sgd", 0)
+    assert aot.init_blob(spec, "sgd", 0) != aot.init_blob(spec, "sgd", 1)
+
+
+def test_init_blob_length_matches_entries():
+    for name in ("fashion_mlp", "fashion_cnn_slim"):
+        spec = M.VARIANTS[name]
+        for opt in ("sgd", "adam"):
+            n = (
+                sum(int(np.prod(s)) for _, s in M.param_entries(spec))
+                + sum(int(np.prod(s)) for _, s in M.bn_entries(spec))
+                + sum(
+                    int(np.prod(s)) if s else 1
+                    for _, s in M.opt_entries(spec, opt)
+                )
+            )
+            assert len(aot.init_blob(spec, opt, 0)) == 4 * n
+
+
+def test_backend_actually_differs_between_twin_variants():
+    """Regression guard: the *_fast / *_jnp twins must NOT silently lower
+    through the Pallas path (an early aot.py bug force-overrode
+    use_pallas for every variant)."""
+    pallas_spec = M.VARIANTS["fashion_cnn_slim"]
+    fast_spec = M.VARIANTS["fashion_cnn_slim_fast"]
+    assert pallas_spec.use_pallas and not fast_spec.use_pallas
+    t_pallas = aot.lower_eval(pallas_spec, 4)
+    t_fast = aot.lower_eval(fast_spec, 4)
+    assert t_pallas != t_fast
+    # im2col variant lowers the conv to dot ops, no conv instructions
+    assert "convolution" not in t_fast
+    jnp_spec = M.VARIANTS["fashion_cnn_slim_jnp"]
+    t_lax = aot.lower_eval(jnp_spec, 4)
+    assert "convolution" in t_lax
+
+
+@needs_artifacts
+def test_manifest_built_with_per_variant_backends():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    v = man["variants"]
+    if "fashion_cnn_slim_fast" in v:
+        assert v["fashion_cnn_slim_fast"]["backend"] == "jnp/im2col"
+        assert v["fashion_cnn_slim"]["backend"] == "pallas"
+
+
+@needs_artifacts
+def test_manifest_structure():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for name, v in man["variants"].items():
+        spec = M.VARIANTS[name]
+        assert v["arch"] == spec.arch
+        assert tuple(v["image"]) == spec.image
+        assert [e["name"] for e in v["params"]] == [
+            n for n, _ in M.param_entries(spec)
+        ]
+        for opt in v["optimizers"]:
+            assert opt in v["opt_state"]
+            assert opt in v["executables"]["local_update"]
+
+
+@needs_artifacts
+def test_manifest_files_exist_with_expected_sizes():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, v in man["variants"].items():
+        for opt, blob in v["init_blob"].items():
+            path = os.path.join(ART, blob)
+            assert os.path.exists(path), blob
+            expect = 4 * (
+                _nelems(v["params"])
+                + _nelems(v["bn_state"])
+                + _nelems(v["opt_state"][opt])
+            )
+            assert os.path.getsize(path) == expect, blob
+        epath = os.path.join(ART, v["executables"]["eval"])
+        assert os.path.exists(epath)
+        for opt, table in v["executables"]["local_update"].items():
+            for key, fn in table.items():
+                assert os.path.exists(os.path.join(ART, fn)), fn
+
+
+@needs_artifacts
+def test_artifact_hlo_entry_signature():
+    """Eval artifact entry computation must declare params+bn+2 inputs."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    v = man["variants"]["fashion_mlp"]
+    with open(os.path.join(ART, v["executables"]["eval"])) as f:
+        text = f.read()
+    n_inputs = len(v["params"]) + len(v["bn_state"]) + 2
+    for i in range(n_inputs):
+        assert f"parameter({i})" in text

@@ -1,0 +1,268 @@
+"""L1 kernel-vs-oracle tests — the core correctness signal.
+
+Every Pallas kernel is asserted against the pure-jnp reference in
+``compile.kernels.ref`` with ``assert_allclose``; hypothesis sweeps the
+shape space (including non-multiples of the block sizes, degenerate dims,
+and the exact shapes the EdgeFLow CNN uses).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    pallas_bn_scale_relu,
+    pallas_conv2d_3x3_same,
+    pallas_matmul,
+    pallas_softmax_xent,
+)
+from compile.kernels import ref
+from compile.kernels.conv2d import im2col_3x3_same
+from compile.kernels.matmul import _pick_block
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _randn(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _randn(rng, (m, k)), _randn(rng, (k, n))
+    assert_allclose(pallas_matmul(a, b), ref.ref_matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grads_match_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _randn(rng, (m, k)), _randn(rng, (k, n))
+    ga, gb = jax.grad(lambda a, b: (pallas_matmul(a, b) ** 2).sum(), (0, 1))(a, b)
+    ra, rb = jax.grad(lambda a, b: (ref.ref_matmul(a, b) ** 2).sum(), (0, 1))(a, b)
+    assert_allclose(ga, ra, rtol=1e-3, atol=1e-3)
+    assert_allclose(gb, rb, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("mkn", [(1, 1, 1), (128, 128, 128), (129, 127, 1),
+                                 (50176, 9, 8), (64, 576, 64)])
+def test_matmul_block_edges(mkn):
+    """Exact block multiples, off-by-one, and the CNN im2col shapes."""
+    m, k, n = mkn
+    rng = np.random.default_rng(7)
+    a, b = _randn(rng, (m, k)), _randn(rng, (k, n))
+    assert_allclose(pallas_matmul(a, b), ref.ref_matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_fp32_accumulation_is_stable():
+    """Large-K contraction should not drift vs fp32 reference."""
+    rng = np.random.default_rng(3)
+    a, b = _randn(rng, (16, 4096)), _randn(rng, (4096, 16))
+    assert_allclose(pallas_matmul(a, b), ref.ref_matmul(a, b), rtol=1e-3, atol=1e-2)
+
+
+def test_pick_block_shrinks_for_small_dims():
+    assert _pick_block(1, 128) == 8
+    assert _pick_block(10, 128) == 16
+    assert _pick_block(128, 128) == 128
+    assert _pick_block(1000, 128) == 128
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4),
+    h=st.integers(1, 16),
+    w=st.integers(1, 16),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(n, h, w, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (n, h, w, cin))
+    f = _randn(rng, (3, 3, cin, cout))
+    assert_allclose(
+        pallas_conv2d_3x3_same(x, f), ref.ref_conv2d_3x3_same(x, f),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_conv2d_grads_match_ref():
+    rng = np.random.default_rng(11)
+    x = _randn(rng, (2, 8, 8, 3))
+    f = _randn(rng, (3, 3, 3, 4))
+    g1 = jax.grad(lambda x, f: (pallas_conv2d_3x3_same(x, f) ** 2).sum(), (0, 1))(x, f)
+    g2 = jax.grad(lambda x, f: (ref.ref_conv2d_3x3_same(x, f) ** 2).sum(), (0, 1))(x, f)
+    assert_allclose(g1[0], g2[0], rtol=1e-3, atol=1e-3)
+    assert_allclose(g1[1], g2[1], rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_patch_order_matches_filter_reshape():
+    """The (dy, dx, c) patch order must match w.reshape(9*Cin, Cout)."""
+    rng = np.random.default_rng(5)
+    x = _randn(rng, (1, 4, 4, 2))
+    patches = im2col_3x3_same(x)
+    assert patches.shape == (1, 4, 4, 18)
+    # center pixel of patch (dy=1, dx=1) is x itself
+    center = patches[0, :, :, 2 * (1 * 3 + 1) : 2 * (1 * 3 + 1) + 2]
+    assert_allclose(center, x[0])
+
+
+def test_conv2d_paper_shapes():
+    """The exact first-layer shapes for both datasets."""
+    rng = np.random.default_rng(9)
+    for hwc, cout in [((28, 28, 1), 16), ((32, 32, 3), 16)]:
+        x = _randn(rng, (2, *hwc))
+        f = _randn(rng, (3, 3, hwc[2], cout))
+        assert_allclose(
+            pallas_conv2d_3x3_same(x, f), ref.ref_conv2d_3x3_same(x, f),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused batchnorm + relu
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    c=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bn_relu_matches_ref_2d(rows, c, seed):
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (rows, c))
+    gamma, beta = _randn(rng, (c,)), _randn(rng, (c,))
+    mean = jnp.asarray(rng.standard_normal(c), jnp.float32)
+    var = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+    assert_allclose(
+        pallas_bn_scale_relu(x, gamma, beta, mean, var),
+        ref.ref_bn_scale_relu(x, gamma, beta, mean, var),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_bn_relu_4d_shape_and_grads():
+    rng = np.random.default_rng(13)
+    x = _randn(rng, (4, 7, 7, 6))
+    gamma, beta = _randn(rng, (6,)), _randn(rng, (6,))
+
+    def f_pallas(x, g, b):
+        m, v = ref.ref_batch_stats(x)
+        return (pallas_bn_scale_relu(x, g, b, m, v) ** 2).sum()
+
+    def f_ref(x, g, b):
+        m, v = ref.ref_batch_stats(x)
+        return (ref.ref_bn_scale_relu(x, g, b, m, v) ** 2).sum()
+
+    for i, (a, r) in enumerate(
+        zip(jax.grad(f_pallas, (0, 1, 2))(x, gamma, beta),
+            jax.grad(f_ref, (0, 1, 2))(x, gamma, beta))
+    ):
+        assert_allclose(a, r, rtol=1e-3, atol=1e-3, err_msg=f"grad arg {i}")
+
+
+def test_bn_relu_is_nonnegative():
+    rng = np.random.default_rng(17)
+    x = _randn(rng, (32, 8))
+    out = pallas_bn_scale_relu(
+        x, jnp.ones(8), jnp.zeros(8), jnp.zeros(8), jnp.ones(8)
+    )
+    assert float(out.min()) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    c=st.integers(2, 16),
+    scale=st.floats(0.1, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_matches_ref(b, c, scale, seed):
+    rng = np.random.default_rng(seed)
+    logits = _randn(rng, (b, c)) * scale  # large logits probe stability
+    y = rng.integers(0, c, b)
+    onehot = jax.nn.one_hot(y, c, dtype=jnp.float32)
+    assert_allclose(
+        pallas_softmax_xent(logits, onehot),
+        ref.ref_softmax_xent(logits, onehot),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_xent_grad_matches_ref():
+    rng = np.random.default_rng(21)
+    logits = _randn(rng, (64, 10))
+    onehot = jax.nn.one_hot(rng.integers(0, 10, 64), 10, dtype=jnp.float32)
+    d1 = jax.grad(lambda z: pallas_softmax_xent(z, onehot).mean())(logits)
+    d2 = jax.grad(lambda z: ref.ref_softmax_xent(z, onehot).mean())(logits)
+    assert_allclose(d1, d2, rtol=1e-4, atol=1e-5)
+
+
+def test_xent_uniform_logits_is_log_c():
+    onehot = jax.nn.one_hot(jnp.arange(10) % 10, 10, dtype=jnp.float32)
+    losses = pallas_softmax_xent(jnp.zeros((10, 10), jnp.float32), onehot)
+    assert_allclose(losses, np.full(10, np.log(10.0), np.float32), rtol=1e-5)
+
+
+def test_xent_grad_rows_sum_to_zero():
+    """softmax - onehot rows always sum to 0 (mass conservation)."""
+    rng = np.random.default_rng(23)
+    logits = _randn(rng, (16, 10))
+    onehot = jax.nn.one_hot(rng.integers(0, 10, 16), 10, dtype=jnp.float32)
+    d = jax.grad(lambda z: pallas_softmax_xent(z, onehot).sum())(logits)
+    assert_allclose(d.sum(axis=-1), np.zeros(16, np.float32), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# maxpool / batch-stats oracle helpers (used by L2)
+# ---------------------------------------------------------------------------
+
+
+def test_maxpool_floor_semantics():
+    rng = np.random.default_rng(29)
+    x = _randn(rng, (1, 7, 7, 2))
+    out = ref.ref_maxpool2x2(x)
+    assert out.shape == (1, 3, 3, 2)
+    assert_allclose(out[0, 0, 0, 0], x[0, :2, :2, 0].max())
+
+
+def test_batch_stats_match_numpy():
+    rng = np.random.default_rng(31)
+    x = _randn(rng, (8, 5, 5, 3))
+    mean, var = ref.ref_batch_stats(x)
+    xn = np.asarray(x).reshape(-1, 3)
+    assert_allclose(mean, xn.mean(0), rtol=1e-5, atol=1e-6)
+    assert_allclose(var, xn.var(0), rtol=1e-4, atol=1e-5)

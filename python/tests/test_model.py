@@ -1,0 +1,216 @@
+"""L2 model tests: shapes, optimizer semantics, backend agreement."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+FAST = M.VARIANTS["fashion_mlp"]
+CNN = dataclasses.replace(
+    M.VARIANTS["fashion_cnn_slim"], use_pallas=False  # jnp backend: fast tests
+)
+
+
+def _batch(rng, spec, b):
+    h, w, c = spec.image
+    x = jnp.asarray(rng.random((b, h, w, c)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, spec.classes, b), jnp.int32)
+    return x, y
+
+
+def _kbatch(rng, spec, k, b):
+    h, w, c = spec.image
+    xs = jnp.asarray(rng.random((k, b, h, w, c)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, spec.classes, (k, b)), jnp.int32)
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# layout / init
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(M.VARIANTS))
+def test_init_matches_entries(name):
+    spec = M.VARIANTS[name]
+    for opt in ("sgd", "adam"):
+        params, bn, opt_state = M.init_state(spec, opt, seed=0)
+        assert [tuple(p.shape) for p in params] == [s for _, s in M.param_entries(spec)]
+        assert [tuple(p.shape) for p in bn] == [s for _, s in M.bn_entries(spec)]
+        assert [tuple(p.shape) for p in opt_state] == [
+            s for _, s in M.opt_entries(spec, opt)
+        ]
+
+
+def test_init_deterministic_and_seed_sensitive():
+    p0, _, _ = M.init_state(FAST, "sgd", seed=0)
+    p0b, _, _ = M.init_state(FAST, "sgd", seed=0)
+    p1, _, _ = M.init_state(FAST, "sgd", seed=1)
+    for a, b in zip(p0, p0b):
+        assert_allclose(a, b)
+    assert any(float(jnp.abs(a - b).max()) > 0 for a, b in zip(p0, p1))
+
+
+def test_cnn_flatten_dim_fashion_vs_cifar():
+    # 28 -> 14 -> 7 -> 3 pools; 32 -> 16 -> 8 -> 4
+    f = M.param_entries(M.VARIANTS["fashion_cnn_slim"])
+    c = M.param_entries(M.VARIANTS["cifar_cnn_slim"])
+    assert dict(f)["fc1_w"][0] == 3 * 3 * 32
+    assert dict(c)["fc1_w"][0] == 4 * 4 * 32
+
+
+def test_adam_state_is_2p_plus_1():
+    n = len(M.param_entries(FAST))
+    assert len(M.opt_entries(FAST, "adam")) == 2 * n + 1
+    assert M.opt_entries(FAST, "adam")[-1][0] == "adam_t"
+
+
+# ---------------------------------------------------------------------------
+# forward / eval
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [FAST, CNN], ids=["mlp", "cnn"])
+def test_forward_shapes(spec, rng):
+    params, bn, _ = M.init_state(spec, "sgd", 0)
+    x, _ = _batch(rng, spec, 4)
+    logits, new_bn = M.forward(spec, params, bn, x, train=True)
+    assert logits.shape == (4, spec.classes)
+    assert len(new_bn) == len(bn)
+
+
+def test_eval_batch_counts(rng):
+    params, bn, _ = M.init_state(FAST, "sgd", 0)
+    x, y = _batch(rng, FAST, 32)
+    loss_sum, correct = M.eval_batch(FAST, params, bn, x, y)
+    assert 0.0 <= float(correct) <= 32.0
+    assert float(loss_sum) > 0.0
+
+
+def test_bn_running_stats_move_in_train_mode(rng):
+    params, bn, _ = M.init_state(CNN, "sgd", 0)
+    x, _ = _batch(rng, CNN, 8)
+    _, new_bn = M.forward(CNN, params, bn, x, train=True)
+    moved = sum(float(jnp.abs(a - b).max()) > 1e-7 for a, b in zip(bn, new_bn))
+    assert moved > 0
+    _, frozen_bn = M.forward(CNN, params, bn, x, train=False)
+    for a, b in zip(bn, frozen_bn):
+        assert_allclose(a, b)
+
+
+# ---------------------------------------------------------------------------
+# local_update (paper Eq. 2 / Eq. 3 ingredients)
+# ---------------------------------------------------------------------------
+
+
+def test_local_update_lr0_is_noop_on_params(rng):
+    params, bn, opt = M.init_state(FAST, "sgd", 0)
+    xs, ys = _kbatch(rng, FAST, 3, 16)
+    p2, _, _, loss = M.local_update(FAST, "sgd", params, bn, opt, xs, ys, 0.0)
+    for a, b in zip(params, p2):
+        assert_allclose(a, b)
+    assert float(loss) > 0
+
+
+def test_local_update_reduces_loss_on_repeated_batch(rng):
+    """K SGD steps on the same batch must reduce that batch's loss."""
+    spec = FAST
+    params, bn, opt = M.init_state(spec, "sgd", 0)
+    x, y = _batch(rng, spec, 32)
+    xs = jnp.stack([x] * 8)
+    ys = jnp.stack([y] * 8)
+    p2, bn2, _, _ = M.local_update(spec, "sgd", params, bn, opt, xs, ys, 0.05)
+
+    def batch_loss(p, s):
+        l, _ = M.loss_and_bn(spec, p, s, x, y)
+        return float(l)
+
+    assert batch_loss(p2, bn2) < batch_loss(params, bn)
+
+
+def test_adam_t_increments_by_k(rng):
+    params, bn, opt = M.init_state(FAST, "adam", 0)
+    xs, ys = _kbatch(rng, FAST, 5, 8)
+    _, _, opt2, _ = M.local_update(FAST, "adam", params, bn, opt, xs, ys, 1e-3)
+    assert float(opt2[-1]) == 5.0
+
+
+def test_value_and_grad_variant_matches_plain(rng):
+    params, bn, opt = M.init_state(FAST, "adam", 0)
+    xs, ys = _kbatch(rng, FAST, 3, 16)
+    out1 = M.local_update(FAST, "adam", params, bn, opt, xs, ys, 1e-3)
+    out2 = M.local_update_value_and_grad(FAST, "adam", params, bn, opt, xs, ys, 1e-3)
+    for a, b in zip(out1[0], out2[0]):
+        assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    assert_allclose(out1[3], out2[3], rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_single_step_equals_manual_gradient(rng):
+    """One K=1 SGD step must equal theta - lr * grad (Eq. 2)."""
+    spec = FAST
+    params, bn, opt = M.init_state(spec, "sgd", 0)
+    x, y = _batch(rng, spec, 16)
+    grads, _ = jax.grad(
+        lambda p, s: M.loss_and_bn(spec, p, s, x, y), has_aux=True
+    )(params, bn)
+    lr = 0.1
+    p2, _, _, _ = M.local_update(
+        spec, "sgd", params, bn, opt, x[None], y[None], lr
+    )
+    for p, g, pn in zip(params, grads, p2):
+        assert_allclose(pn, p - lr * g, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_and_jnp_models_agree(rng):
+    """Full-model agreement between the two kernel backends."""
+    sp = dataclasses.replace(M.VARIANTS["fashion_cnn_slim"], use_pallas=True)
+    sj = dataclasses.replace(sp, use_pallas=False)
+    params, bn, opt = M.init_state(sp, "sgd", 0)
+    xs, ys = _kbatch(rng, sp, 1, 8)
+    o1 = M.local_update_value_and_grad(sp, "sgd", params, bn, opt, xs, ys, 0.01)
+    o2 = M.local_update_value_and_grad(sj, "sgd", params, bn, opt, xs, ys, 0.01)
+    for a, b in zip(o1[0], o2[0]):
+        assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+    assert_allclose(o1[3], o2[3], rtol=1e-4, atol=1e-5)
+
+
+def test_im2col_conv_model_matches_lax(rng):
+    """The *_fast (im2col+matmul) variants must agree numerically with
+    the lax.conv lowering — they share parameter layouts and artifacts
+    must be interchangeable."""
+    lax_spec = dataclasses.replace(
+        M.VARIANTS["fashion_cnn_slim"], use_pallas=False, conv_impl="lax"
+    )
+    fast_spec = dataclasses.replace(lax_spec, conv_impl="im2col")
+    params, bn, opt = M.init_state(lax_spec, "adam", 0)
+    xs, ys = _kbatch(rng, lax_spec, 2, 8)
+    o1 = M.local_update_value_and_grad(lax_spec, "adam", params, bn, opt, xs, ys, 1e-3)
+    o2 = M.local_update_value_and_grad(fast_spec, "adam", params, bn, opt, xs, ys, 1e-3)
+    for a, b in zip(o1[0], o2[0]):
+        assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+    assert_allclose(o1[3], o2[3], rtol=1e-4, atol=1e-5)
+
+
+def test_cluster_aggregation_matches_eq3(rng):
+    """Average of per-client SGD deltas == Eq. 3 aggregate update."""
+    spec = FAST
+    params, bn, opt = M.init_state(spec, "sgd", 0)
+    lr = 0.05
+    deltas = []
+    for seed in range(3):
+        r = np.random.default_rng(seed)
+        xs, ys = _kbatch(r, spec, 2, 16)
+        p2, _, _, _ = M.local_update(spec, "sgd", params, bn, opt, xs, ys, lr)
+        deltas.append([np.asarray(a - b) for a, b in zip(p2, params)])
+    agg = [np.mean([d[i] for d in deltas], axis=0) for i in range(len(params))]
+    # Eq. 3: theta^{t+1} - theta^t = -(eta/N) sum_n sum_k g — i.e. the mean
+    # of the per-client parameter deltas under SGD.  Check it is nonzero and
+    # bounded by the max client delta (convexity of the mean).
+    for i, a in enumerate(agg):
+        stack = np.stack([d[i] for d in deltas])
+        assert (a <= stack.max(0) + 1e-7).all() and (a >= stack.min(0) - 1e-7).all()

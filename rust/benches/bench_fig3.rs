@@ -1,0 +1,102 @@
+//! Bench: regenerate Fig 3 — EdgeFLow accuracy curves under NIID B for
+//! (a) cluster sizes N_m in {5, 10, 20, 50} and (b) local epochs
+//! K in {1, 2, 5, 10}, with smoothed series like the paper's plots.
+//!
+//! `cargo bench --bench bench_fig3`; `EDGEFLOW_BENCH_FAST=1` shrinks the
+//! grids; `EDGEFLOW_F3_ROUNDS` overrides the round count.
+
+use std::sync::Arc;
+
+use edgeflow::fl::experiments::{fig3a, fig3b, SuiteOptions};
+use edgeflow::metrics::smooth;
+use edgeflow::runtime::executor::Engine;
+use edgeflow::util::timer::Timer;
+
+fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let (lo, hi) = values.iter().fold((f64::MAX, f64::MIN), |(l, h), &v| {
+        (l.min(v), h.max(v))
+    });
+    values
+        .iter()
+        .map(|&v| {
+            let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+            BARS[((t * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+fn main() {
+    edgeflow::util::logging::init(false);
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_fig3: run `make artifacts` first — skipping");
+        return;
+    }
+    let fast = std::env::var("EDGEFLOW_BENCH_FAST").as_deref() == Ok("1");
+    // Default 24 rounds: the CIFAR MLP runs ~300 ms/local-update on this
+    // one-core testbed and Fig 3 sweeps up to N_m=50 updates per round;
+    // raise EDGEFLOW_F3_ROUNDS for paper-scale curves.
+    let rounds = std::env::var("EDGEFLOW_F3_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 12 } else { 24 });
+    let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let opts = SuiteOptions {
+        rounds,
+        samples_per_client: 120,
+        test_samples: 400,
+        eval_every: (rounds / 12).max(1),
+        seed: 0,
+        lr: 1e-3,
+    };
+    let mut timer = Timer::new();
+
+    let nms: &[usize] = if fast { &[10, 50] } else { &[5, 10, 20] };
+    println!("Fig 3(a): accuracy vs rounds, cluster size sweep (NIID B)");
+    for (n_m, rep) in fig3a(&engine, &opts, nms).expect("fig3a") {
+        let curve: Vec<f64> = rep
+            .metrics
+            .accuracy_curve()
+            .iter()
+            .map(|&(_, a)| a)
+            .collect();
+        let sm = smooth(&curve, 3);
+        println!(
+            "  N_m={n_m:<3} final={:>6.2}%  {}",
+            rep.final_accuracy * 100.0,
+            sparkline(&sm)
+        );
+    }
+    timer.lap("fig3a");
+    println!(
+        "  paper shape: larger N_m converges faster AND higher (Thm 1's \
+         variance term shrinks with N_m)\n"
+    );
+
+    let ks: &[usize] = if fast { &[1, 5] } else { &[1, 2, 5, 10] };
+    println!("Fig 3(b): accuracy vs rounds, local-epoch sweep (NIID B)");
+    for (k, rep) in fig3b(&engine, &opts, ks).expect("fig3b") {
+        let curve: Vec<f64> = rep
+            .metrics
+            .accuracy_curve()
+            .iter()
+            .map(|&(_, a)| a)
+            .collect();
+        let sm = smooth(&curve, 3);
+        println!(
+            "  K={k:<3}   final={:>6.2}%  {}",
+            rep.final_accuracy * 100.0,
+            sparkline(&sm)
+        );
+    }
+    timer.lap("fig3b");
+    println!(
+        "  paper shape: K improvements are non-proportional (K sits in both \
+         numerator and denominator of Eq. 8)"
+    );
+    println!(
+        "\nbench fig3/total                      a={:.1}s b={:.1}s",
+        timer.get("fig3a").as_secs_f64(),
+        timer.get("fig3b").as_secs_f64()
+    );
+}

@@ -1,0 +1,183 @@
+//! Micro-benchmarks for the coordinator hot paths (EXPERIMENTS.md §Perf):
+//! aggregation bandwidth, PJRT literal round-trips, local_update / eval
+//! execution latency, batch gathering, partition construction, routing,
+//! and the DES event loop.
+//!
+//! `cargo bench --bench bench_micro`; `EDGEFLOW_BENCH_FAST=1` for smoke.
+
+use std::sync::Arc;
+
+use edgeflow::bench::{black_box, Bencher};
+use edgeflow::config::{DatasetKind, Distribution, TopologyKind};
+use edgeflow::data::loader::ClientLoader;
+use edgeflow::data::partition::build_federation;
+use edgeflow::fl::aggregate::{mean_into, weighted_mean_into};
+use edgeflow::netsim::NetSim;
+use edgeflow::rng::Rng;
+use edgeflow::runtime::executor::Engine;
+use edgeflow::topology::builder::{build, TopologyParams};
+use edgeflow::topology::route::RouteTable;
+
+fn bench_aggregation(b: &Bencher) {
+    // The Eq. 3 hot path: average N_m states of P f32s.
+    for (n_m, p) in [(10usize, 109_386usize), (10, 1_000_000), (50, 109_386)] {
+        let mut rng = Rng::new(1);
+        let sources: Vec<Vec<f32>> = (0..n_m)
+            .map(|_| (0..p).map(|_| rng.f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = sources.iter().map(|v| v.as_slice()).collect();
+        let mut dst = vec![0f32; p];
+        let m = b.bench(&format!("aggregate/mean {n_m}x{p}"), || {
+            mean_into(black_box(&mut dst), black_box(&refs));
+        });
+        let bytes = (n_m + 1) * p * 4;
+        println!(
+            "    -> {:.2} GB/s effective",
+            bytes as f64 / m.mean_s / 1e9
+        );
+        let w: Vec<f64> = (0..n_m).map(|i| 1.0 + i as f64).collect();
+        b.bench(&format!("aggregate/weighted {n_m}x{p}"), || {
+            weighted_mean_into(black_box(&mut dst), black_box(&refs), black_box(&w));
+        });
+    }
+}
+
+fn bench_partition(b: &Bencher) {
+    b.bench("partition/niid_a 100x120", || {
+        let fed = build_federation(
+            DatasetKind::SynthFashion,
+            &Distribution::NiidA,
+            100,
+            10,
+            120,
+            100,
+            7,
+        )
+        .unwrap();
+        black_box(fed.clients.len());
+    });
+}
+
+fn bench_loader(b: &Bencher) {
+    let fed = build_federation(
+        DatasetKind::SynthFashion,
+        &Distribution::NiidA,
+        100,
+        10,
+        120,
+        100,
+        7,
+    )
+    .unwrap();
+    let loader = ClientLoader::new(3, 64);
+    b.bench("loader/gather K=5 B=64 28x28", || {
+        let batch = loader.local_batches(&fed.train, &fed.clients[17], 4, 5);
+        black_box(batch.y.len());
+    });
+}
+
+fn bench_routing(b: &Bencher) {
+    let topo = build(&TopologyParams::new(TopologyKind::Hybrid, 10, 10)).unwrap();
+    let rt = RouteTable::hops(&topo);
+    let clients = topo.clients();
+    let cloud = topo.cloud().unwrap();
+    let mut i = 0;
+    b.bench("route/dijkstra client->cloud (121 nodes)", || {
+        let c = clients[i % clients.len()];
+        i += 1;
+        black_box(rt.path(c, cloud).unwrap().len());
+    });
+}
+
+fn bench_netsim(b: &Bencher) {
+    let topo = build(&TopologyParams::new(TopologyKind::Hybrid, 10, 10)).unwrap();
+    let rt = RouteTable::latency(&topo);
+    let clients = topo.clients();
+    b.bench("netsim/1000 transfers hybrid", || {
+        let mut sim = NetSim::new(&topo);
+        let mut rng = Rng::new(11);
+        for i in 0..1000 {
+            let a = clients[rng.below(clients.len())];
+            let bnode = clients[rng.below(clients.len())];
+            sim.submit(&rt, a, bnode, 437_544, i as f64 * 1e-4).unwrap();
+        }
+        black_box(sim.run().len());
+    });
+}
+
+fn bench_runtime(b: &Bencher) {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("  (skipping runtime benches: run `make artifacts`)");
+        return;
+    }
+    let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let fed = build_federation(
+        DatasetKind::SynthFashion,
+        &Distribution::Iid,
+        10,
+        2,
+        120,
+        200,
+        3,
+    )
+    .unwrap();
+    let loader = ClientLoader::new(3, 64);
+
+    for (opt, k) in [("sgd", 1usize), ("adam", 5)] {
+        let lu = engine.local_update("fashion_mlp", opt, k).unwrap();
+        let state = engine.init_state("fashion_mlp", opt).unwrap();
+        let batch = loader.local_batches(&fed.train, &fed.clients[0], 0, k);
+        b.bench(&format!("runtime/local_update mlp {opt} K={k}"), || {
+            let (s, l) = lu.run(black_box(&state), black_box(&batch), 1e-3).unwrap();
+            black_box((s.data[0], l));
+        });
+    }
+
+    let ev = engine.eval("fashion_mlp", "sgd").unwrap();
+    let state = engine.init_state("fashion_mlp", "sgd").unwrap();
+    b.bench("runtime/eval 200 samples mlp", || {
+        let (l, a) = ev.run_dataset(black_box(&state), &fed.test).unwrap();
+        black_box((l, a));
+    });
+
+    // CNN backend ablation: lax.conv lowering vs im2col+matmul lowering
+    // (identical parameter layouts; see EXPERIMENTS.md §Perf — 6.3x vs lax, 92x vs pallas-interpret).
+    let slow = Bencher {
+        min_iters: 2,
+        max_iters: 10,
+        budget: std::time::Duration::from_secs(8),
+        warmup: 1,
+    };
+    for variant in ["fashion_cnn_slim_fast", "fashion_cnn_slim_jnp"] {
+        if std::env::var("EDGEFLOW_BENCH_FAST").as_deref() == Ok("1")
+            && variant.ends_with("_jnp")
+        {
+            continue; // the lax.conv path alone takes ~30 s/iter
+        }
+        if !engine.manifest.variants.contains_key(variant) {
+            continue;
+        }
+        let lu = engine.local_update(variant, "adam", 5).unwrap();
+        let state = engine.init_state(variant, "adam").unwrap();
+        let batch = loader.local_batches(&fed.train, &fed.clients[1], 0, 5);
+        slow.bench(&format!("runtime/local_update {variant} adam K=5"), || {
+            let (s, l) = lu.run(black_box(&state), black_box(&batch), 1e-3).unwrap();
+            black_box((s.data[0], l));
+        });
+    }
+}
+
+fn main() {
+    edgeflow::util::logging::init(false);
+    let b = Bencher::from_env();
+    println!("== aggregation (Eq. 3 hot path) ==");
+    bench_aggregation(&b);
+    println!("== data layer ==");
+    bench_partition(&b);
+    bench_loader(&b);
+    println!("== topology / netsim ==");
+    bench_routing(&b);
+    bench_netsim(&b);
+    println!("== PJRT runtime ==");
+    bench_runtime(&b);
+}

@@ -1,0 +1,67 @@
+//! Bench: regenerate Table I (accuracy of FedAvg / EdgeFLowRand /
+//! EdgeFLowSeq across dataset x distribution cells).
+//!
+//! `cargo bench --bench bench_table1` — full grid (~minutes on one core).
+//! Env knobs: `EDGEFLOW_BENCH_FAST=1` for the 2-cell smoke grid,
+//! `EDGEFLOW_T1_ROUNDS` to override the per-cell round count.
+
+use std::sync::Arc;
+
+use edgeflow::fl::experiments::{table1, SuiteOptions};
+use edgeflow::runtime::executor::Engine;
+use edgeflow::util::timer::Timer;
+
+fn main() {
+    edgeflow::util::logging::init(false);
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_table1: run `make artifacts` first — skipping");
+        return;
+    }
+    let fast = std::env::var("EDGEFLOW_BENCH_FAST").as_deref() == Ok("1");
+    // Default 30 rounds/cell keeps the 15-cell grid ~10 min on one core;
+    // raise EDGEFLOW_T1_ROUNDS toward paper scale when you have the time.
+    let rounds = std::env::var("EDGEFLOW_T1_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 10 } else { 30 });
+
+    let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let opts = SuiteOptions {
+        rounds,
+        samples_per_client: 120,
+        test_samples: 500,
+        eval_every: rounds / 4,
+        seed: 0,
+        lr: 1e-3,
+    };
+    let mut timer = Timer::new();
+    let (table, cells) = table1(&engine, &opts, fast).expect("table1");
+    timer.lap("table1");
+
+    println!("{}", table.render());
+    println!("paper reference (real datasets, full training budget):");
+    println!("  FedAvg       Fashion 90.60/86.89  CIFAR 88.66/77.04/71.04");
+    println!("  EdgeFLowRand Fashion 90.13/87.97  CIFAR 89.16/80.26/73.14");
+    println!("  EdgeFLowSeq  Fashion 90.53/87.50  CIFAR 88.99/81.58/73.36");
+    println!(
+        "\nshape check: under NIID the EdgeFLow variants should lead FedAvg; \
+         under IID the three should be close."
+    );
+
+    // Communication side-by-side for the same runs.
+    println!("\nper-cell communication (byte-hops over {rounds} rounds):");
+    for c in &cells {
+        println!(
+            "  {:<14} {:<8} {:<14} {:>14}",
+            c.dataset.name(),
+            c.distribution.name(),
+            c.algorithm.name(),
+            c.byte_hops
+        );
+    }
+    println!(
+        "\nbench table1/total                    wall={:.1}s cells={}",
+        timer.get("table1").as_secs_f64(),
+        cells.len()
+    );
+}

@@ -1,0 +1,156 @@
+//! Timing harness for the `harness = false` bench targets (criterion is
+//! not vendored in this offline image).
+//!
+//! Provides warmup + repeated measurement with mean / stddev / percentiles,
+//! and a stable one-line report format the bench mains print:
+//!
+//! ```text
+//! bench aggregate/100x109k      iters=50  mean=1.23 ms  p50=1.20 ms  p99=1.61 ms
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::util::{human_duration, mean, percentile_sorted, stddev};
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<36} iters={:<4} mean={:<9} p50={:<9} p99={:<9} sd={}",
+            self.name,
+            self.iters,
+            human_duration(Duration::from_secs_f64(self.mean_s)),
+            human_duration(Duration::from_secs_f64(self.p50_s)),
+            human_duration(Duration::from_secs_f64(self.p99_s)),
+            human_duration(Duration::from_secs_f64(self.stddev_s)),
+        )
+    }
+
+    /// Throughput helper: items per second at the mean.
+    pub fn per_second(&self, items: usize) -> f64 {
+        items as f64 / self.mean_s
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    /// Minimum iterations (after warmup).
+    pub min_iters: usize,
+    /// Maximum iterations.
+    pub max_iters: usize,
+    /// Soft wall-clock budget per benchmark.
+    pub budget: Duration,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_iters: 10,
+            max_iters: 1000,
+            budget: Duration::from_secs(3),
+            warmup: 3,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher honoring `EDGEFLOW_BENCH_FAST=1` (CI smoke).
+    pub fn from_env() -> Bencher {
+        if std::env::var("EDGEFLOW_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher {
+                min_iters: 3,
+                max_iters: 10,
+                budget: Duration::from_millis(300),
+                warmup: 1,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Measure `f`, printing and returning the summary.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let started = Instant::now();
+        let mut samples = Vec::new();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && started.elapsed() < self.budget)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: mean(&samples),
+            stddev_s: stddev(&samples),
+            p50_s: percentile_sorted(&sorted, 50.0),
+            p99_s: percentile_sorted(&sorted, 99.0),
+            min_s: sorted[0],
+            max_s: *sorted.last().unwrap(),
+        };
+        println!("{}", m.report());
+        m
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bencher {
+            min_iters: 5,
+            max_iters: 8,
+            budget: Duration::from_millis(50),
+            warmup: 1,
+        };
+        let mut n = 0u64;
+        let m = b.bench("noop", || {
+            n = black_box(n + 1);
+        });
+        assert!(m.iters >= 5 && m.iters <= 8);
+        assert!(m.min_s <= m.p50_s && m.p50_s <= m.max_s);
+    }
+
+    #[test]
+    fn per_second_scales() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            stddev_s: 0.0,
+            p50_s: 0.5,
+            p99_s: 0.5,
+            min_s: 0.5,
+            max_s: 0.5,
+        };
+        assert_eq!(m.per_second(100), 200.0);
+    }
+}

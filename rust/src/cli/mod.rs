@@ -1,0 +1,304 @@
+//! Hand-rolled CLI argument parser (clap is not vendored in this image).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean flags,
+//! repeated flags, positional arguments, and generated help text.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Declarative flag spec for help rendering + validation.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean flags take no value.
+    pub boolean: bool,
+    pub default: Option<&'static str>,
+}
+
+/// One subcommand.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments for a matched subcommand.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Last occurrence of a string flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences (for repeatable flags).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| Error::Usage(format!("--{name} expects an integer, got {v:?}")))
+            })
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|_| Error::Usage(format!("--{name} expects an integer, got {v:?}")))
+            })
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| Error::Usage(format!("--{name} expects a number, got {v:?}")))
+            })
+            .transpose()
+    }
+
+    /// Comma-separated list flag (`--ks 1,2,5`).
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// The application-level CLI: a set of subcommands.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    /// Parse argv (without the binary name).  Returns parsed args or a
+    /// rendered help/usage error.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            return Err(Error::Usage(self.help()));
+        }
+        let cmd_name = argv[0].as_str();
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(Error::Usage(self.help()));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| {
+                Error::Usage(format!(
+                    "unknown command {cmd_name:?}\n\n{}",
+                    self.help()
+                ))
+            })?;
+
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = argv[i].as_str();
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::Usage(self.command_help(spec)));
+            }
+            if let Some(flag) = tok.strip_prefix("--") {
+                let (name, inline) = match flag.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (flag, None),
+                };
+                let fs = spec.flags.iter().find(|f| f.name == name).ok_or_else(|| {
+                    Error::Usage(format!(
+                        "unknown flag --{name} for {cmd_name}\n\n{}",
+                        self.command_help(spec)
+                    ))
+                })?;
+                let val = if fs.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| Error::Usage(format!("--{name} expects a value")))?
+                        .clone()
+                };
+                values.entry(name.to_string()).or_default().push(val);
+            } else {
+                positional.push(tok.to_string());
+            }
+            i += 1;
+        }
+        if positional.len() > spec.positional.len() {
+            return Err(Error::Usage(format!(
+                "too many positional arguments for {cmd_name}\n\n{}",
+                self.command_help(spec)
+            )));
+        }
+        // Fill declared defaults.
+        for f in &spec.flags {
+            if let Some(d) = f.default {
+                values.entry(f.name.to_string()).or_insert_with(|| vec![d.to_string()]);
+            }
+        }
+        Ok(Args { command: cmd_name.to_string(), values, positional })
+    }
+
+    /// Top-level help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{}\n\nUSAGE: {} <command> [flags]\n\nCOMMANDS:\n", self.about, self.bin);
+        let w = self.commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+        for c in &self.commands {
+            s.push_str(&format!("  {:w$}  {}\n", c.name, c.about, w = w));
+        }
+        s.push_str(&format!("\nRun `{} <command> --help` for command flags.\n", self.bin));
+        s
+    }
+
+    /// Per-command help text.
+    pub fn command_help(&self, spec: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n", self.bin, spec.name, spec.about);
+        if !spec.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (n, h) in &spec.positional {
+                s.push_str(&format!("  <{n}>  {h}\n"));
+            }
+        }
+        if !spec.flags.is_empty() {
+            s.push_str("\nFLAGS:\n");
+            let w = spec.flags.iter().map(|f| f.name.len()).max().unwrap_or(0);
+            for f in &spec.flags {
+                let d = f
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  --{:w$}  {}{}\n", f.name, f.help, d, w = w));
+            }
+        }
+        s
+    }
+}
+
+/// Shorthand for building flag specs.
+pub fn flag(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, boolean: false, default: None }
+}
+
+/// Flag with a default value.
+pub fn flag_def(name: &'static str, help: &'static str, default: &'static str) -> FlagSpec {
+    FlagSpec { name, help, boolean: false, default: Some(default) }
+}
+
+/// Boolean flag.
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, boolean: true, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "edgeflow",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "train",
+                about: "train a model",
+                flags: vec![
+                    flag("rounds", "number of rounds"),
+                    flag_def("lr", "learning rate", "0.001"),
+                    switch("verbose", "debug logging"),
+                ],
+                positional: vec![("config", "config file")],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = cli()
+            .parse(&argv(&["train", "--rounds", "10", "cfg.json", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get_usize("rounds").unwrap(), Some(10));
+        assert_eq!(a.get("lr"), Some("0.001")); // default applied
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["cfg.json"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = cli().parse(&argv(&["train", "--rounds=7"])).unwrap();
+        assert_eq!(a.get_usize("rounds").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(cli().parse(&argv(&["trainx"])).is_err());
+        assert!(cli().parse(&argv(&["train", "--bogus", "1"])).is_err());
+        assert!(cli().parse(&argv(&["train", "--rounds"])).is_err());
+        assert!(cli().parse(&argv(&["train", "a", "b"])).is_err());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let a = cli().parse(&argv(&["train", "--rounds", "x"])).unwrap();
+        assert!(a.get_usize("rounds").is_err());
+        let a = cli().parse(&argv(&["train", "--lr", "fast"])).unwrap();
+        assert!(a.get_f64("lr").is_err());
+    }
+
+    #[test]
+    fn help_lists_commands_and_flags() {
+        let c = cli();
+        let h = c.help();
+        assert!(h.contains("train"));
+        let err = c.parse(&argv(&["train", "--help"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--rounds"));
+        assert!(msg.contains("default: 0.001"));
+    }
+
+    #[test]
+    fn list_flag_splits() {
+        let c = Cli {
+            bin: "x",
+            about: "t",
+            commands: vec![CommandSpec {
+                name: "sweep",
+                about: "s",
+                flags: vec![flag("ks", "k values")],
+                positional: vec![],
+            }],
+        };
+        let a = c.parse(&argv(&["sweep", "--ks", "1, 2,5"])).unwrap();
+        assert_eq!(a.get_list("ks"), vec!["1", "2", "5"]);
+    }
+}

@@ -1,0 +1,546 @@
+//! Typed experiment configuration with validation, JSON round-trip, and
+//! presets for every experiment in the paper's evaluation section.
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Which FL algorithm coordinates the round loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Classical FedAvg: random client sample, cloud aggregation.
+    FedAvg,
+    /// Hierarchical FL: per-cluster edge aggregation + cloud aggregation.
+    HierFl,
+    /// Fully-sequential FL: one client at a time, P2P migration.
+    SeqFl,
+    /// EdgeFLow with random next-cluster selection.
+    EdgeFlowRand,
+    /// EdgeFLow with fixed cyclic cluster sequence.
+    EdgeFlowSeq,
+    /// EdgeFLow with a hop-aware migration circuit (greedy nearest-BS tour
+    /// — the paper's "wireless-aware scheduling" future-work direction).
+    EdgeFlowHop,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::FedAvg => "fedavg",
+            Algorithm::HierFl => "hierfl",
+            Algorithm::SeqFl => "seqfl",
+            Algorithm::EdgeFlowRand => "edgeflow_rand",
+            Algorithm::EdgeFlowSeq => "edgeflow_seq",
+            Algorithm::EdgeFlowHop => "edgeflow_hop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        match s {
+            "fedavg" => Ok(Algorithm::FedAvg),
+            "hierfl" => Ok(Algorithm::HierFl),
+            "seqfl" => Ok(Algorithm::SeqFl),
+            "edgeflow_rand" | "edgeflowrand" => Ok(Algorithm::EdgeFlowRand),
+            "edgeflow_seq" | "edgeflowseq" => Ok(Algorithm::EdgeFlowSeq),
+            "edgeflow_hop" | "edgeflowhop" => Ok(Algorithm::EdgeFlowHop),
+            other => Err(Error::Config(format!("unknown algorithm {other:?}"))),
+        }
+    }
+
+    pub const ALL: [Algorithm; 6] = [
+        Algorithm::FedAvg,
+        Algorithm::HierFl,
+        Algorithm::SeqFl,
+        Algorithm::EdgeFlowRand,
+        Algorithm::EdgeFlowSeq,
+        Algorithm::EdgeFlowHop,
+    ];
+}
+
+/// Client data distribution (paper §IV.A, Fig 2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Distribution {
+    /// Uniform class mix on every client.
+    Iid,
+    /// `x%`-non-IID: 1–2 major classes hold `x%` of each client's samples.
+    /// Serialized as whole percents (`noniid95`) — fractions round to 1%.
+    NonIid { major_fraction: f64 },
+    /// Paper preset "NIID A": 10 IID + 20 @95% + 70 @98%.
+    NiidA,
+    /// Paper preset "NIID B": 10 IID + 90 @100%.
+    NiidB,
+}
+
+impl Distribution {
+    pub fn name(&self) -> String {
+        match self {
+            Distribution::Iid => "iid".into(),
+            Distribution::NonIid { major_fraction } => {
+                format!("noniid{:.0}", major_fraction * 100.0)
+            }
+            Distribution::NiidA => "niid_a".into(),
+            Distribution::NiidB => "niid_b".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Distribution> {
+        match s {
+            "iid" => Ok(Distribution::Iid),
+            "niid_a" | "niida" => Ok(Distribution::NiidA),
+            "niid_b" | "niidb" => Ok(Distribution::NiidB),
+            other => {
+                if let Some(pct) = other.strip_prefix("noniid") {
+                    let p: f64 = pct.parse().map_err(|_| {
+                        Error::Config(format!("bad distribution {other:?}"))
+                    })?;
+                    if !(0.0..=100.0).contains(&p) {
+                        return Err(Error::Config(format!(
+                            "non-IID fraction {p} outside [0, 100]"
+                        )));
+                    }
+                    Ok(Distribution::NonIid { major_fraction: p / 100.0 })
+                } else {
+                    Err(Error::Config(format!("unknown distribution {other:?}")))
+                }
+            }
+        }
+    }
+}
+
+/// Synthetic dataset family (stands in for FashionMNIST / CIFAR-10; see
+/// DESIGN.md §3 for the substitution rationale).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 28x28x1, 10 procedurally-generated "apparel-like" classes.
+    SynthFashion,
+    /// 32x32x3, 10 classes with higher intra-class variance.
+    SynthCifar,
+}
+
+impl DatasetKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::SynthFashion => "synth_fashion",
+            DatasetKind::SynthCifar => "synth_cifar",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DatasetKind> {
+        match s {
+            "synth_fashion" | "fashion" => Ok(DatasetKind::SynthFashion),
+            "synth_cifar" | "cifar" => Ok(DatasetKind::SynthCifar),
+            other => Err(Error::Config(format!("unknown dataset {other:?}"))),
+        }
+    }
+
+    /// (H, W, C)
+    pub fn image(&self) -> (usize, usize, usize) {
+        match self {
+            DatasetKind::SynthFashion => (28, 28, 1),
+            DatasetKind::SynthCifar => (32, 32, 3),
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        10
+    }
+}
+
+/// Edge network shape for the communication study (paper Fig 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// local — edge — cloud (one hop from BS to cloud).
+    Simple,
+    /// Many base stations fanning into one aggregation router before cloud.
+    BreadthParallel,
+    /// Base stations chained in a line; the cloud hangs off the far end.
+    DepthLinear,
+    /// Mixed breadth/depth tree.
+    Hybrid,
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Simple => "simple",
+            TopologyKind::BreadthParallel => "breadth_parallel",
+            TopologyKind::DepthLinear => "depth_linear",
+            TopologyKind::Hybrid => "hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TopologyKind> {
+        match s {
+            "simple" => Ok(TopologyKind::Simple),
+            "breadth_parallel" | "breadth" => Ok(TopologyKind::BreadthParallel),
+            "depth_linear" | "depth" => Ok(TopologyKind::DepthLinear),
+            "hybrid" => Ok(TopologyKind::Hybrid),
+            other => Err(Error::Config(format!("unknown topology {other:?}"))),
+        }
+    }
+
+    pub const ALL: [TopologyKind; 4] = [
+        TopologyKind::Simple,
+        TopologyKind::BreadthParallel,
+        TopologyKind::DepthLinear,
+        TopologyKind::Hybrid,
+    ];
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Experiment label used in output paths.
+    pub name: String,
+    pub algorithm: Algorithm,
+    pub dataset: DatasetKind,
+    pub distribution: Distribution,
+    pub topology: TopologyKind,
+    /// Total clients N (paper: 100).
+    pub clients: usize,
+    /// Clusters M; cluster size is `clients / clusters` (paper: N_m = 10).
+    pub clusters: usize,
+    /// Local steps K per round (paper: 5).
+    pub local_steps: usize,
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Training minibatch size (paper: 64; must match the artifact).
+    pub batch_size: usize,
+    /// Learning rate.
+    pub lr: f64,
+    /// "sgd" | "adam" (paper experiments: Adam).
+    pub optimizer: String,
+    /// Artifact model variant (see artifacts/manifest.json).
+    pub model: String,
+    /// Samples per client (train split).
+    pub samples_per_client: usize,
+    /// Held-out test set size.
+    pub test_samples: usize,
+    /// Evaluate every this many rounds (0 = only final).
+    pub eval_every: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Run local client updates on worker threads.
+    pub parallel_clients: bool,
+    /// Failure injection: probability a selected client drops out of a
+    /// round before uploading (straggler/radio-loss model).  The round
+    /// aggregates over the survivors; a fully-dropped round keeps the
+    /// model unchanged.
+    pub dropout: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            algorithm: Algorithm::EdgeFlowSeq,
+            dataset: DatasetKind::SynthFashion,
+            distribution: Distribution::Iid,
+            topology: TopologyKind::Simple,
+            clients: 100,
+            clusters: 10,
+            local_steps: 5,
+            rounds: 50,
+            batch_size: 64,
+            lr: 1e-3,
+            optimizer: "adam".into(),
+            model: "fashion_mlp".into(),
+            samples_per_client: 120,
+            test_samples: 1000,
+            eval_every: 5,
+            seed: 0,
+            parallel_clients: false,
+            dropout: 0.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Clients per cluster, `N_m` in the paper.
+    pub fn cluster_size(&self) -> usize {
+        self.clients / self.clusters
+    }
+
+    /// Validate invariants; returns self for chaining.
+    pub fn validate(self) -> Result<ExperimentConfig> {
+        if self.clients == 0 || self.clusters == 0 {
+            return Err(Error::Config("clients/clusters must be positive".into()));
+        }
+        if self.clients % self.clusters != 0 {
+            return Err(Error::Config(format!(
+                "clients ({}) must divide evenly into clusters ({})",
+                self.clients, self.clusters
+            )));
+        }
+        if self.local_steps == 0 || self.rounds == 0 {
+            return Err(Error::Config("local_steps/rounds must be positive".into()));
+        }
+        if self.batch_size == 0 {
+            return Err(Error::Config("batch_size must be positive".into()));
+        }
+        if !(self.lr > 0.0) {
+            return Err(Error::Config(format!("lr must be positive, got {}", self.lr)));
+        }
+        if self.optimizer != "sgd" && self.optimizer != "adam" {
+            return Err(Error::Config(format!(
+                "optimizer must be sgd|adam, got {:?}",
+                self.optimizer
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.dropout) {
+            return Err(Error::Config(format!(
+                "dropout must be in [0, 1], got {}",
+                self.dropout
+            )));
+        }
+        if self.samples_per_client < self.batch_size {
+            return Err(Error::Config(format!(
+                "samples_per_client ({}) < batch_size ({}) — a client cannot \
+                 fill a single minibatch",
+                self.samples_per_client, self.batch_size
+            )));
+        }
+        Ok(self)
+    }
+
+    // ------------------------------------------------------------- JSON I/O
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("algorithm", self.algorithm.name().into()),
+            ("dataset", self.dataset.name().into()),
+            ("distribution", self.distribution.name().as_str().into()),
+            ("topology", self.topology.name().into()),
+            ("clients", self.clients.into()),
+            ("clusters", self.clusters.into()),
+            ("local_steps", self.local_steps.into()),
+            ("rounds", self.rounds.into()),
+            ("batch_size", self.batch_size.into()),
+            ("lr", self.lr.into()),
+            ("optimizer", self.optimizer.as_str().into()),
+            ("model", self.model.as_str().into()),
+            ("samples_per_client", self.samples_per_client.into()),
+            ("test_samples", self.test_samples.into()),
+            ("eval_every", self.eval_every.into()),
+            ("seed", self.seed.into()),
+            ("parallel_clients", self.parallel_clients.into()),
+            ("dropout", self.dropout.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let get_usize = |k: &str, dflt: usize| -> Result<usize> {
+            match v.get(k) {
+                None => Ok(dflt),
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    Error::Config(format!("field {k:?} must be an integer"))
+                }),
+            }
+        };
+        let cfg = ExperimentConfig {
+            name: v.get("name").and_then(Json::as_str).unwrap_or(&d.name).to_string(),
+            algorithm: match v.get("algorithm").and_then(Json::as_str) {
+                Some(s) => Algorithm::parse(s)?,
+                None => d.algorithm,
+            },
+            dataset: match v.get("dataset").and_then(Json::as_str) {
+                Some(s) => DatasetKind::parse(s)?,
+                None => d.dataset,
+            },
+            distribution: match v.get("distribution").and_then(Json::as_str) {
+                Some(s) => Distribution::parse(s)?,
+                None => d.distribution,
+            },
+            topology: match v.get("topology").and_then(Json::as_str) {
+                Some(s) => TopologyKind::parse(s)?,
+                None => d.topology,
+            },
+            clients: get_usize("clients", d.clients)?,
+            clusters: get_usize("clusters", d.clusters)?,
+            local_steps: get_usize("local_steps", d.local_steps)?,
+            rounds: get_usize("rounds", d.rounds)?,
+            batch_size: get_usize("batch_size", d.batch_size)?,
+            lr: v.get("lr").and_then(Json::as_f64).unwrap_or(d.lr),
+            optimizer: v
+                .get("optimizer")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.optimizer)
+                .to_string(),
+            model: v.get("model").and_then(Json::as_str).unwrap_or(&d.model).to_string(),
+            samples_per_client: get_usize("samples_per_client", d.samples_per_client)?,
+            test_samples: get_usize("test_samples", d.test_samples)?,
+            eval_every: get_usize("eval_every", d.eval_every)?,
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
+            parallel_clients: v
+                .get("parallel_clients")
+                .and_then(Json::as_bool)
+                .unwrap_or(d.parallel_clients),
+            dropout: v.get("dropout").and_then(Json::as_f64).unwrap_or(d.dropout),
+        };
+        cfg.validate()
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Named presets matching the paper's experiments (CPU-scaled rounds).
+pub fn preset(name: &str) -> Result<ExperimentConfig> {
+    let base = ExperimentConfig::default();
+    let cfg = match name {
+        // Table I cells (paper: N=100, M=10, K=5, B=64, Adam)
+        "table1_fashion_iid" => ExperimentConfig {
+            name: name.into(),
+            dataset: DatasetKind::SynthFashion,
+            distribution: Distribution::Iid,
+            model: "fashion_mlp".into(),
+            ..base
+        },
+        "table1_fashion_niid_a" => ExperimentConfig {
+            name: name.into(),
+            dataset: DatasetKind::SynthFashion,
+            distribution: Distribution::NiidA,
+            model: "fashion_mlp".into(),
+            ..base
+        },
+        "table1_cifar_iid" => ExperimentConfig {
+            name: name.into(),
+            dataset: DatasetKind::SynthCifar,
+            distribution: Distribution::Iid,
+            model: "cifar_mlp".into(),
+            ..base
+        },
+        "table1_cifar_niid_a" => ExperimentConfig {
+            name: name.into(),
+            dataset: DatasetKind::SynthCifar,
+            distribution: Distribution::NiidA,
+            model: "cifar_mlp".into(),
+            ..base
+        },
+        "table1_cifar_niid_b" => ExperimentConfig {
+            name: name.into(),
+            dataset: DatasetKind::SynthCifar,
+            distribution: Distribution::NiidB,
+            model: "cifar_mlp".into(),
+            ..base
+        },
+        // Fig 3 base: CIFAR NIID B
+        "fig3_base" => ExperimentConfig {
+            name: name.into(),
+            algorithm: Algorithm::EdgeFlowSeq,
+            dataset: DatasetKind::SynthCifar,
+            distribution: Distribution::NiidB,
+            model: "cifar_mlp".into(),
+            ..base
+        },
+        // Fig 4: communication study (model irrelevant; uses param counts)
+        "fig4_comm" => ExperimentConfig {
+            name: name.into(),
+            rounds: 100,
+            ..base
+        },
+        // Paper-faithful 6-layer CNN run (im2col conv lowering — the fast
+        // CPU variant; see EXPERIMENTS.md §Perf).
+        "e2e_cnn" => ExperimentConfig {
+            name: name.into(),
+            dataset: DatasetKind::SynthFashion,
+            distribution: Distribution::NiidA,
+            model: "fashion_cnn_slim_fast".into(),
+            rounds: 20,
+            eval_every: 2,
+            ..base
+        },
+        other => {
+            return Err(Error::Config(format!(
+                "unknown preset {other:?} (see `edgeflow presets`)"
+            )))
+        }
+    };
+    cfg.validate()
+}
+
+/// All preset names, for CLI listing.
+pub const PRESETS: [&str; 8] = [
+    "table1_fashion_iid",
+    "table1_fashion_niid_a",
+    "table1_cifar_iid",
+    "table1_cifar_niid_a",
+    "table1_cifar_niid_b",
+    "fig3_base",
+    "fig4_comm",
+    "e2e_cnn",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = preset("table1_cifar_niid_b").unwrap();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.algorithm, cfg.algorithm);
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.distribution, cfg.distribution);
+        assert_eq!(back.clients, cfg.clients);
+        assert_eq!(back.lr, cfg.lr);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.clusters = 7; // 100 % 7 != 0
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.optimizer = "rmsprop".into();
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.samples_per_client = 10; // < batch
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.lr = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn all_presets_parse() {
+        for p in PRESETS {
+            preset(p).unwrap_or_else(|e| panic!("preset {p}: {e}"));
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn distribution_parsing() {
+        assert_eq!(Distribution::parse("iid").unwrap(), Distribution::Iid);
+        assert_eq!(
+            Distribution::parse("noniid95").unwrap(),
+            Distribution::NonIid { major_fraction: 0.95 }
+        );
+        assert!(Distribution::parse("noniid150").is_err());
+        assert!(Distribution::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn algorithm_and_topology_parse_all() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        for t in TopologyKind::ALL {
+            assert_eq!(TopologyKind::parse(t.name()).unwrap(), t);
+        }
+    }
+}

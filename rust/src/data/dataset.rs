@@ -1,0 +1,135 @@
+//! In-memory image dataset with contiguous f32 storage.
+
+/// A labelled image dataset.  Pixels are stored contiguously per sample in
+/// `[H, W, C]` row-major order, values already normalized to `[0, 1]`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+    images: Vec<f32>,
+    labels: Vec<u32>,
+}
+
+/// A gathered minibatch: `x` is `[B, H, W, C]` flat, `y` is `[B]`.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn new(h: usize, w: usize, c: usize, classes: usize) -> Dataset {
+        Dataset { h, w, c, classes, images: Vec::new(), labels: Vec::new() }
+    }
+
+    /// Pixels per sample.
+    pub fn sample_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Append one sample; `pixels.len()` must equal `sample_len()`.
+    pub fn push(&mut self, pixels: &[f32], label: u32) {
+        assert_eq!(pixels.len(), self.sample_len(), "bad sample size");
+        assert!((label as usize) < self.classes, "label out of range");
+        self.images.extend_from_slice(pixels);
+        self.labels.push(label);
+    }
+
+    pub fn label(&self, i: usize) -> u32 {
+        self.labels[i]
+    }
+
+    pub fn pixels(&self, i: usize) -> &[f32] {
+        let n = self.sample_len();
+        &self.images[i * n..(i + 1) * n]
+    }
+
+    /// Count samples per class.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    /// Gather the given sample indices into one batch buffer.
+    pub fn gather(&self, idx: &[usize]) -> Batch {
+        let n = self.sample_len();
+        let mut x = Vec::with_capacity(idx.len() * n);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.pixels(i));
+            y.push(self.labels[i] as i32);
+        }
+        Batch { x, y }
+    }
+
+    /// Gather with padding: repeats the final sample to fill `target` rows
+    /// (used for the fixed-shape eval executable's last partial batch).
+    /// Returns the batch and the number of real (non-padding) rows.
+    pub fn gather_padded(&self, idx: &[usize], target: usize) -> (Batch, usize) {
+        assert!(!idx.is_empty() && idx.len() <= target);
+        let mut full = idx.to_vec();
+        while full.len() < target {
+            full.push(*idx.last().unwrap());
+        }
+        (self.gather(&full), idx.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let mut d = Dataset::new(2, 2, 1, 3);
+        d.push(&[0.0, 0.1, 0.2, 0.3], 0);
+        d.push(&[1.0, 1.1, 1.2, 1.3], 1);
+        d.push(&[2.0, 2.1, 2.2, 2.3], 2);
+        d
+    }
+
+    #[test]
+    fn push_and_access() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.label(1), 1);
+        assert_eq!(d.pixels(2), &[2.0, 2.1, 2.2, 2.3]);
+        assert_eq!(d.class_histogram(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn gather_orders_samples() {
+        let d = tiny();
+        let b = d.gather(&[2, 0]);
+        assert_eq!(b.y, vec![2, 0]);
+        assert_eq!(&b.x[..4], &[2.0, 2.1, 2.2, 2.3]);
+        assert_eq!(&b.x[4..], &[0.0, 0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn gather_padded_repeats_last() {
+        let d = tiny();
+        let (b, real) = d.gather_padded(&[1], 3);
+        assert_eq!(real, 1);
+        assert_eq!(b.y, vec![1, 1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad sample size")]
+    fn rejects_bad_sample() {
+        let mut d = Dataset::new(2, 2, 1, 3);
+        d.push(&[0.0], 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Seeded per-client minibatch streams.
+//!
+//! The paper's local update (Eq. 2) samples a fresh random minibatch
+//! `ξ ⊂ D_n` at every local step; the loader reproduces that: each call
+//! yields `K` batches of `B` sample indices drawn from the client's
+//! partition (without replacement within a batch, with replacement across
+//! batches), deterministically from `(seed, client, round)`.
+
+use crate::data::dataset::{Batch, Dataset};
+use crate::data::partition::ClientSpec;
+use crate::rng::Rng;
+
+/// Stateless minibatch sampler for one federation.
+#[derive(Debug, Clone)]
+pub struct ClientLoader {
+    seed: u64,
+    batch: usize,
+}
+
+impl ClientLoader {
+    pub fn new(seed: u64, batch: usize) -> ClientLoader {
+        assert!(batch > 0);
+        ClientLoader { seed, batch }
+    }
+
+    /// Index batches for `k` local steps of `client` at `round`.
+    pub fn batches_idx(&self, client: &ClientSpec, round: usize, k: usize) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(
+            self.seed
+                .wrapping_mul(0x2545F4914F6CDD1D)
+                .wrapping_add((client.id as u64) << 24)
+                .wrapping_add(round as u64),
+        );
+        let n = client.samples.len();
+        (0..k)
+            .map(|_| {
+                if n >= self.batch {
+                    rng.sample_indices(n, self.batch)
+                        .into_iter()
+                        .map(|j| client.samples[j])
+                        .collect()
+                } else {
+                    // Degenerate tiny client: sample with replacement.
+                    (0..self.batch)
+                        .map(|_| client.samples[rng.below(n)])
+                        .collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Gathered `[K*B]` super-batch for the `local_update` executable:
+    /// `x` is `[K, B, H, W, C]` flat, `y` is `[K, B]` flat.
+    pub fn local_batches(
+        &self,
+        train: &Dataset,
+        client: &ClientSpec,
+        round: usize,
+        k: usize,
+    ) -> Batch {
+        let idx: Vec<usize> = self
+            .batches_idx(client, round, k)
+            .into_iter()
+            .flatten()
+            .collect();
+        train.gather(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, Distribution};
+    use crate::data::partition::build_federation;
+
+    fn fed() -> crate::data::partition::Federation {
+        build_federation(
+            DatasetKind::SynthFashion,
+            &Distribution::Iid,
+            4,
+            2,
+            40,
+            20,
+            3,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batches_are_deterministic_per_round() {
+        let f = fed();
+        let l = ClientLoader::new(9, 8);
+        let a = l.batches_idx(&f.clients[0], 5, 3);
+        let b = l.batches_idx(&f.clients[0], 5, 3);
+        assert_eq!(a, b);
+        let c = l.batches_idx(&f.clients[0], 6, 3);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn batches_stay_inside_partition() {
+        let f = fed();
+        let l = ClientLoader::new(9, 8);
+        for client in &f.clients {
+            for batch in l.batches_idx(client, 0, 4) {
+                assert_eq!(batch.len(), 8);
+                for i in batch {
+                    assert!(client.samples.contains(&i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicates_within_batch_when_possible() {
+        let f = fed();
+        let l = ClientLoader::new(9, 8);
+        for batch in l.batches_idx(&f.clients[1], 2, 5) {
+            let mut d = batch.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), batch.len());
+        }
+    }
+
+    #[test]
+    fn tiny_client_samples_with_replacement() {
+        let f = fed();
+        let mut small = f.clients[0].clone();
+        small.samples.truncate(3);
+        let l = ClientLoader::new(9, 8);
+        let b = l.batches_idx(&small, 0, 1);
+        assert_eq!(b[0].len(), 8); // filled despite only 3 samples
+    }
+
+    #[test]
+    fn local_batches_shapes() {
+        let f = fed();
+        let l = ClientLoader::new(9, 8);
+        let b = l.local_batches(&f.train, &f.clients[0], 0, 3);
+        assert_eq!(b.y.len(), 3 * 8);
+        assert_eq!(b.x.len(), 3 * 8 * f.train.sample_len());
+    }
+
+    #[test]
+    fn different_clients_get_different_batches() {
+        let f = fed();
+        let l = ClientLoader::new(9, 8);
+        let a = l.batches_idx(&f.clients[0], 0, 1);
+        let b = l.batches_idx(&f.clients[1], 0, 1);
+        assert_ne!(a, b);
+    }
+}

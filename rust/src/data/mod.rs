@@ -1,0 +1,16 @@
+//! Data substrate: synthetic datasets, non-IID partitioning, batch loading.
+//!
+//! The image has no network access, so FashionMNIST / CIFAR-10 are replaced
+//! by procedurally-generated class-conditional datasets ([`synth`]) that
+//! preserve what the paper's evaluation actually exercises: 10-way
+//! separability, per-class sample pools for the non-IID partitioner, and a
+//! non-trivially learnable signal.  See DESIGN.md §3.
+
+pub mod dataset;
+pub mod loader;
+pub mod partition;
+pub mod synth;
+
+pub use dataset::{Batch, Dataset};
+pub use loader::ClientLoader;
+pub use partition::{build_federation, ClientSpec, Federation};

@@ -1,0 +1,353 @@
+//! Client data partitioning: IID, x%-non-IID, and the paper's NIID A/B
+//! mixes (§IV.A, Fig 2), with exactly-once sample assignment.
+//!
+//! The builder first computes per-client *class quotas*, then synthesizes
+//! exactly the demanded number of samples per class and hands out disjoint
+//! index ranges — so "every sample belongs to exactly one client" holds by
+//! construction (and is property-tested in `rust/tests/prop_coordinator.rs`).
+
+use crate::config::{DatasetKind, Distribution};
+use crate::data::dataset::Dataset;
+use crate::data::synth::SynthGen;
+use crate::rng::Rng;
+use crate::util::error::{Error, Result};
+
+/// Per-client partition description.
+#[derive(Debug, Clone)]
+pub struct ClientSpec {
+    pub id: usize,
+    /// Cluster (edge base station) this client is anchored to.
+    pub cluster: usize,
+    /// Samples of each class this client owns.
+    pub quotas: Vec<usize>,
+    /// Indices into the federation's train dataset (disjoint across clients).
+    pub samples: Vec<usize>,
+    /// The concrete distribution this client was assigned (after mix
+    /// presets are expanded and shuffled).
+    pub distribution: Distribution,
+}
+
+impl ClientSpec {
+    /// Class histogram of this client's data (== quotas by construction).
+    pub fn histogram(&self, train: &Dataset) -> Vec<usize> {
+        let mut h = vec![0usize; train.classes];
+        for &i in &self.samples {
+            h[train.label(i) as usize] += 1;
+        }
+        h
+    }
+}
+
+/// A fully-materialized federated dataset.
+#[derive(Debug)]
+pub struct Federation {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub clients: Vec<ClientSpec>,
+    pub clusters: usize,
+}
+
+impl Federation {
+    /// Client ids in cluster `m`.
+    pub fn cluster_members(&self, m: usize) -> Vec<usize> {
+        self.clients
+            .iter()
+            .filter(|c| c.cluster == m)
+            .map(|c| c.id)
+            .collect()
+    }
+}
+
+/// Compute one client's class quotas for a distribution.
+fn client_quotas(
+    dist: &Distribution,
+    classes: usize,
+    samples: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    match dist {
+        Distribution::Iid => spread_uniform(samples, classes, rng),
+        Distribution::NonIid { major_fraction } => {
+            let mut q = vec![0usize; classes];
+            // 1 or 2 major categories (paper: "one or two major categories").
+            let n_major = 1 + rng.below(2);
+            let majors = rng.sample_indices(classes, n_major);
+            let major_total =
+                ((*major_fraction) * samples as f64).round() as usize;
+            let major_total = major_total.min(samples);
+            // Split the major mass across the chosen majors.
+            for (i, &m) in majors.iter().enumerate() {
+                q[m] += major_total / n_major + usize::from(i < major_total % n_major);
+            }
+            // Remainder spread over the non-major classes.
+            let rest = samples - major_total;
+            if rest > 0 {
+                let others: Vec<usize> =
+                    (0..classes).filter(|c| !majors.contains(c)).collect();
+                let spread = spread_uniform(rest, others.len(), rng);
+                for (slot, &cls) in others.iter().enumerate() {
+                    q[cls] += spread[slot];
+                }
+            }
+            q
+        }
+        Distribution::NiidA | Distribution::NiidB => {
+            unreachable!("mix presets are expanded per-client in build_federation")
+        }
+    }
+}
+
+/// Spread `total` samples uniformly over `bins`, randomizing which bins get
+/// the +1 remainder.
+fn spread_uniform(total: usize, bins: usize, rng: &mut Rng) -> Vec<usize> {
+    let base = total / bins;
+    let extra = total % bins;
+    let mut q = vec![base; bins];
+    for &i in rng.sample_indices(bins, extra).iter() {
+        q[i] += 1;
+    }
+    q
+}
+
+/// Expand a (possibly mixed) distribution into one concrete per-client
+/// distribution assignment.  Paper presets scale with the client count:
+/// NIID A = 10% IID + 20% @95% + 70% @98%; NIID B = 10% IID + 90% @100%.
+pub fn expand_distribution(dist: &Distribution, clients: usize) -> Vec<Distribution> {
+    match dist {
+        Distribution::NiidA => {
+            let n_iid = clients / 10;
+            let n_95 = clients * 2 / 10;
+            (0..clients)
+                .map(|i| {
+                    if i < n_iid {
+                        Distribution::Iid
+                    } else if i < n_iid + n_95 {
+                        Distribution::NonIid { major_fraction: 0.95 }
+                    } else {
+                        Distribution::NonIid { major_fraction: 0.98 }
+                    }
+                })
+                .collect()
+        }
+        Distribution::NiidB => {
+            let n_iid = clients / 10;
+            (0..clients)
+                .map(|i| {
+                    if i < n_iid {
+                        Distribution::Iid
+                    } else {
+                        Distribution::NonIid { major_fraction: 1.0 }
+                    }
+                })
+                .collect()
+        }
+        other => vec![other.clone(); clients],
+    }
+}
+
+/// Build the complete federation: quotas -> synthesis -> disjoint
+/// assignment -> shuffled fixed clusters.
+pub fn build_federation(
+    kind: DatasetKind,
+    dist: &Distribution,
+    clients: usize,
+    clusters: usize,
+    samples_per_client: usize,
+    test_samples: usize,
+    seed: u64,
+) -> Result<Federation> {
+    if clients == 0 || clusters == 0 || clients % clusters != 0 {
+        return Err(Error::Data(format!(
+            "bad federation shape: {clients} clients / {clusters} clusters"
+        )));
+    }
+    let classes = kind.classes();
+    let mut rng = Rng::new(seed ^ 0xFEDE_7A7E);
+
+    // 1. Per-client quotas.  Clusters are *geographic* (client id maps to
+    //    the base station it is radio-attached to, cluster-major — the
+    //    same layout `topology::builder` uses), so instead of shuffling
+    //    cluster membership we shuffle which client gets which
+    //    distribution, keeping mix presets from degenerating into
+    //    "cluster 0 = all the IID clients".
+    let mut per_client_dist = expand_distribution(dist, clients);
+    rng.shuffle(&mut per_client_dist);
+    let quotas: Vec<Vec<usize>> = per_client_dist
+        .iter()
+        .map(|d| client_quotas(d, classes, samples_per_client, &mut rng))
+        .collect();
+
+    // 2. Synthesize exactly the demanded samples per class.
+    let mut class_totals = vec![0usize; classes];
+    for q in &quotas {
+        for (c, n) in q.iter().enumerate() {
+            class_totals[c] += n;
+        }
+    }
+    let gen = SynthGen::new(kind, seed);
+    let train = gen.generate(&class_totals, &vec![0u64; classes]);
+    let test = gen.test_set(test_samples);
+
+    // Class offsets in the (class-contiguous) train dataset.
+    let mut offsets = vec![0usize; classes + 1];
+    for c in 0..classes {
+        offsets[c + 1] = offsets[c] + class_totals[c];
+    }
+
+    // 3. Disjoint index assignment.
+    let mut cursors = offsets[..classes].to_vec();
+    // 4. Fixed geographic clusters: client id -> base station, matching
+    //    the topology builder's cluster-major client layout.
+    let cluster_size = clients / clusters;
+    let cluster_of: Vec<usize> = (0..clients).map(|i| i / cluster_size).collect();
+
+    let mut specs = Vec::with_capacity(clients);
+    for (id, q) in quotas.into_iter().enumerate() {
+        let mut samples = Vec::with_capacity(samples_per_client);
+        for (c, &n) in q.iter().enumerate() {
+            for _ in 0..n {
+                samples.push(cursors[c]);
+                cursors[c] += 1;
+            }
+        }
+        rng.shuffle(&mut samples);
+        specs.push(ClientSpec {
+            id,
+            cluster: cluster_of[id],
+            quotas: q,
+            samples,
+            distribution: per_client_dist[id].clone(),
+        });
+    }
+    debug_assert_eq!(cursors, offsets[1..].to_vec());
+
+    Ok(Federation { train, test, clients: specs, clusters })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fed(dist: Distribution) -> Federation {
+        build_federation(
+            DatasetKind::SynthFashion,
+            &dist,
+            20,
+            4,
+            60,
+            50,
+            7,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn iid_quotas_are_uniformish() {
+        let f = fed(Distribution::Iid);
+        for c in &f.clients {
+            assert_eq!(c.quotas.iter().sum::<usize>(), 60);
+            assert!(c.quotas.iter().all(|&n| n == 6), "{:?}", c.quotas);
+        }
+    }
+
+    #[test]
+    fn noniid_quotas_concentrate() {
+        let f = fed(Distribution::NonIid { major_fraction: 0.95 });
+        for c in &f.clients {
+            let total: usize = c.quotas.iter().sum();
+            assert_eq!(total, 60);
+            let mut sorted = c.quotas.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            let major2: usize = sorted[..2].iter().sum();
+            assert!(
+                major2 >= (0.95f64 * 60.0) as usize,
+                "top-2 classes hold {major2}/60"
+            );
+        }
+    }
+
+    #[test]
+    fn full_noniid_single_or_double_class() {
+        let f = fed(Distribution::NonIid { major_fraction: 1.0 });
+        for c in &f.clients {
+            let nonzero = c.quotas.iter().filter(|&&n| n > 0).count();
+            assert!(nonzero <= 2, "{:?}", c.quotas);
+        }
+    }
+
+    #[test]
+    fn niid_a_mix_fractions() {
+        let dists = expand_distribution(&Distribution::NiidA, 100);
+        let iid = dists.iter().filter(|d| **d == Distribution::Iid).count();
+        let p95 = dists
+            .iter()
+            .filter(|d| **d == Distribution::NonIid { major_fraction: 0.95 })
+            .count();
+        let p98 = dists
+            .iter()
+            .filter(|d| **d == Distribution::NonIid { major_fraction: 0.98 })
+            .count();
+        assert_eq!((iid, p95, p98), (10, 20, 70));
+    }
+
+    #[test]
+    fn niid_b_mix_fractions() {
+        let dists = expand_distribution(&Distribution::NiidB, 100);
+        let iid = dists.iter().filter(|d| **d == Distribution::Iid).count();
+        assert_eq!(iid, 10);
+        assert_eq!(dists.len(), 100);
+    }
+
+    #[test]
+    fn samples_are_disjoint_and_exhaustive() {
+        let f = fed(Distribution::NiidA);
+        let mut seen = vec![false; f.train.len()];
+        for c in &f.clients {
+            for &i in &c.samples {
+                assert!(!seen[i], "sample {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "unassigned samples remain");
+    }
+
+    #[test]
+    fn quotas_match_actual_labels() {
+        let f = fed(Distribution::NiidB);
+        for c in &f.clients {
+            assert_eq!(c.histogram(&f.train), c.quotas, "client {}", c.id);
+        }
+    }
+
+    #[test]
+    fn clusters_are_balanced() {
+        let f = fed(Distribution::Iid);
+        for m in 0..4 {
+            assert_eq!(f.cluster_members(m).len(), 5);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = fed(Distribution::NiidA);
+        let b = fed(Distribution::NiidA);
+        for (x, y) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(x.samples, y.samples);
+            assert_eq!(x.cluster, y.cluster);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shape() {
+        assert!(build_federation(
+            DatasetKind::SynthFashion,
+            &Distribution::Iid,
+            10,
+            3,
+            60,
+            50,
+            0
+        )
+        .is_err());
+    }
+}

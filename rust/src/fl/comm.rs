@@ -1,0 +1,280 @@
+//! Per-round communication patterns over a topology (paper Fig 4).
+//!
+//! Each algorithm induces a fixed transfer pattern per round; recording it
+//! with [`CommAccountant`] yields the paper's "parameters uploaded per
+//! round" metric (byte-hops) and, through [`crate::netsim`], transfer
+//! latencies.  The paper counts *uploads* (model-parameter traffic toward
+//! the aggregation point plus EdgeFLow's migration); downloads can be
+//! included with [`CommOptions::count_downloads`] for the extended study.
+
+use crate::fl::strategy::{AggregationSite, RoundPlan};
+use crate::netsim::NetSim;
+use crate::topology::accounting::CommAccountant;
+use crate::topology::graph::Topology;
+use crate::topology::route::RouteTable;
+use crate::util::error::Result;
+
+/// What to count.
+#[derive(Debug, Clone, Copy)]
+pub struct CommOptions {
+    /// Also count model broadcast/download traffic (paper counts uploads).
+    pub count_downloads: bool,
+}
+
+impl Default for CommOptions {
+    fn default() -> Self {
+        CommOptions { count_downloads: false }
+    }
+}
+
+/// Record one round's transfers into `acc`; optionally simulate their
+/// timing in `sim` (submitted at `at_s`).  Returns the byte-hops added.
+#[allow(clippy::too_many_arguments)]
+pub fn record_round(
+    plan: &RoundPlan,
+    topo: &Topology,
+    routes: &RouteTable,
+    acc: &mut CommAccountant,
+    model_bytes: u64,
+    round: usize,
+    opts: CommOptions,
+    mut sim: Option<(&mut NetSim, f64)>,
+) -> Result<u64> {
+    let before = acc.byte_hops();
+    let mut send = |acc: &mut CommAccountant,
+                    src,
+                    dst,
+                    label: &'static str|
+     -> Result<()> {
+        acc.record(topo, routes, src, dst, model_bytes, label, round)?;
+        if let Some((sim, at_s)) = sim.as_mut() {
+            sim.submit(routes, src, dst, model_bytes, *at_s)?;
+        }
+        Ok(())
+    };
+
+    match plan.aggregation {
+        AggregationSite::Cloud => {
+            let cloud = topo.cloud()?;
+            if plan.groups.len() == 1 && plan.groups[0].0 == usize::MAX {
+                // FedAvg: every sampled client uploads device -> cloud
+                // (via its base station), and downloads the fresh model.
+                for &id in &plan.groups[0].1 {
+                    let c = topo.client(id)?;
+                    if opts.count_downloads {
+                        send(acc, cloud, c, "download")?;
+                    }
+                    send(acc, c, cloud, "upload")?;
+                }
+            } else {
+                // Hierarchical FL: clients upload to their edge BS; each BS
+                // uploads one cluster model to the cloud.
+                for (m, members) in &plan.groups {
+                    let bs = topo.edge_bs(*m)?;
+                    for &id in members {
+                        let c = topo.client(id)?;
+                        if opts.count_downloads {
+                            send(acc, bs, c, "download")?;
+                        }
+                        send(acc, c, bs, "upload")?;
+                    }
+                    if opts.count_downloads {
+                        send(acc, cloud, bs, "download")?;
+                    }
+                    send(acc, bs, cloud, "upload")?;
+                }
+            }
+        }
+        AggregationSite::EdgeBs(m) => {
+            // EdgeFLow: active cluster's clients exchange with their BS,
+            // then the model migrates BS -> next BS.
+            let bs = topo.edge_bs(m)?;
+            for &id in &plan.groups[0].1 {
+                let c = topo.client(id)?;
+                if opts.count_downloads {
+                    send(acc, bs, c, "download")?;
+                }
+                send(acc, c, bs, "upload")?;
+            }
+            if let Some((from, to)) = plan.migration {
+                if from != to {
+                    let a = topo.edge_bs(from)?;
+                    let b = topo.edge_bs(to)?;
+                    send(acc, a, b, "migration")?;
+                }
+            }
+        }
+        AggregationSite::None => {
+            // Sequential FL: the model hops from the previous trainer to
+            // this one (client -> client).  Approximated as one model
+            // transfer per round between the involved clients' BSs plus
+            // the radio hops.
+            let id = plan.groups[0].1[0];
+            let c = topo.client(id)?;
+            let bs = topo.edge_bs(plan.groups[0].0)?;
+            if opts.count_downloads {
+                send(acc, bs, c, "download")?;
+            }
+            send(acc, c, bs, "upload")?;
+            if let Some((from, to)) = plan.migration {
+                if from != to {
+                    let a = topo.edge_bs(from)?;
+                    let b = topo.edge_bs(to)?;
+                    send(acc, a, b, "migration")?;
+                }
+            }
+        }
+    }
+    Ok(acc.byte_hops() - before)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::fl::strategy::RoundPlan;
+    use crate::topology::builder::{build, TopologyParams};
+
+    fn topo(kind: TopologyKind) -> Topology {
+        build(&TopologyParams::new(kind, 4, 2)).unwrap()
+    }
+
+    fn fedavg_plan() -> RoundPlan {
+        RoundPlan {
+            groups: vec![(usize::MAX, vec![0, 3, 5])],
+            cluster: usize::MAX,
+            aggregation: AggregationSite::Cloud,
+            migration: None,
+        }
+    }
+
+    fn edgeflow_plan(m: usize, migr: Option<(usize, usize)>) -> RoundPlan {
+        let members = vec![m * 2, m * 2 + 1];
+        RoundPlan {
+            groups: vec![(m, members)],
+            cluster: m,
+            aggregation: AggregationSite::EdgeBs(m),
+            migration: migr,
+        }
+    }
+
+    #[test]
+    fn fedavg_upload_costs_hops_to_cloud() {
+        let t = topo(TopologyKind::Simple);
+        let rt = RouteTable::hops(&t);
+        let mut acc = CommAccountant::new();
+        let bh = record_round(
+            &fedavg_plan(),
+            &t,
+            &rt,
+            &mut acc,
+            100,
+            0,
+            CommOptions::default(),
+            None,
+        )
+        .unwrap();
+        // each client: 2 hops (radio + backbone) x 100 bytes x 3 clients
+        assert_eq!(bh, 600);
+    }
+
+    #[test]
+    fn edgeflow_upload_is_one_radio_hop() {
+        let t = topo(TopologyKind::Simple);
+        let rt = RouteTable::hops(&t);
+        let mut acc = CommAccountant::new();
+        let bh = record_round(
+            &edgeflow_plan(1, None),
+            &t,
+            &rt,
+            &mut acc,
+            100,
+            0,
+            CommOptions::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(bh, 200); // 2 clients x 1 hop
+    }
+
+    #[test]
+    fn edgeflow_migration_adds_bs_route() {
+        let t = topo(TopologyKind::DepthLinear);
+        let rt = RouteTable::hops(&t);
+        let mut acc = CommAccountant::new();
+        record_round(
+            &edgeflow_plan(1, Some((0, 1))),
+            &t,
+            &rt,
+            &mut acc,
+            100,
+            0,
+            CommOptions::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(acc.byte_hops_for("migration"), 100); // adjacent BS
+        assert_eq!(acc.byte_hops_for("upload"), 200);
+    }
+
+    #[test]
+    fn downloads_double_fedavg_traffic() {
+        let t = topo(TopologyKind::Simple);
+        let rt = RouteTable::hops(&t);
+        let mut up = CommAccountant::new();
+        let mut both = CommAccountant::new();
+        record_round(&fedavg_plan(), &t, &rt, &mut up, 10, 0, CommOptions::default(), None)
+            .unwrap();
+        record_round(
+            &fedavg_plan(),
+            &t,
+            &rt,
+            &mut both,
+            10,
+            0,
+            CommOptions { count_downloads: true },
+            None,
+        )
+        .unwrap();
+        assert_eq!(both.byte_hops(), 2 * up.byte_hops());
+    }
+
+    #[test]
+    fn hierfl_counts_cluster_and_cloud_uploads() {
+        let t = topo(TopologyKind::Simple);
+        let rt = RouteTable::hops(&t);
+        let plan = RoundPlan {
+            groups: (0..4).map(|m| (m, vec![m * 2, m * 2 + 1])).collect(),
+            cluster: usize::MAX,
+            aggregation: AggregationSite::Cloud,
+            migration: None,
+        };
+        let mut acc = CommAccountant::new();
+        let bh = record_round(&plan, &t, &rt, &mut acc, 10, 0, CommOptions::default(), None)
+            .unwrap();
+        // 8 clients x 1 radio hop x 10 + 4 BS x 1 backbone hop x 10
+        assert_eq!(bh, 120);
+    }
+
+    #[test]
+    fn netsim_integration_produces_latencies() {
+        let t = topo(TopologyKind::Hybrid);
+        let rt = RouteTable::latency(&t);
+        let mut acc = CommAccountant::new();
+        let mut sim = NetSim::new(&t);
+        record_round(
+            &edgeflow_plan(2, Some((1, 2))),
+            &t,
+            &rt,
+            &mut acc,
+            1_000_000,
+            0,
+            CommOptions::default(),
+            Some((&mut sim, 0.0)),
+        )
+        .unwrap();
+        let out = sim.run();
+        assert_eq!(out.len(), 3); // 2 uploads + 1 migration
+        assert!(out.iter().all(|o| o.latency_s() > 0.0));
+    }
+}

@@ -1,0 +1,256 @@
+//! Model-transfer compression for migration and uploads.
+//!
+//! The paper's related-work positions EdgeFLow against transmission-volume
+//! reduction (pruning [5], quantization [7]); these compose with topology
+//! savings, so the coordinator ships both as migration codecs:
+//!
+//! * [`Codec::QuantizeInt8`] — per-tensor-chunk affine int8 quantization
+//!   (4x smaller, bounded error).
+//! * [`Codec::TopK`] — magnitude top-k *delta* sparsification: transmit the
+//!   largest-|value| fraction of the change against a reference the
+//!   receiver already has (index + value pairs).
+//! * [`Codec::None`] — the baseline.
+//!
+//! `roundtrip` returns both the reconstructed payload and the wire size so
+//! the comm accountant can charge compressed bytes; the ablation bench in
+//! `bench_fig4`'s CSV (and `edgeflow comm-sim`) multiplies the savings.
+
+use crate::util::error::{Error, Result};
+
+/// Chunk length for int8 quantization scales (per-chunk affine params keep
+/// outliers from destroying resolution across a whole tensor).
+const Q_CHUNK: usize = 1024;
+
+/// A migration codec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Codec {
+    /// Raw f32 transfer.
+    None,
+    /// Per-chunk affine int8.
+    QuantizeInt8,
+    /// Keep the top `keep_fraction` of |delta| entries (0 < f <= 1).
+    TopK { keep_fraction: f64 },
+}
+
+impl Codec {
+    /// Parse a CLI codec spec: `none`, `int8`, or `top<percent>` (e.g.
+    /// `top10` keeps the top 10% of deltas).
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "none" => Ok(Codec::None),
+            "int8" => Ok(Codec::QuantizeInt8),
+            other => {
+                if let Some(pct) = other.strip_prefix("top") {
+                    let p: f64 = pct
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad codec {other:?}")))?;
+                    if !(0.0 < p && p <= 100.0) {
+                        return Err(Error::Config(format!(
+                            "top-k percent {p} outside (0, 100]"
+                        )));
+                    }
+                    Ok(Codec::TopK { keep_fraction: p / 100.0 })
+                } else {
+                    Err(Error::Config(format!("unknown codec {other:?}")))
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Codec::None => "none".into(),
+            Codec::QuantizeInt8 => "int8".into(),
+            Codec::TopK { keep_fraction } => format!("top{:.0}%", keep_fraction * 100.0),
+        }
+    }
+
+    /// Wire bytes for a payload of `n` f32 values under this codec.
+    pub fn wire_bytes(&self, n: usize) -> u64 {
+        match self {
+            Codec::None => (n * 4) as u64,
+            // int8 payload + one (scale, zero) f32 pair per chunk
+            Codec::QuantizeInt8 => (n + n.div_ceil(Q_CHUNK) * 8) as u64,
+            // (u32 index + f32 value) per kept entry
+            Codec::TopK { keep_fraction } => {
+                let kept = ((n as f64) * keep_fraction).ceil() as u64;
+                kept * 8
+            }
+        }
+    }
+
+    /// Encode+decode `values` against `reference` (same layout the
+    /// receiver holds; only used by TopK).  Returns the values as the
+    /// receiver reconstructs them and the wire size in bytes.
+    pub fn roundtrip(&self, values: &[f32], reference: Option<&[f32]>) -> Result<(Vec<f32>, u64)> {
+        match self {
+            Codec::None => Ok((values.to_vec(), self.wire_bytes(values.len()))),
+            Codec::QuantizeInt8 => Ok((quantize_int8_roundtrip(values), self.wire_bytes(values.len()))),
+            Codec::TopK { keep_fraction } => {
+                if !(0.0 < *keep_fraction && *keep_fraction <= 1.0) {
+                    return Err(Error::Config(format!(
+                        "top-k keep fraction {keep_fraction} outside (0, 1]"
+                    )));
+                }
+                let reference = reference.ok_or_else(|| {
+                    Error::Config("TopK codec needs the receiver's reference state".into())
+                })?;
+                if reference.len() != values.len() {
+                    return Err(Error::Config("TopK reference length mismatch".into()));
+                }
+                Ok((
+                    topk_roundtrip(values, reference, *keep_fraction),
+                    self.wire_bytes(values.len()),
+                ))
+            }
+        }
+    }
+
+    /// Compression ratio vs raw f32 (lower is smaller).
+    pub fn ratio(&self, n: usize) -> f64 {
+        self.wire_bytes(n) as f64 / (n as f64 * 4.0)
+    }
+}
+
+fn quantize_int8_roundtrip(values: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(values.len());
+    for chunk in values.chunks(Q_CHUNK) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in chunk {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+            // constant (or empty) chunk: transmit the midpoint exactly
+            out.extend(chunk.iter().copied());
+            continue;
+        }
+        let scale = (hi - lo) / 255.0;
+        for &v in chunk {
+            let q = ((v - lo) / scale).round().clamp(0.0, 255.0);
+            out.push(lo + q * scale);
+        }
+    }
+    out
+}
+
+fn topk_roundtrip(values: &[f32], reference: &[f32], keep: f64) -> Vec<f32> {
+    let n = values.len();
+    let kept = ((n as f64) * keep).ceil() as usize;
+    if kept >= n {
+        return values.to_vec();
+    }
+    // Select the top-|delta| indices (nth-element style via sorting a key
+    // vector; n is ~1e5-1e6, this is off the round hot path).
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        let da = (values[a] - reference[a]).abs();
+        let db = (values[b] - reference[b]).abs();
+        db.partial_cmp(&da).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut out = reference.to_vec();
+    for &i in &idx[..kept] {
+        out[i] = values[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let v = randvec(100, 1);
+        let (out, bytes) = Codec::None.roundtrip(&v, None).unwrap();
+        assert_eq!(out, v);
+        assert_eq!(bytes, 400);
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_step() {
+        let v = randvec(5000, 2);
+        let (out, bytes) = Codec::QuantizeInt8.roundtrip(&v, None).unwrap();
+        assert!(bytes < 400 * 5000 / 100); // ~4x smaller than 20000
+        let (lo, hi) = v.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| {
+            (l.min(x), h.max(x))
+        });
+        let step = (hi - lo) / 255.0;
+        for (a, b) in v.iter().zip(&out) {
+            assert!((a - b).abs() <= step, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int8_constant_chunk_exact() {
+        let v = vec![0.5f32; 2000];
+        let (out, _) = Codec::QuantizeInt8.roundtrip(&v, None).unwrap();
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn int8_ratio_about_quarter() {
+        let r = Codec::QuantizeInt8.ratio(1_000_000);
+        assert!(r > 0.25 && r < 0.26, "{r}");
+    }
+
+    #[test]
+    fn topk_keeps_largest_deltas() {
+        let reference = vec![0f32; 10];
+        let mut v = reference.clone();
+        v[3] = 5.0;
+        v[7] = -9.0;
+        v[1] = 0.01;
+        let (out, bytes) =
+            Codec::TopK { keep_fraction: 0.2 }.roundtrip(&v, Some(&reference)).unwrap();
+        assert_eq!(out[7], -9.0);
+        assert_eq!(out[3], 5.0);
+        assert_eq!(out[1], 0.0); // dropped small delta
+        assert_eq!(bytes, 16); // 2 kept x 8 bytes
+    }
+
+    #[test]
+    fn topk_full_fraction_is_identity() {
+        let reference = randvec(50, 3);
+        let v = randvec(50, 4);
+        let (out, _) =
+            Codec::TopK { keep_fraction: 1.0 }.roundtrip(&v, Some(&reference)).unwrap();
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn topk_requires_reference() {
+        assert!(Codec::TopK { keep_fraction: 0.5 }.roundtrip(&[1.0], None).is_err());
+        assert!(Codec::TopK { keep_fraction: 0.0 }
+            .roundtrip(&[1.0], Some(&[0.0]))
+            .is_err());
+    }
+
+    #[test]
+    fn topk_reduces_l2_error_monotonically_in_k() {
+        let reference = randvec(1000, 5);
+        let v = randvec(1000, 6);
+        let err = |keep: f64| -> f64 {
+            let (out, _) = Codec::TopK { keep_fraction: keep }
+                .roundtrip(&v, Some(&reference))
+                .unwrap();
+            v.iter().zip(&out).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(err(0.5) < err(0.1));
+        assert!(err(0.9) < err(0.5));
+    }
+
+    #[test]
+    fn wire_bytes_sane() {
+        assert_eq!(Codec::None.wire_bytes(10), 40);
+        assert_eq!(Codec::TopK { keep_fraction: 0.1 }.wire_bytes(100), 80);
+        // int8: 100 bytes payload + 1 chunk x 8 bytes params
+        assert_eq!(Codec::QuantizeInt8.wire_bytes(100), 108);
+    }
+}

@@ -1,0 +1,417 @@
+//! Paper-experiment suites: Table I, Fig 3(a/b), Fig 4 — shared by the
+//! CLI subcommands and the bench targets so both regenerate identical
+//! numbers.
+//!
+//! CPU-scale note (DESIGN.md §3): rounds/sample counts default far below
+//! the paper's GPU budget; pass larger values to approach it.  All
+//! *relative* orderings the paper reports are regenerated as-is.
+
+use std::sync::Arc;
+
+use crate::config::{
+    Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind,
+};
+use crate::data::partition::build_federation;
+use crate::fl::comm::{record_round, CommOptions};
+use crate::fl::runner::{RunReport, Runner};
+use crate::fl::strategy::Strategy;
+use crate::netsim::NetSim;
+use crate::runtime::executor::Engine;
+use crate::topology::accounting::CommAccountant;
+use crate::topology::builder::{build, TopologyParams};
+use crate::topology::route::RouteTable;
+use crate::util::error::Result;
+use crate::util::table::{Align, Table};
+
+/// Scale knobs for the training suites.
+#[derive(Debug, Clone)]
+pub struct SuiteOptions {
+    pub rounds: usize,
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub lr: f64,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> Self {
+        SuiteOptions {
+            rounds: 60,
+            samples_per_client: 120,
+            test_samples: 500,
+            eval_every: 10,
+            seed: 0,
+            lr: 1e-3,
+        }
+    }
+}
+
+fn model_for(ds: DatasetKind) -> &'static str {
+    match ds {
+        DatasetKind::SynthFashion => "fashion_mlp",
+        DatasetKind::SynthCifar => "cifar_mlp",
+    }
+}
+
+fn base_config(
+    ds: DatasetKind,
+    dist: Distribution,
+    alg: Algorithm,
+    o: &SuiteOptions,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("{}_{}_{}", ds.name(), dist.name(), alg.name()),
+        algorithm: alg,
+        dataset: ds,
+        distribution: dist,
+        model: model_for(ds).into(),
+        rounds: o.rounds,
+        samples_per_client: o.samples_per_client,
+        test_samples: o.test_samples,
+        eval_every: o.eval_every,
+        seed: o.seed,
+        lr: o.lr,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// One Table-I cell result.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub dataset: DatasetKind,
+    pub distribution: Distribution,
+    pub algorithm: Algorithm,
+    pub accuracy: f64,
+    pub byte_hops: u64,
+    pub report: RunReport,
+}
+
+/// Table I: accuracy of FedAvg / EdgeFLowRand / EdgeFLowSeq across
+/// dataset x distribution cells (paper §IV.B).
+pub fn table1(engine: &Arc<Engine>, o: &SuiteOptions, fast: bool) -> Result<(Table, Vec<Cell>)> {
+    let cells: Vec<(DatasetKind, Distribution)> = if fast {
+        vec![
+            (DatasetKind::SynthFashion, Distribution::Iid),
+            (DatasetKind::SynthFashion, Distribution::NiidA),
+        ]
+    } else {
+        vec![
+            (DatasetKind::SynthFashion, Distribution::Iid),
+            (DatasetKind::SynthFashion, Distribution::NiidA),
+            (DatasetKind::SynthCifar, Distribution::Iid),
+            (DatasetKind::SynthCifar, Distribution::NiidA),
+            (DatasetKind::SynthCifar, Distribution::NiidB),
+        ]
+    };
+    let algs = [Algorithm::FedAvg, Algorithm::EdgeFlowRand, Algorithm::EdgeFlowSeq];
+    let mut results = Vec::new();
+    for (ds, dist) in &cells {
+        for alg in algs {
+            let cfg = base_config(*ds, dist.clone(), alg, o);
+            log::info!("table1 cell: {}", cfg.name);
+            let report = Runner::with_engine(engine.clone(), cfg)?.run()?;
+            results.push(Cell {
+                dataset: *ds,
+                distribution: dist.clone(),
+                algorithm: alg,
+                accuracy: report.final_accuracy,
+                byte_hops: report.total_byte_hops,
+                report,
+            });
+        }
+    }
+    // Render in the paper's layout: methods x (dataset, distribution).
+    let mut header = vec!["Method".to_string()];
+    for (ds, dist) in &cells {
+        let d = match ds {
+            DatasetKind::SynthFashion => "Fashion",
+            DatasetKind::SynthCifar => "CIFAR",
+        };
+        header.push(format!("{d}/{}", dist.name()));
+    }
+    let hdr_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new(&hdr_refs)
+        .title("Table I — accuracy (%) [synthetic stand-in datasets]")
+        .align(0, Align::Left);
+    for alg in algs {
+        let mut row = vec![alg.name().to_string()];
+        for (ds, dist) in &cells {
+            let cell = results
+                .iter()
+                .find(|c| {
+                    c.algorithm == alg && c.dataset == *ds && c.distribution == *dist
+                })
+                .unwrap();
+            row.push(format!("{:.2}", cell.accuracy * 100.0));
+        }
+        table.row(&row);
+    }
+    Ok((table, results))
+}
+
+/// Fig 3(a): EdgeFLowSeq under NIID B with varying cluster size N_m.
+pub fn fig3a(
+    engine: &Arc<Engine>,
+    o: &SuiteOptions,
+    cluster_sizes: &[usize],
+) -> Result<Vec<(usize, RunReport)>> {
+    let mut out = Vec::new();
+    for &n_m in cluster_sizes {
+        assert!(100 % n_m == 0, "N_m must divide 100");
+        let mut cfg = base_config(
+            DatasetKind::SynthCifar,
+            Distribution::NiidB,
+            Algorithm::EdgeFlowSeq,
+            o,
+        );
+        cfg.clusters = 100 / n_m;
+        cfg.name = format!("fig3a_nm{n_m}");
+        log::info!("fig3a: N_m = {n_m}");
+        out.push((n_m, Runner::with_engine(engine.clone(), cfg)?.run()?));
+    }
+    Ok(out)
+}
+
+/// Fig 3(b): EdgeFLowSeq under NIID B with varying local epochs K.
+pub fn fig3b(
+    engine: &Arc<Engine>,
+    o: &SuiteOptions,
+    ks: &[usize],
+) -> Result<Vec<(usize, RunReport)>> {
+    let mut out = Vec::new();
+    for &k in ks {
+        let mut cfg = base_config(
+            DatasetKind::SynthCifar,
+            Distribution::NiidB,
+            Algorithm::EdgeFlowSeq,
+            o,
+        );
+        cfg.local_steps = k;
+        cfg.name = format!("fig3b_k{k}");
+        log::info!("fig3b: K = {k}");
+        out.push((k, Runner::with_engine(engine.clone(), cfg)?.run()?));
+    }
+    Ok(out)
+}
+
+/// One Fig-4 bar: per-round communication load of an algorithm on a
+/// topology (byte-hops averaged over `rounds`), plus DES latency.
+#[derive(Debug, Clone)]
+pub struct CommResult {
+    pub topology: TopologyKind,
+    pub algorithm: Algorithm,
+    pub byte_hops_per_round: f64,
+    /// EdgeFLow / FedAvg load ratio (the paper's compression ratio).
+    pub vs_fedavg: f64,
+    /// Mean simulated delivery latency of one round's transfers (s).
+    pub round_latency_s: f64,
+    /// Clients doing local work per round (HierFL trains all N clients
+    /// per round while FedAvg/EdgeFLow train N_m — normalize with this
+    /// for a per-participant comparison).
+    pub participants_per_round: f64,
+}
+
+impl CommResult {
+    /// Byte-hops per participating client per round.
+    pub fn byte_hops_per_participant(&self) -> f64 {
+        self.byte_hops_per_round / self.participants_per_round.max(1.0)
+    }
+}
+
+/// Fig 4: communication load across the four network structures.
+/// Pure coordination — no training, no engine.
+pub fn fig4(
+    param_count: usize,
+    clusters: usize,
+    clients_per_cluster: usize,
+    rounds: usize,
+    algorithms: &[Algorithm],
+    seed: u64,
+) -> Result<(Table, Vec<CommResult>)> {
+    let model_bytes = (param_count * 4) as u64;
+    let clients = clusters * clients_per_cluster;
+    // A dummy federation provides cluster membership for planning (tiny
+    // per-client sample counts keep it cheap; the data is never touched).
+    let fed = build_federation(
+        DatasetKind::SynthFashion,
+        &Distribution::Iid,
+        clients,
+        clusters,
+        10,
+        10,
+        seed,
+    )?;
+
+    let mut results = Vec::new();
+    for kind in TopologyKind::ALL {
+        let topo = build(&TopologyParams::new(kind, clusters, clients_per_cluster))?;
+        // Hop-count routes drive both accounting and the DES (the paper's
+        // metric is hop-weighted; latency-optimal routing differs only on
+        // the diamond shortcuts the four structures don't have).
+        let routes = RouteTable::hops(&topo);
+        let mut per_alg: Vec<(Algorithm, f64, f64, f64)> = Vec::new();
+        for &alg in algorithms {
+            let cfg = ExperimentConfig {
+                algorithm: alg,
+                clients,
+                clusters,
+                samples_per_client: 64,
+                seed,
+                ..ExperimentConfig::default()
+            };
+            let mut strat = Strategy::for_config(&cfg, &fed, &topo);
+            let mut acc = CommAccountant::new();
+            let mut sim = NetSim::new(&topo);
+            let mut t_submit = 0.0f64;
+            let mut participants = 0usize;
+            for t in 0..rounds {
+                let plan = strat.plan_round(t, &fed);
+                participants += plan.participants().len();
+                record_round(
+                    &plan,
+                    &topo,
+                    &routes,
+                    &mut acc,
+                    model_bytes,
+                    t,
+                    CommOptions::default(),
+                    Some((&mut sim, t_submit)),
+                )?;
+                t_submit += 1.0; // rounds submitted 1 sim-second apart
+            }
+            let outcomes = sim.run();
+            let mean_lat = if outcomes.is_empty() {
+                0.0
+            } else {
+                outcomes.iter().map(|o| o.latency_s()).sum::<f64>()
+                    / outcomes.len() as f64
+            };
+            per_alg.push((
+                alg,
+                acc.byte_hops() as f64 / rounds as f64,
+                mean_lat,
+                participants as f64 / rounds as f64,
+            ));
+        }
+        let fedavg_load = per_alg
+            .iter()
+            .find(|(a, ..)| *a == Algorithm::FedAvg)
+            .map(|&(_, l, _, _)| l)
+            .unwrap_or(f64::NAN);
+        for (alg, load, lat, parts) in per_alg {
+            results.push(CommResult {
+                topology: kind,
+                algorithm: alg,
+                byte_hops_per_round: load,
+                vs_fedavg: load / fedavg_load,
+                round_latency_s: lat,
+                participants_per_round: parts,
+            });
+        }
+    }
+
+    let mut header = vec!["Topology".to_string()];
+    for &alg in algorithms {
+        header.push(alg.name().to_string());
+        header.push(format!("{}/fedavg", alg.name()));
+    }
+    let refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut table = Table::new(&refs)
+        .title("Fig 4 — per-round communication load (byte-hops) and compression ratio")
+        .align(0, Align::Left);
+    for kind in TopologyKind::ALL {
+        let mut row = vec![kind.name().to_string()];
+        for &alg in algorithms {
+            let r = results
+                .iter()
+                .find(|r| r.topology == kind && r.algorithm == alg)
+                .unwrap();
+            row.push(format!("{:.2e}", r.byte_hops_per_round));
+            row.push(format!("{:.3}", r.vs_fedavg));
+        }
+        table.row(&row);
+    }
+    Ok((table, results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_edgeflow_beats_fedavg_on_deep_topologies() {
+        let algs = [Algorithm::FedAvg, Algorithm::HierFl, Algorithm::EdgeFlowSeq];
+        let (_, results) = fig4(100_000, 10, 10, 40, &algs, 0).unwrap();
+        for kind in TopologyKind::ALL {
+            let ratio = results
+                .iter()
+                .find(|r| r.topology == kind && r.algorithm == Algorithm::EdgeFlowSeq)
+                .unwrap()
+                .vs_fedavg;
+            assert!(
+                ratio < 1.0,
+                "{kind:?}: EdgeFLow ratio {ratio} should be < 1"
+            );
+        }
+        // Deeper structures give bigger savings: depth_linear's ratio is
+        // the smallest of the four (the paper's depth-oriented claim).
+        let ratio_of = |k: TopologyKind| {
+            results
+                .iter()
+                .find(|r| r.topology == k && r.algorithm == Algorithm::EdgeFlowSeq)
+                .unwrap()
+                .vs_fedavg
+        };
+        assert!(ratio_of(TopologyKind::DepthLinear) < ratio_of(TopologyKind::Simple));
+        assert!(ratio_of(TopologyKind::Hybrid) < ratio_of(TopologyKind::Simple));
+    }
+
+    #[test]
+    fn fig4_savings_in_paper_band_for_deep_structures() {
+        // §V claims 50-80% reduction; verify the deep/hybrid structures
+        // land at >= 50% savings (ratio <= 0.5).
+        let algs = [Algorithm::FedAvg, Algorithm::EdgeFlowSeq];
+        let (_, results) = fig4(100_000, 10, 10, 40, &algs, 0).unwrap();
+        for kind in [TopologyKind::DepthLinear, TopologyKind::Hybrid, TopologyKind::BreadthParallel] {
+            let r = results
+                .iter()
+                .find(|r| r.topology == kind && r.algorithm == Algorithm::EdgeFlowSeq)
+                .unwrap();
+            assert!(
+                r.vs_fedavg <= 0.5,
+                "{kind:?}: ratio {} above the paper's band",
+                r.vs_fedavg
+            );
+        }
+    }
+
+    #[test]
+    fn hierfl_wins_per_participant_on_deep_topologies() {
+        // HierFL trains everyone each round, so raw load exceeds FedAvg;
+        // per participating client it must be cheaper wherever BS->cloud
+        // is more than one hop (edge aggregation amortizes the backbone).
+        let algs = [Algorithm::FedAvg, Algorithm::HierFl];
+        let (_, results) = fig4(100_000, 10, 10, 20, &algs, 0).unwrap();
+        for kind in [TopologyKind::DepthLinear, TopologyKind::BreadthParallel, TopologyKind::Hybrid] {
+            let get = |alg| {
+                results
+                    .iter()
+                    .find(|r| r.topology == kind && r.algorithm == alg)
+                    .unwrap()
+                    .byte_hops_per_participant()
+            };
+            assert!(
+                get(Algorithm::HierFl) < get(Algorithm::FedAvg),
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_latencies_positive() {
+        let algs = [Algorithm::FedAvg, Algorithm::EdgeFlowSeq];
+        let (_, results) = fig4(50_000, 4, 4, 10, &algs, 1).unwrap();
+        assert!(results.iter().all(|r| r.round_latency_s > 0.0));
+    }
+}

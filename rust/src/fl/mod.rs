@@ -1,0 +1,25 @@
+//! The federated-learning coordinator — the paper's Layer-3 contribution.
+//!
+//! * [`aggregate`] — the weighted-averaging hot path (Eq. 3).
+//! * [`scheduler`] — cluster schedules: the EdgeFLow migration orders
+//!   (random / fixed-sequence) and FedAvg client sampling.
+//! * [`comm`] — per-round communication patterns of every algorithm over
+//!   a topology (drives Fig 4 and the in-training accounting).
+//! * [`strategy`] — round planning for FedAvg / Hierarchical FL /
+//!   Sequential FL / EdgeFLowRand / EdgeFLowSeq.
+//! * [`runner`] — the experiment driver: train loop, aggregation,
+//!   evaluation, metrics.
+//! * [`theory`] — Theorem 1's convergence bound (Eq. 8), term by term.
+
+pub mod aggregate;
+pub mod comm;
+pub mod compress;
+pub mod experiments;
+pub mod runner;
+pub mod scheduler;
+pub mod strategy;
+pub mod theory;
+
+pub use runner::{Runner, RunReport};
+pub use scheduler::ClusterSchedule;
+pub use strategy::{RoundPlan, Strategy};

@@ -1,0 +1,300 @@
+//! The experiment driver: wires data, topology, runtime and strategy into
+//! the round loop of Algorithm 1.
+
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::loader::ClientLoader;
+use crate::data::partition::{build_federation, Federation};
+use crate::fl::aggregate::aggregate_states;
+use crate::fl::comm::{record_round, CommOptions};
+use crate::fl::strategy::{AggregationSite, Strategy};
+use crate::metrics::{ExperimentMetrics, RoundRecord};
+use crate::runtime::executor::{Engine, EvalExe, LocalUpdateExe};
+use crate::runtime::params::ModelState;
+use crate::topology::accounting::CommAccountant;
+use crate::topology::builder::{build, TopologyParams};
+use crate::topology::graph::Topology;
+use crate::topology::route::RouteTable;
+use crate::util::error::{Error, Result};
+use crate::util::timer::Timer;
+
+/// Result summary of one experiment run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub name: String,
+    pub algorithm: &'static str,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_loss: f64,
+    pub total_byte_hops: u64,
+    pub rounds: usize,
+    pub metrics: ExperimentMetrics,
+    /// Wall-clock seconds by phase (train/aggregate/eval/comm).
+    pub phase_seconds: Vec<(String, f64)>,
+}
+
+/// The experiment runner.
+pub struct Runner {
+    pub cfg: ExperimentConfig,
+    engine: Arc<Engine>,
+    pub fed: Federation,
+    pub topo: Topology,
+    strategy: Strategy,
+    loader: ClientLoader,
+    state: ModelState,
+    lu: LocalUpdateExe,
+    ev: EvalExe,
+    pub accountant: CommAccountant,
+    /// Failure-injection stream (client dropout).
+    dropout_rng: crate::rng::Rng,
+}
+
+impl Runner {
+    /// Build a runner with a fresh PJRT engine.
+    pub fn new(cfg: ExperimentConfig, artifacts_dir: &str) -> Result<Runner> {
+        let engine = Arc::new(Engine::load(artifacts_dir)?);
+        Runner::with_engine(engine, cfg)
+    }
+
+    /// Build a runner sharing an existing engine (compiled executables are
+    /// cached per (variant, optimizer, K) across runs).
+    pub fn with_engine(engine: Arc<Engine>, cfg: ExperimentConfig) -> Result<Runner> {
+        let cfg = cfg.validate()?;
+        let variant = engine.manifest.variant(&cfg.model)?;
+        // Cross-validate config against the artifact contract.
+        if variant.train_batch != cfg.batch_size {
+            return Err(Error::Config(format!(
+                "batch_size {} != artifact train batch {} for {}",
+                cfg.batch_size, variant.train_batch, cfg.model
+            )));
+        }
+        if !variant.k_values.contains(&cfg.local_steps) {
+            return Err(Error::Config(format!(
+                "K={} has no artifact for {} (available: {:?}) — extend \
+                 BUILD_MATRIX in python/compile/aot.py",
+                cfg.local_steps, cfg.model, variant.k_values
+            )));
+        }
+        let (h, w, c) = variant.image;
+        if (h, w, c) != cfg.dataset.image() {
+            return Err(Error::Config(format!(
+                "model {} expects {:?} images but dataset {} yields {:?}",
+                cfg.model,
+                variant.image,
+                cfg.dataset.name(),
+                cfg.dataset.image()
+            )));
+        }
+        let fed = build_federation(
+            cfg.dataset,
+            &cfg.distribution,
+            cfg.clients,
+            cfg.clusters,
+            cfg.samples_per_client,
+            cfg.test_samples,
+            cfg.seed,
+        )?;
+        let topo = build(&TopologyParams::new(
+            cfg.topology,
+            cfg.clusters,
+            cfg.cluster_size(),
+        ))?;
+        let strategy = Strategy::for_config(&cfg, &fed, &topo);
+        let loader = ClientLoader::new(cfg.seed ^ LOADER_SEED_MIX, cfg.batch_size);
+        let state = engine.init_state(&cfg.model, &cfg.optimizer)?;
+        let lu = engine.local_update(&cfg.model, &cfg.optimizer, cfg.local_steps)?;
+        let ev = engine.eval(&cfg.model, &cfg.optimizer)?;
+        let dropout_rng = crate::rng::Rng::new(cfg.seed ^ 0xD509_0A7);
+        Ok(Runner {
+            cfg,
+            engine,
+            fed,
+            topo,
+            strategy,
+            loader,
+            state,
+            lu,
+            ev,
+            accountant: CommAccountant::new(),
+            dropout_rng,
+        })
+    }
+
+    /// Current global model state.
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    /// The shared engine.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Evaluate the current global model on the held-out test set.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let (loss, acc) = self.ev.run_dataset(&self.state, &self.fed.test)?;
+        Ok((loss, acc))
+    }
+
+    /// Run the full experiment.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let mut metrics = ExperimentMetrics::default();
+        let mut timer = Timer::new();
+        let routes = RouteTable::hops(&self.topo);
+        let model_bytes = self.state.param_bytes();
+        let rounds = self.cfg.rounds;
+
+        for t in 0..rounds {
+            timer.lap("idle");
+            let mut plan = self.strategy.plan_round(t, &self.fed);
+
+            // --- failure injection ---------------------------------------
+            if self.cfg.dropout > 0.0 {
+                let p = self.cfg.dropout;
+                for (_m, members) in &mut plan.groups {
+                    members.retain(|_| !self.dropout_rng.chance(p));
+                }
+                plan.groups.retain(|(_, v)| !v.is_empty());
+                if plan.groups.is_empty() {
+                    // Every selected client dropped: the round is lost; the
+                    // model (and any scheduled migration) carries over.
+                    log::debug!("round {t}: all participants dropped");
+                    metrics.push(RoundRecord {
+                        round: t,
+                        cluster: plan.cluster,
+                        train_loss: f64::NAN,
+                        test_accuracy: f64::NAN,
+                        test_loss: f64::NAN,
+                        comm_byte_hops: 0,
+                        train_s: 0.0,
+                        aggregate_s: 0.0,
+                        net_s: 0.0,
+                    });
+                    continue;
+                }
+            }
+
+            // --- local updates -------------------------------------------
+            let mut group_states: Vec<(usize, ModelState)> = Vec::new();
+            let mut losses = Vec::new();
+            for (_m, members) in &plan.groups {
+                let mut states = Vec::with_capacity(members.len());
+                for &id in members {
+                    let batch = self.loader.local_batches(
+                        &self.fed.train,
+                        &self.fed.clients[id],
+                        t,
+                        self.cfg.local_steps,
+                    );
+                    let (s, loss) =
+                        self.lu.run(&self.state, &batch, self.cfg.lr as f32)?;
+                    if !loss.is_finite() {
+                        return Err(Error::Data(format!(
+                            "non-finite loss at round {t} client {id} — \
+                             lower the learning rate"
+                        )));
+                    }
+                    states.push(s);
+                    losses.push(loss as f64);
+                }
+                let sizes: Vec<f64> =
+                    members.iter().map(|_| 1.0).collect();
+                group_states
+                    .push((members.len(), aggregate_states(&states, Some(&sizes))?));
+            }
+            let train_s = timer.lap("train").as_secs_f64();
+
+            // --- aggregation (Eq. 3) -------------------------------------
+            self.state = match plan.aggregation {
+                AggregationSite::None => group_states.pop().unwrap().1,
+                AggregationSite::EdgeBs(_) => group_states.pop().unwrap().1,
+                AggregationSite::Cloud => {
+                    let weights: Vec<f64> =
+                        group_states.iter().map(|(n, _)| *n as f64).collect();
+                    let states: Vec<ModelState> =
+                        group_states.into_iter().map(|(_, s)| s).collect();
+                    aggregate_states(&states, Some(&weights))?
+                }
+            };
+            let aggregate_s = timer.lap("aggregate").as_secs_f64();
+
+            // --- communication accounting --------------------------------
+            let byte_hops = record_round(
+                &plan,
+                &self.topo,
+                &routes,
+                &mut self.accountant,
+                model_bytes,
+                t,
+                CommOptions::default(),
+                None,
+            )?;
+            timer.lap("comm");
+
+            // --- evaluation -----------------------------------------------
+            let eval_now = t + 1 == rounds
+                || (self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0);
+            let (test_loss, test_acc) = if eval_now {
+                let (l, a) = self.evaluate()?;
+                (l, a)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let _ = timer.lap("eval");
+
+            let train_loss =
+                losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+            if eval_now {
+                log::info!(
+                    "[{}] round {t:>4} cluster {:>3} loss {train_loss:.4} \
+                     acc {:.4} ({} byte-hops)",
+                    self.strategy.name(),
+                    plan_cluster_label(plan.cluster),
+                    test_acc,
+                    byte_hops
+                );
+            }
+            metrics.push(RoundRecord {
+                round: t,
+                cluster: plan.cluster,
+                train_loss,
+                test_accuracy: test_acc,
+                test_loss,
+                comm_byte_hops: byte_hops,
+                train_s,
+                aggregate_s,
+                net_s: 0.0,
+            });
+        }
+
+        let final_loss = metrics
+            .rounds
+            .last()
+            .map(|r| r.train_loss)
+            .unwrap_or(f64::NAN);
+        Ok(RunReport {
+            name: self.cfg.name.clone(),
+            algorithm: self.strategy.name(),
+            final_accuracy: metrics.final_accuracy(),
+            best_accuracy: metrics.best_accuracy(),
+            final_loss,
+            total_byte_hops: metrics.total_byte_hops(),
+            rounds,
+            metrics,
+            phase_seconds: timer.laps(),
+        })
+    }
+}
+
+fn plan_cluster_label(m: usize) -> String {
+    if m == usize::MAX {
+        "-".to_string()
+    } else {
+        m.to_string()
+    }
+}
+
+/// Seed-mixing constant separating the loader's stream from the
+/// partitioner's and the strategies'.
+const LOADER_SEED_MIX: u64 = 0x10AD_E2B6;

@@ -1,0 +1,170 @@
+//! Cluster scheduling: which cluster is active at round `t`, and in what
+//! order the model migrates (the paper's `m(t)`).
+
+use crate::rng::Rng;
+
+/// EdgeFLow's inter-cluster migration order.
+#[derive(Debug)]
+pub enum ClusterSchedule {
+    /// Fixed cyclic order 0, 1, ..., M-1, 0, ... (EdgeFLowSeq).
+    Sequential { clusters: usize },
+    /// Uniform random next cluster, never repeating the current one when
+    /// M > 1 (EdgeFLowRand).
+    Random { clusters: usize, rng: Rng, last: Option<usize> },
+    /// Hop-aware circuit (the paper's "wireless-aware scheduling" future
+    /// work): a greedy nearest-neighbor tour over the BS hop-distance
+    /// matrix — every cluster once per cycle, migrations ride the
+    /// cheapest available links.
+    HopAware { order: Vec<usize> },
+}
+
+impl ClusterSchedule {
+    pub fn sequential(clusters: usize) -> ClusterSchedule {
+        assert!(clusters > 0);
+        ClusterSchedule::Sequential { clusters }
+    }
+
+    pub fn random(clusters: usize, seed: u64) -> ClusterSchedule {
+        assert!(clusters > 0);
+        ClusterSchedule::Random { clusters, rng: Rng::new(seed), last: None }
+    }
+
+    /// Greedy nearest-neighbor tour over a pairwise hop matrix
+    /// (`hops[i][j]` = hop distance between BS i and BS j).
+    pub fn hop_aware(hops: &[Vec<usize>]) -> ClusterSchedule {
+        let m = hops.len();
+        assert!(m > 0);
+        let mut order = Vec::with_capacity(m);
+        let mut visited = vec![false; m];
+        let mut cur = 0usize;
+        order.push(0);
+        visited[0] = true;
+        for _ in 1..m {
+            let next = (0..m)
+                .filter(|&j| !visited[j])
+                .min_by_key(|&j| (hops[cur][j], j))
+                .unwrap();
+            order.push(next);
+            visited[next] = true;
+            cur = next;
+        }
+        ClusterSchedule::HopAware { order }
+    }
+
+    /// The active cluster for round `t`.  For the random schedule this
+    /// must be called with consecutive `t` (it advances internal state).
+    pub fn next(&mut self, t: usize) -> usize {
+        match self {
+            ClusterSchedule::Sequential { clusters } => t % *clusters,
+            ClusterSchedule::HopAware { order } => order[t % order.len()],
+            ClusterSchedule::Random { clusters, rng, last } => {
+                let m = if *clusters == 1 {
+                    0
+                } else {
+                    // Avoid training the same cluster twice in a row: the
+                    // migration "flow" always moves.
+                    loop {
+                        let c = rng.below(*clusters);
+                        if Some(c) != *last {
+                            break c;
+                        }
+                    }
+                };
+                *last = Some(m);
+                m
+            }
+        }
+    }
+
+    pub fn clusters(&self) -> usize {
+        match self {
+            ClusterSchedule::Sequential { clusters } => *clusters,
+            ClusterSchedule::Random { clusters, .. } => *clusters,
+            ClusterSchedule::HopAware { order } => order.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_covers_all_every_m_rounds() {
+        let mut s = ClusterSchedule::sequential(4);
+        let order: Vec<usize> = (0..8).map(|t| s.next(t)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn random_never_repeats_consecutively() {
+        let mut s = ClusterSchedule::random(5, 42);
+        let mut last = usize::MAX;
+        for t in 0..200 {
+            let m = s.next(t);
+            assert!(m < 5);
+            assert_ne!(m, last);
+            last = m;
+        }
+    }
+
+    #[test]
+    fn random_visits_all_clusters_uniformly() {
+        let mut s = ClusterSchedule::random(5, 7);
+        let mut counts = [0usize; 5];
+        for t in 0..5000 {
+            counts[s.next(t)] += 1;
+        }
+        for c in counts {
+            // expectation 1000 each
+            assert!((700..1300).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_cluster_degenerates() {
+        let mut s = ClusterSchedule::random(1, 0);
+        assert_eq!(s.next(0), 0);
+        assert_eq!(s.next(1), 0);
+    }
+
+    #[test]
+    fn hop_aware_visits_all_following_cheap_links() {
+        // Line graph distances: 0-1-2-3 => tour must be 0,1,2,3.
+        let hops = vec![
+            vec![0, 1, 2, 3],
+            vec![1, 0, 1, 2],
+            vec![2, 1, 0, 1],
+            vec![3, 2, 1, 0],
+        ];
+        let mut s = ClusterSchedule::hop_aware(&hops);
+        let tour: Vec<usize> = (0..4).map(|t| s.next(t)).collect();
+        assert_eq!(tour, vec![0, 1, 2, 3]);
+        // cycles
+        assert_eq!(s.next(4), 0);
+        assert_eq!(s.clusters(), 4);
+    }
+
+    #[test]
+    fn hop_aware_prefers_near_over_far() {
+        // Star around 0 with one distant node 3.
+        let hops = vec![
+            vec![0, 1, 1, 5],
+            vec![1, 0, 2, 6],
+            vec![1, 2, 0, 6],
+            vec![5, 6, 6, 0],
+        ];
+        let mut s = ClusterSchedule::hop_aware(&hops);
+        let tour: Vec<usize> = (0..4).map(|t| s.next(t)).collect();
+        assert_eq!(tour[3], 3, "distant cluster visited last: {tour:?}");
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let mut a = ClusterSchedule::random(6, 9);
+        let mut b = ClusterSchedule::random(6, 9);
+        for t in 0..50 {
+            assert_eq!(a.next(t), b.next(t));
+        }
+    }
+}

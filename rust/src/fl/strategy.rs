@@ -1,0 +1,290 @@
+//! Round planning for every FL algorithm.
+//!
+//! A [`Strategy`] decides, per round, which clients train, where the
+//! aggregation happens, and where the model lives afterwards.  The runner
+//! executes the plan (local updates + aggregation) and [`super::comm`]
+//! turns it into transfers over the topology.
+
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::data::partition::Federation;
+use crate::fl::scheduler::ClusterSchedule;
+use crate::rng::Rng;
+use crate::topology::graph::Topology;
+use crate::topology::route::RouteTable;
+
+/// Where this round's aggregation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregationSite {
+    Cloud,
+    /// Edge base station of cluster m.
+    EdgeBs(usize),
+    /// No aggregation (sequential pass-through).
+    None,
+}
+
+/// One round's execution plan.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    /// Clients that run local updates this round, grouped by cluster
+    /// (cluster id, member client ids).  FedAvg uses a single pseudo-group
+    /// tagged with cluster = usize::MAX.
+    pub groups: Vec<(usize, Vec<usize>)>,
+    /// Reporting label: "the" active cluster (first group).
+    pub cluster: usize,
+    pub aggregation: AggregationSite,
+    /// Where the model migrates after aggregation (EdgeFLow only):
+    /// (from_cluster, to_cluster).
+    pub migration: Option<(usize, usize)>,
+}
+
+impl RoundPlan {
+    /// All participant ids, flattened.
+    pub fn participants(&self) -> Vec<usize> {
+        self.groups.iter().flat_map(|(_, v)| v.iter().copied()).collect()
+    }
+}
+
+/// Per-algorithm round planner.
+#[derive(Debug)]
+pub enum Strategy {
+    /// Random `n_sample` clients/round, cloud aggregation.
+    FedAvg { rng: Rng, n_sample: usize },
+    /// All clusters train; edge pre-aggregation then cloud aggregation.
+    HierFl,
+    /// One client per round; model hops client -> client.
+    SeqFl { order: Vec<usize>, cursor: usize, last_cluster: Option<usize> },
+    /// EdgeFLow: one active cluster per round, model migrates BS -> BS.
+    EdgeFlow { schedule: ClusterSchedule, current: usize },
+}
+
+impl Strategy {
+    /// Build the strategy for an experiment config.  `topo` supplies the
+    /// BS hop-distance matrix for the hop-aware migration circuit.
+    pub fn for_config(cfg: &ExperimentConfig, fed: &Federation, topo: &Topology) -> Strategy {
+        let seed = cfg.seed ^ 0x57A7E617;
+        match cfg.algorithm {
+            Algorithm::EdgeFlowHop => {
+                let bs = topo.base_stations();
+                let rt = RouteTable::hops(topo);
+                let hops: Vec<Vec<usize>> = bs
+                    .iter()
+                    .map(|&a| {
+                        bs.iter()
+                            .map(|&b| rt.dist(a, b).unwrap_or(usize::MAX / 2))
+                            .collect()
+                    })
+                    .collect();
+                Strategy::EdgeFlow {
+                    schedule: ClusterSchedule::hop_aware(&hops),
+                    current: 0,
+                }
+            }
+            Algorithm::FedAvg => Strategy::FedAvg {
+                rng: Rng::new(seed),
+                n_sample: cfg.cluster_size(),
+            },
+            Algorithm::HierFl => Strategy::HierFl,
+            Algorithm::SeqFl => {
+                let mut order: Vec<usize> = (0..fed.clients.len()).collect();
+                Rng::new(seed).shuffle(&mut order);
+                Strategy::SeqFl { order, cursor: 0, last_cluster: None }
+            }
+            Algorithm::EdgeFlowRand => Strategy::EdgeFlow {
+                schedule: ClusterSchedule::random(cfg.clusters, seed),
+                current: 0,
+            },
+            Algorithm::EdgeFlowSeq => Strategy::EdgeFlow {
+                schedule: ClusterSchedule::sequential(cfg.clusters),
+                current: 0,
+            },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::FedAvg { .. } => "fedavg",
+            Strategy::HierFl => "hierfl",
+            Strategy::SeqFl { .. } => "seqfl",
+            Strategy::EdgeFlow { schedule, .. } => match schedule {
+                ClusterSchedule::Sequential { .. } => "edgeflow_seq",
+                ClusterSchedule::Random { .. } => "edgeflow_rand",
+                ClusterSchedule::HopAware { .. } => "edgeflow_hop",
+            },
+        }
+    }
+
+    /// Plan round `t`.
+    pub fn plan_round(&mut self, t: usize, fed: &Federation) -> RoundPlan {
+        match self {
+            Strategy::FedAvg { rng, n_sample } => {
+                let all = fed.clients.len();
+                let mut picks = rng.sample_indices(all, (*n_sample).min(all));
+                // Sort so aggregation order (and hence f32 rounding) is a
+                // function of the participant *set*, not the draw order —
+                // keeps e.g. full participation bit-identical to EdgeFLow
+                // with M = 1.
+                picks.sort_unstable();
+                RoundPlan {
+                    groups: vec![(usize::MAX, picks)],
+                    cluster: usize::MAX,
+                    aggregation: AggregationSite::Cloud,
+                    migration: None,
+                }
+            }
+            Strategy::HierFl => {
+                let groups = (0..fed.clusters)
+                    .map(|m| (m, fed.cluster_members(m)))
+                    .collect();
+                RoundPlan {
+                    groups,
+                    cluster: usize::MAX,
+                    aggregation: AggregationSite::Cloud,
+                    migration: None,
+                }
+            }
+            Strategy::SeqFl { order, cursor, last_cluster } => {
+                let id = order[*cursor % order.len()];
+                *cursor += 1;
+                let cluster = fed.clients[id].cluster;
+                // The model hops from the previous trainer's site to this
+                // one — that inter-site transfer is SeqFl's whole comm
+                // story and must be accounted.
+                let migration = last_cluster
+                    .filter(|&c| c != cluster)
+                    .map(|c| (c, cluster));
+                *last_cluster = Some(cluster);
+                RoundPlan {
+                    groups: vec![(cluster, vec![id])],
+                    cluster,
+                    aggregation: AggregationSite::None,
+                    migration,
+                }
+            }
+            Strategy::EdgeFlow { schedule, current } => {
+                let m = schedule.next(t);
+                let from = *current;
+                *current = m;
+                RoundPlan {
+                    groups: vec![(m, fed.cluster_members(m))],
+                    cluster: m,
+                    aggregation: AggregationSite::EdgeBs(m),
+                    // Migration happens *after* the round: recorded as the
+                    // hop taken to reach the next cluster; for reporting we
+                    // attribute the hop from the previous active cluster.
+                    migration: if t == 0 { None } else { Some((from, m)) },
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, Distribution, TopologyKind};
+    use crate::data::partition::build_federation;
+    use crate::topology::builder::{build, TopologyParams};
+
+    fn fed() -> Federation {
+        build_federation(
+            DatasetKind::SynthFashion,
+            &Distribution::Iid,
+            20,
+            4,
+            40,
+            20,
+            1,
+        )
+        .unwrap()
+    }
+
+    fn topo() -> Topology {
+        build(&TopologyParams::new(TopologyKind::DepthLinear, 4, 5)).unwrap()
+    }
+
+    fn cfg(alg: Algorithm) -> ExperimentConfig {
+        ExperimentConfig {
+            algorithm: alg,
+            clients: 20,
+            clusters: 4,
+            samples_per_client: 40,
+            batch_size: 8,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn fedavg_samples_cluster_size_clients() {
+        let f = fed();
+        let mut s = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &topo());
+        let p = s.plan_round(0, &f);
+        assert_eq!(p.participants().len(), 5);
+        assert_eq!(p.aggregation, AggregationSite::Cloud);
+        assert!(p.migration.is_none());
+        // distinct clients
+        let mut ids = p.participants();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 5);
+    }
+
+    #[test]
+    fn fedavg_resamples_every_round() {
+        let f = fed();
+        let mut s = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &topo());
+        let a = s.plan_round(0, &f).participants();
+        let b = s.plan_round(1, &f).participants();
+        assert_ne!(a, b); // overwhelmingly likely with 20 choose 5
+    }
+
+    #[test]
+    fn hierfl_includes_everyone_grouped() {
+        let f = fed();
+        let mut s = Strategy::for_config(&cfg(Algorithm::HierFl), &f, &topo());
+        let p = s.plan_round(0, &f);
+        assert_eq!(p.groups.len(), 4);
+        assert_eq!(p.participants().len(), 20);
+    }
+
+    #[test]
+    fn seqfl_walks_one_client_at_a_time() {
+        let f = fed();
+        let mut s = Strategy::for_config(&cfg(Algorithm::SeqFl), &f, &topo());
+        let mut seen = std::collections::BTreeSet::new();
+        for t in 0..20 {
+            let p = s.plan_round(t, &f);
+            assert_eq!(p.participants().len(), 1);
+            assert_eq!(p.aggregation, AggregationSite::None);
+            seen.insert(p.participants()[0]);
+        }
+        assert_eq!(seen.len(), 20); // full permutation before repeats
+    }
+
+    #[test]
+    fn edgeflow_seq_activates_whole_cluster_cyclically() {
+        let f = fed();
+        let mut s = Strategy::for_config(&cfg(Algorithm::EdgeFlowSeq), &f, &topo());
+        for t in 0..8 {
+            let p = s.plan_round(t, &f);
+            assert_eq!(p.cluster, t % 4);
+            assert_eq!(p.groups[0].1.len(), 5);
+            assert_eq!(p.aggregation, AggregationSite::EdgeBs(t % 4));
+            if t > 0 {
+                assert_eq!(p.migration, Some(((t - 1) % 4, t % 4)));
+            }
+        }
+    }
+
+    #[test]
+    fn edgeflow_members_match_federation() {
+        let f = fed();
+        let mut s = Strategy::for_config(&cfg(Algorithm::EdgeFlowRand), &f, &topo());
+        for t in 0..10 {
+            let p = s.plan_round(t, &f);
+            let m = p.cluster;
+            for &id in &p.groups[0].1 {
+                assert_eq!(f.clients[id].cluster, m);
+            }
+        }
+    }
+}

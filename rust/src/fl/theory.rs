@@ -1,0 +1,211 @@
+//! Theorem 1 (Eq. 8): the convergence bound, term by term.
+//!
+//! Used by the `sweep --theory` CLI and the Fig 3 bench to juxtapose the
+//! measured curves with the bound's predictions: larger `N_m` shrinks the
+//! variance term (Fig 3a), while `K` appears in both the numerator of the
+//! drift term and the denominator of the init term, making the bound
+//! non-monotonic in `K` (Fig 3b).
+
+/// Problem constants for the bound (Assumptions 1–3).
+#[derive(Debug, Clone)]
+pub struct TheoryParams {
+    /// L-smoothness constant.
+    pub l: f64,
+    /// Gradient second-moment bound G².
+    pub g2: f64,
+    /// Stochastic-gradient variance bound σ².
+    pub sigma2: f64,
+    /// F(θ⁰) − F*.
+    pub init_gap: f64,
+    /// Learning rate η.
+    pub eta: f64,
+    /// Local steps K.
+    pub k: usize,
+    /// Rounds T.
+    pub t: usize,
+    /// Cluster heterogeneity bounds λ²_{m(t)} per round (len T, or len 1
+    /// to broadcast).
+    pub lambda2: Vec<f64>,
+    /// Cluster sizes N_{m(t)} per round (len T or 1).
+    pub n_m: Vec<usize>,
+}
+
+/// The four terms of Eq. 8 and their total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoundTerms {
+    /// 4 (F⁰ − F*) / (K η T)
+    pub init: f64,
+    /// (2/T) Σ λ²_{m(t)}
+    pub heterogeneity: f64,
+    /// (2/T) Σ L η σ² / N_{m(t)}
+    pub variance: f64,
+    /// 4 L² K² η² G² / 3
+    pub drift: f64,
+}
+
+impl BoundTerms {
+    pub fn total(&self) -> f64 {
+        self.init + self.heterogeneity + self.variance + self.drift
+    }
+}
+
+fn broadcast<T: Copy>(xs: &[T], t: usize, what: &str) -> Vec<T> {
+    match xs.len() {
+        1 => vec![xs[0]; t],
+        n if n == t => xs.to_vec(),
+        n => panic!("{what} has {n} entries, want 1 or {t}"),
+    }
+}
+
+/// Evaluate Eq. 8.  Panics if `eta` violates the step-size condition
+/// `L K η < 1` (the theorem's hypothesis).
+pub fn bound(p: &TheoryParams) -> BoundTerms {
+    assert!(p.t > 0 && p.k > 0);
+    assert!(
+        p.l * p.k as f64 * p.eta < 1.0,
+        "step-size condition LKη < 1 violated (L={} K={} η={})",
+        p.l,
+        p.k,
+        p.eta
+    );
+    let t = p.t as f64;
+    let k = p.k as f64;
+    let lambda2 = broadcast(&p.lambda2, p.t, "lambda2");
+    let n_m = broadcast(&p.n_m, p.t, "n_m");
+    BoundTerms {
+        init: 4.0 * p.init_gap / (k * p.eta * t),
+        heterogeneity: 2.0 / t * lambda2.iter().sum::<f64>(),
+        variance: 2.0 / t
+            * n_m
+                .iter()
+                .map(|&n| p.l * p.eta * p.sigma2 / n as f64)
+                .sum::<f64>(),
+        drift: 4.0 * p.l * p.l * k * k * p.eta * p.eta * p.g2 / 3.0,
+    }
+}
+
+/// The largest admissible K for the step-size condition at a given η.
+pub fn max_k(l: f64, eta: f64) -> usize {
+    ((1.0 / (l * eta)).ceil() as usize).saturating_sub(1).max(1)
+}
+
+/// Scan the bound over K (Fig 3b's theoretical companion): returns
+/// (K, total bound) pairs for K in `1..=k_max` with the condition held.
+pub fn k_scan(base: &TheoryParams, k_max: usize) -> Vec<(usize, f64)> {
+    (1..=k_max)
+        .filter(|&k| base.l * k as f64 * base.eta < 1.0)
+        .map(|k| {
+            let p = TheoryParams { k, ..base.clone() };
+            (k, bound(&p).total())
+        })
+        .collect()
+}
+
+/// Heterogeneity proxy λ²_m from class histograms: squared L2 distance
+/// between the cluster's class distribution and the global one, scaled by
+/// G² (a standard surrogate when true gradient diversity is unavailable;
+/// see DESIGN.md).
+pub fn lambda2_proxy(cluster_hist: &[usize], global_hist: &[usize], g2: f64) -> f64 {
+    let cs: f64 = cluster_hist.iter().sum::<usize>() as f64;
+    let gs: f64 = global_hist.iter().sum::<usize>() as f64;
+    assert!(cs > 0.0 && gs > 0.0);
+    let d2: f64 = cluster_hist
+        .iter()
+        .zip(global_hist)
+        .map(|(&c, &g)| {
+            let d = c as f64 / cs - g as f64 / gs;
+            d * d
+        })
+        .sum();
+    g2 * d2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> TheoryParams {
+        TheoryParams {
+            l: 1.0,
+            g2: 1.0,
+            sigma2: 1.0,
+            init_gap: 1.0,
+            eta: 0.01,
+            k: 5,
+            t: 100,
+            lambda2: vec![0.1],
+            n_m: vec![10],
+        }
+    }
+
+    #[test]
+    fn terms_match_formula() {
+        let b = bound(&base());
+        assert!((b.init - 4.0 / (5.0 * 0.01 * 100.0)).abs() < 1e-12);
+        assert!((b.heterogeneity - 0.2).abs() < 1e-12);
+        assert!((b.variance - 2.0 * 0.01 / 10.0).abs() < 1e-12);
+        assert!((b.drift - 4.0 * 25.0 * 1e-4 / 3.0).abs() < 1e-12);
+        assert!(b.total() > 0.0);
+    }
+
+    #[test]
+    fn larger_clusters_shrink_variance() {
+        // Fig 3a's prediction.
+        let mut small = base();
+        small.n_m = vec![5];
+        let mut large = base();
+        large.n_m = vec![50];
+        assert!(bound(&large).variance < bound(&small).variance);
+        assert!(bound(&large).total() < bound(&small).total());
+    }
+
+    #[test]
+    fn bound_is_nonmonotonic_in_k() {
+        // Fig 3b's prediction: some interior K beats both extremes.
+        let mut p = base();
+        p.eta = 0.02;
+        p.g2 = 5.0;
+        let scan = k_scan(&p, 40);
+        let totals: Vec<f64> = scan.iter().map(|&(_, v)| v).collect();
+        let best = totals
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(best > 0, "best K should not be K=1 here");
+        assert!(best < totals.len() - 1, "best K should not be the max");
+    }
+
+    #[test]
+    fn per_round_vectors_accepted() {
+        let mut p = base();
+        p.lambda2 = (0..100).map(|i| 0.001 * i as f64).collect();
+        p.n_m = vec![10; 100];
+        let b = bound(&p);
+        assert!(b.heterogeneity > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "LKη < 1")]
+    fn step_condition_enforced() {
+        let mut p = base();
+        p.eta = 0.5; // LKη = 2.5
+        bound(&p);
+    }
+
+    #[test]
+    fn max_k_respects_condition() {
+        let k = max_k(1.0, 0.01);
+        assert!(1.0 * k as f64 * 0.01 < 1.0);
+        assert!(1.0 * (k + 1) as f64 * 0.01 >= 1.0);
+    }
+
+    #[test]
+    fn lambda2_proxy_zero_for_identical() {
+        let g = vec![10, 10, 10];
+        assert_eq!(lambda2_proxy(&g, &g, 4.0), 0.0);
+        let skew = vec![30, 0, 0];
+        assert!(lambda2_proxy(&skew, &g, 4.0) > 0.0);
+    }
+}

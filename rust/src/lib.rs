@@ -1,0 +1,48 @@
+//! # EdgeFLow — serverless federated learning via sequential model migration
+//!
+//! Reproduction of *"EdgeFLow: Serverless Federated Learning via Sequential
+//! Model Migration in Edge Networks"* (Shi, Hou, Fan, Letaief; 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: cluster
+//!   management, the sequential model-migration scheduler
+//!   ([`fl::edgeflow`]), FedAvg / Hierarchical-FL / Sequential-FL baselines,
+//!   an edge-network topology model ([`topology`]) with a discrete-event
+//!   communication simulator ([`netsim`]), the aggregation hot path
+//!   ([`fl::aggregate`]), metrics, CLI.
+//! * **Layer 2** — the paper's six-layer CNN (and MLP variants) written in
+//!   JAX (`python/compile/model.py`), AOT-lowered to HLO text once at build
+//!   time (`make artifacts`).
+//! * **Layer 1** — Pallas kernels (tiled matmul, conv-as-im2col, fused
+//!   BN+ReLU, fused softmax-xent) under `python/compile/kernels/`.
+//!
+//! At run time the Rust binary loads `artifacts/*.hlo.txt` through the PJRT
+//! CPU client ([`runtime`]) and never touches Python.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use edgeflow::config::{preset, Algorithm};
+//! use edgeflow::fl::runner::Runner;
+//!
+//! let mut cfg = preset("table1_fashion_iid").unwrap();
+//! cfg.rounds = 10;
+//! cfg.algorithm = Algorithm::EdgeFlowSeq;
+//! let report = Runner::new(cfg, "artifacts").unwrap().run().unwrap();
+//! println!("final accuracy: {:.2}%", report.final_accuracy * 100.0);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod fl;
+pub mod metrics;
+pub mod netsim;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod topology;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,574 @@
+//! `edgeflow` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands map to the paper's experiments (see DESIGN.md §5):
+//! `train` runs one experiment, `table1` / `fig3` / `comm-sim` regenerate
+//! the paper's table and figures, `inspect` prints partitions/topologies/
+//! manifest, `theory` evaluates Theorem 1.
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use edgeflow::cli::{flag, flag_def, switch, Args, Cli, CommandSpec};
+use edgeflow::config::{
+    preset, Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind, PRESETS,
+};
+use edgeflow::data::partition::build_federation;
+use edgeflow::fl::experiments::{fig3a, fig3b, fig4, table1, SuiteOptions};
+use edgeflow::fl::runner::Runner;
+use edgeflow::fl::theory::{bound, k_scan, TheoryParams};
+use edgeflow::metrics::smooth;
+use edgeflow::runtime::executor::Engine;
+use edgeflow::runtime::manifest::Manifest;
+use edgeflow::topology::builder::{build as build_topo, TopologyParams};
+use edgeflow::topology::route::RouteTable;
+use edgeflow::util::error::{Error, Result};
+use edgeflow::util::table::{Align, Table};
+
+fn cli() -> Cli {
+    let common_train = || {
+        vec![
+            flag_def("artifacts", "artifact directory", "artifacts"),
+            flag("preset", "named preset (see `presets`)"),
+            flag("config", "JSON config file"),
+            flag("algorithm", "fedavg|hierfl|seqfl|edgeflow_rand|edgeflow_seq|edgeflow_hop"),
+            flag("dropout", "per-round client dropout probability [0,1]"),
+            flag("dataset", "synth_fashion|synth_cifar"),
+            flag("dist", "iid|niid_a|niid_b|noniid<pct>"),
+            flag("model", "artifact model variant"),
+            flag("rounds", "communication rounds T"),
+            flag("clients", "total client count N"),
+            flag("clusters", "cluster count M"),
+            flag("k", "local steps K"),
+            flag("lr", "learning rate"),
+            flag("optimizer", "sgd|adam"),
+            flag("seed", "master seed"),
+            flag("samples", "samples per client"),
+            flag("test-samples", "held-out test set size"),
+            flag("eval-every", "evaluation period in rounds"),
+            flag("topology", "simple|breadth_parallel|depth_linear|hybrid"),
+            flag("out", "write metrics CSV here"),
+            flag("out-json", "write metrics JSON here"),
+            switch("verbose", "debug logging"),
+        ]
+    };
+    Cli {
+        bin: "edgeflow",
+        about: "EdgeFLow: serverless federated learning via sequential model \
+                migration (paper reproduction)",
+        commands: vec![
+            CommandSpec {
+                name: "train",
+                about: "run one federated-learning experiment",
+                flags: common_train(),
+                positional: vec![],
+            },
+            CommandSpec {
+                name: "table1",
+                about: "regenerate Table I (accuracy across methods/configs)",
+                flags: vec![
+                    flag_def("artifacts", "artifact directory", "artifacts"),
+                    flag_def("rounds", "rounds per cell", "60"),
+                    flag_def("samples", "samples per client", "120"),
+                    flag("seed", "master seed"),
+                    switch("fast", "fashion cells only"),
+                    flag("out", "write cell results CSV here"),
+                    switch("verbose", "debug logging"),
+                ],
+                positional: vec![],
+            },
+            CommandSpec {
+                name: "fig3",
+                about: "regenerate Fig 3 (cluster-size and local-epoch sweeps)",
+                flags: vec![
+                    flag_def("artifacts", "artifact directory", "artifacts"),
+                    flag_def("rounds", "rounds per run", "60"),
+                    flag_def("part", "a|b|both", "both"),
+                    flag_def("nms", "cluster sizes for part a", "5,10,20,50"),
+                    flag_def("ks", "local steps for part b", "1,2,5,10"),
+                    flag_def("window", "smoothing window", "5"),
+                    flag("seed", "master seed"),
+                    flag("out", "write curves CSV here"),
+                    switch("verbose", "debug logging"),
+                ],
+                positional: vec![],
+            },
+            CommandSpec {
+                name: "comm-sim",
+                about: "regenerate Fig 4 (communication load across topologies)",
+                flags: vec![
+                    flag_def("artifacts", "artifact directory (for param counts)", "artifacts"),
+                    flag_def("model", "model variant for the parameter count", "fashion_mlp"),
+                    flag_def("rounds", "rounds to average over", "100"),
+                    flag_def("clusters", "cluster count M", "10"),
+                    flag_def("cluster-size", "clients per cluster N_m", "10"),
+                    flag("seed", "master seed"),
+                    switch("latency", "print DES latency column"),
+                    flag_def("codec", "transfer codec: none|int8|top<pct>", "none"),
+                    flag("out", "write results CSV here"),
+                    switch("verbose", "debug logging"),
+                ],
+                positional: vec![],
+            },
+            CommandSpec {
+                name: "theory",
+                about: "evaluate Theorem 1's bound (Eq. 8) and its K-scan",
+                flags: vec![
+                    flag_def("l", "smoothness constant L", "1.0"),
+                    flag_def("g2", "gradient bound G^2", "1.0"),
+                    flag_def("sigma2", "gradient variance sigma^2", "1.0"),
+                    flag_def("gap", "F(theta0) - F*", "1.0"),
+                    flag_def("eta", "learning rate", "0.01"),
+                    flag_def("k", "local steps K", "5"),
+                    flag_def("t", "rounds T", "100"),
+                    flag_def("lambda2", "heterogeneity bound", "0.1"),
+                    flag_def("nm", "cluster size N_m", "10"),
+                    flag_def("kmax", "K-scan upper bound", "20"),
+                ],
+                positional: vec![],
+            },
+            CommandSpec {
+                name: "inspect",
+                about: "print partitions (Fig 2), topology routes, or the manifest",
+                flags: vec![
+                    flag_def("artifacts", "artifact directory", "artifacts"),
+                    switch("partitions", "per-client class histograms"),
+                    switch("topology", "nodes, links and BS->cloud hops"),
+                    switch("manifest", "artifact manifest summary"),
+                    flag_def("dist", "distribution for --partitions", "niid_a"),
+                    flag_def("clients", "client count", "100"),
+                    flag_def("clusters", "cluster count", "10"),
+                    flag("seed", "master seed"),
+                ],
+                positional: vec![],
+            },
+            CommandSpec {
+                name: "presets",
+                about: "list named experiment presets",
+                flags: vec![],
+                positional: vec![],
+            },
+        ],
+    }
+}
+
+fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConfig> {
+    if let Some(s) = a.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(s)?;
+    }
+    if let Some(s) = a.get("dataset") {
+        cfg.dataset = DatasetKind::parse(s)?;
+        // keep the model consistent unless explicitly overridden
+        if a.get("model").is_none() {
+            cfg.model = match cfg.dataset {
+                DatasetKind::SynthFashion => "fashion_mlp".into(),
+                DatasetKind::SynthCifar => "cifar_mlp".into(),
+            };
+        }
+    }
+    if let Some(s) = a.get("dist") {
+        cfg.distribution = Distribution::parse(s)?;
+    }
+    if let Some(s) = a.get("model") {
+        cfg.model = s.to_string();
+    }
+    if let Some(s) = a.get("topology") {
+        cfg.topology = TopologyKind::parse(s)?;
+    }
+    if let Some(v) = a.get_usize("rounds")? {
+        cfg.rounds = v;
+    }
+    if let Some(v) = a.get_usize("clients")? {
+        cfg.clients = v;
+    }
+    if let Some(v) = a.get_usize("clusters")? {
+        cfg.clusters = v;
+    }
+    if let Some(v) = a.get_usize("k")? {
+        cfg.local_steps = v;
+    }
+    if let Some(v) = a.get_f64("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(s) = a.get("optimizer") {
+        cfg.optimizer = s.to_string();
+    }
+    if let Some(v) = a.get_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = a.get_usize("samples")? {
+        cfg.samples_per_client = v;
+    }
+    if let Some(v) = a.get_usize("test-samples")? {
+        cfg.test_samples = v;
+    }
+    if let Some(v) = a.get_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = a.get_f64("dropout")? {
+        cfg.dropout = v;
+    }
+    cfg.validate()
+}
+
+fn suite_options(a: &Args) -> Result<SuiteOptions> {
+    let mut o = SuiteOptions::default();
+    if let Some(v) = a.get_usize("rounds")? {
+        o.rounds = v;
+    }
+    if let Some(v) = a.get_usize("samples")? {
+        o.samples_per_client = v;
+    }
+    if let Some(v) = a.get_u64("seed")? {
+        o.seed = v;
+    }
+    Ok(o)
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let base = if let Some(p) = a.get("preset") {
+        preset(p)?
+    } else if let Some(path) = a.get("config") {
+        ExperimentConfig::load(path)?
+    } else {
+        ExperimentConfig::default()
+    };
+    let cfg = apply_overrides(base, a)?;
+    log::info!("config: {}", cfg.to_json().dump());
+    let mut runner = Runner::new(cfg, a.get("artifacts").unwrap())?;
+    let report = runner.run()?;
+    println!(
+        "\n[{}] {} rounds: final acc {:.2}%  best {:.2}%  loss {:.4}  comm {:.3e} byte-hops",
+        report.algorithm,
+        report.rounds,
+        report.final_accuracy * 100.0,
+        report.best_accuracy * 100.0,
+        report.final_loss,
+        report.total_byte_hops as f64,
+    );
+    for (phase, secs) in &report.phase_seconds {
+        println!("  {phase:>10}: {secs:.2}s");
+    }
+    if let Some(path) = a.get("out") {
+        report.metrics.to_csv().save(path)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = a.get("out-json") {
+        std::fs::write(path, report.metrics.to_json().pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(a: &Args) -> Result<()> {
+    let engine = Arc::new(Engine::load(a.get("artifacts").unwrap())?);
+    let o = suite_options(a)?;
+    let (table, cells) = table1(&engine, &o, a.has("fast"))?;
+    println!("{}", table.render());
+    if let Some(path) = a.get("out") {
+        let mut csv = edgeflow::util::csv::CsvWriter::new(&[
+            "dataset", "distribution", "algorithm", "accuracy", "byte_hops",
+        ]);
+        for c in &cells {
+            csv.row(&[
+                c.dataset.name().to_string(),
+                c.distribution.name(),
+                c.algorithm.name().to_string(),
+                format!("{}", c.accuracy),
+                c.byte_hops.to_string(),
+            ]);
+        }
+        csv.save(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(a: &Args) -> Result<()> {
+    let engine = Arc::new(Engine::load(a.get("artifacts").unwrap())?);
+    let o = suite_options(a)?;
+    let part = a.get("part").unwrap_or("both").to_string();
+    let window = a.get_usize("window")?.unwrap_or(5);
+    let mut csv = edgeflow::util::csv::CsvWriter::new(&[
+        "part", "series", "round", "accuracy", "smoothed",
+    ]);
+    let mut emit = |part: &str, series: String, rep: &edgeflow::fl::runner::RunReport| {
+        let curve = rep.metrics.accuracy_curve();
+        let vals: Vec<f64> = curve.iter().map(|&(_, a)| a).collect();
+        let sm = smooth(&vals, window);
+        println!(
+            "  {series}: final {:.2}%  best {:.2}%",
+            rep.final_accuracy * 100.0,
+            rep.best_accuracy * 100.0
+        );
+        for ((round, acc), s) in curve.iter().zip(sm) {
+            csv.row(&[
+                part.to_string(),
+                series.clone(),
+                round.to_string(),
+                format!("{acc}"),
+                format!("{s}"),
+            ]);
+        }
+    };
+    if part == "a" || part == "both" {
+        let nms: Vec<usize> = a
+            .get_list("nms")
+            .iter()
+            .map(|s| s.parse().map_err(|_| Error::Usage(format!("bad N_m {s}"))))
+            .collect::<Result<_>>()?;
+        println!("Fig 3(a): accuracy vs rounds for cluster sizes {nms:?}");
+        for (n_m, rep) in fig3a(&engine, &o, &nms)? {
+            emit("a", format!("Nm={n_m}"), &rep);
+        }
+    }
+    if part == "b" || part == "both" {
+        let ks: Vec<usize> = a
+            .get_list("ks")
+            .iter()
+            .map(|s| s.parse().map_err(|_| Error::Usage(format!("bad K {s}"))))
+            .collect::<Result<_>>()?;
+        println!("Fig 3(b): accuracy vs rounds for local epochs {ks:?}");
+        for (k, rep) in fig3b(&engine, &o, &ks)? {
+            emit("b", format!("K={k}"), &rep);
+        }
+    }
+    if let Some(path) = a.get("out") {
+        csv.save(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_comm_sim(a: &Args) -> Result<()> {
+    let manifest = Manifest::load(a.get("artifacts").unwrap())?;
+    let model = a.get("model").unwrap();
+    let raw_param_count = manifest.variant(model)?.param_count();
+    // Compression codecs shrink every model transfer; express the codec's
+    // wire size as an equivalent f32 parameter count so the topology math
+    // is unchanged (ratios between algorithms are codec-invariant, the
+    // absolute loads scale by Codec::ratio).
+    let codec = edgeflow::fl::compress::Codec::parse(a.get("codec").unwrap())?;
+    let param_count =
+        (codec.wire_bytes(raw_param_count) as usize).div_ceil(4);
+    if codec != edgeflow::fl::compress::Codec::None {
+        println!(
+            "codec {}: {} -> {} wire bytes per transfer ({:.1}% of raw)\n",
+            codec.name(),
+            edgeflow::util::human_bytes((raw_param_count * 4) as u64),
+            edgeflow::util::human_bytes(codec.wire_bytes(raw_param_count)),
+            codec.ratio(raw_param_count) * 100.0
+        );
+    }
+    let rounds = a.get_usize("rounds")?.unwrap_or(100);
+    let clusters = a.get_usize("clusters")?.unwrap_or(10);
+    let csize = a.get_usize("cluster-size")?.unwrap_or(10);
+    let seed = a.get_u64("seed")?.unwrap_or(0);
+    let algs = [
+        Algorithm::FedAvg,
+        Algorithm::HierFl,
+        Algorithm::SeqFl,
+        Algorithm::EdgeFlowRand,
+        Algorithm::EdgeFlowSeq,
+        Algorithm::EdgeFlowHop,
+    ];
+    println!(
+        "model {model}: {param_count} parameters ({} per transfer)\n",
+        edgeflow::util::human_bytes((param_count * 4) as u64)
+    );
+    let (table, results) = fig4(param_count, clusters, csize, rounds, &algs, seed)?;
+    println!("{}", table.render());
+    if a.has("latency") {
+        let mut t = Table::new(&["Topology", "Algorithm", "mean transfer latency (s)"])
+            .align(0, Align::Left)
+            .align(1, Align::Left);
+        for r in &results {
+            t.row(&[
+                r.topology.name().to_string(),
+                r.algorithm.name().to_string(),
+                format!("{:.4}", r.round_latency_s),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if let Some(path) = a.get("out") {
+        let mut csv = edgeflow::util::csv::CsvWriter::new(&[
+            "topology",
+            "algorithm",
+            "byte_hops_per_round",
+            "vs_fedavg",
+            "latency_s",
+            "participants_per_round",
+            "byte_hops_per_participant",
+        ]);
+        for r in &results {
+            csv.row(&[
+                r.topology.name().to_string(),
+                r.algorithm.name().to_string(),
+                format!("{}", r.byte_hops_per_round),
+                format!("{}", r.vs_fedavg),
+                format!("{}", r.round_latency_s),
+                format!("{}", r.participants_per_round),
+                format!("{}", r.byte_hops_per_participant()),
+            ]);
+        }
+        csv.save(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_theory(a: &Args) -> Result<()> {
+    let p = TheoryParams {
+        l: a.get_f64("l")?.unwrap(),
+        g2: a.get_f64("g2")?.unwrap(),
+        sigma2: a.get_f64("sigma2")?.unwrap(),
+        init_gap: a.get_f64("gap")?.unwrap(),
+        eta: a.get_f64("eta")?.unwrap(),
+        k: a.get_usize("k")?.unwrap(),
+        t: a.get_usize("t")?.unwrap(),
+        lambda2: vec![a.get_f64("lambda2")?.unwrap()],
+        n_m: vec![a.get_usize("nm")?.unwrap()],
+    };
+    let b = bound(&p);
+    println!("Theorem 1 bound (Eq. 8) at K={} eta={} T={}:", p.k, p.eta, p.t);
+    println!("  init term          4(F0-F*)/(K eta T) = {:.6}", b.init);
+    println!("  heterogeneity      (2/T) sum lambda^2  = {:.6}", b.heterogeneity);
+    println!("  gradient variance  (2/T) sum L.eta.s2/Nm = {:.6}", b.variance);
+    println!("  client drift       4L^2K^2eta^2G^2/3   = {:.6}", b.drift);
+    println!("  total                                  = {:.6}", b.total());
+    let kmax = a.get_usize("kmax")?.unwrap();
+    println!("\nK-scan (non-monotonicity behind Fig 3b):");
+    let scan = k_scan(&p, kmax);
+    let best = scan
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .copied();
+    for (k, total) in &scan {
+        let marker = if Some((*k, *total)) == best { "  <-- min" } else { "" };
+        println!("  K={k:<3} bound={total:.6}{marker}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(a: &Args) -> Result<()> {
+    if a.has("manifest") {
+        let m = Manifest::load(a.get("artifacts").unwrap())?;
+        let mut t = Table::new(&["variant", "arch", "image", "params", "opts", "K values"])
+            .align(0, Align::Left)
+            .align(1, Align::Left);
+        for (name, v) in &m.variants {
+            t.row(&[
+                name.clone(),
+                v.arch.clone(),
+                format!("{:?}", v.image),
+                v.param_count().to_string(),
+                v.optimizers.join(","),
+                format!("{:?}", v.k_values),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if a.has("partitions") {
+        let dist = Distribution::parse(a.get("dist").unwrap())?;
+        let clients = a.get_usize("clients")?.unwrap_or(100);
+        let clusters = a.get_usize("clusters")?.unwrap_or(10);
+        let seed = a.get_u64("seed")?.unwrap_or(0);
+        let fed = build_federation(
+            DatasetKind::SynthFashion,
+            &dist,
+            clients,
+            clusters,
+            120,
+            10,
+            seed,
+        )?;
+        println!(
+            "Fig 2 — per-client class histograms, {} over {clients} clients:",
+            dist.name()
+        );
+        for c in fed.clients.iter() {
+            let hist = c
+                .quotas
+                .iter()
+                .map(|&n| format!("{n:>3}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!(
+                "  client {:>3} cluster {:>2} [{}] ({})",
+                c.id,
+                c.cluster,
+                hist,
+                c.distribution.name()
+            );
+        }
+    }
+    if a.has("topology") {
+        for kind in TopologyKind::ALL {
+            let topo = build_topo(&TopologyParams::new(kind, 10, 10))?;
+            let rt = RouteTable::hops(&topo);
+            let cloud = topo.cloud()?;
+            let bs = topo.base_stations();
+            let hops: Vec<String> = bs
+                .iter()
+                .map(|&b| rt.dist(b, cloud).map_or("-".into(), |h| h.to_string()))
+                .collect();
+            let migr: Vec<String> = (0..bs.len())
+                .map(|i| {
+                    let j = (i + 1) % bs.len();
+                    rt.dist(bs[i], bs[j]).map_or("-".into(), |h| h.to_string())
+                })
+                .collect();
+            println!(
+                "{:<18} nodes={:<4} links={:<4} BS->cloud hops=[{}] BS->next hops=[{}]",
+                kind.name(),
+                topo.node_count(),
+                topo.link_count(),
+                hops.join(","),
+                migr.join(",")
+            );
+        }
+    }
+    if !a.has("manifest") && !a.has("partitions") && !a.has("topology") {
+        return Err(Error::Usage(
+            "pass at least one of --manifest, --partitions, --topology".into(),
+        ));
+    }
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let c = cli();
+    let a = c.parse(&argv)?;
+    edgeflow::util::logging::init(a.has("verbose"));
+    match a.command.as_str() {
+        "train" => cmd_train(&a),
+        "table1" => cmd_table1(&a),
+        "fig3" => cmd_fig3(&a),
+        "comm-sim" => cmd_comm_sim(&a),
+        "theory" => cmd_theory(&a),
+        "inspect" => cmd_inspect(&a),
+        "presets" => {
+            for p in PRESETS {
+                let cfg = preset(p)?;
+                println!("{p:<24} {}", cfg.to_json().dump());
+            }
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unhandled command {other}"))),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(Error::Usage(msg)) => {
+            eprintln!("{msg}");
+            ExitCode::from(2)
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Experiment metrics: per-round records, curves, smoothing, exporters.
+
+use crate::util::csv::CsvWriter;
+use crate::util::json::Json;
+
+/// One communication round's record.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Active cluster (participating set) this round.
+    pub cluster: usize,
+    /// Mean training loss over the round's local updates.
+    pub train_loss: f64,
+    /// Test accuracy in [0,1]; NaN when not evaluated this round.
+    pub test_accuracy: f64,
+    /// Test loss; NaN when not evaluated.
+    pub test_loss: f64,
+    /// Byte-hops of communication attributed to this round.
+    pub comm_byte_hops: u64,
+    /// Wall-clock seconds spent in local training (XLA execution).
+    pub train_s: f64,
+    /// Wall-clock seconds spent aggregating.
+    pub aggregate_s: f64,
+    /// Simulated network seconds for this round's transfers.
+    pub net_s: f64,
+}
+
+/// Full experiment result.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentMetrics {
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl ExperimentMetrics {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    /// Final evaluated accuracy (last non-NaN), or NaN.
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .map(|r| r.test_accuracy)
+            .find(|a| !a.is_nan())
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best evaluated accuracy, or NaN.
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_accuracy)
+            .filter(|a| !a.is_nan())
+            .fold(f64::NAN, |acc, a| if acc.is_nan() || a > acc { a } else { acc })
+    }
+
+    /// Total communication byte-hops.
+    pub fn total_byte_hops(&self) -> u64 {
+        self.rounds.iter().map(|r| r.comm_byte_hops).sum()
+    }
+
+    /// (round, accuracy) curve of evaluated rounds.
+    pub fn accuracy_curve(&self) -> Vec<(usize, f64)> {
+        self.rounds
+            .iter()
+            .filter(|r| !r.test_accuracy.is_nan())
+            .map(|r| (r.round, r.test_accuracy))
+            .collect()
+    }
+
+    /// (round, loss) curve.
+    pub fn loss_curve(&self) -> Vec<(usize, f64)> {
+        self.rounds.iter().map(|r| (r.round, r.train_loss)).collect()
+    }
+
+    /// CSV export with one row per round.
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(&[
+            "round",
+            "cluster",
+            "train_loss",
+            "test_accuracy",
+            "test_loss",
+            "comm_byte_hops",
+            "train_s",
+            "aggregate_s",
+            "net_s",
+        ]);
+        for r in &self.rounds {
+            w.row(&[
+                r.round.to_string(),
+                r.cluster.to_string(),
+                format!("{}", r.train_loss),
+                format!("{}", r.test_accuracy),
+                format!("{}", r.test_loss),
+                r.comm_byte_hops.to_string(),
+                format!("{}", r.train_s),
+                format!("{}", r.aggregate_s),
+                format!("{}", r.net_s),
+            ]);
+        }
+        w
+    }
+
+    /// JSON export (summary + curves).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("final_accuracy", self.final_accuracy().into()),
+            ("best_accuracy", self.best_accuracy().into()),
+            ("total_byte_hops", self.total_byte_hops().into()),
+            (
+                "rounds",
+                Json::arr(self.rounds.iter().map(|r| {
+                    Json::obj(vec![
+                        ("round", r.round.into()),
+                        ("cluster", r.cluster.into()),
+                        ("train_loss", r.train_loss.into()),
+                        ("test_accuracy", r.test_accuracy.into()),
+                        ("test_loss", r.test_loss.into()),
+                        ("comm_byte_hops", r.comm_byte_hops.into()),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Sliding-window smoothing (the paper smooths Fig 3 curves this way).
+/// Window is centered, clamped at the edges.
+pub fn smooth(values: &[f64], window: usize) -> Vec<f64> {
+    if window <= 1 || values.is_empty() {
+        return values.to_vec();
+    }
+    let half = window / 2;
+    (0..values.len())
+        .map(|i| {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(values.len());
+            values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            cluster: 0,
+            train_loss: 1.0,
+            test_accuracy: acc,
+            test_loss: 1.0,
+            comm_byte_hops: 100,
+            train_s: 0.0,
+            aggregate_s: 0.0,
+            net_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn final_and_best_skip_nan() {
+        let mut m = ExperimentMetrics::default();
+        m.push(rec(0, 0.5));
+        m.push(rec(1, f64::NAN));
+        m.push(rec(2, 0.8));
+        m.push(rec(3, f64::NAN));
+        assert_eq!(m.final_accuracy(), 0.8);
+        assert_eq!(m.best_accuracy(), 0.8);
+        assert_eq!(m.total_byte_hops(), 400);
+        assert_eq!(m.accuracy_curve(), vec![(0, 0.5), (2, 0.8)]);
+    }
+
+    #[test]
+    fn empty_metrics_are_nan() {
+        let m = ExperimentMetrics::default();
+        assert!(m.final_accuracy().is_nan());
+        assert!(m.best_accuracy().is_nan());
+    }
+
+    #[test]
+    fn smoothing_averages_neighbors() {
+        let s = smooth(&[0.0, 1.0, 2.0, 3.0, 4.0], 3);
+        assert_eq!(s[0], 0.5); // clamped window [0,1]
+        assert_eq!(s[2], 2.0);
+        assert_eq!(s[4], 3.5);
+        assert_eq!(smooth(&[1.0, 2.0], 1), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn csv_has_row_per_round() {
+        let mut m = ExperimentMetrics::default();
+        m.push(rec(0, 0.1));
+        m.push(rec(1, 0.2));
+        let text = String::from_utf8(m.to_csv().as_bytes().to_vec()).unwrap();
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let mut m = ExperimentMetrics::default();
+        m.push(rec(0, 0.5));
+        let j = Json::parse(&m.to_json().dump()).unwrap();
+        assert_eq!(j.f64_field("final_accuracy").unwrap(), 0.5);
+    }
+}

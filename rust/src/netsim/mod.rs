@@ -1,0 +1,12 @@
+//! Discrete-event network simulator.
+//!
+//! Extends the hop-count accounting of [`crate::topology`] with *time*:
+//! transfers move store-and-forward along their route, each link is a FIFO
+//! server with finite bandwidth and fixed propagation latency, and
+//! contention shows up as queueing delay.  Used for the latency extension
+//! of the Fig 4 study (`edgeflow comm-sim --latency`) and for the netsim
+//! property tests.
+
+pub mod sim;
+
+pub use sim::{NetSim, TransferOutcome};

@@ -1,0 +1,295 @@
+//! Store-and-forward FIFO discrete-event simulation.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::topology::graph::{LinkId, NodeId, Topology};
+use crate::topology::route::RouteTable;
+use crate::util::error::{Error, Result};
+
+/// Completed transfer timing.
+#[derive(Debug, Clone)]
+pub struct TransferOutcome {
+    pub id: usize,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+    pub submitted_s: f64,
+    pub delivered_s: f64,
+    /// Total time spent waiting behind other transfers.
+    pub queue_wait_s: f64,
+    pub hops: usize,
+}
+
+impl TransferOutcome {
+    pub fn latency_s(&self) -> f64 {
+        self.delivered_s - self.submitted_s
+    }
+}
+
+#[derive(Debug)]
+struct Pending {
+    id: usize,
+    src: NodeId,
+    dst: NodeId,
+    bytes: u64,
+    submitted_s: f64,
+    path: Vec<LinkId>,
+    next_hop: usize,
+    queue_wait_s: f64,
+}
+
+/// Heap event: a transfer becomes ready to enter its next hop at `time`.
+#[derive(Debug, PartialEq)]
+struct Event {
+    time: f64,
+    seq: usize, // FIFO tie-break
+    pending_idx: usize,
+}
+
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The simulator.  Deterministic: FIFO per link, ties broken by
+/// submission order.
+pub struct NetSim<'a> {
+    topo: &'a Topology,
+    /// Next time each link is free (links are half-duplex single-servers).
+    link_free_s: Vec<f64>,
+    /// Accumulated busy seconds per link (for utilization reports).
+    link_busy_s: Vec<f64>,
+    pending: Vec<Pending>,
+    events: BinaryHeap<Reverse<Event>>,
+    seq: usize,
+    clock_s: f64,
+}
+
+impl<'a> NetSim<'a> {
+    pub fn new(topo: &'a Topology) -> NetSim<'a> {
+        NetSim {
+            topo,
+            link_free_s: vec![0.0; topo.link_count()],
+            link_busy_s: vec![0.0; topo.link_count()],
+            pending: Vec::new(),
+            events: BinaryHeap::new(),
+            seq: 0,
+            clock_s: 0.0,
+        }
+    }
+
+    /// Queue a transfer for delivery; routed on the latency-weighted
+    /// shortest path at submission time.
+    pub fn submit(
+        &mut self,
+        routes: &RouteTable,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        at_s: f64,
+    ) -> Result<usize> {
+        let path = routes
+            .path(src, dst)
+            .ok_or_else(|| Error::Topology(format!("no route {src:?} -> {dst:?}")))?;
+        let id = self.pending.len();
+        self.pending.push(Pending {
+            id,
+            src,
+            dst,
+            bytes,
+            submitted_s: at_s,
+            path,
+            next_hop: 0,
+            queue_wait_s: 0.0,
+        });
+        self.events.push(Reverse(Event { time: at_s, seq: self.seq, pending_idx: id }));
+        self.seq += 1;
+        Ok(id)
+    }
+
+    /// Run until all submitted transfers deliver; returns outcomes in
+    /// completion order.  The simulation clock is monotone.
+    pub fn run(&mut self) -> Vec<TransferOutcome> {
+        let mut done = Vec::new();
+        while let Some(Reverse(ev)) = self.events.pop() {
+            debug_assert!(ev.time >= self.clock_s - 1e-12, "clock went backwards");
+            self.clock_s = self.clock_s.max(ev.time);
+            let p = &mut self.pending[ev.pending_idx];
+            if p.next_hop >= p.path.len() {
+                // Delivered (zero-hop transfers deliver instantly).
+                done.push(TransferOutcome {
+                    id: p.id,
+                    src: p.src,
+                    dst: p.dst,
+                    bytes: p.bytes,
+                    submitted_s: p.submitted_s,
+                    delivered_s: ev.time,
+                    queue_wait_s: p.queue_wait_s,
+                    hops: p.path.len(),
+                });
+                continue;
+            }
+            let l = p.path[p.next_hop];
+            let link = self.topo.link(l);
+            let start = ev.time.max(self.link_free_s[l.0]);
+            p.queue_wait_s += start - ev.time;
+            let tx_s = if p.bytes == 0 {
+                0.0
+            } else {
+                (p.bytes as f64 * 8.0) / (link.bandwidth_mbps * 1e6)
+            };
+            let free_at = start + tx_s;
+            self.link_free_s[l.0] = free_at;
+            self.link_busy_s[l.0] += tx_s;
+            let arrive = free_at + link.latency_ms / 1e3;
+            p.next_hop += 1;
+            self.events.push(Reverse(Event {
+                time: arrive,
+                seq: self.seq,
+                pending_idx: ev.pending_idx,
+            }));
+            self.seq += 1;
+        }
+        done.sort_by(|a, b| a.delivered_s.partial_cmp(&b.delivered_s).unwrap());
+        done
+    }
+
+    /// Link utilization over `[0, horizon_s]`.
+    pub fn utilization(&self, l: LinkId, horizon_s: f64) -> f64 {
+        if horizon_s <= 0.0 {
+            return 0.0;
+        }
+        (self.link_busy_s[l.0] / horizon_s).min(1.0)
+    }
+
+    /// Current simulation clock.
+    pub fn now_s(&self) -> f64 {
+        self.clock_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::topology::builder::{build, TopologyParams};
+    use crate::topology::graph::NodeKind;
+
+    fn two_node() -> Topology {
+        let mut t = Topology::new();
+        let a = t.add_node(NodeKind::Router);
+        let b = t.add_node(NodeKind::Router);
+        t.add_link(a, b, 8.0, 100.0); // 8 Mbps, 100 ms
+        t
+    }
+
+    #[test]
+    fn single_transfer_timing() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        // 1 MB over 8 Mbps = 1 s + 0.1 s latency
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let out = sim.run();
+        assert_eq!(out.len(), 1);
+        assert!((out[0].latency_s() - 1.1).abs() < 1e-9, "{}", out[0].latency_s());
+        assert_eq!(out[0].queue_wait_s, 0.0);
+    }
+
+    #[test]
+    fn fifo_queueing_delay() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let out = sim.run();
+        assert_eq!(out.len(), 2);
+        // Second transfer waits 1 s for the link.
+        assert!((out[1].queue_wait_s - 1.0).abs() < 1e-9);
+        assert!((out[1].delivered_s - 2.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_byte_zero_latency_is_instant() {
+        let mut t = Topology::new();
+        let a = t.add_node(NodeKind::Router);
+        let b = t.add_node(NodeKind::Router);
+        t.add_link(a, b, 1.0, 0.0);
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, a, b, 0, 0.0).unwrap();
+        let out = sim.run();
+        assert_eq!(out[0].latency_s(), 0.0);
+    }
+
+    #[test]
+    fn self_transfer_delivers_immediately() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(0), 123, 5.0).unwrap();
+        let out = sim.run();
+        assert_eq!(out[0].delivered_s, 5.0);
+        assert_eq!(out[0].hops, 0);
+    }
+
+    #[test]
+    fn multihop_store_and_forward() {
+        let p = TopologyParams::new(TopologyKind::DepthLinear, 3, 1);
+        let t = build(&p).unwrap();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        let bs0 = t.edge_bs(0).unwrap();
+        let cloud = t.cloud().unwrap();
+        sim.submit(&rt, bs0, cloud, 1_000_000, 0.0).unwrap();
+        let out = sim.run();
+        assert_eq!(out[0].hops, 3); // bs0-bs1-bs2-cloud
+        // 2 edge hops @1 Gbps + 1 backbone @10 Gbps + latencies
+        let tx = 2.0 * 8e6 / 1e9 + 8e6 / 1e10;
+        let lat = (2.0 * 1.0 + 5.0) / 1e3;
+        assert!((out[0].latency_s() - (tx + lat)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_reported() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        sim.run();
+        assert!((sim.utilization(LinkId(0), 2.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clock_monotone_under_many_random_transfers() {
+        let p = TopologyParams::new(TopologyKind::Hybrid, 8, 2);
+        let t = build(&p).unwrap();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        let mut rng = crate::rng::Rng::new(5);
+        let nodes = t.clients();
+        for i in 0..200 {
+            let a = nodes[rng.below(nodes.len())];
+            let b = nodes[rng.below(nodes.len())];
+            sim.submit(&rt, a, b, rng.below(100_000) as u64, i as f64 * 0.001)
+                .unwrap();
+        }
+        let out = sim.run();
+        assert_eq!(out.len(), 200);
+        for o in &out {
+            assert!(o.delivered_s >= o.submitted_s);
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! XLA/PJRT execution engine.
+//!
+//! Wraps the `xla` crate (PJRT C API): loads HLO **text** artifacts
+//! (`HloModuleProto::from_text_file` reassigns instruction ids, which is
+//! what makes jax>=0.5 output loadable on xla_extension 0.5.1), compiles
+//! them once per (variant, optimizer, K) on the CPU client, and executes
+//! them with model state + gathered minibatches.
+//!
+//! The PJRT CPU client is not thread-safe to share mutably; the engine
+//! serializes executions (this testbed is single-core — see DESIGN.md).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::data::dataset::Batch;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::params::{ModelState, StateLayout};
+use crate::util::error::{Error, Result};
+
+/// Compiled local-update executable for one (variant, optimizer, K).
+pub struct LocalUpdateExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    client: xla::PjRtClient,
+    pub layout: Arc<StateLayout>,
+    pub k: usize,
+    pub b: usize,
+    pub image: (usize, usize, usize),
+}
+
+/// Compiled evaluation executable for one variant.
+pub struct EvalExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    client: xla::PjRtClient,
+    pub layout: Arc<StateLayout>,
+    pub b: usize,
+    pub image: (usize, usize, usize),
+    /// Tensors fed to eval: params ++ bn (no optimizer state).
+    n_eval_tensors: usize,
+}
+
+/// The runtime engine: PJRT client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// Inputs go host->device through `buffer_from_host_buffer` + `execute_b`
+// with buffers we own (and Drop).  The `execute::<Literal>` convenience
+// path in the embedded xla_extension 0.5.1 leaks its per-argument device
+// transfers (~14 MB per local_update; see EXPERIMENTS.md §Perf L3 #3) —
+// do not reintroduce it on the round path.
+
+fn f32_buffer(
+    client: &xla::PjRtClient,
+    dims: &[usize],
+    data: &[f32],
+) -> Result<xla::PjRtBuffer> {
+    client.buffer_from_host_buffer(data, dims, None).map_err(Into::into)
+}
+
+fn i32_buffer(
+    client: &xla::PjRtClient,
+    dims: &[usize],
+    data: &[i32],
+) -> Result<xla::PjRtBuffer> {
+    client.buffer_from_host_buffer(data, dims, None).map_err(Into::into)
+}
+
+impl Engine {
+    /// Create the PJRT CPU client and parse the artifact manifest.
+    pub fn load(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client up: platform={} devices={} ({} variants)",
+            client.platform_name(),
+            client.device_count(),
+            manifest.variants.len()
+        );
+        Ok(Engine { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    fn compile_file(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(file) {
+            return Ok(hit.clone());
+        }
+        let path = self.manifest.file(file);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        log::debug!("compiled {} in {:.2?}", file, t.elapsed());
+        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Initial model state for (variant, optimizer) from the init blob.
+    pub fn init_state(&self, variant: &str, opt: &str) -> Result<ModelState> {
+        let v = self.manifest.variant(variant)?;
+        let layout = StateLayout::new(v, opt)?;
+        let blob_name = v.init_blob.get(opt).ok_or_else(|| {
+            Error::Artifact(format!("variant {variant} has no init blob for {opt}"))
+        })?;
+        let bytes = std::fs::read(self.manifest.file(blob_name))?;
+        ModelState::from_blob(layout, &bytes)
+    }
+
+    /// Compile (and cache) the local-update executable.
+    pub fn local_update(&self, variant: &str, opt: &str, k: usize) -> Result<LocalUpdateExe> {
+        let v = self.manifest.variant(variant)?;
+        let file = v.local_update_file(opt, k)?.to_string();
+        Ok(LocalUpdateExe {
+            exe: self.compile_file(&file)?,
+            client: self.client.clone(),
+            layout: StateLayout::new(v, opt)?,
+            k,
+            b: v.train_batch,
+            image: v.image,
+        })
+    }
+
+    /// Compile (and cache) the eval executable.
+    pub fn eval(&self, variant: &str, opt: &str) -> Result<EvalExe> {
+        let v = self.manifest.variant(variant)?;
+        let layout = StateLayout::new(v, opt)?;
+        let n_eval_tensors = layout.n_params + layout.n_bn;
+        Ok(EvalExe {
+            exe: self.compile_file(&v.eval_exe.clone())?,
+            client: self.client.clone(),
+            layout,
+            b: v.eval_batch,
+            image: v.image,
+            n_eval_tensors,
+        })
+    }
+}
+
+impl LocalUpdateExe {
+    /// Run K local steps: `state` + `[K, B, ...]` batches -> (new state,
+    /// mean loss).  Matches the io_contract in the manifest.
+    pub fn run(&self, state: &ModelState, batch: &Batch, lr: f32) -> Result<(ModelState, f32)> {
+        let (h, w, c) = self.image;
+        let expect_x = self.k * self.b * h * w * c;
+        if batch.x.len() != expect_x || batch.y.len() != self.k * self.b {
+            return Err(Error::Artifact(format!(
+                "batch shape mismatch: x={} y={} want x={} y={}",
+                batch.x.len(),
+                batch.y.len(),
+                expect_x,
+                self.k * self.b
+            )));
+        }
+        let layout = &state.layout;
+        let mut inputs = Vec::with_capacity(layout.tensors.len() + 3);
+        for (i, t) in layout.tensors.iter().enumerate() {
+            inputs.push(f32_buffer(&self.client, &t.shape, state.tensor(i))?);
+        }
+        inputs.push(f32_buffer(&self.client, &[self.k, self.b, h, w, c], &batch.x)?);
+        inputs.push(i32_buffer(&self.client, &[self.k, self.b], &batch.y)?);
+        inputs.push(f32_buffer(&self.client, &[], &[lr])?);
+
+        let result = self.exe.execute_b(&inputs)?[0][0].to_literal_sync()?;
+        let outputs = result.to_tuple()?;
+        let want = layout.tensors.len() + 1;
+        if outputs.len() != want {
+            return Err(Error::Artifact(format!(
+                "local_update returned {} outputs, want {want}",
+                outputs.len()
+            )));
+        }
+        let mut new_state = ModelState::zeros(state.layout.clone());
+        for (i, out) in outputs[..outputs.len() - 1].iter().enumerate() {
+            let off = layout.offsets[i];
+            let n = layout.tensors[i].nelems();
+            let vals = out.to_vec::<f32>()?;
+            if vals.len() != n {
+                return Err(Error::Artifact(format!(
+                    "output tensor {i} has {} elems, want {n}",
+                    vals.len()
+                )));
+            }
+            new_state.data[off..off + n].copy_from_slice(&vals);
+        }
+        let loss = outputs.last().unwrap().get_first_element::<f32>()?;
+        Ok((new_state, loss))
+    }
+}
+
+impl EvalExe {
+    /// Evaluate one batch: returns (loss_sum, correct_count) over the
+    /// first `real` rows (callers pad the final partial batch).
+    pub fn run(&self, state: &ModelState, batch: &Batch) -> Result<(f32, f32)> {
+        let (h, w, c) = self.image;
+        if batch.y.len() != self.b || batch.x.len() != self.b * h * w * c {
+            return Err(Error::Artifact(format!(
+                "eval batch mismatch: got {} rows, executable wants {}",
+                batch.y.len(),
+                self.b
+            )));
+        }
+        let mut inputs = Vec::with_capacity(self.n_eval_tensors + 2);
+        for i in 0..self.n_eval_tensors {
+            inputs.push(f32_buffer(&self.client, &self.layout.tensors[i].shape, state.tensor(i))?);
+        }
+        inputs.push(f32_buffer(&self.client, &[self.b, h, w, c], &batch.x)?);
+        inputs.push(i32_buffer(&self.client, &[self.b], &batch.y)?);
+        let result = self.exe.execute_b(&inputs)?[0][0].to_literal_sync()?;
+        let (loss_sum, correct) = result.to_tuple2()?;
+        Ok((
+            loss_sum.get_first_element::<f32>()?,
+            correct.get_first_element::<f32>()?,
+        ))
+    }
+
+    /// Evaluate a whole dataset in fixed-size batches (padding the tail
+    /// with repeats that are subtracted from the counts).
+    pub fn run_dataset(
+        &self,
+        state: &ModelState,
+        ds: &crate::data::dataset::Dataset,
+    ) -> Result<(f64, f64)> {
+        let n = ds.len();
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut i = 0;
+        while i < n {
+            let hi = (i + self.b).min(n);
+            let idx: Vec<usize> = (i..hi).collect();
+            if idx.len() == self.b {
+                let batch = ds.gather(&idx);
+                let (l, c) = self.run(state, &batch)?;
+                loss_sum += l as f64;
+                correct += c as f64;
+            } else {
+                // Padded tail: evaluate padded batch, then subtract the
+                // padding rows' contribution by evaluating them implicitly
+                // via a second padded batch trick is overkill — instead
+                // evaluate row-exactly using the padded batch and the known
+                // pad row (last real sample repeated).
+                let (batch, real) = ds.gather_padded(&idx, self.b);
+                let (l_all, c_all) = self.run(state, &batch)?;
+                // Padding rows are copies of the last real row; compute that
+                // row's single-sample loss/correct by evaluating a batch of
+                // just it (padded fully with itself).
+                let last = vec![idx[idx.len() - 1]; 1];
+                let (batch1, _) = ds.gather_padded(&last, self.b);
+                let (l_one, c_one) = self.run(state, &batch1)?;
+                let pad = (self.b - real) as f32;
+                loss_sum += (l_all - l_one / self.b as f32 * pad) as f64;
+                correct += (c_all - c_one / self.b as f32 * pad) as f64;
+            }
+            i = hi;
+        }
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}

@@ -1,0 +1,323 @@
+//! `artifacts/manifest.json` parsing — the contract with the AOT pipeline.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One tensor's name and shape, in manifest order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn nelems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1) // scalar () = 1
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("tensor shape must be an array".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Json("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name: v.str_field("name")?.to_string(), shape })
+    }
+}
+
+/// One model variant's artifact description.
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub arch: String,
+    /// (H, W, C)
+    pub image: (usize, usize, usize),
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub k_values: Vec<usize>,
+    pub optimizers: Vec<String>,
+    pub params: Vec<TensorSpec>,
+    pub bn_state: Vec<TensorSpec>,
+    /// optimizer name -> state tensors
+    pub opt_state: BTreeMap<String, Vec<TensorSpec>>,
+    /// optimizer name -> init blob file name
+    pub init_blob: BTreeMap<String, String>,
+    /// eval executable file name
+    pub eval_exe: String,
+    /// optimizer -> "k<K>_b<B>" -> local_update executable file name
+    pub local_update: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl VariantSpec {
+    /// Trainable parameter element count (the paper's "parameters
+    /// uploaded"; excludes BN stats and optimizer state).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(TensorSpec::nelems).sum()
+    }
+
+    /// BN state element count.
+    pub fn bn_count(&self) -> usize {
+        self.bn_state.iter().map(TensorSpec::nelems).sum()
+    }
+
+    /// Optimizer state element count.
+    pub fn opt_count(&self, opt: &str) -> Result<usize> {
+        Ok(self
+            .opt_state
+            .get(opt)
+            .ok_or_else(|| Error::Artifact(format!("no optimizer {opt:?} in {}", self.name)))?
+            .iter()
+            .map(TensorSpec::nelems)
+            .sum())
+    }
+
+    /// Full state layout (params ++ bn ++ opt) as one tensor list.
+    pub fn state_layout(&self, opt: &str) -> Result<Vec<TensorSpec>> {
+        let mut v = self.params.clone();
+        v.extend(self.bn_state.iter().cloned());
+        v.extend(
+            self.opt_state
+                .get(opt)
+                .ok_or_else(|| {
+                    Error::Artifact(format!("no optimizer {opt:?} in {}", self.name))
+                })?
+                .iter()
+                .cloned(),
+        );
+        Ok(v)
+    }
+
+    /// Local-update executable file for (opt, k).
+    pub fn local_update_file(&self, opt: &str, k: usize) -> Result<&str> {
+        let key = format!("k{k}_b{}", self.train_batch);
+        self.local_update
+            .get(opt)
+            .and_then(|m| m.get(&key))
+            .map(|s| s.as_str())
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "variant {} has no local_update for opt={opt} {key} \
+                     (available: {:?})",
+                    self.name,
+                    self.local_update.get(opt).map(|m| m.keys().collect::<Vec<_>>())
+                ))
+            })
+    }
+
+    fn from_json(name: &str, v: &Json) -> Result<VariantSpec> {
+        let image = v
+            .req("image")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("image must be an array".into()))?;
+        if image.len() != 3 {
+            return Err(Error::Json("image must have 3 dims".into()));
+        }
+        let dim = |i: usize| -> Result<usize> {
+            image[i].as_usize().ok_or_else(|| Error::Json("bad image dim".into()))
+        };
+        let tensor_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| Error::Json(format!("{key} must be an array")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let execs = v.req("executables")?;
+        let mut local_update = BTreeMap::new();
+        if let Some(obj) = execs.req("local_update")?.as_obj() {
+            for (opt, table) in obj {
+                let mut m = BTreeMap::new();
+                if let Some(t) = table.as_obj() {
+                    for (k, f) in t {
+                        m.insert(
+                            k.clone(),
+                            f.as_str()
+                                .ok_or_else(|| Error::Json("bad exe path".into()))?
+                                .to_string(),
+                        );
+                    }
+                }
+                local_update.insert(opt.clone(), m);
+            }
+        }
+        let mut opt_state = BTreeMap::new();
+        if let Some(obj) = v.req("opt_state")?.as_obj() {
+            for (opt, list) in obj {
+                let tensors = list
+                    .as_arr()
+                    .ok_or_else(|| Error::Json("opt_state must hold arrays".into()))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                opt_state.insert(opt.clone(), tensors);
+            }
+        }
+        let mut init_blob = BTreeMap::new();
+        if let Some(obj) = v.req("init_blob")?.as_obj() {
+            for (opt, f) in obj {
+                init_blob.insert(
+                    opt.clone(),
+                    f.as_str().ok_or_else(|| Error::Json("bad blob path".into()))?.to_string(),
+                );
+            }
+        }
+        Ok(VariantSpec {
+            name: name.to_string(),
+            arch: v.str_field("arch")?.to_string(),
+            image: (dim(0)?, dim(1)?, dim(2)?),
+            classes: v.usize_field("classes")?,
+            train_batch: v.usize_field("train_batch")?,
+            eval_batch: v.usize_field("eval_batch")?,
+            k_values: v
+                .req("k_values")?
+                .as_arr()
+                .ok_or_else(|| Error::Json("k_values must be an array".into()))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| Error::Json("bad k".into())))
+                .collect::<Result<Vec<_>>>()?,
+            optimizers: v
+                .req("optimizers")?
+                .as_arr()
+                .ok_or_else(|| Error::Json("optimizers must be an array".into()))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::Json("bad optimizer".into()))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            params: tensor_list("params")?,
+            bn_state: tensor_list("bn_state")?,
+            opt_state,
+            init_blob,
+            eval_exe: execs.str_field("eval")?.to_string(),
+            local_update,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub backend: String,
+    pub seed: u64,
+    pub variants: BTreeMap<String, VariantSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let mut variants = BTreeMap::new();
+        if let Some(obj) = v.req("variants")?.as_obj() {
+            for (name, spec) in obj {
+                variants.insert(name.clone(), VariantSpec::from_json(name, spec)?);
+            }
+        }
+        Ok(Manifest {
+            dir,
+            backend: v.str_field("backend")?.to_string(),
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "unknown model variant {name:?} (available: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "backend": "pallas", "seed": 0, "version": 1,
+      "variants": {
+        "tiny": {
+          "arch": "mlp", "image": [4, 4, 1], "classes": 10,
+          "train_batch": 8, "eval_batch": 16, "k_values": [1, 5],
+          "optimizers": ["sgd"],
+          "params": [
+            {"name": "fc0_w", "shape": [16, 10]},
+            {"name": "fc0_b", "shape": [10]}
+          ],
+          "bn_state": [],
+          "opt_state": {"sgd": []},
+          "init_blob": {"sgd": "tiny_sgd_init.bin"},
+          "executables": {
+            "eval": "tiny_eval_b16.hlo.txt",
+            "local_update": {"sgd": {"k1_b8": "a.hlo.txt", "k5_b8": "b.hlo.txt"}}
+          }
+        }
+      }
+    }"#;
+
+    fn manifest() -> Manifest {
+        let dir = std::env::temp_dir().join("edgeflow_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = manifest();
+        let v = m.variant("tiny").unwrap();
+        assert_eq!(v.image, (4, 4, 1));
+        assert_eq!(v.param_count(), 170);
+        assert_eq!(v.bn_count(), 0);
+        assert_eq!(v.opt_count("sgd").unwrap(), 0);
+        assert_eq!(v.local_update_file("sgd", 5).unwrap(), "b.hlo.txt");
+        assert!(v.local_update_file("sgd", 7).is_err());
+        assert!(v.local_update_file("adam", 5).is_err());
+        assert!(m.variant("missing").is_err());
+    }
+
+    #[test]
+    fn state_layout_concatenates() {
+        let m = manifest();
+        let v = m.variant("tiny").unwrap();
+        let layout = v.state_layout("sgd").unwrap();
+        assert_eq!(layout.len(), 2);
+        assert_eq!(layout[0].name, "fc0_w");
+    }
+
+    #[test]
+    fn scalar_tensor_counts_one() {
+        let t = TensorSpec { name: "t".into(), shape: vec![] };
+        assert_eq!(t.nelems(), 1);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+}

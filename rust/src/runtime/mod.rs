@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
+//! them from the coordinator hot path.  Python never runs here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, orders,
+//!   executable table) written by `python/compile/aot.py`.
+//! * [`params`] — flat f32 model state (params ++ BN stats ++ optimizer
+//!   state) with blob I/O matching the manifest layout.
+//! * [`executor`] — the `xla` crate wrapper: HLO text ->
+//!   `HloModuleProto::from_text_file` -> `PjRtClient::compile` ->
+//!   `execute`, with compiled-executable caching.
+
+pub mod executor;
+pub mod manifest;
+pub mod params;
+
+pub use executor::{Engine, EvalExe, LocalUpdateExe};
+pub use manifest::{Manifest, TensorSpec, VariantSpec};
+pub use params::ModelState;

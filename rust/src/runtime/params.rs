@@ -1,0 +1,207 @@
+//! Flat f32 model state: params ++ BN stats ++ optimizer state.
+//!
+//! The state is the unit that migrates between base stations in EdgeFLow
+//! and is averaged by [`crate::fl::aggregate`]; it round-trips to the
+//! little-endian blob format `aot.py` writes (`*_init.bin`).
+
+use std::sync::Arc;
+
+use crate::runtime::manifest::{TensorSpec, VariantSpec};
+use crate::util::error::{Error, Result};
+
+/// Immutable layout shared by all states of one (variant, optimizer).
+#[derive(Debug, Clone)]
+pub struct StateLayout {
+    pub tensors: Vec<TensorSpec>,
+    /// Number of leading tensors that are trainable parameters.
+    pub n_params: usize,
+    /// Number of BN tensors following the params.
+    pub n_bn: usize,
+    /// Element offset of each tensor in the flat buffer.
+    pub offsets: Vec<usize>,
+    /// Total element count.
+    pub total: usize,
+}
+
+impl StateLayout {
+    pub fn new(variant: &VariantSpec, opt: &str) -> Result<Arc<StateLayout>> {
+        let tensors = variant.state_layout(opt)?;
+        let mut offsets = Vec::with_capacity(tensors.len());
+        let mut total = 0usize;
+        for t in &tensors {
+            offsets.push(total);
+            total += t.nelems();
+        }
+        Ok(Arc::new(StateLayout {
+            n_params: variant.params.len(),
+            n_bn: variant.bn_state.len(),
+            tensors,
+            offsets,
+            total,
+        }))
+    }
+
+    /// Element count of the trainable parameters only.
+    pub fn param_elems(&self) -> usize {
+        self.tensors[..self.n_params].iter().map(TensorSpec::nelems).sum()
+    }
+}
+
+/// One model replica's full mutable state.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub layout: Arc<StateLayout>,
+    /// Flat storage in layout order.
+    pub data: Vec<f32>,
+}
+
+impl ModelState {
+    /// Zero-initialized state.
+    pub fn zeros(layout: Arc<StateLayout>) -> ModelState {
+        let n = layout.total;
+        ModelState { layout, data: vec![0.0; n] }
+    }
+
+    /// Load from a little-endian f32 blob (the `*_init.bin` format).
+    pub fn from_blob(layout: Arc<StateLayout>, bytes: &[u8]) -> Result<ModelState> {
+        if bytes.len() != layout.total * 4 {
+            return Err(Error::Artifact(format!(
+                "init blob is {} bytes, layout expects {}",
+                bytes.len(),
+                layout.total * 4
+            )));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(ModelState { layout, data })
+    }
+
+    /// Serialize to the blob format (identity round-trip with
+    /// [`Self::from_blob`]).
+    pub fn to_blob(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// View of tensor `i`.
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        let off = self.layout.offsets[i];
+        &self.data[off..off + self.layout.tensors[i].nelems()]
+    }
+
+    /// Flat view of the trainable parameters (leading region).
+    pub fn params_flat(&self) -> &[f32] {
+        &self.data[..self.layout.param_elems()]
+    }
+
+    /// L2 norm of the trainable parameters (diagnostics / theory probes).
+    pub fn param_l2(&self) -> f64 {
+        self.params_flat().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Squared L2 distance between two states' parameters.
+    pub fn param_dist2(&self, other: &ModelState) -> f64 {
+        self.params_flat()
+            .iter()
+            .zip(other.params_flat())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    /// Bytes on the wire when this model's *parameters* are transferred
+    /// (the paper's communication unit: parameter count x 4 bytes).
+    pub fn param_bytes(&self) -> u64 {
+        (self.layout.param_elems() * 4) as u64
+    }
+
+    /// All NaN/Inf checks for failure injection tests.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn layout() -> Arc<StateLayout> {
+        let variant = VariantSpec {
+            name: "t".into(),
+            arch: "mlp".into(),
+            image: (2, 2, 1),
+            classes: 2,
+            train_batch: 4,
+            eval_batch: 4,
+            k_values: vec![1],
+            optimizers: vec!["sgd".into()],
+            params: vec![
+                TensorSpec { name: "w".into(), shape: vec![4, 2] },
+                TensorSpec { name: "b".into(), shape: vec![2] },
+            ],
+            bn_state: vec![TensorSpec { name: "m".into(), shape: vec![2] }],
+            opt_state: BTreeMap::from([("sgd".to_string(), vec![])]),
+            init_blob: BTreeMap::new(),
+            eval_exe: "e".into(),
+            local_update: BTreeMap::new(),
+        };
+        StateLayout::new(&variant, "sgd").unwrap()
+    }
+
+    #[test]
+    fn layout_offsets() {
+        let l = layout();
+        assert_eq!(l.total, 12);
+        assert_eq!(l.offsets, vec![0, 8, 10]);
+        assert_eq!(l.param_elems(), 10);
+        assert_eq!(l.n_params, 2);
+        assert_eq!(l.n_bn, 1);
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let l = layout();
+        let mut s = ModelState::zeros(l.clone());
+        for (i, v) in s.data.iter_mut().enumerate() {
+            *v = i as f32 * 0.5 - 2.0;
+        }
+        let blob = s.to_blob();
+        let s2 = ModelState::from_blob(l, &blob).unwrap();
+        assert_eq!(s.data, s2.data);
+    }
+
+    #[test]
+    fn blob_size_checked() {
+        let l = layout();
+        assert!(ModelState::from_blob(l, &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn tensor_views() {
+        let l = layout();
+        let mut s = ModelState::zeros(l);
+        s.data[8] = 7.0;
+        assert_eq!(s.tensor(1), &[7.0, 0.0]);
+        assert_eq!(s.params_flat().len(), 10);
+        assert_eq!(s.param_bytes(), 40);
+    }
+
+    #[test]
+    fn norms_and_distances() {
+        let l = layout();
+        let mut a = ModelState::zeros(l.clone());
+        let b = ModelState::zeros(l);
+        a.data[0] = 3.0;
+        a.data[1] = 4.0;
+        assert!((a.param_l2() - 5.0).abs() < 1e-12);
+        assert!((a.param_dist2(&b) - 25.0).abs() < 1e-12);
+        assert!(a.is_finite());
+        a.data[2] = f32::NAN;
+        assert!(!a.is_finite());
+    }
+}

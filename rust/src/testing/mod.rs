@@ -1,0 +1,5 @@
+//! In-tree property-testing harness (no proptest in this offline image).
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

@@ -1,0 +1,179 @@
+//! Seeded property-testing: random case generation with failure-seed
+//! reporting, plus greedy input shrinking for integer vectors.
+//!
+//! A deliberate, small subset of proptest (which is not vendored in this
+//! offline image): `forall` runs a property over N generated cases; on
+//! failure it reports the case index and the reproduction seed so the
+//! exact case replays with `EDGEFLOW_PROP_SEED`.
+
+use crate::rng::Rng;
+
+/// Case generator handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Current size hint — grows over the run so later cases are larger.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of ints with length in `[0, size]`.
+    pub fn vec_int(&mut self, lo: usize, hi: usize) -> Vec<usize> {
+        let n = self.rng.below(self.size + 1);
+        (0..n).map(|_| self.int(lo, hi)).collect()
+    }
+
+    /// Choose an element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Sub-RNG for bulk data generation inside a property.
+    pub fn rng(&mut self) -> Rng {
+        self.rng.fork(0xfeed)
+    }
+}
+
+/// Run `prop` over `cases` generated cases.  Panics (with seed info) on the
+/// first failing case.  Set `EDGEFLOW_PROP_SEED` to replay a single seed,
+/// `EDGEFLOW_PROP_CASES` to override the case count.
+pub fn forall<F: FnMut(&mut Gen) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    mut prop: F,
+) {
+    let cases = std::env::var("EDGEFLOW_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    let fixed_seed: Option<u64> = std::env::var("EDGEFLOW_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok());
+
+    let base = 0x00edf10u64;
+    for case in 0..cases {
+        let seed = fixed_seed.unwrap_or(base.wrapping_add(case as u64 * 0x9E37));
+        let mut g = Gen { rng: Rng::new(seed), size: 4 + case * 97 / cases.max(1) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases}: {msg}\n\
+                 reproduce with EDGEFLOW_PROP_SEED={seed}"
+            );
+        }
+        if fixed_seed.is_some() {
+            break;
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly try halving elements / dropping chunks while
+/// the failure predicate still holds.  Returns the smallest failing input
+/// found.  (Used by tests that want a readable counterexample.)
+pub fn shrink_vec<F: Fn(&[usize]) -> bool>(mut xs: Vec<usize>, still_fails: F) -> Vec<usize> {
+    // Drop chunks.
+    let mut chunk = xs.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= xs.len() {
+            let mut cand = xs.clone();
+            cand.drain(i..i + chunk);
+            if still_fails(&cand) {
+                xs = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    // Shrink elements toward zero: halving first, then decrement-by-one to
+    // land on the exact boundary value.
+    loop {
+        let mut changed = false;
+        for i in 0..xs.len() {
+            while xs[i] > 0 {
+                let orig = xs[i];
+                let mut cand = xs.clone();
+                cand[i] = orig / 2;
+                if still_fails(&cand) {
+                    xs = cand;
+                    changed = true;
+                } else {
+                    break;
+                }
+            }
+            while xs[i] > 0 {
+                let mut cand = xs.clone();
+                cand[i] -= 1;
+                if still_fails(&cand) {
+                    xs = cand;
+                    changed = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    xs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("sum-commutes", 50, |g| {
+            let a = g.int(0, 1000);
+            let b = g.int(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math is broken".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with EDGEFLOW_PROP_SEED=")]
+    fn forall_reports_seed_on_failure() {
+        forall("always-fails", 3, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_finds_minimal_vector() {
+        // predicate: fails whenever the vec contains an element >= 10
+        let start = vec![3, 50, 7, 12, 900];
+        let min = shrink_vec(start, |xs| xs.iter().any(|&x| x >= 10));
+        assert_eq!(min, vec![10]);
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        forall("vec-bounds", 30, |g| {
+            let v = g.vec_int(5, 9);
+            if v.iter().all(|&x| (5..=9).contains(&x)) {
+                Ok(())
+            } else {
+                Err(format!("out of bounds: {v:?}"))
+            }
+        });
+    }
+}

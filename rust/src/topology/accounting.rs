@@ -1,0 +1,158 @@
+//! Communication accounting: the paper's Fig 4 metric.
+//!
+//! The paper measures "communication load by the count of parameters
+//! uploaded per round", weighting each transfer by the number of hops it
+//! traverses.  The accountant records every logical transfer, attributes
+//! the bytes to each link on its route, and exposes the totals the
+//! compression ratio is computed from.
+
+use std::collections::BTreeMap;
+
+use crate::topology::graph::{LinkId, NodeId, Topology};
+use crate::topology::route::RouteTable;
+use crate::util::error::{Error, Result};
+
+/// One logical transfer record.
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+    pub hops: usize,
+    /// Free-form label ("upload", "migration", "broadcast", ...).
+    pub label: &'static str,
+    pub round: usize,
+}
+
+/// Aggregated communication ledger for one experiment.
+#[derive(Debug, Default)]
+pub struct CommAccountant {
+    transfers: Vec<Transfer>,
+    per_link_bytes: BTreeMap<usize, u64>,
+}
+
+impl CommAccountant {
+    pub fn new() -> CommAccountant {
+        CommAccountant::default()
+    }
+
+    /// Record a transfer routed by `routes`; returns the hop count.
+    pub fn record(
+        &mut self,
+        topo: &Topology,
+        routes: &RouteTable,
+        src: NodeId,
+        dst: NodeId,
+        bytes: u64,
+        label: &'static str,
+        round: usize,
+    ) -> Result<usize> {
+        let path = routes.path(src, dst).ok_or_else(|| {
+            Error::Topology(format!("no route {src:?} -> {dst:?}"))
+        })?;
+        for &l in &path {
+            debug_assert!(l.0 < topo.link_count());
+            *self.per_link_bytes.entry(l.0).or_insert(0) += bytes;
+        }
+        let hops = path.len();
+        self.transfers.push(Transfer { src, dst, bytes, hops, label, round });
+        Ok(hops)
+    }
+
+    /// Total byte-hops (bytes x hops summed over transfers) — the paper's
+    /// load metric, scaled to bytes.
+    pub fn byte_hops(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bytes * t.hops as u64).sum()
+    }
+
+    /// Total bytes injected (ignoring path length).
+    pub fn bytes_sent(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Transfers recorded.
+    pub fn transfer_count(&self) -> usize {
+        self.transfers.len()
+    }
+
+    /// Byte-hops restricted to a label.
+    pub fn byte_hops_for(&self, label: &str) -> u64 {
+        self.transfers
+            .iter()
+            .filter(|t| t.label == label)
+            .map(|t| t.bytes * t.hops as u64)
+            .sum()
+    }
+
+    /// Per-link byte totals (link id -> bytes).
+    pub fn link_loads(&self) -> &BTreeMap<usize, u64> {
+        &self.per_link_bytes
+    }
+
+    /// The busiest link and its bytes.
+    pub fn hottest_link(&self) -> Option<(LinkId, u64)> {
+        self.per_link_bytes
+            .iter()
+            .max_by_key(|(_, &b)| b)
+            .map(|(&l, &b)| (LinkId(l), b))
+    }
+
+    /// Conservation check: sum over links == sum over transfers of
+    /// bytes*hops.  True by construction; exposed for property tests.
+    pub fn conserves_bytes(&self) -> bool {
+        let link_sum: u64 = self.per_link_bytes.values().sum();
+        link_sum == self.byte_hops()
+    }
+
+    pub fn transfers(&self) -> &[Transfer] {
+        &self.transfers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::topology::builder::{build, TopologyParams};
+
+    #[test]
+    fn records_and_conserves() {
+        let t = build(&TopologyParams::new(TopologyKind::DepthLinear, 4, 2)).unwrap();
+        let rt = RouteTable::hops(&t);
+        let mut acc = CommAccountant::new();
+        let cloud = t.cloud().unwrap();
+        let bs0 = t.edge_bs(0).unwrap();
+        let hops = acc.record(&t, &rt, bs0, cloud, 1000, "upload", 0).unwrap();
+        assert_eq!(hops, 4); // chain of 4 BS, far end to cloud
+        assert_eq!(acc.byte_hops(), 4000);
+        assert_eq!(acc.bytes_sent(), 1000);
+        assert!(acc.conserves_bytes());
+    }
+
+    #[test]
+    fn labels_separate() {
+        let t = build(&TopologyParams::new(TopologyKind::Simple, 2, 2)).unwrap();
+        let rt = RouteTable::hops(&t);
+        let mut acc = CommAccountant::new();
+        let cloud = t.cloud().unwrap();
+        let c0 = t.client(0).unwrap();
+        acc.record(&t, &rt, c0, cloud, 10, "upload", 0).unwrap();
+        acc.record(&t, &rt, cloud, c0, 20, "broadcast", 0).unwrap();
+        assert_eq!(acc.byte_hops_for("upload"), 20); // 2 hops x 10
+        assert_eq!(acc.byte_hops_for("broadcast"), 40);
+        assert_eq!(acc.transfer_count(), 2);
+    }
+
+    #[test]
+    fn hottest_link_found() {
+        let t = build(&TopologyParams::new(TopologyKind::Simple, 2, 1)).unwrap();
+        let rt = RouteTable::hops(&t);
+        let mut acc = CommAccountant::new();
+        let cloud = t.cloud().unwrap();
+        for round in 0..3 {
+            acc.record(&t, &rt, t.client(0).unwrap(), cloud, 5, "u", round).unwrap();
+        }
+        let (_, bytes) = acc.hottest_link().unwrap();
+        assert_eq!(bytes, 15);
+    }
+}

@@ -1,0 +1,234 @@
+//! Constructors for the paper's four edge-network structures (Fig 4).
+//!
+//! All four attach `clients_per_cluster` clients to each of `clusters`
+//! base stations over radio links; they differ in how base stations reach
+//! the cloud (and, for EdgeFLow, each other):
+//!
+//! * **simple** — every BS has a direct backbone link to the cloud
+//!   (local — edge — cloud; the shallowest structure).
+//! * **breadth_parallel** — base stations fan into aggregation routers
+//!   (groups of `fanout`), routers connect to the cloud: broad and
+//!   shallow, 2 backbone hops.
+//! * **depth_linear** — base stations form a chain BS0—BS1—…—BS(M-1) and
+//!   only the far end reaches the cloud: the deepest structure, where the
+//!   average BS→cloud distance grows linearly with M.
+//! * **hybrid** — chains of `chain_len` base stations whose heads fan into
+//!   routers, then the cloud: the paper's "hybrid breadth-depth complex"
+//!   case.
+//!
+//! Neighboring base stations are additionally linked in all structures
+//! except `simple` — matching the paper's premise that adjacent edge sites
+//! have direct channels EdgeFLow's migration can ride.  In `simple`,
+//! BS↔BS traffic routes through the cloud, which is exactly why the
+//! paper's Fig 4 shows the smallest gain there.
+
+use crate::config::TopologyKind;
+use crate::topology::graph::{NodeKind, Topology};
+use crate::util::error::Result;
+
+/// Topology construction parameters (bandwidths in Mbps, latencies in ms).
+#[derive(Debug, Clone)]
+pub struct TopologyParams {
+    pub kind: TopologyKind,
+    pub clusters: usize,
+    pub clients_per_cluster: usize,
+    /// Radio link: client <-> BS.
+    pub radio_mbps: f64,
+    pub radio_ms: f64,
+    /// Edge link: BS <-> BS (adjacent sites).
+    pub edge_mbps: f64,
+    pub edge_ms: f64,
+    /// Backbone link: BS/router <-> router/cloud.
+    pub backbone_mbps: f64,
+    pub backbone_ms: f64,
+    /// Router fan-in for breadth/hybrid structures.
+    pub fanout: usize,
+    /// Chain length for the hybrid structure.
+    pub chain_len: usize,
+}
+
+impl TopologyParams {
+    pub fn new(kind: TopologyKind, clusters: usize, clients_per_cluster: usize) -> Self {
+        TopologyParams {
+            kind,
+            clusters,
+            clients_per_cluster,
+            radio_mbps: 100.0,
+            radio_ms: 2.0,
+            edge_mbps: 1_000.0,
+            edge_ms: 1.0,
+            backbone_mbps: 10_000.0,
+            backbone_ms: 5.0,
+            fanout: 4,
+            chain_len: 3,
+        }
+    }
+}
+
+/// Build one of the paper's four structures.
+pub fn build(p: &TopologyParams) -> Result<Topology> {
+    let mut t = Topology::new();
+    let cloud = t.add_node(NodeKind::Cloud);
+
+    // Base stations + their clients (client ids are cluster-major).
+    let mut bs = Vec::with_capacity(p.clusters);
+    for m in 0..p.clusters {
+        let b = t.add_node(NodeKind::EdgeBs(m));
+        bs.push(b);
+        for j in 0..p.clients_per_cluster {
+            let c = t.add_node(NodeKind::Client(m * p.clients_per_cluster + j));
+            t.add_link(c, b, p.radio_mbps, p.radio_ms);
+        }
+    }
+
+    match p.kind {
+        TopologyKind::Simple => {
+            // Star: every BS one backbone hop from the cloud.  No direct
+            // BS<->BS channels.
+            for &b in &bs {
+                t.add_link(b, cloud, p.backbone_mbps, p.backbone_ms);
+            }
+        }
+        TopologyKind::BreadthParallel => {
+            // BS -> router (groups of fanout) -> cloud; ring of BS links.
+            let groups = p.clusters.div_ceil(p.fanout);
+            for g in 0..groups {
+                let r = t.add_node(NodeKind::Router);
+                t.add_link(r, cloud, p.backbone_mbps, p.backbone_ms);
+                for i in (g * p.fanout)..((g + 1) * p.fanout).min(p.clusters) {
+                    t.add_link(bs[i], r, p.backbone_mbps, p.backbone_ms);
+                }
+            }
+            link_bs_ring(&mut t, &bs, p);
+        }
+        TopologyKind::DepthLinear => {
+            // Chain; only the tail reaches the cloud.
+            for w in bs.windows(2) {
+                t.add_link(w[0], w[1], p.edge_mbps, p.edge_ms);
+            }
+            t.add_link(*bs.last().unwrap(), cloud, p.backbone_mbps, p.backbone_ms);
+        }
+        TopologyKind::Hybrid => {
+            // Chains of `chain_len`; chain heads fan into routers; routers
+            // into the cloud; consecutive chains bridged at the tail.
+            let chains: Vec<&[_]> = bs.chunks(p.chain_len).collect();
+            let groups = chains.len().div_ceil(p.fanout);
+            let mut routers = Vec::new();
+            for _ in 0..groups {
+                let r = t.add_node(NodeKind::Router);
+                t.add_link(r, cloud, p.backbone_mbps, p.backbone_ms);
+                routers.push(r);
+            }
+            for (ci, chain) in chains.iter().enumerate() {
+                for w in chain.windows(2) {
+                    t.add_link(w[0], w[1], p.edge_mbps, p.edge_ms);
+                }
+                t.add_link(chain[0], routers[ci / p.fanout], p.backbone_mbps, p.backbone_ms);
+                // Bridge chain tails so the edge mesh is connected without
+                // the backbone.
+                if ci + 1 < chains.len() {
+                    t.add_link(
+                        *chain.last().unwrap(),
+                        chains[ci + 1][0],
+                        p.edge_mbps,
+                        p.edge_ms,
+                    );
+                }
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// Ring of direct BS<->BS links (adjacent edge sites).
+fn link_bs_ring(t: &mut Topology, bs: &[crate::topology::graph::NodeId], p: &TopologyParams) {
+    if bs.len() < 2 {
+        return;
+    }
+    for w in bs.windows(2) {
+        t.add_link(w[0], w[1], p.edge_mbps, p.edge_ms);
+    }
+    if bs.len() > 2 {
+        t.add_link(bs[bs.len() - 1], bs[0], p.edge_mbps, p.edge_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::route::RouteTable;
+
+    fn params(kind: TopologyKind) -> TopologyParams {
+        TopologyParams::new(kind, 10, 10)
+    }
+
+    #[test]
+    fn all_structures_build_and_connect() {
+        for kind in TopologyKind::ALL {
+            let t = build(&params(kind)).unwrap();
+            assert_eq!(t.base_stations().len(), 10, "{kind:?}");
+            assert_eq!(t.clients().len(), 100, "{kind:?}");
+            let rt = RouteTable::hops(&t);
+            // Every client reaches the cloud and every BS.
+            let cloud = t.cloud().unwrap();
+            for c in t.clients() {
+                assert!(rt.dist(c, cloud).is_some(), "{kind:?} client unreachable");
+            }
+            for a in t.base_stations() {
+                for b in t.base_stations() {
+                    assert!(rt.dist(a, b).is_some(), "{kind:?} BS pair unreachable");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simple_is_one_hop_bs_to_cloud() {
+        let t = build(&params(TopologyKind::Simple)).unwrap();
+        let rt = RouteTable::hops(&t);
+        let cloud = t.cloud().unwrap();
+        for b in t.base_stations() {
+            assert_eq!(rt.dist(b, cloud), Some(1));
+        }
+    }
+
+    #[test]
+    fn depth_linear_distance_grows() {
+        let t = build(&params(TopologyKind::DepthLinear)).unwrap();
+        let rt = RouteTable::hops(&t);
+        let cloud = t.cloud().unwrap();
+        let bs = t.base_stations();
+        // BS0 is 10 hops from the cloud, BS9 is 1.
+        assert_eq!(rt.dist(bs[9], cloud), Some(1));
+        assert_eq!(rt.dist(bs[0], cloud), Some(10));
+    }
+
+    #[test]
+    fn breadth_parallel_is_two_hops() {
+        let t = build(&params(TopologyKind::BreadthParallel)).unwrap();
+        let rt = RouteTable::hops(&t);
+        let cloud = t.cloud().unwrap();
+        for b in t.base_stations() {
+            assert_eq!(rt.dist(b, cloud), Some(2));
+        }
+    }
+
+    #[test]
+    fn neighbor_bs_one_hop_except_simple() {
+        for kind in [
+            TopologyKind::BreadthParallel,
+            TopologyKind::DepthLinear,
+            TopologyKind::Hybrid,
+        ] {
+            let t = build(&params(kind)).unwrap();
+            let rt = RouteTable::hops(&t);
+            let bs = t.base_stations();
+            assert_eq!(rt.dist(bs[0], bs[1]), Some(1), "{kind:?}");
+        }
+        let t = build(&params(TopologyKind::Simple)).unwrap();
+        let rt = RouteTable::hops(&t);
+        let bs = t.base_stations();
+        // via the cloud
+        assert_eq!(rt.dist(bs[0], bs[1]), Some(2));
+    }
+}

@@ -1,0 +1,168 @@
+//! Node/link graph with adjacency lists.
+
+use crate::util::error::{Error, Result};
+
+/// Node handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// Link handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LinkId(pub usize);
+
+/// What a node is, for routing policy and reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Local device; payload is the client id.
+    Client(usize),
+    /// Edge base station anchoring cluster `m`.
+    EdgeBs(usize),
+    /// Backbone router (no attached clients).
+    Router,
+    /// The (traditional) cloud aggregation server.
+    Cloud,
+}
+
+/// An undirected link with capacity characteristics.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub a: NodeId,
+    pub b: NodeId,
+    /// Megabits per second.
+    pub bandwidth_mbps: f64,
+    /// One-way propagation latency, milliseconds.
+    pub latency_ms: f64,
+}
+
+/// The network graph.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    kinds: Vec<NodeKind>,
+    links: Vec<Link>,
+    /// adjacency: node -> [(neighbor, link)]
+    adj: Vec<Vec<(NodeId, LinkId)>>,
+}
+
+impl Topology {
+    pub fn new() -> Topology {
+        Topology::default()
+    }
+
+    pub fn add_node(&mut self, kind: NodeKind) -> NodeId {
+        self.kinds.push(kind);
+        self.adj.push(Vec::new());
+        NodeId(self.kinds.len() - 1)
+    }
+
+    pub fn add_link(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        bandwidth_mbps: f64,
+        latency_ms: f64,
+    ) -> LinkId {
+        assert!(a.0 < self.kinds.len() && b.0 < self.kinds.len(), "bad node");
+        assert_ne!(a, b, "self-link");
+        let id = LinkId(self.links.len());
+        self.links.push(Link { a, b, bandwidth_mbps, latency_ms });
+        self.adj[a.0].push((b, id));
+        self.adj[b.0].push((a, id));
+        id
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn kind(&self, n: NodeId) -> NodeKind {
+        self.kinds[n.0]
+    }
+
+    pub fn link(&self, l: LinkId) -> &Link {
+        &self.links[l.0]
+    }
+
+    pub fn neighbors(&self, n: NodeId) -> &[(NodeId, LinkId)] {
+        &self.adj[n.0]
+    }
+
+    /// First node of `kind` (e.g. the cloud).
+    pub fn find(&self, pred: impl Fn(NodeKind) -> bool) -> Option<NodeId> {
+        self.kinds.iter().position(|&k| pred(k)).map(NodeId)
+    }
+
+    /// The cloud node, if present.
+    pub fn cloud(&self) -> Result<NodeId> {
+        self.find(|k| k == NodeKind::Cloud)
+            .ok_or_else(|| Error::Topology("no cloud node".into()))
+    }
+
+    /// Base station of cluster `m`.
+    pub fn edge_bs(&self, m: usize) -> Result<NodeId> {
+        self.find(|k| k == NodeKind::EdgeBs(m))
+            .ok_or_else(|| Error::Topology(format!("no edge BS for cluster {m}")))
+    }
+
+    /// Node for client `id`.
+    pub fn client(&self, id: usize) -> Result<NodeId> {
+        self.find(|k| k == NodeKind::Client(id))
+            .ok_or_else(|| Error::Topology(format!("no node for client {id}")))
+    }
+
+    /// All base stations in cluster order.
+    pub fn base_stations(&self) -> Vec<NodeId> {
+        let mut bs: Vec<(usize, NodeId)> = self
+            .kinds
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &k)| match k {
+                NodeKind::EdgeBs(m) => Some((m, NodeId(i))),
+                _ => None,
+            })
+            .collect();
+        bs.sort_unstable();
+        bs.into_iter().map(|(_, n)| n).collect()
+    }
+
+    /// All client nodes.
+    pub fn clients(&self) -> Vec<NodeId> {
+        (0..self.kinds.len())
+            .filter(|&i| matches!(self.kinds[i], NodeKind::Client(_)))
+            .map(NodeId)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query() {
+        let mut t = Topology::new();
+        let c0 = t.add_node(NodeKind::Client(0));
+        let bs = t.add_node(NodeKind::EdgeBs(0));
+        let cloud = t.add_node(NodeKind::Cloud);
+        t.add_link(c0, bs, 100.0, 1.0);
+        t.add_link(bs, cloud, 1000.0, 10.0);
+        assert_eq!(t.node_count(), 3);
+        assert_eq!(t.link_count(), 2);
+        assert_eq!(t.cloud().unwrap(), cloud);
+        assert_eq!(t.edge_bs(0).unwrap(), bs);
+        assert_eq!(t.client(0).unwrap(), c0);
+        assert_eq!(t.neighbors(bs).len(), 2);
+        assert!(t.edge_bs(3).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "self-link")]
+    fn rejects_self_link() {
+        let mut t = Topology::new();
+        let a = t.add_node(NodeKind::Router);
+        t.add_link(a, a, 1.0, 1.0);
+    }
+}

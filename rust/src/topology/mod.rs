@@ -1,0 +1,16 @@
+//! Edge-network topology model (paper Fig 4's four structures).
+//!
+//! Nodes are clients, edge base stations, backbone routers, and the cloud;
+//! links carry bandwidth/latency so both hop-count accounting (the paper's
+//! communication-load metric) and discrete-event timing ([`crate::netsim`])
+//! run over the same graph.
+
+pub mod accounting;
+pub mod builder;
+pub mod graph;
+pub mod route;
+
+pub use accounting::CommAccountant;
+pub use builder::{build, TopologyParams};
+pub use graph::{LinkId, NodeId, NodeKind, Topology};
+pub use route::RouteTable;

@@ -1,0 +1,84 @@
+//! Tiny CSV writer for metrics output (RFC 4180 quoting).
+
+use std::io::Write;
+use std::path::Path;
+
+use super::error::Result;
+
+/// Buffered CSV writer.
+pub struct CsvWriter {
+    cols: usize,
+    out: Vec<u8>,
+}
+
+impl CsvWriter {
+    /// Start a document with a header row.
+    pub fn new(header: &[&str]) -> CsvWriter {
+        let mut w = CsvWriter { cols: header.len(), out: Vec::new() };
+        w.push_row(header.iter().map(|s| s.to_string()));
+        w
+    }
+
+    fn push_row<I: IntoIterator<Item = String>>(&mut self, row: I) {
+        let mut n = 0;
+        for (i, field) in row.into_iter().enumerate() {
+            if i > 0 {
+                self.out.push(b',');
+            }
+            self.out.extend_from_slice(escape(&field).as_bytes());
+            n += 1;
+        }
+        debug_assert_eq!(n, self.cols, "csv row width mismatch");
+        self.out.extend_from_slice(b"\r\n");
+    }
+
+    /// Append one row of stringified fields.
+    pub fn row(&mut self, fields: &[String]) {
+        self.push_row(fields.iter().cloned());
+    }
+
+    /// Convenience: append a row of f64s with compact formatting.
+    pub fn row_f64(&mut self, fields: &[f64]) {
+        self.push_row(fields.iter().map(|v| format!("{v}")));
+    }
+
+    /// Serialized document.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.out
+    }
+
+    /// Write to a file.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.out)?;
+        Ok(())
+    }
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut w = CsvWriter::new(&["round", "loss"]);
+        w.row(&["1".into(), "2.5".into()]);
+        let text = String::from_utf8(w.as_bytes().to_vec()).unwrap();
+        assert_eq!(text, "round,loss\r\n1,2.5\r\n");
+    }
+
+    #[test]
+    fn quotes_special_fields() {
+        assert_eq!(escape("a,b"), "\"a,b\"");
+        assert_eq!(escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(escape("plain"), "plain");
+    }
+}

@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All errors surfaced by the edgeflow library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// I/O failure (artifact loading, metrics output, ...).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON syntax or type mismatch while parsing manifests/configs.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Configuration validation failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Artifact manifest inconsistency (missing file, shape mismatch...).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Topology / routing failure (disconnected node, bad id, ...).
+    #[error("topology error: {0}")]
+    Topology(String),
+
+    /// Dataset / partitioning failure.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// CLI usage error.
+    #[error("usage error: {0}")]
+    Usage(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,63 @@
+//! Stderr logger wired to the `log` facade.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; `verbose` enables debug level.
+/// Honors `EDGEFLOW_LOG` (error|warn|info|debug|trace) when set.
+pub fn init(verbose: bool) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("EDGEFLOW_LOG").ok().as_deref() {
+        Some("error") => LevelFilter::Error,
+        Some("warn") => LevelFilter::Warn,
+        Some("info") => LevelFilter::Info,
+        Some("debug") => LevelFilter::Debug,
+        Some("trace") => LevelFilter::Trace,
+        _ if verbose => LevelFilter::Debug,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger { start: Instant::now() }));
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init(false);
+        super::init(true); // must not panic on double install
+    }
+}

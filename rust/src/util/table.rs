@@ -1,0 +1,123 @@
+//! ASCII table pretty-printer, used to regenerate the paper's tables.
+
+/// Column alignment.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    aligns: Vec<Align>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            aligns: vec![Align::Right; header.len()],
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: &str) -> Table {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, f) in row.iter().enumerate() {
+                widths[i] = widths[i].max(f.chars().count());
+            }
+        }
+        let sep = |l: char, m: char, r: char| {
+            let mut s = String::new();
+            s.push(l);
+            for (i, w) in widths.iter().enumerate() {
+                s.push_str(&"─".repeat(w + 2));
+                s.push(if i + 1 == ncols { r } else { m });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |fields: &[String]| {
+            let mut s = String::from("│");
+            for (i, f) in fields.iter().enumerate() {
+                let pad = widths[i] - f.chars().count();
+                match self.aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(f);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(f);
+                        s.push(' ');
+                    }
+                }
+                s.push('│');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep('┌', '┬', '┐'));
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep('├', '┼', '┤'));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep('└', '┴', '┘'));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "acc"]).align(0, Align::Left);
+        t.row(&["FedAvg".into(), "90.60".into()]);
+        t.row(&["EdgeFLowSeq".into(), "90.53".into()]);
+        let s = t.render();
+        assert!(s.contains("FedAvg"));
+        assert!(s.contains("90.53"));
+        // all lines the same display width
+        let lens: Vec<usize> =
+            s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,74 @@
+//! Scoped wall-clock timing.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating timer with named laps — used by the runner to attribute
+/// round time to train / aggregate / eval / comm phases.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+    last: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Timer {
+        let now = Instant::now();
+        Timer { start: now, laps: Vec::new(), last: now }
+    }
+
+    /// Record time since the previous lap (or start) under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        if let Some((_, acc)) = self.laps.iter_mut().find(|(n, _)| n == name) {
+            *acc += d;
+        } else {
+            self.laps.push((name.to_string(), d));
+        }
+        d
+    }
+
+    /// Total elapsed since construction.
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Accumulated duration for a named lap.
+    pub fn get(&self, name: &str) -> Duration {
+        self.laps
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    /// `(name, seconds)` pairs in first-seen order.
+    pub fn laps(&self) -> Vec<(String, f64)> {
+        self.laps.iter().map(|(n, d)| (n.clone(), d.as_secs_f64())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut t = Timer::new();
+        std::thread::sleep(Duration::from_millis(2));
+        t.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        t.lap("a");
+        assert!(t.get("a") >= Duration::from_millis(4));
+        assert_eq!(t.get("missing"), Duration::ZERO);
+        assert_eq!(t.laps().len(), 1);
+    }
+}

@@ -1,0 +1,167 @@
+//! CLI integration tests: spawn the real `edgeflow` binary.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_edgeflow"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("--help").output().unwrap();
+    let text = String::from_utf8_lossy(&out.stderr);
+    for cmd in ["train", "table1", "fig3", "comm-sim", "theory", "inspect"] {
+        assert!(text.contains(cmd), "help missing {cmd}: {text}");
+    }
+}
+
+#[test]
+fn unknown_command_exits_2() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn unknown_flag_exits_2() {
+    let out = bin().args(["train", "--warp-speed", "9"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn presets_print() {
+    let out = bin().arg("presets").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("table1_cifar_niid_b"));
+    assert!(text.contains("edgeflow_seq"));
+}
+
+#[test]
+fn theory_reports_terms_and_kscan() {
+    let out = bin()
+        .args(["theory", "--eta", "0.02", "--g2", "5", "--kmax", "10"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Theorem 1"));
+    assert!(text.contains("K-scan"));
+    assert!(text.contains("<-- min"));
+}
+
+#[test]
+fn theory_rejects_bad_step_size() {
+    // LK eta >= 1 violates the theorem hypothesis: the binary must fail,
+    // not print garbage.
+    let out = bin().args(["theory", "--eta", "0.5", "--k", "5"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn inspect_topology_prints_all_four() {
+    let out = bin().args(["inspect", "--topology"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for t in ["simple", "breadth_parallel", "depth_linear", "hybrid"] {
+        assert!(text.contains(t), "{t} missing");
+    }
+}
+
+#[test]
+fn inspect_partitions_shows_histograms() {
+    let out = bin()
+        .args(["inspect", "--partitions", "--clients", "20", "--clusters", "4"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(
+        text.lines().filter(|l| l.trim_start().starts_with("client ")).count(),
+        20
+    );
+    // labels must match the actual per-client assignment (histogram
+    // concentration implies a non-IID label and vice versa)
+    for line in text.lines().filter(|l| l.trim_start().starts_with("client ")) {
+        let concentrated = line
+            .split('[')
+            .nth(1)
+            .unwrap()
+            .split(']')
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .any(|n| n.parse::<usize>().unwrap() > 50);
+        let labeled_noniid = line.contains("noniid");
+        assert_eq!(concentrated, labeled_noniid, "label mismatch: {line}");
+    }
+}
+
+#[test]
+fn inspect_requires_a_mode() {
+    let out = bin().arg("inspect").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn train_tiny_run_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let tmp = std::env::temp_dir().join("edgeflow_cli_train.csv");
+    let out = bin()
+        .args([
+            "train",
+            "--rounds", "3",
+            "--clusters", "4",
+            "--k", "2",
+            "--samples", "80",
+            "--test-samples", "100",
+            "--eval-every", "0",
+            "--algorithm", "edgeflow_seq",
+            "--out", tmp.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("final acc"));
+    let csv = std::fs::read_to_string(&tmp).unwrap();
+    assert_eq!(csv.lines().count(), 4); // header + 3 rounds
+}
+
+#[test]
+fn comm_sim_reports_compression_ratios() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let out = bin()
+        .args(["comm-sim", "--rounds", "20", "--latency"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Fig 4"));
+    assert!(text.contains("depth_linear"));
+    assert!(text.contains("mean transfer latency"));
+}
+
+#[test]
+fn train_rejects_missing_artifact_k() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = bin().args(["train", "--rounds", "1", "--k", "7"]).output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("BUILD_MATRIX") || text.contains("no artifact"), "{text}");
+}

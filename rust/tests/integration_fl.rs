@@ -1,0 +1,293 @@
+//! End-to-end coordinator tests over the real artifacts: the full
+//! Runner loop (data -> PJRT local updates -> aggregation -> migration ->
+//! eval) for every algorithm.
+
+use std::sync::Arc;
+
+use edgeflow::config::{
+    Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind,
+};
+use edgeflow::fl::runner::Runner;
+use edgeflow::runtime::executor::Engine;
+
+fn engine() -> Option<Arc<Engine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::load("artifacts").expect("engine")))
+}
+
+fn tiny_cfg(alg: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("test_{}", alg.name()),
+        algorithm: alg,
+        dataset: DatasetKind::SynthFashion,
+        distribution: Distribution::NiidA,
+        model: "fashion_mlp".into(),
+        clients: 20,
+        clusters: 4,
+        local_steps: 5,
+        rounds: 8,
+        samples_per_client: 80,
+        test_samples: 200,
+        eval_every: 4,
+        seed: 3,
+        lr: 2e-3, // short runs: push Adam a little harder than the paper default
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn every_algorithm_trains_and_improves() {
+    let Some(e) = engine() else { return };
+    // Random init on 10 classes ~= 10% accuracy; a short run must beat it
+    // clearly for the averaging algorithms.
+    for alg in [
+        Algorithm::FedAvg,
+        Algorithm::EdgeFlowRand,
+        Algorithm::EdgeFlowSeq,
+        Algorithm::HierFl,
+    ] {
+        let mut cfg = tiny_cfg(alg);
+        cfg.rounds = 40;
+        if alg == Algorithm::HierFl {
+            cfg.rounds = 6; // trains all clients per round; keep it short
+        }
+        let report = Runner::with_engine(e.clone(), cfg).unwrap().run().unwrap();
+        assert!(
+            report.final_accuracy > 0.2,
+            "{}: accuracy {} too low",
+            alg.name(),
+            report.final_accuracy
+        );
+        assert!(report.final_loss.is_finite());
+        assert_eq!(report.metrics.rounds.len(), report.rounds);
+        // training must actually reduce the loss; compare quarter-means
+        // since per-round loss is noisy under client resampling
+        let losses: Vec<f64> =
+            report.metrics.rounds.iter().map(|r| r.train_loss).collect();
+        let q = (losses.len() / 4).max(1);
+        let head: f64 = losses[..q].iter().sum::<f64>() / q as f64;
+        let tail: f64 = losses[losses.len() - q..].iter().sum::<f64>() / q as f64;
+        assert!(tail < head, "{}: loss {head:.4} -> {tail:.4}", alg.name());
+    }
+}
+
+#[test]
+fn seqfl_runs_without_aggregation() {
+    // Under IID data the sequential chain learns; under heavy non-IID it
+    // exhibits the catastrophic-forgetting pathology the paper cites as
+    // motivation — both behaviours are exercised here.
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::SeqFl);
+    cfg.distribution = Distribution::Iid;
+    cfg.rounds = 20;
+    cfg.lr = 1e-3;
+    let report = Runner::with_engine(e.clone(), cfg).unwrap().run().unwrap();
+    assert!(report.final_loss.is_finite());
+    assert!(report.final_accuracy > 0.2, "iid seqfl: {}", report.final_accuracy);
+
+    // Non-IID: the model chases each client's 1-2 classes; accuracy stays
+    // far below the averaging algorithms at the same budget.
+    let mut cfg = tiny_cfg(Algorithm::SeqFl);
+    cfg.distribution = Distribution::NonIid { major_fraction: 1.0 };
+    cfg.rounds = 20;
+    cfg.lr = 1e-3;
+    let forgetful = Runner::with_engine(e, cfg).unwrap().run().unwrap();
+    assert!(forgetful.final_loss.is_finite());
+    assert!(
+        forgetful.final_accuracy < report.final_accuracy,
+        "non-IID seqfl should trail IID seqfl ({} vs {})",
+        forgetful.final_accuracy,
+        report.final_accuracy
+    );
+}
+
+#[test]
+fn single_cluster_edgeflow_equals_fedavg_full_participation() {
+    // With M = 1, EdgeFLow's active cluster is all clients and FedAvg's
+    // sample (N_m = N) is also all clients: identical participant sets,
+    // identical batches, identical uniform aggregation => identical model.
+    let Some(e) = engine() else { return };
+    let mut a = tiny_cfg(Algorithm::EdgeFlowSeq);
+    a.clusters = 1;
+    a.rounds = 3;
+    let mut b = tiny_cfg(Algorithm::FedAvg);
+    b.clusters = 1;
+    b.rounds = 3;
+    let mut ra = Runner::with_engine(e.clone(), a).unwrap();
+    let rep_a = ra.run().unwrap();
+    let mut rb = Runner::with_engine(e, b).unwrap();
+    let rep_b = rb.run().unwrap();
+    assert_eq!(ra.state().data, rb.state().data, "models must be identical");
+    assert_eq!(rep_a.final_accuracy, rep_b.final_accuracy);
+}
+
+#[test]
+fn runs_are_seed_deterministic() {
+    let Some(e) = engine() else { return };
+    let mk = || tiny_cfg(Algorithm::EdgeFlowRand);
+    let mut r1 = Runner::with_engine(e.clone(), mk()).unwrap();
+    let a = r1.run().unwrap();
+    let mut r2 = Runner::with_engine(e.clone(), mk()).unwrap();
+    let b = r2.run().unwrap();
+    assert_eq!(r1.state().data, r2.state().data);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.total_byte_hops, b.total_byte_hops);
+    // Different seed must actually change the run.
+    let mut cfg = mk();
+    cfg.seed = 99;
+    let mut r3 = Runner::with_engine(e, cfg).unwrap();
+    r3.run().unwrap();
+    assert_ne!(r1.state().data, r3.state().data);
+}
+
+#[test]
+fn edgeflow_communicates_less_than_fedavg_on_deep_topology() {
+    let Some(e) = engine() else { return };
+    let run = |alg: Algorithm| {
+        let mut cfg = tiny_cfg(alg);
+        cfg.topology = TopologyKind::DepthLinear;
+        cfg.rounds = 6;
+        Runner::with_engine(e.clone(), cfg).unwrap().run().unwrap()
+    };
+    let fedavg = run(Algorithm::FedAvg);
+    let edge = run(Algorithm::EdgeFlowSeq);
+    assert!(
+        (edge.total_byte_hops as f64) < 0.5 * fedavg.total_byte_hops as f64,
+        "edgeflow {} vs fedavg {}",
+        edge.total_byte_hops,
+        fedavg.total_byte_hops
+    );
+}
+
+#[test]
+fn cnn_variant_runs_one_round() {
+    let Some(e) = engine() else { return };
+    let cfg = ExperimentConfig {
+        name: "cnn_smoke".into(),
+        algorithm: Algorithm::EdgeFlowSeq,
+        dataset: DatasetKind::SynthFashion,
+        distribution: Distribution::Iid,
+        model: "fashion_cnn_slim_fast".into(),
+        clients: 4,
+        clusters: 2,
+        local_steps: 5,
+        rounds: 1,
+        samples_per_client: 64,
+        test_samples: 100,
+        eval_every: 1,
+        seed: 0,
+        ..ExperimentConfig::default()
+    };
+    let report = Runner::with_engine(e, cfg).unwrap().run().unwrap();
+    assert!(report.final_loss.is_finite());
+    assert!(report.final_accuracy >= 0.0);
+}
+
+#[test]
+fn config_artifact_cross_validation() {
+    let Some(e) = engine() else { return };
+    // K without an artifact
+    let mut cfg = tiny_cfg(Algorithm::FedAvg);
+    cfg.local_steps = 3;
+    assert!(Runner::with_engine(e.clone(), cfg).is_err());
+    // wrong dataset for the model
+    let mut cfg = tiny_cfg(Algorithm::FedAvg);
+    cfg.dataset = DatasetKind::SynthCifar; // model stays fashion_mlp
+    assert!(Runner::with_engine(e.clone(), cfg).is_err());
+    // batch size mismatch
+    let mut cfg = tiny_cfg(Algorithm::FedAvg);
+    cfg.batch_size = 32;
+    cfg.samples_per_client = 64;
+    assert!(Runner::with_engine(e, cfg).is_err());
+}
+
+#[test]
+fn edgeflow_hop_minimizes_migration_cost() {
+    // On the depth-linear chain, the hop-aware circuit's migrations should
+    // cost no more than the sequential circuit's (both visit every cluster
+    // each cycle; hop-aware orders by BS proximity).
+    let Some(e) = engine() else { return };
+    let run = |alg: Algorithm| {
+        let mut cfg = tiny_cfg(alg);
+        cfg.topology = TopologyKind::DepthLinear;
+        cfg.rounds = 12;
+        Runner::with_engine(e.clone(), cfg).unwrap().run().unwrap()
+    };
+    let hop = run(Algorithm::EdgeFlowHop);
+    let seq = run(Algorithm::EdgeFlowSeq);
+    assert!(hop.final_accuracy > 0.1);
+    assert!(
+        hop.total_byte_hops <= seq.total_byte_hops,
+        "hop-aware {} vs sequential {}",
+        hop.total_byte_hops,
+        seq.total_byte_hops
+    );
+}
+
+#[test]
+fn dropout_one_keeps_model_frozen() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 4;
+    cfg.dropout = 1.0;
+    let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+    let before = r.state().data.clone();
+    let report = r.run().unwrap();
+    assert_eq!(r.state().data, before, "all-dropped rounds must not move the model");
+    assert_eq!(report.total_byte_hops, 0);
+    assert_eq!(report.metrics.rounds.len(), 4);
+}
+
+#[test]
+fn dropout_half_still_trains() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 20;
+    cfg.dropout = 0.5;
+    let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+    let before = r.state().data.clone();
+    let report = r.run().unwrap();
+    assert_ne!(r.state().data, before);
+    // Half the cluster vanishing every round slows learning; require the
+    // loss trend (quarter-means over surviving rounds) to point down.
+    let losses: Vec<f64> = report
+        .metrics
+        .rounds
+        .iter()
+        .map(|r| r.train_loss)
+        .filter(|l| !l.is_nan())
+        .collect();
+    let q = (losses.len() / 4).max(1);
+    let head: f64 = losses[..q].iter().sum::<f64>() / q as f64;
+    let tail: f64 = losses[losses.len() - q..].iter().sum::<f64>() / q as f64;
+    assert!(tail < head, "loss {head:.4} -> {tail:.4} under dropout");
+    // fewer uploads than the dropout-free run
+    let mut full = tiny_cfg(Algorithm::EdgeFlowSeq);
+    full.rounds = 20;
+    let full_rep = Runner::with_engine(e, full).unwrap().run().unwrap();
+    assert!(report.total_byte_hops < full_rep.total_byte_hops);
+}
+
+#[test]
+fn metrics_account_every_round() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 5;
+    cfg.eval_every = 2;
+    let report = Runner::with_engine(e, cfg).unwrap().run().unwrap();
+    assert_eq!(report.metrics.rounds.len(), 5);
+    // evaluated at rounds 1, 3, 4 (eval_every=2 plus final)
+    let evals: Vec<usize> = report
+        .metrics
+        .rounds
+        .iter()
+        .filter(|r| !r.test_accuracy.is_nan())
+        .map(|r| r.round)
+        .collect();
+    assert_eq!(evals, vec![1, 3, 4]);
+    // every round moved bytes
+    assert!(report.metrics.rounds.iter().all(|r| r.comm_byte_hops > 0));
+}

@@ -1,0 +1,171 @@
+//! Integration tests over the real AOT artifacts: runtime + executor.
+//!
+//! These require `make artifacts` to have run (skipped gracefully
+//! otherwise, mirroring the pytest suite's behavior).
+
+use std::sync::Arc;
+
+use edgeflow::data::dataset::Batch;
+use edgeflow::runtime::executor::Engine;
+
+fn engine() -> Option<Arc<Engine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::load("artifacts").expect("engine")))
+}
+
+fn batch_for(k: usize, b: usize, image: (usize, usize, usize), seed: u64) -> Batch {
+    let (h, w, c) = image;
+    let mut rng = edgeflow::rng::Rng::new(seed);
+    Batch {
+        x: (0..k * b * h * w * c).map(|_| rng.f32()).collect(),
+        y: (0..k * b).map(|_| rng.below(10) as i32).collect(),
+    }
+}
+
+#[test]
+fn manifest_lists_expected_variants() {
+    let Some(e) = engine() else { return };
+    for v in ["fashion_mlp", "cifar_mlp", "fashion_cnn_slim"] {
+        assert!(e.manifest.variants.contains_key(v), "missing variant {v}");
+    }
+    let v = e.manifest.variant("fashion_mlp").unwrap();
+    assert_eq!(v.image, (28, 28, 1));
+    assert_eq!(v.train_batch, 64);
+    // MLP 784->128->64->10
+    assert_eq!(v.param_count(), 784 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10);
+}
+
+#[test]
+fn init_state_loads_and_is_finite() {
+    let Some(e) = engine() else { return };
+    for opt in ["sgd", "adam"] {
+        let s = e.init_state("fashion_mlp", opt).unwrap();
+        assert!(s.is_finite());
+        assert!(s.param_l2() > 0.0, "init params should not be all-zero");
+    }
+}
+
+#[test]
+fn local_update_changes_params_and_reports_loss() {
+    let Some(e) = engine() else { return };
+    let lu = e.local_update("fashion_mlp", "sgd", 1).unwrap();
+    let s0 = e.init_state("fashion_mlp", "sgd").unwrap();
+    let batch = batch_for(1, 64, lu.image, 7);
+    let (s1, loss) = lu.run(&s0, &batch, 0.05).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // Roughly ln(10) for random init on 10 classes.
+    assert!((1.0..4.0).contains(&loss), "loss {loss}");
+    assert!(s1.param_dist2(&s0) > 0.0, "params must move");
+    assert!(s1.is_finite());
+}
+
+#[test]
+fn local_update_lr_zero_is_noop() {
+    let Some(e) = engine() else { return };
+    let lu = e.local_update("fashion_mlp", "sgd", 1).unwrap();
+    let s0 = e.init_state("fashion_mlp", "sgd").unwrap();
+    let batch = batch_for(1, 64, lu.image, 11);
+    let (s1, _) = lu.run(&s0, &batch, 0.0).unwrap();
+    let n = s0.layout.param_elems();
+    assert_eq!(&s0.data[..n], &s1.data[..n]);
+}
+
+#[test]
+fn local_update_is_deterministic() {
+    let Some(e) = engine() else { return };
+    let lu = e.local_update("fashion_mlp", "adam", 5).unwrap();
+    let s0 = e.init_state("fashion_mlp", "adam").unwrap();
+    let batch = batch_for(5, 64, lu.image, 13);
+    let (a, la) = lu.run(&s0, &batch, 0.001).unwrap();
+    let (b, lb) = lu.run(&s0, &batch, 0.001).unwrap();
+    assert_eq!(la, lb);
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn adam_step_counter_advances_by_k() {
+    let Some(e) = engine() else { return };
+    let lu = e.local_update("fashion_mlp", "adam", 5).unwrap();
+    let s0 = e.init_state("fashion_mlp", "adam").unwrap();
+    let batch = batch_for(5, 64, lu.image, 17);
+    let (s1, _) = lu.run(&s0, &batch, 0.001).unwrap();
+    // adam_t is the last tensor in the layout.
+    let t_idx = s1.layout.tensors.len() - 1;
+    assert_eq!(s1.layout.tensors[t_idx].name, "adam_t");
+    assert_eq!(s1.tensor(t_idx)[0], 5.0);
+    assert_eq!(s0.tensor(t_idx)[0], 0.0);
+}
+
+#[test]
+fn repeated_updates_on_one_batch_reduce_loss() {
+    let Some(e) = engine() else { return };
+    let lu = e.local_update("fashion_mlp", "sgd", 1).unwrap();
+    let mut s = e.init_state("fashion_mlp", "sgd").unwrap();
+    let batch = batch_for(1, 64, lu.image, 19);
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for i in 0..20 {
+        let (s2, loss) = lu.run(&s, &batch, 0.05).unwrap();
+        s = s2;
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first * 0.8,
+        "memorizing one batch must reduce loss ({first} -> {last})"
+    );
+}
+
+#[test]
+fn eval_counts_are_consistent() {
+    let Some(e) = engine() else { return };
+    let ev = e.eval("fashion_mlp", "sgd").unwrap();
+    let s = e.init_state("fashion_mlp", "sgd").unwrap();
+    let (h, w, c) = ev.image;
+    let mut rng = edgeflow::rng::Rng::new(23);
+    let batch = Batch {
+        x: (0..ev.b * h * w * c).map(|_| rng.f32()).collect(),
+        y: (0..ev.b).map(|_| rng.below(10) as i32).collect(),
+    };
+    let (loss_sum, correct) = ev.run(&s, &batch).unwrap();
+    assert!(loss_sum > 0.0);
+    assert!((0.0..=ev.b as f32).contains(&correct));
+}
+
+#[test]
+fn eval_dataset_handles_partial_tail() {
+    let Some(e) = engine() else { return };
+    let ev = e.eval("fashion_mlp", "sgd").unwrap();
+    let s = e.init_state("fashion_mlp", "sgd").unwrap();
+    let gen = edgeflow::data::synth::SynthGen::new(
+        edgeflow::config::DatasetKind::SynthFashion,
+        3,
+    );
+    // 130 samples: one full batch of 100 + padded tail of 30.
+    let ds = gen.test_set(130);
+    let (loss, acc) = ev.run_dataset(&s, &ds).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn batch_shape_mismatch_is_rejected() {
+    let Some(e) = engine() else { return };
+    let lu = e.local_update("fashion_mlp", "sgd", 5).unwrap();
+    let s = e.init_state("fashion_mlp", "sgd").unwrap();
+    let bad = batch_for(1, 64, lu.image, 29); // K=1 batch for a K=5 exe
+    assert!(lu.run(&s, &bad, 0.01).is_err());
+}
+
+#[test]
+fn missing_artifact_errors_cleanly() {
+    let Some(e) = engine() else { return };
+    assert!(e.local_update("fashion_mlp", "adam", 99).is_err());
+    assert!(e.local_update("no_such_model", "sgd", 1).is_err());
+    assert!(e.init_state("fashion_mlp", "rmsprop").is_err());
+}

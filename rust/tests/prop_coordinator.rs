@@ -1,0 +1,353 @@
+//! Property tests over the coordinator invariants (DESIGN.md §7), using
+//! the in-tree seeded property harness (`edgeflow::testing::prop`).
+
+use edgeflow::config::{Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind};
+use edgeflow::data::partition::build_federation;
+use edgeflow::fl::aggregate::{mean_into, weighted_mean_into};
+use edgeflow::fl::scheduler::ClusterSchedule;
+use edgeflow::fl::strategy::Strategy;
+use edgeflow::netsim::NetSim;
+use edgeflow::testing::prop::forall;
+use edgeflow::topology::accounting::CommAccountant;
+use edgeflow::topology::builder::{build, TopologyParams};
+use edgeflow::topology::route::RouteTable;
+use edgeflow::util::json::Json;
+
+fn random_distribution(g: &mut edgeflow::testing::prop::Gen) -> Distribution {
+    match g.int(0, 3) {
+        0 => Distribution::Iid,
+        1 => Distribution::NiidA,
+        2 => Distribution::NiidB,
+        // whole percents: the serialized form ("noniid95") is
+        // percent-granular by contract
+        _ => Distribution::NonIid { major_fraction: g.int(50, 100) as f64 / 100.0 },
+    }
+}
+
+#[test]
+fn prop_partition_exactly_once() {
+    forall("partition-exactly-once", 25, |g| {
+        let clusters = g.int(1, 8);
+        let clients = clusters * g.int(1, 6);
+        let spc = g.int(10, 80);
+        let dist = random_distribution(g);
+        let fed = build_federation(
+            DatasetKind::SynthFashion,
+            &dist,
+            clients,
+            clusters,
+            spc,
+            10,
+            g.int(0, 1 << 20) as u64,
+        )
+        .map_err(|e| e.to_string())?;
+        let mut seen = vec![false; fed.train.len()];
+        for c in &fed.clients {
+            if c.samples.len() != spc {
+                return Err(format!("client {} has {} samples", c.id, c.samples.len()));
+            }
+            for &i in &c.samples {
+                if seen[i] {
+                    return Err(format!("sample {i} assigned twice"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err("orphan samples".into());
+        }
+        // quotas match labels
+        for c in &fed.clients {
+            if c.histogram(&fed.train) != c.quotas {
+                return Err(format!("client {} histogram != quotas", c.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_noniid_major_fraction_respected() {
+    forall("noniid-major-fraction", 25, |g| {
+        let x = g.f64(0.5, 1.0);
+        let spc = g.int(20, 100);
+        let fed = build_federation(
+            DatasetKind::SynthFashion,
+            &Distribution::NonIid { major_fraction: x },
+            8,
+            2,
+            spc,
+            10,
+            g.int(0, 9999) as u64,
+        )
+        .map_err(|e| e.to_string())?;
+        for c in &fed.clients {
+            let mut sorted = c.quotas.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            let top2: usize = sorted[..2].iter().sum();
+            let want = (x * spc as f64).round() as usize;
+            if top2 + 1 < want {
+                return Err(format!(
+                    "client {}: top-2 {top2} < expected major {want}",
+                    c.id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topology_fully_routable_and_symmetric() {
+    forall("topology-routable", 20, |g| {
+        let kind = *g.choose(&TopologyKind::ALL);
+        let clusters = g.int(1, 12);
+        let cpc = g.int(1, 6);
+        let topo =
+            build(&TopologyParams::new(kind, clusters, cpc)).map_err(|e| e.to_string())?;
+        let rt = RouteTable::hops(&topo);
+        let cloud = topo.cloud().map_err(|e| e.to_string())?;
+        for c in topo.clients() {
+            if rt.dist(c, cloud).is_none() {
+                return Err(format!("{kind:?}: client {c:?} cannot reach cloud"));
+            }
+        }
+        let bs = topo.base_stations();
+        for (i, &a) in bs.iter().enumerate() {
+            for &b in &bs[i + 1..] {
+                let ab = rt.dist(a, b);
+                let ba = rt.dist(b, a);
+                if ab.is_none() || ab != ba {
+                    return Err(format!("{kind:?}: asymmetric {a:?}<->{b:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accounting_conserves_bytes() {
+    forall("accounting-conservation", 20, |g| {
+        let kind = *g.choose(&TopologyKind::ALL);
+        let topo = build(&TopologyParams::new(kind, g.int(2, 8), 2))
+            .map_err(|e| e.to_string())?;
+        let rt = RouteTable::hops(&topo);
+        let mut acc = CommAccountant::new();
+        let nodes: Vec<_> = topo.clients();
+        let mut rng = g.rng();
+        for round in 0..g.int(1, 30) {
+            let a = nodes[rng.below(nodes.len())];
+            let b = nodes[rng.below(nodes.len())];
+            if a == b {
+                continue;
+            }
+            acc.record(&topo, &rt, a, b, rng.below(10_000) as u64 + 1, "t", round)
+                .map_err(|e| e.to_string())?;
+        }
+        if !acc.conserves_bytes() {
+            return Err("link sum != byte-hops".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregation_permutation_invariant_and_convex() {
+    forall("aggregation-invariants", 30, |g| {
+        let n = g.int(2, 8);
+        let len = g.int(1, 400);
+        let mut rng = g.rng();
+        let sources: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.f32() * 8.0 - 4.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = sources.iter().map(|v| v.as_slice()).collect();
+        let mut fwd = vec![0f32; len];
+        mean_into(&mut fwd, &refs);
+        // permutation invariance
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let prefs: Vec<&[f32]> = perm.iter().map(|&i| refs[i]).collect();
+        let mut rev = vec![0f32; len];
+        mean_into(&mut rev, &prefs);
+        for (a, b) in fwd.iter().zip(&rev) {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("permutation changed mean: {a} vs {b}"));
+            }
+        }
+        // convexity envelope under random weights
+        let w: Vec<f64> = (0..n).map(|_| rng.f64() + 1e-3).collect();
+        let mut wm = vec![0f32; len];
+        weighted_mean_into(&mut wm, &refs, &w);
+        for j in 0..len {
+            let lo = sources.iter().map(|s| s[j]).fold(f32::INFINITY, f32::min);
+            let hi = sources.iter().map(|s| s[j]).fold(f32::NEG_INFINITY, f32::max);
+            if wm[j] < lo - 1e-4 || wm[j] > hi + 1e-4 {
+                return Err(format!("component {j} out of envelope"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sequential_schedule_covers_all_clusters() {
+    forall("schedule-coverage", 20, |g| {
+        let m = g.int(1, 16);
+        let mut s = ClusterSchedule::sequential(m);
+        let mut seen = vec![false; m];
+        for t in 0..m {
+            seen[s.next(t)] = true;
+        }
+        if !seen.iter().all(|&b| b) {
+            return Err(format!("{m} clusters not covered in {m} rounds"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_schedule_frequency_converges() {
+    forall("schedule-frequency", 10, |g| {
+        let m = g.int(2, 10);
+        let mut s = ClusterSchedule::random(m, g.int(0, 1 << 30) as u64);
+        let rounds = 3000;
+        let mut counts = vec![0usize; m];
+        for t in 0..rounds {
+            counts[s.next(t)] += 1;
+        }
+        let expect = rounds as f64 / m as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            if (c as f64) < expect * 0.6 || (c as f64) > expect * 1.4 {
+                return Err(format!("cluster {i} frequency {c} vs expected {expect}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_netsim_delivers_everything_monotonically() {
+    forall("netsim-delivery", 15, |g| {
+        let kind = *g.choose(&TopologyKind::ALL);
+        let topo = build(&TopologyParams::new(kind, g.int(2, 6), 2))
+            .map_err(|e| e.to_string())?;
+        let rt = RouteTable::latency(&topo);
+        let mut sim = NetSim::new(&topo);
+        let nodes = topo.clients();
+        let mut rng = g.rng();
+        let n = g.int(1, 60);
+        for i in 0..n {
+            let a = nodes[rng.below(nodes.len())];
+            let b = nodes[rng.below(nodes.len())];
+            sim.submit(&rt, a, b, rng.below(1_000_000) as u64, i as f64 * 0.01)
+                .map_err(|e| e.to_string())?;
+        }
+        let out = sim.run();
+        if out.len() != n {
+            return Err(format!("{} of {n} transfers delivered", out.len()));
+        }
+        for o in &out {
+            if o.delivered_s < o.submitted_s {
+                return Err("delivered before submitted".into());
+            }
+            if o.queue_wait_s < 0.0 {
+                return Err("negative queue wait".into());
+            }
+        }
+        // completion order sorted
+        for w in out.windows(2) {
+            if w[0].delivered_s > w[1].delivered_s {
+                return Err("completion order not sorted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fedavg_sampling_without_replacement() {
+    forall("fedavg-sampling", 20, |g| {
+        let clusters = g.int(1, 5);
+        let clients = clusters * g.int(2, 8);
+        let fed = build_federation(
+            DatasetKind::SynthFashion,
+            &Distribution::Iid,
+            clients,
+            clusters,
+            20,
+            10,
+            g.int(0, 999) as u64,
+        )
+        .map_err(|e| e.to_string())?;
+        let cfg = ExperimentConfig {
+            algorithm: Algorithm::FedAvg,
+            clients,
+            clusters,
+            samples_per_client: 20,
+            batch_size: 8,
+            seed: g.int(0, 999) as u64,
+            ..ExperimentConfig::default()
+        };
+        let topo = build(&TopologyParams::new(TopologyKind::Simple, clusters, clients / clusters))
+            .map_err(|e| e.to_string())?;
+        let mut s = Strategy::for_config(&cfg, &fed, &topo);
+        for t in 0..10 {
+            let p = s.plan_round(t, &fed);
+            let mut ids = p.participants();
+            let n = ids.len();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != n {
+                return Err(format!("round {t}: duplicate participants"));
+            }
+            if ids.iter().any(|&i| i >= clients) {
+                return Err("participant out of range".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    forall("config-json-roundtrip", 30, |g| {
+        let clusters = g.int(1, 10);
+        let cfg = ExperimentConfig {
+            name: format!("p{}", g.int(0, 100)),
+            algorithm: *g.choose(&Algorithm::ALL),
+            dataset: *g.choose(&[DatasetKind::SynthFashion, DatasetKind::SynthCifar]),
+            distribution: random_distribution(g),
+            topology: *g.choose(&TopologyKind::ALL),
+            clients: clusters * g.int(1, 10),
+            clusters,
+            local_steps: g.int(1, 10),
+            rounds: g.int(1, 100),
+            batch_size: g.int(1, 64),
+            lr: g.f64(1e-5, 0.5),
+            optimizer: if g.bool() { "sgd".into() } else { "adam".into() },
+            model: "fashion_mlp".into(),
+            samples_per_client: 64 + g.int(0, 100),
+            test_samples: g.int(10, 500),
+            eval_every: g.int(0, 10),
+            seed: g.int(0, 1 << 30) as u64,
+            parallel_clients: g.bool(),
+            dropout: g.int(0, 99) as f64 / 100.0,
+        };
+        let cfg = cfg.validate().map_err(|e| e.to_string())?;
+        let text = cfg.to_json().pretty();
+        let back = ExperimentConfig::from_json(
+            &Json::parse(&text).map_err(|e| e.to_string())?,
+        )
+        .map_err(|e| e.to_string())?;
+        if back.algorithm != cfg.algorithm
+            || back.distribution != cfg.distribution
+            || back.clients != cfg.clients
+            || back.lr != cfg.lr
+            || back.seed != cfg.seed
+        {
+            return Err("round-trip mismatch".into());
+        }
+        Ok(())
+    });
+}
