@@ -32,7 +32,7 @@ fn main() -> edgeflow::Result<()> {
         Algorithm::EdgeFlowRand,
         Algorithm::EdgeFlowSeq,
     ];
-    let (table, results) = fig4(param_count, 10, 10, 200, &algs, 0)?;
+    let (table, results) = fig4(param_count, 10, 10, 200, &algs, 0, 0)?;
     println!("{}", table.render());
 
     // Per-participant fairness view (HierFL trains all 100 clients/round).

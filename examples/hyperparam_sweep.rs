@@ -24,6 +24,8 @@ fn main() -> edgeflow::Result<()> {
         eval_every: 10,
         seed: 0,
         lr: 1e-3,
+        // Sweep points are independent: fan them out across all cores.
+        workers: 0,
     };
 
     // ---- Fig 3(a): cluster size ---------------------------------------

@@ -36,11 +36,10 @@ fn main() {
     // Default 24 rounds: the CIFAR MLP runs ~300 ms/local-update on this
     // one-core testbed and Fig 3 sweeps up to N_m=50 updates per round;
     // raise EDGEFLOW_F3_ROUNDS for paper-scale curves.
-    let rounds = std::env::var("EDGEFLOW_F3_ROUNDS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(if fast { 12 } else { 24 });
+    let rounds =
+        edgeflow::bench::env_usize("EDGEFLOW_F3_ROUNDS", if fast { 12 } else { 24 });
     let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let workers = edgeflow::bench::env_usize("EDGEFLOW_WORKERS", 1);
     let opts = SuiteOptions {
         rounds,
         samples_per_client: 120,
@@ -48,6 +47,7 @@ fn main() {
         eval_every: (rounds / 12).max(1),
         seed: 0,
         lr: 1e-3,
+        workers,
     };
     let mut timer = Timer::new();
 

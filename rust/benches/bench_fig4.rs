@@ -29,7 +29,9 @@ fn main() {
         Algorithm::EdgeFlowHop,
     ];
     let mut timer = Timer::new();
-    let (table, results) = fig4(param_count, 10, 10, rounds, &algs, 0).expect("fig4");
+    let workers = edgeflow::bench::env_usize("EDGEFLOW_WORKERS", 1);
+    let (table, results) =
+        fig4(param_count, 10, 10, rounds, &algs, 0, workers).expect("fig4");
     timer.lap("fig4");
     println!("{}", table.render());
 

@@ -1,0 +1,181 @@
+//! Bench: parallel round execution — `runtime::pool` fan-out speedup and
+//! worker-count invariance.
+//!
+//! `cargo bench --bench bench_parallel`.  The synthetic section always
+//! runs; the round-loop section needs `make artifacts`.  Env knobs:
+//! `EDGEFLOW_BENCH_FAST=1` (smoke), `EDGEFLOW_BP_ROUNDS` (round count of
+//! the artifact section).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use edgeflow::bench::black_box;
+use edgeflow::config::{Algorithm, DatasetKind, Distribution, ExperimentConfig};
+use edgeflow::fl::aggregate::{par_reduce_states_weighted, reduce_states_weighted};
+use edgeflow::fl::runner::Runner;
+use edgeflow::rng::Rng;
+use edgeflow::runtime::executor::Engine;
+use edgeflow::runtime::manifest::{TensorSpec, VariantSpec};
+use edgeflow::runtime::params::{ModelState, StateLayout};
+use edgeflow::runtime::pool::WorkerPool;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// A synthetic layout with one big parameter tensor, so the reduction
+/// benches run without artifacts.
+fn synth_layout(elems: usize) -> std::sync::Arc<StateLayout> {
+    let v = VariantSpec {
+        name: "synth".into(),
+        arch: "mlp".into(),
+        image: (1, 1, 1),
+        classes: 2,
+        train_batch: 1,
+        eval_batch: 1,
+        k_values: vec![1],
+        optimizers: vec!["sgd".into()],
+        params: vec![TensorSpec { name: "w".into(), shape: vec![elems] }],
+        bn_state: vec![],
+        opt_state: std::collections::BTreeMap::from([("sgd".to_string(), vec![])]),
+        init_blob: std::collections::BTreeMap::new(),
+        eval_exe: "e".into(),
+        local_update: std::collections::BTreeMap::new(),
+    };
+    StateLayout::new(&v, "sgd").unwrap()
+}
+
+fn synth_states(n: usize, elems: usize) -> Vec<(f64, ModelState)> {
+    let l = synth_layout(elems);
+    let mut rng = Rng::new(42);
+    (0..n)
+        .map(|_| {
+            let mut s = ModelState::zeros(l.clone());
+            for v in &mut s.data {
+                *v = rng.f32();
+            }
+            (rng.f64() * 100.0 + 1.0, s)
+        })
+        .collect()
+}
+
+/// A CPU-bound stand-in for one client's local update (~a few ms).
+fn synth_local_update(seed: u64, work: usize) -> f32 {
+    let mut rng = Rng::new(seed);
+    let mut acc = 0f32;
+    for _ in 0..work {
+        acc = acc.mul_add(0.999_9, rng.f32());
+    }
+    acc
+}
+
+fn bench_pool_fanout(fast: bool) {
+    let jobs = 32usize;
+    let work = if fast { 200_000 } else { 2_000_000 };
+    let mut base_s = 0.0;
+    println!("pool fan-out: {jobs} synthetic local updates");
+    for workers in WORKER_COUNTS {
+        let pool = WorkerPool::new(workers);
+        let t = Instant::now();
+        let out = pool.run(jobs, |i, _w| synth_local_update(i as u64, work));
+        let dt = t.elapsed().as_secs_f64();
+        black_box(out);
+        if workers == 1 {
+            base_s = dt;
+        }
+        println!(
+            "bench pool/fanout workers={workers:<2}            wall={:.3}s speedup={:.2}x",
+            dt,
+            base_s / dt
+        );
+    }
+}
+
+fn bench_tree_reduction(fast: bool) {
+    let (n, elems) = if fast { (10, 100_000) } else { (20, 1_000_000) };
+    println!("\ntree reduction: {n} states x {elems} f32");
+    let reference = reduce_states_weighted(synth_states(n, elems)).unwrap();
+    let mut base_s = 0.0;
+    for workers in WORKER_COUNTS {
+        let pool = WorkerPool::new(workers);
+        let states = synth_states(n, elems);
+        let t = Instant::now();
+        let (w, s) = par_reduce_states_weighted(states, &pool).unwrap();
+        let dt = t.elapsed().as_secs_f64();
+        assert_eq!(w.to_bits(), reference.0.to_bits());
+        assert_eq!(s.data, reference.1.data, "tree must be worker-invariant");
+        if workers == 1 {
+            base_s = dt;
+        }
+        println!(
+            "bench reduce/tree workers={workers:<2}            wall={:.3}s speedup={:.2}x (bit-identical)",
+            dt,
+            base_s / dt
+        );
+    }
+}
+
+fn bench_round_loop(fast: bool) {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("\nbench_parallel round loop: run `make artifacts` first — skipping");
+        return;
+    }
+    let rounds =
+        edgeflow::bench::env_usize("EDGEFLOW_BP_ROUNDS", if fast { 4 } else { 12 });
+    let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let mk = |workers: usize| ExperimentConfig {
+        name: format!("bp_w{workers}"),
+        algorithm: Algorithm::EdgeFlowSeq,
+        dataset: DatasetKind::SynthFashion,
+        distribution: Distribution::NiidA,
+        model: "fashion_mlp".into(),
+        clients: 20,
+        clusters: 2, // N_m = 10 concurrent local updates per round
+        rounds,
+        samples_per_client: 80,
+        test_samples: 200,
+        eval_every: rounds,
+        seed: 7,
+        workers,
+        ..ExperimentConfig::default()
+    };
+    println!("\nround loop: edgeflow_seq, 10 clients/round, {rounds} rounds");
+    let mut base_s = 0.0;
+    let mut reference: Option<(Vec<u64>, Vec<f32>)> = None;
+    for workers in WORKER_COUNTS {
+        let mut runner =
+            Runner::with_engine(engine.clone(), mk(workers)).expect("runner");
+        let t = Instant::now();
+        let report = runner.run().expect("run");
+        let dt = t.elapsed().as_secs_f64();
+        // Loss bit patterns + final state bytes: the determinism contract.
+        let losses: Vec<u64> = report
+            .metrics
+            .rounds
+            .iter()
+            .map(|r| r.train_loss.to_bits())
+            .collect();
+        let state = runner.state().data.clone();
+        match &reference {
+            None => reference = Some((losses, state)),
+            Some((l0, s0)) => {
+                assert_eq!(&losses, l0, "losses diverged at workers={workers}");
+                assert_eq!(&state, s0, "state diverged at workers={workers}");
+            }
+        }
+        if workers == 1 {
+            base_s = dt;
+        }
+        println!(
+            "bench round_loop workers={workers:<2}             wall={:.3}s speedup={:.2}x (byte-identical report)",
+            dt,
+            base_s / dt
+        );
+    }
+}
+
+fn main() {
+    edgeflow::util::logging::init(false);
+    let fast = std::env::var("EDGEFLOW_BENCH_FAST").as_deref() == Ok("1");
+    bench_pool_fanout(fast);
+    bench_tree_reduction(fast);
+    bench_round_loop(fast);
+}

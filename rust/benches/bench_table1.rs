@@ -20,12 +20,11 @@ fn main() {
     let fast = std::env::var("EDGEFLOW_BENCH_FAST").as_deref() == Ok("1");
     // Default 30 rounds/cell keeps the 15-cell grid ~10 min on one core;
     // raise EDGEFLOW_T1_ROUNDS toward paper scale when you have the time.
-    let rounds = std::env::var("EDGEFLOW_T1_ROUNDS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(if fast { 10 } else { 30 });
+    let rounds =
+        edgeflow::bench::env_usize("EDGEFLOW_T1_ROUNDS", if fast { 10 } else { 30 });
 
     let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let workers = edgeflow::bench::env_usize("EDGEFLOW_WORKERS", 1);
     let opts = SuiteOptions {
         rounds,
         samples_per_client: 120,
@@ -33,6 +32,7 @@ fn main() {
         eval_every: rounds / 4,
         seed: 0,
         lr: 1e-3,
+        workers,
     };
     let mut timer = Timer::new();
     let (table, cells) = table1(&engine, &opts, fast).expect("table1");

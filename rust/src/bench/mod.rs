@@ -119,6 +119,12 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Shared env-var knob parsing for the bench mains (`EDGEFLOW_WORKERS`,
+/// `EDGEFLOW_*_ROUNDS`, ...): integer value of `name`, or `default`.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

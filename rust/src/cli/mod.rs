@@ -216,6 +216,19 @@ pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
     FlagSpec { name, help, boolean: true, default: None }
 }
 
+/// The shared `--workers` flag: thread count for the parallel round loop
+/// and experiment-cell fan-out.  Reports are bit-identical at any value
+/// (fixed-order reduction); the knob only buys wall-clock time.
+/// Deliberately no declared default: absent must stay distinguishable
+/// from explicit so a `workers` value in a config file / preset is not
+/// silently clobbered (see `apply_overrides`).
+pub fn workers_flag() -> FlagSpec {
+    flag(
+        "workers",
+        "worker threads for local updates / experiment cells (0 = all cores, default 1)",
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

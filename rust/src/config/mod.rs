@@ -219,8 +219,11 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     /// Master seed.
     pub seed: u64,
-    /// Run local client updates on worker threads.
-    pub parallel_clients: bool,
+    /// Worker threads for the round loop: client local updates fan out
+    /// across this many threads and the aggregation tree reduces in a
+    /// fixed order, so reports are bit-identical at any setting.
+    /// `0` = one worker per available core; `1` = sequential (default).
+    pub workers: usize,
     /// Failure injection: probability a selected client drops out of a
     /// round before uploading (straggler/radio-loss model).  The round
     /// aggregates over the survivors; a fully-dropped round keeps the
@@ -248,7 +251,7 @@ impl Default for ExperimentConfig {
             test_samples: 1000,
             eval_every: 5,
             seed: 0,
-            parallel_clients: false,
+            workers: 1,
             dropout: 0.0,
         }
     }
@@ -323,7 +326,7 @@ impl ExperimentConfig {
             ("test_samples", self.test_samples.into()),
             ("eval_every", self.eval_every.into()),
             ("seed", self.seed.into()),
-            ("parallel_clients", self.parallel_clients.into()),
+            ("workers", self.workers.into()),
             ("dropout", self.dropout.into()),
         ])
     }
@@ -372,10 +375,15 @@ impl ExperimentConfig {
             test_samples: get_usize("test_samples", d.test_samples)?,
             eval_every: get_usize("eval_every", d.eval_every)?,
             seed: v.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
-            parallel_clients: v
-                .get("parallel_clients")
-                .and_then(Json::as_bool)
-                .unwrap_or(d.parallel_clients),
+            // Legacy configs carried a boolean `parallel_clients`; map
+            // `true` to "all cores" when no explicit count is given.
+            workers: match v.get("workers") {
+                Some(_) => get_usize("workers", d.workers)?,
+                None => match v.get("parallel_clients").and_then(Json::as_bool) {
+                    Some(true) => 0,
+                    _ => d.workers,
+                },
+            },
             dropout: v.get("dropout").and_then(Json::as_f64).unwrap_or(d.dropout),
         };
         cfg.validate()
@@ -521,6 +529,18 @@ mod tests {
             preset(p).unwrap_or_else(|e| panic!("preset {p}: {e}"));
         }
         assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn workers_roundtrip_and_legacy_alias() {
+        let cfg = ExperimentConfig { workers: 4, ..ExperimentConfig::default() };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.workers, 4);
+        // Legacy boolean maps true -> all cores (0), false/absent -> 1.
+        let legacy = Json::parse(r#"{"parallel_clients": true}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&legacy).unwrap().workers, 0);
+        let legacy = Json::parse(r#"{"parallel_clients": false}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&legacy).unwrap().workers, 1);
     }
 
     #[test]

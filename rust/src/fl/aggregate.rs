@@ -5,9 +5,18 @@
 //! bound: a single pass over each source, accumulating into the
 //! destination, with a fused final scale.  (See EXPERIMENTS.md §Perf for
 //! the measured GB/s and the iteration log.)
+//!
+//! The round loop reduces through [`reduce_states_weighted`] /
+//! [`par_reduce_states_weighted`] — a fixed-order pairwise tree whose
+//! merge structure depends only on the operand count and order, so a run
+//! is bit-identical at any `--workers` setting.  The flat kernels below
+//! remain the single-thread bandwidth reference the tree is tested
+//! against.
 
 use crate::runtime::params::ModelState;
+use crate::runtime::pool::WorkerPool;
 use crate::util::error::{Error, Result};
+use std::sync::Mutex;
 
 /// Chunk size for cache-blocked accumulation: 8192 f32 = 32 KiB, sized so
 /// the destination chunk stays L1-resident while every source streams
@@ -64,6 +73,116 @@ pub fn weighted_mean_into(dst: &mut [f32], sources: &[&[f32]], weights: &[f64]) 
         }
         off = end;
     }
+}
+
+/// dst = (w_dst * dst + w_src * src) / (w_dst + w_src) — one pairwise
+/// merge step of the reduction tree.  Weight math runs in f64; the blend
+/// itself is a single fused pass in f32.
+pub fn merge_weighted_into(dst: &mut [f32], w_dst: f64, src: &[f32], w_src: f64) {
+    assert_eq!(dst.len(), src.len(), "merge length mismatch");
+    let total = w_dst + w_src;
+    assert!(total > 0.0, "all-zero aggregation weights");
+    let a = (w_dst / total) as f32;
+    let b = (w_src / total) as f32;
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = a * *d + b * v;
+    }
+}
+
+/// Validate a reduction input and drop zero-weight items (their
+/// contribution is exactly zero, and removing them keeps every pairwise
+/// merge's weight sum positive).  Typed errors — not panics — for empty
+/// input, mismatched layouts, and degenerate weights, matching the rest
+/// of this module's error discipline.
+fn check_reduce_input(items: Vec<(f64, ModelState)>) -> Result<Vec<(f64, ModelState)>> {
+    if items.is_empty() {
+        return Err(Error::Data("aggregate of zero states".into()));
+    }
+    let total = items[0].1.layout.total;
+    for (w, s) in &items {
+        if s.layout.total != total {
+            return Err(Error::Data("aggregate over mismatched layouts".into()));
+        }
+        if !w.is_finite() || *w < 0.0 {
+            return Err(Error::Data(format!("bad aggregation weight {w}")));
+        }
+    }
+    let kept: Vec<(f64, ModelState)> =
+        items.into_iter().filter(|(w, _)| *w > 0.0).collect();
+    if kept.is_empty() {
+        return Err(Error::Data("all-zero aggregation weights".into()));
+    }
+    Ok(kept)
+}
+
+/// Weighted average of `(weight, state)` pairs by a **fixed-order pairwise
+/// tree**: level by level, adjacent pairs `(2i, 2i+1)` merge (an odd tail
+/// carries over), so the merge tree — and therefore every f32 rounding
+/// decision — is a function of the item count and order alone.  Returns
+/// the merged state together with the summed weight, so partial
+/// aggregates compose: group-level results feed straight into the
+/// cross-group reduction with their total sample counts as weights
+/// (paper Eq. 3 applied twice).
+pub fn reduce_states_weighted(items: Vec<(f64, ModelState)>) -> Result<(f64, ModelState)> {
+    Ok(reduce_prepared(check_reduce_input(items)?))
+}
+
+/// The sequential tree over an already-validated input.
+fn reduce_prepared(mut level: Vec<(f64, ModelState)>) -> (f64, ModelState) {
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some((wa, mut a)) = it.next() {
+            match it.next() {
+                Some((wb, b)) => {
+                    merge_weighted_into(&mut a.data, wa, &b.data, wb);
+                    next.push((wa + wb, a));
+                }
+                None => next.push((wa, a)),
+            }
+        }
+        level = next;
+    }
+    level.pop().expect("non-empty reduction")
+}
+
+/// [`reduce_states_weighted`] with the merges of each tree level fanned
+/// out across `pool`.  The tree structure is identical to the sequential
+/// version and each merge touches the same operands in the same order,
+/// so the result is **bit-identical at any worker count** — workers only
+/// decide *who* executes a merge, never *which* merges happen.
+pub fn par_reduce_states_weighted(
+    items: Vec<(f64, ModelState)>,
+    pool: &WorkerPool,
+) -> Result<(f64, ModelState)> {
+    let items = check_reduce_input(items)?;
+    if pool.workers() <= 1 || items.len() <= 2 {
+        return Ok(reduce_prepared(items));
+    }
+    let mut level = items;
+    while level.len() > 1 {
+        // Hand each adjacent pair to the pool as an owned job slot; the
+        // odd tail (if any) carries to the next level unmerged.
+        let mut pairs: Vec<Mutex<Option<((f64, ModelState), (f64, ModelState))>>> =
+            Vec::with_capacity(level.len() / 2);
+        let mut tail = None;
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => pairs.push(Mutex::new(Some((a, b)))),
+                None => tail = Some(a),
+            }
+        }
+        let mut next = pool.run(pairs.len(), |i, _w| {
+            let ((wa, mut a), (wb, b)) =
+                pairs[i].lock().unwrap().take().expect("pair taken once");
+            merge_weighted_into(&mut a.data, wa, &b.data, wb);
+            (wa + wb, a)
+        });
+        next.extend(tail);
+        level = next;
+    }
+    Ok(level.pop().expect("non-empty reduction"))
 }
 
 /// Average full model states (params ++ BN stats ++ optimizer state).
@@ -185,5 +304,111 @@ mod tests {
     fn zero_weights_panic() {
         let mut dst = vec![0f32; 1];
         weighted_mean_into(&mut dst, &[&[1.0]], &[0.0]);
+    }
+
+    fn random_states(n: usize, seed: u64) -> Vec<(f64, ModelState)> {
+        let l = tiny_layout();
+        let mut rng = crate::rng::Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut s = ModelState::zeros(l.clone());
+                for v in &mut s.data {
+                    *v = rng.f32() * 4.0 - 2.0;
+                }
+                (rng.f64() * 100.0 + 1.0, s)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn merge_weighted_is_convex_blend() {
+        let mut dst = vec![1.0f32, 0.0];
+        merge_weighted_into(&mut dst, 3.0, &[0.0, 1.0], 1.0);
+        assert!((dst[0] - 0.75).abs() < 1e-6);
+        assert!((dst[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tree_reduce_single_item_is_identity() {
+        let items = random_states(1, 11);
+        let (w0, expect) = (items[0].0, items[0].1.data.clone());
+        let (w, s) = reduce_states_weighted(items).unwrap();
+        assert_eq!(w, w0);
+        assert_eq!(s.data, expect);
+    }
+
+    #[test]
+    fn tree_reduce_matches_flat_weighted_mean() {
+        for n in [2usize, 3, 5, 8, 13] {
+            let items = random_states(n, n as u64);
+            let weights: Vec<f64> = items.iter().map(|(w, _)| *w).collect();
+            let states: Vec<ModelState> =
+                items.iter().map(|(_, s)| s.clone()).collect();
+            let flat = aggregate_states(&states, Some(&weights)).unwrap();
+            let (w, tree) = reduce_states_weighted(items).unwrap();
+            assert!((w - weights.iter().sum::<f64>()).abs() < 1e-9);
+            for (a, b) in tree.data.iter().zip(&flat.data) {
+                // Different summation orders: equal up to f32 rounding.
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_honors_unbalanced_weights() {
+        // Two clients, one with 3x the data: the aggregate must sit at
+        // the 3:1 point, not the midpoint (the Eq. 3 bugfix).
+        let l = tiny_layout();
+        let mut a = ModelState::zeros(l.clone());
+        let mut b = ModelState::zeros(l);
+        a.data.copy_from_slice(&[4.0, 4.0, 4.0, 4.0]);
+        b.data.copy_from_slice(&[0.0, 0.0, 0.0, 0.0]);
+        let (_, weighted) =
+            reduce_states_weighted(vec![(300.0, a.clone()), (100.0, b.clone())]).unwrap();
+        assert_eq!(weighted.data, vec![3.0, 3.0, 3.0, 3.0]);
+        let (_, uniform) = reduce_states_weighted(vec![(1.0, a), (1.0, b)]).unwrap();
+        assert_eq!(uniform.data, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn par_reduce_bit_identical_at_any_worker_count() {
+        for n in [2usize, 3, 7, 16, 33] {
+            let seq =
+                reduce_states_weighted(random_states(n, 77 + n as u64)).unwrap();
+            for workers in [1usize, 2, 4, 8] {
+                let pool = WorkerPool::new(workers);
+                let par =
+                    par_reduce_states_weighted(random_states(n, 77 + n as u64), &pool)
+                        .unwrap();
+                assert_eq!(par.0.to_bits(), seq.0.to_bits(), "n={n} w={workers}");
+                assert_eq!(par.1.data, seq.1.data, "n={n} w={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_rejects_empty_and_mismatched() {
+        assert!(reduce_states_weighted(vec![]).is_err());
+        assert!(par_reduce_states_weighted(vec![], &WorkerPool::new(4)).is_err());
+    }
+
+    #[test]
+    fn tree_reduce_zero_weights_are_typed_errors_or_dropped() {
+        let l = tiny_layout();
+        let mut a = ModelState::zeros(l.clone());
+        let b = ModelState::zeros(l.clone());
+        a.data.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        // All-zero weights: a typed error, not a panic.
+        assert!(
+            reduce_states_weighted(vec![(0.0, a.clone()), (0.0, b.clone())]).is_err()
+        );
+        // A zero-weight member contributes nothing.
+        let (w, m) = reduce_states_weighted(vec![(0.0, b), (2.0, a.clone())]).unwrap();
+        assert_eq!(w, 2.0);
+        assert_eq!(m.data, a.data);
+        // Negative / non-finite weights are rejected.
+        let c = ModelState::zeros(l);
+        assert!(reduce_states_weighted(vec![(-1.0, c.clone())]).is_err());
+        assert!(reduce_states_weighted(vec![(f64::NAN, c)]).is_err());
     }
 }

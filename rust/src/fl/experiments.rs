@@ -5,6 +5,13 @@
 //! CPU-scale note (DESIGN.md §3): rounds/sample counts default far below
 //! the paper's GPU budget; pass larger values to approach it.  All
 //! *relative* orderings the paper reports are regenerated as-is.
+//!
+//! Independent cells (Table-I dataset×distribution×algorithm runs, Fig-3
+//! sweep points, Fig-4 topologies) fan out across a [`WorkerPool`] when
+//! [`SuiteOptions::workers`] > 1, sharing one `Engine` (and therefore
+//! one compiled-executable cache).  Cell results are collected in cell
+//! order, so suite output is identical at any worker count; per-cell
+//! runners stay sequential to avoid oversubscribing the host.
 
 use std::sync::Arc;
 
@@ -17,6 +24,7 @@ use crate::fl::runner::{RunReport, Runner};
 use crate::fl::strategy::Strategy;
 use crate::netsim::NetSim;
 use crate::runtime::executor::Engine;
+use crate::runtime::pool::WorkerPool;
 use crate::topology::accounting::CommAccountant;
 use crate::topology::builder::{build, TopologyParams};
 use crate::topology::route::RouteTable;
@@ -32,6 +40,8 @@ pub struct SuiteOptions {
     pub eval_every: usize,
     pub seed: u64,
     pub lr: f64,
+    /// Concurrent experiment cells (0 = one per core, 1 = sequential).
+    pub workers: usize,
 }
 
 impl Default for SuiteOptions {
@@ -43,6 +53,7 @@ impl Default for SuiteOptions {
             eval_every: 10,
             seed: 0,
             lr: 1e-3,
+            workers: 1,
         }
     }
 }
@@ -105,22 +116,29 @@ pub fn table1(engine: &Arc<Engine>, o: &SuiteOptions, fast: bool) -> Result<(Tab
         ]
     };
     let algs = [Algorithm::FedAvg, Algorithm::EdgeFlowRand, Algorithm::EdgeFlowSeq];
-    let mut results = Vec::new();
-    for (ds, dist) in &cells {
-        for alg in algs {
-            let cfg = base_config(*ds, dist.clone(), alg, o);
-            log::info!("table1 cell: {}", cfg.name);
-            let report = Runner::with_engine(engine.clone(), cfg)?.run()?;
-            results.push(Cell {
-                dataset: *ds,
-                distribution: dist.clone(),
-                algorithm: alg,
-                accuracy: report.final_accuracy,
-                byte_hops: report.total_byte_hops,
-                report,
-            });
-        }
-    }
+    let specs: Vec<(DatasetKind, Distribution, Algorithm)> = cells
+        .iter()
+        .flat_map(|(ds, dist)| algs.iter().map(|&alg| (*ds, dist.clone(), alg)))
+        .collect();
+    let pool = WorkerPool::new(o.workers);
+    let reports = pool.try_run(specs.len(), |i, _w| {
+        let (ds, dist, alg) = &specs[i];
+        let cfg = base_config(*ds, dist.clone(), *alg, o);
+        log::info!("table1 cell: {}", cfg.name);
+        Runner::with_engine(engine.clone(), cfg)?.run()
+    })?;
+    let results: Vec<Cell> = specs
+        .into_iter()
+        .zip(reports)
+        .map(|((dataset, distribution, algorithm), report)| Cell {
+            dataset,
+            distribution,
+            algorithm,
+            accuracy: report.final_accuracy,
+            byte_hops: report.total_byte_hops,
+            report,
+        })
+        .collect();
     // Render in the paper's layout: methods x (dataset, distribution).
     let mut header = vec!["Method".to_string()];
     for (ds, dist) in &cells {
@@ -156,9 +174,12 @@ pub fn fig3a(
     o: &SuiteOptions,
     cluster_sizes: &[usize],
 ) -> Result<Vec<(usize, RunReport)>> {
-    let mut out = Vec::new();
     for &n_m in cluster_sizes {
         assert!(100 % n_m == 0, "N_m must divide 100");
+    }
+    let pool = WorkerPool::new(o.workers);
+    let reports = pool.try_run(cluster_sizes.len(), |i, _w| {
+        let n_m = cluster_sizes[i];
         let mut cfg = base_config(
             DatasetKind::SynthCifar,
             Distribution::NiidB,
@@ -168,9 +189,9 @@ pub fn fig3a(
         cfg.clusters = 100 / n_m;
         cfg.name = format!("fig3a_nm{n_m}");
         log::info!("fig3a: N_m = {n_m}");
-        out.push((n_m, Runner::with_engine(engine.clone(), cfg)?.run()?));
-    }
-    Ok(out)
+        Runner::with_engine(engine.clone(), cfg)?.run()
+    })?;
+    Ok(cluster_sizes.iter().copied().zip(reports).collect())
 }
 
 /// Fig 3(b): EdgeFLowSeq under NIID B with varying local epochs K.
@@ -179,8 +200,9 @@ pub fn fig3b(
     o: &SuiteOptions,
     ks: &[usize],
 ) -> Result<Vec<(usize, RunReport)>> {
-    let mut out = Vec::new();
-    for &k in ks {
+    let pool = WorkerPool::new(o.workers);
+    let reports = pool.try_run(ks.len(), |i, _w| {
+        let k = ks[i];
         let mut cfg = base_config(
             DatasetKind::SynthCifar,
             Distribution::NiidB,
@@ -190,9 +212,9 @@ pub fn fig3b(
         cfg.local_steps = k;
         cfg.name = format!("fig3b_k{k}");
         log::info!("fig3b: K = {k}");
-        out.push((k, Runner::with_engine(engine.clone(), cfg)?.run()?));
-    }
-    Ok(out)
+        Runner::with_engine(engine.clone(), cfg)?.run()
+    })?;
+    Ok(ks.iter().copied().zip(reports).collect())
 }
 
 /// One Fig-4 bar: per-round communication load of an algorithm on a
@@ -220,7 +242,9 @@ impl CommResult {
 }
 
 /// Fig 4: communication load across the four network structures.
-/// Pure coordination — no training, no engine.
+/// Pure coordination — no training, no engine.  The four topology cells
+/// are independent and fan out across `workers` threads (results are
+/// assembled in `TopologyKind::ALL` order either way).
 pub fn fig4(
     param_count: usize,
     clusters: usize,
@@ -228,6 +252,7 @@ pub fn fig4(
     rounds: usize,
     algorithms: &[Algorithm],
     seed: u64,
+    workers: usize,
 ) -> Result<(Table, Vec<CommResult>)> {
     let model_bytes = (param_count * 4) as u64;
     let clients = clusters * clients_per_cluster;
@@ -243,8 +268,9 @@ pub fn fig4(
         seed,
     )?;
 
-    let mut results = Vec::new();
-    for kind in TopologyKind::ALL {
+    let pool = WorkerPool::new(workers);
+    let per_topo = pool.try_run(TopologyKind::ALL.len(), |ti, _w| {
+        let kind = TopologyKind::ALL[ti];
         let topo = build(&TopologyParams::new(kind, clusters, clients_per_cluster))?;
         // Hop-count routes drive both accounting and the DES (the paper's
         // metric is hop-weighted; latency-optimal routing differs only on
@@ -299,17 +325,19 @@ pub fn fig4(
             .find(|(a, ..)| *a == Algorithm::FedAvg)
             .map(|&(_, l, _, _)| l)
             .unwrap_or(f64::NAN);
-        for (alg, load, lat, parts) in per_alg {
-            results.push(CommResult {
+        Ok(per_alg
+            .into_iter()
+            .map(|(alg, load, lat, parts)| CommResult {
                 topology: kind,
                 algorithm: alg,
                 byte_hops_per_round: load,
                 vs_fedavg: load / fedavg_load,
                 round_latency_s: lat,
                 participants_per_round: parts,
-            });
-        }
-    }
+            })
+            .collect::<Vec<CommResult>>())
+    })?;
+    let results: Vec<CommResult> = per_topo.into_iter().flatten().collect();
 
     let mut header = vec!["Topology".to_string()];
     for &alg in algorithms {
@@ -342,7 +370,7 @@ mod tests {
     #[test]
     fn fig4_edgeflow_beats_fedavg_on_deep_topologies() {
         let algs = [Algorithm::FedAvg, Algorithm::HierFl, Algorithm::EdgeFlowSeq];
-        let (_, results) = fig4(100_000, 10, 10, 40, &algs, 0).unwrap();
+        let (_, results) = fig4(100_000, 10, 10, 40, &algs, 0, 1).unwrap();
         for kind in TopologyKind::ALL {
             let ratio = results
                 .iter()
@@ -372,7 +400,7 @@ mod tests {
         // §V claims 50-80% reduction; verify the deep/hybrid structures
         // land at >= 50% savings (ratio <= 0.5).
         let algs = [Algorithm::FedAvg, Algorithm::EdgeFlowSeq];
-        let (_, results) = fig4(100_000, 10, 10, 40, &algs, 0).unwrap();
+        let (_, results) = fig4(100_000, 10, 10, 40, &algs, 0, 1).unwrap();
         for kind in [TopologyKind::DepthLinear, TopologyKind::Hybrid, TopologyKind::BreadthParallel] {
             let r = results
                 .iter()
@@ -392,7 +420,7 @@ mod tests {
         // per participating client it must be cheaper wherever BS->cloud
         // is more than one hop (edge aggregation amortizes the backbone).
         let algs = [Algorithm::FedAvg, Algorithm::HierFl];
-        let (_, results) = fig4(100_000, 10, 10, 20, &algs, 0).unwrap();
+        let (_, results) = fig4(100_000, 10, 10, 20, &algs, 0, 1).unwrap();
         for kind in [TopologyKind::DepthLinear, TopologyKind::BreadthParallel, TopologyKind::Hybrid] {
             let get = |alg| {
                 results
@@ -411,7 +439,7 @@ mod tests {
     #[test]
     fn fig4_latencies_positive() {
         let algs = [Algorithm::FedAvg, Algorithm::EdgeFlowSeq];
-        let (_, results) = fig4(50_000, 4, 4, 10, &algs, 1).unwrap();
+        let (_, results) = fig4(50_000, 4, 4, 10, &algs, 1, 1).unwrap();
         assert!(results.iter().all(|r| r.round_latency_s > 0.0));
     }
 }

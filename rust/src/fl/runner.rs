@@ -1,17 +1,26 @@
 //! The experiment driver: wires data, topology, runtime and strategy into
 //! the round loop of Algorithm 1.
+//!
+//! Local updates within a round fan out across a [`WorkerPool`]: each
+//! worker owns one `LocalUpdateExe` handle and pulls `(group, client)`
+//! jobs off a shared cursor.  Results are collected **in plan order** and
+//! reduced with the fixed-order tree in [`crate::fl::aggregate`], so a
+//! run's reports are bit-identical at any `workers` setting — the knob
+//! changes wall-clock time, never numbers.
 
 use std::sync::Arc;
 
 use crate::config::ExperimentConfig;
 use crate::data::loader::ClientLoader;
 use crate::data::partition::{build_federation, Federation};
-use crate::fl::aggregate::aggregate_states;
+use crate::fl::aggregate::par_reduce_states_weighted;
 use crate::fl::comm::{record_round, CommOptions};
-use crate::fl::strategy::{AggregationSite, Strategy};
+use crate::fl::strategy::Strategy;
 use crate::metrics::{ExperimentMetrics, RoundRecord};
+use crate::netsim::NetSim;
 use crate::runtime::executor::{Engine, EvalExe, LocalUpdateExe};
 use crate::runtime::params::ModelState;
+use crate::runtime::pool::WorkerPool;
 use crate::topology::accounting::CommAccountant;
 use crate::topology::builder::{build, TopologyParams};
 use crate::topology::graph::Topology;
@@ -43,8 +52,12 @@ pub struct Runner {
     strategy: Strategy,
     loader: ClientLoader,
     state: ModelState,
-    lu: LocalUpdateExe,
+    /// One local-update executable per pool worker (all share the
+    /// engine's compiled-executable cache); index 0 is the sequential
+    /// path.
+    lus: Vec<LocalUpdateExe>,
     ev: EvalExe,
+    pool: WorkerPool,
     pub accountant: CommAccountant,
     /// Failure-injection stream (client dropout).
     dropout_rng: crate::rng::Rng,
@@ -103,7 +116,10 @@ impl Runner {
         let strategy = Strategy::for_config(&cfg, &fed, &topo);
         let loader = ClientLoader::new(cfg.seed ^ LOADER_SEED_MIX, cfg.batch_size);
         let state = engine.init_state(&cfg.model, &cfg.optimizer)?;
-        let lu = engine.local_update(&cfg.model, &cfg.optimizer, cfg.local_steps)?;
+        let pool = WorkerPool::new(cfg.workers);
+        let lus = (0..pool.workers())
+            .map(|_| engine.local_update(&cfg.model, &cfg.optimizer, cfg.local_steps))
+            .collect::<Result<Vec<_>>>()?;
         let ev = engine.eval(&cfg.model, &cfg.optimizer)?;
         let dropout_rng = crate::rng::Rng::new(cfg.seed ^ 0xD509_0A7);
         Ok(Runner {
@@ -114,8 +130,9 @@ impl Runner {
             strategy,
             loader,
             state,
-            lu,
+            lus,
             ev,
+            pool,
             accountant: CommAccountant::new(),
             dropout_rng,
         })
@@ -135,6 +152,27 @@ impl Runner {
     pub fn evaluate(&self) -> Result<(f64, f64)> {
         let (loss, acc) = self.ev.run_dataset(&self.state, &self.fed.test)?;
         Ok((loss, acc))
+    }
+
+    /// Eq. 3 aggregation weight of one client: its actual train-set size
+    /// `|D_n|` (clamped to 1 so a degenerate empty client cannot zero a
+    /// whole round's weights).
+    pub fn client_weight(&self, id: usize) -> f64 {
+        self.fed.clients[id].samples.len().max(1) as f64
+    }
+
+    /// Run one client's local update against the current global state —
+    /// exactly what a pool worker runs for this `(client, round)` job.
+    /// Public for diagnostics and for tests that verify aggregation
+    /// semantics against manually-composed expectations.
+    pub fn local_update_for(&self, id: usize, round: usize) -> Result<(ModelState, f32)> {
+        let batch = self.loader.local_batches(
+            &self.fed.train,
+            &self.fed.clients[id],
+            round,
+            self.cfg.local_steps,
+        );
+        self.lus[0].run(&self.state, &batch, self.cfg.lr as f32)
     }
 
     /// Run the full experiment.
@@ -175,51 +213,67 @@ impl Runner {
                 }
             }
 
-            // --- local updates -------------------------------------------
-            let mut group_states: Vec<(usize, ModelState)> = Vec::new();
+            // --- local updates (fanned out across the pool) --------------
+            // Groups run one after another; members *within* a group fan
+            // out across the pool and come back in member order, so the
+            // loss vector and the reduction below see an identical
+            // operand sequence at any worker count.  Per-group fan-out
+            // also bounds peak memory at one group's states (HierFL's
+            // full-participation rounds would otherwise hold every
+            // client's state at once), and each group's partial is
+            // reduced — by sample count, paper Eq. 3 — before the next
+            // group trains.
             let mut losses = Vec::new();
+            let mut group_states: Vec<(f64, ModelState)> =
+                Vec::with_capacity(plan.groups.len());
             for (_m, members) in &plan.groups {
-                let mut states = Vec::with_capacity(members.len());
-                for &id in members {
-                    let batch = self.loader.local_batches(
-                        &self.fed.train,
-                        &self.fed.clients[id],
-                        t,
-                        self.cfg.local_steps,
-                    );
-                    let (s, loss) =
-                        self.lu.run(&self.state, &batch, self.cfg.lr as f32)?;
+                let results: Vec<Result<(ModelState, f32)>> = {
+                    let state = &self.state;
+                    let loader = &self.loader;
+                    let fed = &self.fed;
+                    let lus = &self.lus;
+                    let k = self.cfg.local_steps;
+                    let lr = self.cfg.lr as f32;
+                    self.pool.run(members.len(), move |i, w| {
+                        let id = members[i];
+                        let batch =
+                            loader.local_batches(&fed.train, &fed.clients[id], t, k);
+                        lus[w].run(state, &batch, lr)
+                    })
+                };
+                let mut weighted = Vec::with_capacity(members.len());
+                for (&id, r) in members.iter().zip(results) {
+                    let (s, loss) = r?;
                     if !loss.is_finite() {
                         return Err(Error::Data(format!(
                             "non-finite loss at round {t} client {id} — \
                              lower the learning rate"
                         )));
                     }
-                    states.push(s);
                     losses.push(loss as f64);
+                    weighted.push((self.client_weight(id), s));
                 }
-                let sizes: Vec<f64> =
-                    members.iter().map(|_| 1.0).collect();
-                group_states
-                    .push((members.len(), aggregate_states(&states, Some(&sizes))?));
+                group_states.push(par_reduce_states_weighted(weighted, &self.pool)?);
             }
             let train_s = timer.lap("train").as_secs_f64();
 
             // --- aggregation (Eq. 3) -------------------------------------
-            self.state = match plan.aggregation {
-                AggregationSite::None => group_states.pop().unwrap().1,
-                AggregationSite::EdgeBs(_) => group_states.pop().unwrap().1,
-                AggregationSite::Cloud => {
-                    let weights: Vec<f64> =
-                        group_states.iter().map(|(n, _)| *n as f64).collect();
-                    let states: Vec<ModelState> =
-                        group_states.into_iter().map(|(_, s)| s).collect();
-                    aggregate_states(&states, Some(&weights))?
-                }
-            };
+            // Each group partial carries its summed sample count, so the
+            // cloud (or a multi-group edge plan) also aggregates per
+            // Eq. 3 — not by contributing-group count, and never by
+            // dropping surplus groups.  An empty plan is a typed error.
+            if group_states.is_empty() {
+                return Err(Error::Data(format!(
+                    "round {t}: aggregation plan has no surviving groups"
+                )));
+            }
+            let (_total_w, merged) =
+                par_reduce_states_weighted(group_states, &self.pool)?;
+            self.state = merged;
             let aggregate_s = timer.lap("aggregate").as_secs_f64();
 
-            // --- communication accounting --------------------------------
+            // --- communication accounting + simulated network time -------
+            let mut sim = NetSim::new(&self.topo);
             let byte_hops = record_round(
                 &plan,
                 &self.topo,
@@ -228,8 +282,15 @@ impl Runner {
                 model_bytes,
                 t,
                 CommOptions::default(),
-                None,
+                Some((&mut sim, 0.0)),
             )?;
+            // The round's simulated network time is the makespan of its
+            // transfers (all submitted at t=0 on an idle network).
+            let net_s = sim
+                .run()
+                .iter()
+                .map(|o| o.delivered_s)
+                .fold(0.0f64, f64::max);
             timer.lap("comm");
 
             // --- evaluation -----------------------------------------------
@@ -264,7 +325,7 @@ impl Runner {
                 comm_byte_hops: byte_hops,
                 train_s,
                 aggregate_s,
-                net_s: 0.0,
+                net_s,
             });
         }
 

@@ -8,7 +8,7 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use edgeflow::cli::{flag, flag_def, switch, Args, Cli, CommandSpec};
+use edgeflow::cli::{flag, flag_def, switch, workers_flag, Args, Cli, CommandSpec};
 use edgeflow::config::{
     preset, Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind, PRESETS,
 };
@@ -46,6 +46,7 @@ fn cli() -> Cli {
             flag("test-samples", "held-out test set size"),
             flag("eval-every", "evaluation period in rounds"),
             flag("topology", "simple|breadth_parallel|depth_linear|hybrid"),
+            workers_flag(),
             flag("out", "write metrics CSV here"),
             flag("out-json", "write metrics JSON here"),
             switch("verbose", "debug logging"),
@@ -70,6 +71,7 @@ fn cli() -> Cli {
                     flag_def("rounds", "rounds per cell", "60"),
                     flag_def("samples", "samples per client", "120"),
                     flag("seed", "master seed"),
+                    workers_flag(),
                     switch("fast", "fashion cells only"),
                     flag("out", "write cell results CSV here"),
                     switch("verbose", "debug logging"),
@@ -87,6 +89,7 @@ fn cli() -> Cli {
                     flag_def("ks", "local steps for part b", "1,2,5,10"),
                     flag_def("window", "smoothing window", "5"),
                     flag("seed", "master seed"),
+                    workers_flag(),
                     flag("out", "write curves CSV here"),
                     switch("verbose", "debug logging"),
                 ],
@@ -102,6 +105,7 @@ fn cli() -> Cli {
                     flag_def("clusters", "cluster count M", "10"),
                     flag_def("cluster-size", "clients per cluster N_m", "10"),
                     flag("seed", "master seed"),
+                    workers_flag(),
                     switch("latency", "print DES latency column"),
                     flag_def("codec", "transfer codec: none|int8|top<pct>", "none"),
                     flag("out", "write results CSV here"),
@@ -207,6 +211,9 @@ fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConf
     if let Some(v) = a.get_f64("dropout")? {
         cfg.dropout = v;
     }
+    if let Some(v) = a.get_usize("workers")? {
+        cfg.workers = v;
+    }
     cfg.validate()
 }
 
@@ -220,6 +227,9 @@ fn suite_options(a: &Args) -> Result<SuiteOptions> {
     }
     if let Some(v) = a.get_u64("seed")? {
         o.seed = v;
+    }
+    if let Some(v) = a.get_usize("workers")? {
+        o.workers = v;
     }
     Ok(o)
 }
@@ -375,7 +385,9 @@ fn cmd_comm_sim(a: &Args) -> Result<()> {
         "model {model}: {param_count} parameters ({} per transfer)\n",
         edgeflow::util::human_bytes((param_count * 4) as u64)
     );
-    let (table, results) = fig4(param_count, clusters, csize, rounds, &algs, seed)?;
+    let workers = a.get_usize("workers")?.unwrap_or(1);
+    let (table, results) =
+        fig4(param_count, clusters, csize, rounds, &algs, seed, workers)?;
     println!("{}", table.render());
     if a.has("latency") {
         let mut t = Table::new(&["Topology", "Algorithm", "mean transfer latency (s)"])

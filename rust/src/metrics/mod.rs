@@ -60,6 +60,12 @@ impl ExperimentMetrics {
         self.rounds.iter().map(|r| r.comm_byte_hops).sum()
     }
 
+    /// Total simulated network seconds across rounds (sum of per-round
+    /// transfer makespans).
+    pub fn total_net_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.net_s).sum()
+    }
+
     /// (round, accuracy) curve of evaluated rounds.
     pub fn accuracy_curve(&self) -> Vec<(usize, f64)> {
         self.rounds
@@ -119,6 +125,9 @@ impl ExperimentMetrics {
                         ("test_accuracy", r.test_accuracy.into()),
                         ("test_loss", r.test_loss.into()),
                         ("comm_byte_hops", r.comm_byte_hops.into()),
+                        ("train_s", r.train_s.into()),
+                        ("aggregate_s", r.aggregate_s.into()),
+                        ("net_s", r.net_s.into()),
                     ])
                 })),
             ),
@@ -201,8 +210,13 @@ mod tests {
     #[test]
     fn json_export_parses_back() {
         let mut m = ExperimentMetrics::default();
-        m.push(rec(0, 0.5));
+        let mut r = rec(0, 0.5);
+        r.net_s = 1.25;
+        m.push(r);
         let j = Json::parse(&m.to_json().dump()).unwrap();
         assert_eq!(j.f64_field("final_accuracy").unwrap(), 0.5);
+        let r0 = &j.get("rounds").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.f64_field("net_s").unwrap(), 1.25);
+        assert!((m.total_net_s() - 1.25).abs() < 1e-12);
     }
 }

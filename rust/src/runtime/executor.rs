@@ -6,8 +6,13 @@
 //! them once per (variant, optimizer, K) on the CPU client, and executes
 //! them with model state + gathered minibatches.
 //!
-//! The PJRT CPU client is not thread-safe to share mutably; the engine
-//! serializes executions (this testbed is single-core — see DESIGN.md).
+//! Executions may run concurrently: the PJRT C API contract requires
+//! clients, loaded executables and buffers to be usable from multiple
+//! threads, and `runtime::pool` exploits that by giving every worker its
+//! own `LocalUpdateExe` handle (shared `Arc` executable, private
+//! per-execution buffers).  The compile cache is behind a `Mutex`, so a
+//! cache miss raced by two workers compiles twice and keeps one copy —
+//! wasteful but correct.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -43,6 +48,22 @@ pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// `runtime::pool` shares the engine and per-worker executable handles
+// across threads, so `Engine`/`LocalUpdateExe`/`EvalExe` must be
+// Send + Sync.  We deliberately do NOT write `unsafe impl`s: the auto
+// traits must come from the backend's own types, and this machine check
+// turns "swap in a thread-unsafe xla binding" into a compile error
+// instead of silent UB.  A binding whose client handle is a non-atomic
+// `Rc` (as in some xla-rs vintages) fails here — wrap or fix it (the
+// PJRT C API itself is thread-safe) before raising `workers` above 1.
+fn _assert_backend_thread_safe() {
+    #[allow(clippy::extra_unused_type_parameters)]
+    fn check<T: Send + Sync>() {}
+    check::<Engine>();
+    check::<LocalUpdateExe>();
+    check::<EvalExe>();
 }
 
 // Inputs go host->device through `buffer_from_host_buffer` + `execute_b`

@@ -12,7 +12,9 @@
 pub mod executor;
 pub mod manifest;
 pub mod params;
+pub mod pool;
 
 pub use executor::{Engine, EvalExe, LocalUpdateExe};
 pub use manifest::{Manifest, TensorSpec, VariantSpec};
 pub use params::ModelState;
+pub use pool::WorkerPool;

@@ -1,0 +1,232 @@
+//! Scoped worker pool for parallel round execution.
+//!
+//! Fans a fixed job list out across OS threads with a shared atomic
+//! cursor: worker `w` repeatedly claims the next unclaimed job index and
+//! writes its result into that job's slot, so the caller always receives
+//! results in **job order** regardless of how the scheduler interleaves
+//! workers.  Combined with the fixed-order reduction in
+//! [`crate::fl::aggregate`], every consumer of the pool is bit-identical
+//! at any worker count — parallelism changes wall-clock time, never
+//! results.
+//!
+//! The pool is deliberately unpooled: threads are spawned per [`WorkerPool::run`]
+//! call via `std::thread::scope`.  Spawn cost (~tens of µs) is noise next
+//! to the jobs this crate runs (XLA local updates are ~hundreds of ms),
+//! and scoped threads let jobs borrow the caller's data (the shared
+//! global model, the federation, per-worker executables) without `Arc`
+//! plumbing or `'static` bounds.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::error::Result;
+
+/// A fixed-width fan-out pool.  `workers == 1` degenerates to an inline
+/// sequential loop (no threads, no synchronization) — the "sequential
+/// path" other code compares against is literally this same code.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// `workers` threads; `0` means one per available core.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        WorkerPool { workers }
+    }
+
+    /// Resolved worker count (>= 1).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `n_jobs` jobs of `f(job_idx, worker_idx)`; returns results in
+    /// job order.  `worker_idx` is in `0..workers()` and lets callers
+    /// index per-worker resources (e.g. one `LocalUpdateExe` each).
+    ///
+    /// A panicking job propagates the panic to the caller (via
+    /// `std::thread::scope`) after the remaining workers finish their
+    /// current jobs.
+    pub fn run<T, F>(&self, n_jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        if self.workers <= 1 || n_jobs <= 1 {
+            return (0..n_jobs).map(|i| f(i, 0)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<T>>> =
+            (0..n_jobs).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for w in 0..self.workers.min(n_jobs) {
+                let next = &next;
+                let slots = &slots;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_jobs {
+                        break;
+                    }
+                    let out = f(i, w);
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("pool job completed"))
+            .collect()
+    }
+
+    /// [`Self::run`] for fallible jobs, with early cancel: once any job
+    /// fails, jobs that have not started yet are skipped (workers
+    /// already mid-job finish theirs).  The error surfaced is the first
+    /// one **in job order among the jobs that actually ran** — with
+    /// `workers == 1` that is exactly the first failure, like a plain
+    /// `?` loop; with more workers a racing later failure may be the
+    /// one reported when an earlier job was skipped.  Success results
+    /// are complete and in job order either way.
+    pub fn try_run<T, F>(&self, n_jobs: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> Result<T> + Sync,
+    {
+        let failed = AtomicBool::new(false);
+        let results = self.run(n_jobs, |i, w| {
+            if failed.load(Ordering::Relaxed) {
+                return None;
+            }
+            let r = f(i, w);
+            if r.is_err() {
+                failed.store(true, Ordering::Relaxed);
+            }
+            Some(r)
+        });
+        let mut out = Vec::with_capacity(n_jobs);
+        let mut first_err = None;
+        for r in results {
+            match r {
+                Some(Ok(t)) => out.push(t),
+                Some(Err(e)) => {
+                    first_err = Some(e);
+                    break;
+                }
+                // A skipped slot implies some job recorded an Err; keep
+                // walking to surface that real error, not a generic one.
+                None => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::error::Error;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_come_back_in_job_order() {
+        for workers in [1, 2, 4, 9] {
+            let pool = WorkerPool::new(workers);
+            let out = pool.run(23, |i, _w| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let out = pool.run(100, |i, _w| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn worker_index_stays_in_range() {
+        let pool = WorkerPool::new(3);
+        let seen = pool.run(50, |_i, w| w);
+        assert!(seen.iter().all(|&w| w < 3));
+    }
+
+    #[test]
+    fn zero_resolves_to_available_cores() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.workers() >= 1);
+    }
+
+    #[test]
+    fn zero_jobs_is_fine() {
+        let pool = WorkerPool::new(4);
+        let out: Vec<usize> = pool.run(0, |i, _| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn try_run_reports_first_executed_failure() {
+        // Sequentially the first failing index is reported exactly; in
+        // parallel, cancellation may skip an earlier failing job, so any
+        // of the injected errors is acceptable — but never a swallowed
+        // or fabricated one.
+        for workers in [1usize, 4] {
+            let pool = WorkerPool::new(workers);
+            let r: Result<Vec<usize>> = pool.try_run(10, |i, _w| {
+                if i == 3 || i == 7 {
+                    Err(Error::Data(format!("job {i}")))
+                } else {
+                    Ok(i)
+                }
+            });
+            match r {
+                Err(Error::Data(msg)) => {
+                    if workers == 1 {
+                        assert_eq!(msg, "job 3");
+                    } else {
+                        assert!(msg == "job 3" || msg == "job 7", "{msg}");
+                    }
+                }
+                other => panic!("expected an injected error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn try_run_short_circuits_sequentially() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        let r: Result<Vec<usize>> = pool.try_run(10, |i, _w| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            if i == 2 {
+                Err(Error::Data("boom".into()))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+        assert_eq!(hits.load(Ordering::Relaxed), 3, "jobs after the failure ran");
+    }
+
+    #[test]
+    fn parallel_equals_sequential_for_pure_jobs() {
+        let f = |i: usize, _w: usize| (i as f64).sqrt().sin();
+        let seq = WorkerPool::new(1).run(200, f);
+        let par = WorkerPool::new(8).run(200, f);
+        // Bit-identical: same jobs, same per-job computation, order
+        // restored by slot index.
+        assert_eq!(seq, par);
+    }
+}

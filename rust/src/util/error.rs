@@ -1,41 +1,64 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls — proc-macro
+//! derive crates are not vendored in this offline image).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors surfaced by the edgeflow library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O failure (artifact loading, metrics output, ...).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON syntax or type mismatch while parsing manifests/configs.
-    #[error("json error: {0}")]
     Json(String),
 
     /// Configuration validation failure.
-    #[error("config error: {0}")]
     Config(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// Artifact manifest inconsistency (missing file, shape mismatch...).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Topology / routing failure (disconnected node, bad id, ...).
-    #[error("topology error: {0}")]
     Topology(String),
 
     /// Dataset / partitioning failure.
-    #[error("data error: {0}")]
     Data(String),
 
     /// CLI usage error.
-    #[error("usage error: {0}")]
     Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -46,3 +69,17 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variants() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(Error::Usage("u".into()).to_string(), "usage error: u");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        assert!(io.to_string().starts_with("io error: "));
+        assert!(std::error::Error::source(&io).is_some());
+    }
+}

@@ -239,6 +239,94 @@ fn dropout_one_keeps_model_frozen() {
     assert_eq!(r.state().data, before, "all-dropped rounds must not move the model");
     assert_eq!(report.total_byte_hops, 0);
     assert_eq!(report.metrics.rounds.len(), 4);
+    // Every lost round must still be recorded: NaN losses, zero traffic,
+    // zero simulated network time — and the run must not error out.
+    for rec in &report.metrics.rounds {
+        assert!(rec.train_loss.is_nan(), "round {} has a loss", rec.round);
+        assert!(rec.test_loss.is_nan());
+        assert_eq!(rec.comm_byte_hops, 0);
+        assert_eq!(rec.net_s, 0.0);
+    }
+}
+
+#[test]
+fn weighted_aggregation_follows_sample_counts() {
+    // The Eq. 3 bugfix: clients weigh into the cluster aggregate by their
+    // actual |D_n|, not uniformly.  Unbalance a 2-client cluster, compose
+    // the expected aggregate from per-client probes, and check the round
+    // loop reproduces it bit-for-bit (and diverges from uniform weights).
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.clients = 2;
+    cfg.clusters = 1;
+    cfg.rounds = 1;
+    let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+    r.fed.clients[1].samples.truncate(16); // 80 vs 16 samples
+    assert_eq!(r.client_weight(0), 80.0);
+    assert_eq!(r.client_weight(1), 16.0);
+    let (s0, _) = r.local_update_for(0, 0).unwrap();
+    let (s1, _) = r.local_update_for(1, 0).unwrap();
+    let (_, expected) = edgeflow::fl::aggregate::reduce_states_weighted(vec![
+        (80.0, s0.clone()),
+        (16.0, s1.clone()),
+    ])
+    .unwrap();
+    let (_, uniform) =
+        edgeflow::fl::aggregate::reduce_states_weighted(vec![(1.0, s0), (1.0, s1)])
+            .unwrap();
+    r.run().unwrap();
+    assert_eq!(r.state().data, expected.data, "sample-count weighting");
+    assert_ne!(r.state().data, uniform.data, "must not be uniform");
+}
+
+#[test]
+fn worker_count_never_changes_results() {
+    // The determinism contract of the parallel round loop: workers=N is
+    // byte-identical to workers=1 — model state, per-round losses,
+    // accuracies and byte-hops.  Dropout is on so the failure-injection
+    // stream is exercised too (it is drawn on the main thread, before the
+    // fan-out, and must not depend on worker scheduling).
+    let Some(e) = engine() else { return };
+    let run_with = |workers: usize| {
+        let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+        cfg.rounds = 6;
+        cfg.dropout = 0.25;
+        cfg.workers = workers;
+        let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+        let report = r.run().unwrap();
+        (r.state().data.clone(), report)
+    };
+    let (state1, rep1) = run_with(1);
+    for workers in [2usize, 4, 0] {
+        let (state_n, rep_n) = run_with(workers);
+        assert_eq!(state_n, state1, "state diverged at workers={workers}");
+        assert_eq!(rep_n.total_byte_hops, rep1.total_byte_hops);
+        assert_eq!(
+            rep_n.final_accuracy.to_bits(),
+            rep1.final_accuracy.to_bits(),
+            "accuracy diverged at workers={workers}"
+        );
+        for (a, b) in rep_n.metrics.rounds.iter().zip(&rep1.metrics.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+            assert_eq!(a.comm_byte_hops, b.comm_byte_hops);
+        }
+    }
+}
+
+#[test]
+fn rounds_report_simulated_network_time() {
+    // net_s used to be hardcoded 0.0; every round that moves bytes must
+    // now carry a positive simulated transfer makespan.
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 4;
+    let report = Runner::with_engine(e, cfg).unwrap().run().unwrap();
+    for rec in &report.metrics.rounds {
+        assert!(rec.comm_byte_hops > 0);
+        assert!(rec.net_s > 0.0, "round {} has no net time", rec.round);
+    }
+    assert!(report.metrics.total_net_s() > 0.0);
 }
 
 #[test]

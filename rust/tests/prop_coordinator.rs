@@ -331,7 +331,7 @@ fn prop_config_json_roundtrip() {
             test_samples: g.int(10, 500),
             eval_every: g.int(0, 10),
             seed: g.int(0, 1 << 30) as u64,
-            parallel_clients: g.bool(),
+            workers: g.int(0, 8),
             dropout: g.int(0, 99) as f64 / 100.0,
         };
         let cfg = cfg.validate().map_err(|e| e.to_string())?;
