@@ -20,6 +20,11 @@ pub enum Algorithm {
     /// EdgeFLow with a hop-aware migration circuit (greedy nearest-BS tour
     /// — the paper's "wireless-aware scheduling" future-work direction).
     EdgeFlowHop,
+    /// EdgeFLow with latency-aware migration: the next cluster is the one
+    /// with the smallest *simulated* BS->BS transfer time on the current
+    /// network state (probed on the persistent DES), ties broken by the
+    /// hop-aware tour.
+    EdgeFlowLatency,
 }
 
 impl Algorithm {
@@ -31,6 +36,7 @@ impl Algorithm {
             Algorithm::EdgeFlowRand => "edgeflow_rand",
             Algorithm::EdgeFlowSeq => "edgeflow_seq",
             Algorithm::EdgeFlowHop => "edgeflow_hop",
+            Algorithm::EdgeFlowLatency => "edgeflow_latency",
         }
     }
 
@@ -42,17 +48,21 @@ impl Algorithm {
             "edgeflow_rand" | "edgeflowrand" => Ok(Algorithm::EdgeFlowRand),
             "edgeflow_seq" | "edgeflowseq" => Ok(Algorithm::EdgeFlowSeq),
             "edgeflow_hop" | "edgeflowhop" => Ok(Algorithm::EdgeFlowHop),
+            "edgeflow_latency" | "edgeflowlatency" => {
+                Ok(Algorithm::EdgeFlowLatency)
+            }
             other => Err(Error::Config(format!("unknown algorithm {other:?}"))),
         }
     }
 
-    pub const ALL: [Algorithm; 6] = [
+    pub const ALL: [Algorithm; 7] = [
         Algorithm::FedAvg,
         Algorithm::HierFl,
         Algorithm::SeqFl,
         Algorithm::EdgeFlowRand,
         Algorithm::EdgeFlowSeq,
         Algorithm::EdgeFlowHop,
+        Algorithm::EdgeFlowLatency,
     ];
 }
 
@@ -229,6 +239,12 @@ pub struct ExperimentConfig {
     /// aggregates over the survivors; a fully-dropped round keeps the
     /// model unchanged.
     pub dropout: f64,
+    /// Round deadline in *simulated* network seconds (0 = no deadline).
+    /// A client whose upload the DES delivers later than this after the
+    /// round opens is a straggler: its traffic still counts, but it is
+    /// excluded from the round's Eq. 3 reduction and recorded in
+    /// `RoundRecord::stragglers`.
+    pub deadline_s: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -253,6 +269,7 @@ impl Default for ExperimentConfig {
             seed: 0,
             workers: 1,
             dropout: 0.0,
+            deadline_s: 0.0,
         }
     }
 }
@@ -295,6 +312,12 @@ impl ExperimentConfig {
                 self.dropout
             )));
         }
+        if !self.deadline_s.is_finite() || self.deadline_s < 0.0 {
+            return Err(Error::Config(format!(
+                "deadline_s must be finite and >= 0 (0 disables), got {}",
+                self.deadline_s
+            )));
+        }
         if self.samples_per_client < self.batch_size {
             return Err(Error::Config(format!(
                 "samples_per_client ({}) < batch_size ({}) — a client cannot \
@@ -328,6 +351,7 @@ impl ExperimentConfig {
             ("seed", self.seed.into()),
             ("workers", self.workers.into()),
             ("dropout", self.dropout.into()),
+            ("deadline_s", self.deadline_s.into()),
         ])
     }
 
@@ -385,6 +409,10 @@ impl ExperimentConfig {
                 },
             },
             dropout: v.get("dropout").and_then(Json::as_f64).unwrap_or(d.dropout),
+            deadline_s: v
+                .get("deadline_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.deadline_s),
         };
         cfg.validate()
     }
@@ -541,6 +569,23 @@ mod tests {
         assert_eq!(ExperimentConfig::from_json(&legacy).unwrap().workers, 0);
         let legacy = Json::parse(r#"{"parallel_clients": false}"#).unwrap();
         assert_eq!(ExperimentConfig::from_json(&legacy).unwrap().workers, 1);
+    }
+
+    #[test]
+    fn deadline_roundtrips_and_validates() {
+        let cfg =
+            ExperimentConfig { deadline_s: 2.5, ..ExperimentConfig::default() };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.deadline_s, 2.5);
+        // absent field keeps the no-deadline default
+        let none = Json::parse("{}").unwrap();
+        assert_eq!(ExperimentConfig::from_json(&none).unwrap().deadline_s, 0.0);
+        let mut c = ExperimentConfig::default();
+        c.deadline_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.deadline_s = f64::NAN;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -27,8 +27,22 @@ impl Default for CommOptions {
     }
 }
 
-/// Record one round's transfers into `acc`; optionally simulate their
-/// timing in `sim` (submitted at `at_s`).  Returns the byte-hops added.
+/// What one round's transfers amounted to.
+#[derive(Debug, Clone, Default)]
+pub struct RoundComm {
+    /// Byte-hops added to the accountant by this round.
+    pub byte_hops: u64,
+    /// `(client id, DES transfer id)` for every client *upload* submitted
+    /// to the sim — the runner matches these against delivery times to
+    /// find deadline stragglers.  Empty when no sim was supplied.
+    pub uploads: Vec<(usize, usize)>,
+}
+
+/// Record one round's transfers into `acc` (routed on `routes` — the
+/// paper's hop-count load metric); optionally simulate their timing in a
+/// DES.  `sim` carries its own route table (submitted at `at_s`): the
+/// simulator's contract is latency-weighted routing, which on diamond
+/// topologies disagrees with the hop-shortest accounting routes.
 #[allow(clippy::too_many_arguments)]
 pub fn record_round(
     plan: &RoundPlan,
@@ -38,17 +52,23 @@ pub fn record_round(
     model_bytes: u64,
     round: usize,
     opts: CommOptions,
-    mut sim: Option<(&mut NetSim, f64)>,
-) -> Result<u64> {
+    mut sim: Option<(&mut NetSim, &RouteTable, f64)>,
+) -> Result<RoundComm> {
     let before = acc.byte_hops();
+    let mut uploads: Vec<(usize, usize)> = Vec::new();
     let mut send = |acc: &mut CommAccountant,
+                    uploads: &mut Vec<(usize, usize)>,
                     src,
                     dst,
-                    label: &'static str|
+                    label: &'static str,
+                    client: Option<usize>|
      -> Result<()> {
         acc.record(topo, routes, src, dst, model_bytes, label, round)?;
-        if let Some((sim, at_s)) = sim.as_mut() {
-            sim.submit(routes, src, dst, model_bytes, *at_s)?;
+        if let Some((sim, sim_routes, at_s)) = sim.as_mut() {
+            let id = sim.submit(sim_routes, src, dst, model_bytes, *at_s)?;
+            if let Some(c) = client {
+                uploads.push((c, id));
+            }
         }
         Ok(())
     };
@@ -62,9 +82,9 @@ pub fn record_round(
                 for &id in &plan.groups[0].1 {
                     let c = topo.client(id)?;
                     if opts.count_downloads {
-                        send(acc, cloud, c, "download")?;
+                        send(acc, &mut uploads, cloud, c, "download", None)?;
                     }
-                    send(acc, c, cloud, "upload")?;
+                    send(acc, &mut uploads, c, cloud, "upload", Some(id))?;
                 }
             } else {
                 // Hierarchical FL: clients upload to their edge BS; each BS
@@ -74,33 +94,43 @@ pub fn record_round(
                     for &id in members {
                         let c = topo.client(id)?;
                         if opts.count_downloads {
-                            send(acc, bs, c, "download")?;
+                            send(acc, &mut uploads, bs, c, "download", None)?;
                         }
-                        send(acc, c, bs, "upload")?;
+                        send(acc, &mut uploads, c, bs, "upload", Some(id))?;
                     }
                     if opts.count_downloads {
-                        send(acc, cloud, bs, "download")?;
+                        send(acc, &mut uploads, cloud, bs, "download", None)?;
                     }
-                    send(acc, bs, cloud, "upload")?;
+                    send(acc, &mut uploads, bs, cloud, "upload", None)?;
                 }
             }
         }
-        AggregationSite::EdgeBs(m) => {
-            // EdgeFLow: active cluster's clients exchange with their BS,
-            // then the model migrates BS -> next BS.
-            let bs = topo.edge_bs(m)?;
-            for &id in &plan.groups[0].1 {
-                let c = topo.client(id)?;
-                if opts.count_downloads {
-                    send(acc, bs, c, "download")?;
+        AggregationSite::EdgeBs(site) => {
+            // EdgeFLow: every group's clients exchange with *their own*
+            // BS — multi-group edge plans aggregate all groups, so all of
+            // them are charged (not just the first) — non-site groups then
+            // ship their partial to the aggregation site (mirroring
+            // HierFL's BS -> cloud leg), and the model migrates BS ->
+            // next BS.
+            let site_bs = topo.edge_bs(site)?;
+            for (m, members) in &plan.groups {
+                let bs = topo.edge_bs(*m)?;
+                for &id in members {
+                    let c = topo.client(id)?;
+                    if opts.count_downloads {
+                        send(acc, &mut uploads, bs, c, "download", None)?;
+                    }
+                    send(acc, &mut uploads, c, bs, "upload", Some(id))?;
                 }
-                send(acc, c, bs, "upload")?;
+                if bs != site_bs {
+                    send(acc, &mut uploads, bs, site_bs, "upload", None)?;
+                }
             }
             if let Some((from, to)) = plan.migration {
                 if from != to {
                     let a = topo.edge_bs(from)?;
                     let b = topo.edge_bs(to)?;
-                    send(acc, a, b, "migration")?;
+                    send(acc, &mut uploads, a, b, "migration", None)?;
                 }
             }
         }
@@ -113,19 +143,19 @@ pub fn record_round(
             let c = topo.client(id)?;
             let bs = topo.edge_bs(plan.groups[0].0)?;
             if opts.count_downloads {
-                send(acc, bs, c, "download")?;
+                send(acc, &mut uploads, bs, c, "download", None)?;
             }
-            send(acc, c, bs, "upload")?;
+            send(acc, &mut uploads, c, bs, "upload", Some(id))?;
             if let Some((from, to)) = plan.migration {
                 if from != to {
                     let a = topo.edge_bs(from)?;
                     let b = topo.edge_bs(to)?;
-                    send(acc, a, b, "migration")?;
+                    send(acc, &mut uploads, a, b, "migration", None)?;
                 }
             }
         }
     }
-    Ok(acc.byte_hops() - before)
+    Ok(RoundComm { byte_hops: acc.byte_hops() - before, uploads })
 }
 
 #[cfg(test)]
@@ -163,7 +193,7 @@ mod tests {
         let t = topo(TopologyKind::Simple);
         let rt = RouteTable::hops(&t);
         let mut acc = CommAccountant::new();
-        let bh = record_round(
+        let r = record_round(
             &fedavg_plan(),
             &t,
             &rt,
@@ -175,7 +205,8 @@ mod tests {
         )
         .unwrap();
         // each client: 2 hops (radio + backbone) x 100 bytes x 3 clients
-        assert_eq!(bh, 600);
+        assert_eq!(r.byte_hops, 600);
+        assert!(r.uploads.is_empty(), "no sim, no upload ids");
     }
 
     #[test]
@@ -183,7 +214,7 @@ mod tests {
         let t = topo(TopologyKind::Simple);
         let rt = RouteTable::hops(&t);
         let mut acc = CommAccountant::new();
-        let bh = record_round(
+        let r = record_round(
             &edgeflow_plan(1, None),
             &t,
             &rt,
@@ -194,7 +225,7 @@ mod tests {
             None,
         )
         .unwrap();
-        assert_eq!(bh, 200); // 2 clients x 1 hop
+        assert_eq!(r.byte_hops, 200); // 2 clients x 1 hop
     }
 
     #[test]
@@ -250,10 +281,39 @@ mod tests {
             migration: None,
         };
         let mut acc = CommAccountant::new();
-        let bh = record_round(&plan, &t, &rt, &mut acc, 10, 0, CommOptions::default(), None)
+        let r = record_round(&plan, &t, &rt, &mut acc, 10, 0, CommOptions::default(), None)
             .unwrap();
         // 8 clients x 1 radio hop x 10 + 4 BS x 1 backbone hop x 10
-        assert_eq!(bh, 120);
+        assert_eq!(r.byte_hops, 120);
+    }
+
+    #[test]
+    fn edge_multi_group_plans_charge_every_group() {
+        // PR 1 made multi-group edge plans aggregate *all* groups; the
+        // EdgeBs arm used to charge only groups[0], silently undercounting.
+        let t = topo(TopologyKind::Simple);
+        let rt = RouteTable::hops(&t);
+        let plan = RoundPlan {
+            groups: vec![(0, vec![0, 1]), (2, vec![4, 5])],
+            cluster: 0,
+            aggregation: AggregationSite::EdgeBs(0),
+            migration: None,
+        };
+        let mut acc = CommAccountant::new();
+        let r = record_round(&plan, &t, &rt, &mut acc, 100, 0, CommOptions::default(), None)
+            .unwrap();
+        // 4 clients x 1 radio hop x 100 bytes (group 1 no longer dropped)
+        // + the non-site group's partial riding BS2 -> BS0 (2 backbone
+        // hops via the cloud on the `simple` structure) x 100 bytes.
+        assert_eq!(r.byte_hops, 600);
+        assert_eq!(acc.transfer_count(), 5);
+        // clients upload to *their own* BS, the partial to the site BS
+        let bs0 = t.edge_bs(0).unwrap();
+        let bs2 = t.edge_bs(2).unwrap();
+        let trs = acc.transfers();
+        assert!(trs[2].dst == bs2 && trs[3].dst == bs2);
+        assert_eq!(trs[4].src, bs2);
+        assert_eq!(trs[4].dst, bs0);
     }
 
     #[test]
@@ -262,7 +322,7 @@ mod tests {
         let rt = RouteTable::latency(&t);
         let mut acc = CommAccountant::new();
         let mut sim = NetSim::new(&t);
-        record_round(
+        let r = record_round(
             &edgeflow_plan(2, Some((1, 2))),
             &t,
             &rt,
@@ -270,11 +330,63 @@ mod tests {
             1_000_000,
             0,
             CommOptions::default(),
-            Some((&mut sim, 0.0)),
+            Some((&mut sim, &rt, 0.0)),
         )
         .unwrap();
         let out = sim.run();
         assert_eq!(out.len(), 3); // 2 uploads + 1 migration
         assert!(out.iter().all(|o| o.latency_s() > 0.0));
+        // upload ids map clients onto their DES transfers
+        assert_eq!(r.uploads.len(), 2);
+        for &(client, sim_id) in &r.uploads {
+            let o = out.iter().find(|o| o.id == sim_id).unwrap();
+            assert_eq!(o.src, t.client(client).unwrap());
+        }
+    }
+
+    #[test]
+    fn sim_transfers_ride_the_sim_route_table() {
+        // BreadthParallel BS ring: the hop-shortest BS0 -> BS5 route rides
+        // the backbone (4 hops, 20 ms), the latency route rides the ring
+        // (5 hops, 5 ms).  Accounting must stay on the hop routes while
+        // the DES rides the latency routes it documents.
+        let t = build(&TopologyParams::new(TopologyKind::BreadthParallel, 10, 1))
+            .unwrap();
+        let hops_rt = RouteTable::hops(&t);
+        let lat_rt = RouteTable::latency(&t);
+        let a = t.edge_bs(0).unwrap();
+        let b = t.edge_bs(5).unwrap();
+        assert!(
+            hops_rt.path(a, b).unwrap().len() < lat_rt.path(a, b).unwrap().len(),
+            "route tables must disagree on this topology"
+        );
+        let plan = RoundPlan {
+            groups: vec![(5, vec![5])],
+            cluster: 5,
+            aggregation: AggregationSite::EdgeBs(5),
+            migration: Some((0, 5)),
+        };
+        let mut acc = CommAccountant::new();
+        let mut sim = NetSim::new(&t);
+        record_round(
+            &plan,
+            &t,
+            &hops_rt,
+            &mut acc,
+            1_000,
+            0,
+            CommOptions::default(),
+            Some((&mut sim, &lat_rt, 0.0)),
+        )
+        .unwrap();
+        let migr = acc
+            .transfers()
+            .iter()
+            .find(|tr| tr.label == "migration")
+            .unwrap();
+        assert_eq!(migr.hops, 4, "accounting stays hop-shortest");
+        let out = sim.run();
+        let sim_migr = out.iter().find(|o| o.hops > 1).unwrap();
+        assert_eq!(sim_migr.hops, 5, "the DES rides the latency route");
     }
 }

@@ -61,6 +61,13 @@ pub struct Runner {
     pub accountant: CommAccountant,
     /// Failure-injection stream (client dropout).
     dropout_rng: crate::rng::Rng,
+    /// Persistent network DES: link state and the simulated clock carry
+    /// across rounds, so `clock_s` accumulates into a simulated
+    /// wall-clock.  Rounds are synchronous barriers (each drains before
+    /// the next trains), so links are idle again at every round boundary
+    /// — contention lives *within* a round; the carried state is the
+    /// clock.  `NetSim::reset` restores round-zero semantics.
+    net: NetSim,
 }
 
 impl Runner {
@@ -113,9 +120,10 @@ impl Runner {
             cfg.clusters,
             cfg.cluster_size(),
         ))?;
-        let strategy = Strategy::for_config(&cfg, &fed, &topo);
-        let loader = ClientLoader::new(cfg.seed ^ LOADER_SEED_MIX, cfg.batch_size);
         let state = engine.init_state(&cfg.model, &cfg.optimizer)?;
+        let strategy = Strategy::for_config(&cfg, &fed, &topo, state.param_bytes());
+        let loader = ClientLoader::new(cfg.seed ^ LOADER_SEED_MIX, cfg.batch_size);
+        let net = NetSim::new(&topo);
         let pool = WorkerPool::new(cfg.workers);
         let lus = (0..pool.workers())
             .map(|_| engine.local_update(&cfg.model, &cfg.optimizer, cfg.local_steps))
@@ -135,7 +143,13 @@ impl Runner {
             pool,
             accountant: CommAccountant::new(),
             dropout_rng,
+            net,
         })
+    }
+
+    /// Current simulated network clock (cumulative across rounds).
+    pub fn net_clock_s(&self) -> f64 {
+        self.net.now_s()
     }
 
     /// Current global model state.
@@ -179,13 +193,18 @@ impl Runner {
     pub fn run(&mut self) -> Result<RunReport> {
         let mut metrics = ExperimentMetrics::default();
         let mut timer = Timer::new();
+        // Byte-hop accounting stays on hop-shortest routes (the paper's
+        // load metric); the DES rides the latency-weighted routes its
+        // contract documents — on diamond topologies the two disagree.
         let routes = RouteTable::hops(&self.topo);
+        let sim_routes = RouteTable::latency(&self.topo);
         let model_bytes = self.state.param_bytes();
         let rounds = self.cfg.rounds;
+        let deadline = self.cfg.deadline_s;
 
         for t in 0..rounds {
             timer.lap("idle");
-            let mut plan = self.strategy.plan_round(t, &self.fed);
+            let mut plan = self.strategy.plan_round(t, &self.fed, Some(&self.net));
 
             // --- failure injection ---------------------------------------
             if self.cfg.dropout > 0.0 {
@@ -196,21 +215,85 @@ impl Runner {
                 plan.groups.retain(|(_, v)| !v.is_empty());
                 if plan.groups.is_empty() {
                     // Every selected client dropped: the round is lost; the
-                    // model (and any scheduled migration) carries over.
+                    // model (and any scheduled migration) carries over, and
+                    // nothing touches the network, so the persistent sim
+                    // clock stays put.
                     log::debug!("round {t}: all participants dropped");
-                    metrics.push(RoundRecord {
-                        round: t,
-                        cluster: plan.cluster,
-                        train_loss: f64::NAN,
-                        test_accuracy: f64::NAN,
-                        test_loss: f64::NAN,
-                        comm_byte_hops: 0,
-                        train_s: 0.0,
-                        aggregate_s: 0.0,
-                        net_s: 0.0,
-                    });
+                    metrics.push(lost_round_record(
+                        t,
+                        plan.cluster,
+                        0,
+                        0.0,
+                        self.net.now_s(),
+                        Vec::new(),
+                    ));
                     continue;
                 }
+            }
+
+            // --- communication accounting + network simulation -----------
+            // Simulated *before* the numeric work: delivery times decide
+            // which uploads make the round's deadline, and stragglers must
+            // be excluded from the Eq. 3 reduction below.  (The DES is
+            // independent of the trained values, so the reordering cannot
+            // change any report.)
+            let round_start = self.net.now_s();
+            let comm = record_round(
+                &plan,
+                &self.topo,
+                &routes,
+                &mut self.accountant,
+                model_bytes,
+                t,
+                CommOptions::default(),
+                Some((&mut self.net, &sim_routes, round_start)),
+            )?;
+            let byte_hops = comm.byte_hops;
+            let outcomes = self.net.run();
+            // The round's simulated network time is the makespan of its
+            // transfers on the carried-forward network state.
+            let net_s = outcomes
+                .iter()
+                .map(|o| o.delivered_s)
+                .fold(round_start, f64::max)
+                - round_start;
+            let mut stragglers: Vec<usize> = Vec::new();
+            if deadline > 0.0 {
+                for &(client, sim_id) in &comm.uploads {
+                    let late = outcomes
+                        .iter()
+                        .find(|o| o.id == sim_id)
+                        .is_some_and(|o| o.delivered_s - round_start > deadline);
+                    if late {
+                        stragglers.push(client);
+                    }
+                }
+                stragglers.sort_unstable();
+                if !stragglers.is_empty() {
+                    log::debug!(
+                        "round {t}: {} stragglers past deadline_s={deadline}",
+                        stragglers.len()
+                    );
+                    for (_m, members) in &mut plan.groups {
+                        members.retain(|id| !stragglers.contains(id));
+                    }
+                    plan.groups.retain(|(_, v)| !v.is_empty());
+                }
+            }
+            timer.lap("comm");
+
+            if plan.groups.is_empty() {
+                // Every surviving client straggled: the traffic was spent,
+                // but nothing aggregates; the model carries over.
+                metrics.push(lost_round_record(
+                    t,
+                    plan.cluster,
+                    byte_hops,
+                    net_s,
+                    self.net.now_s(),
+                    stragglers,
+                ));
+                continue;
             }
 
             // --- local updates (fanned out across the pool) --------------
@@ -272,27 +355,6 @@ impl Runner {
             self.state = merged;
             let aggregate_s = timer.lap("aggregate").as_secs_f64();
 
-            // --- communication accounting + simulated network time -------
-            let mut sim = NetSim::new(&self.topo);
-            let byte_hops = record_round(
-                &plan,
-                &self.topo,
-                &routes,
-                &mut self.accountant,
-                model_bytes,
-                t,
-                CommOptions::default(),
-                Some((&mut sim, 0.0)),
-            )?;
-            // The round's simulated network time is the makespan of its
-            // transfers (all submitted at t=0 on an idle network).
-            let net_s = sim
-                .run()
-                .iter()
-                .map(|o| o.delivered_s)
-                .fold(0.0f64, f64::max);
-            timer.lap("comm");
-
             // --- evaluation -----------------------------------------------
             let eval_now = t + 1 == rounds
                 || (self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0);
@@ -326,6 +388,8 @@ impl Runner {
                 train_s,
                 aggregate_s,
                 net_s,
+                clock_s: self.net.now_s(),
+                stragglers,
             });
         }
 
@@ -353,6 +417,32 @@ fn plan_cluster_label(m: usize) -> String {
         "-".to_string()
     } else {
         m.to_string()
+    }
+}
+
+/// Carry-over record for a round that trained nothing (all participants
+/// dropped, or every survivor straggled past the deadline): NaN losses,
+/// whatever traffic/clock the round did spend, and the model unchanged.
+fn lost_round_record(
+    round: usize,
+    cluster: usize,
+    comm_byte_hops: u64,
+    net_s: f64,
+    clock_s: f64,
+    stragglers: Vec<usize>,
+) -> RoundRecord {
+    RoundRecord {
+        round,
+        cluster,
+        train_loss: f64::NAN,
+        test_accuracy: f64::NAN,
+        test_loss: f64::NAN,
+        comm_byte_hops,
+        train_s: 0.0,
+        aggregate_s: 0.0,
+        net_s,
+        clock_s,
+        stragglers,
     }
 }
 

@@ -1,7 +1,10 @@
 //! Cluster scheduling: which cluster is active at round `t`, and in what
 //! order the model migrates (the paper's `m(t)`).
 
+use crate::netsim::NetSim;
 use crate::rng::Rng;
+use crate::topology::graph::Topology;
+use crate::topology::route::RouteTable;
 
 /// EdgeFLow's inter-cluster migration order.
 #[derive(Debug)]
@@ -9,13 +12,40 @@ pub enum ClusterSchedule {
     /// Fixed cyclic order 0, 1, ..., M-1, 0, ... (EdgeFLowSeq).
     Sequential { clusters: usize },
     /// Uniform random next cluster, never repeating the current one when
-    /// M > 1 (EdgeFLowRand).
-    Random { clusters: usize, rng: Rng, last: Option<usize> },
+    /// M > 1 (EdgeFLowRand).  The draw at round `t` is a pure function of
+    /// `(seed, t)` — calls may skip ahead or replay; `cache` only
+    /// memoizes the last computed `(t, cluster)` so consecutive calls
+    /// stay O(1).
+    Random { clusters: usize, seed: u64, cache: Option<(usize, usize)> },
     /// Hop-aware circuit (the paper's "wireless-aware scheduling" future
     /// work): a greedy nearest-neighbor tour over the BS hop-distance
     /// matrix — every cluster once per cycle, migrations ride the
     /// cheapest available links.
     HopAware { order: Vec<usize> },
+    /// Latency-aware tour: the next migration target is the unvisited
+    /// cluster with the smallest *simulated* BS->BS transfer time on the
+    /// current network state (candidate transfers probed on a cloned
+    /// [`NetSim`] over the latency `RouteTable`), ties broken by the
+    /// HopAware tour position.  Every cluster is still visited once per
+    /// cycle.  The probe accounts for bandwidth, store-and-forward and
+    /// queueing — unlike hop counts — and steers around congestion
+    /// whenever the supplied sim carries in-flight traffic; a caller that
+    /// drains every round (the runner's synchronous barriers) probes the
+    /// idle-at-round-boundary network, and without a live sim the probe
+    /// degenerates to a static latency-optimal tour.
+    LatencyAware {
+        topo: Topology,
+        /// HopAware tour of the same topology: tie-break ranking + cycle
+        /// anchor.
+        hop_order: Vec<usize>,
+        visited: Vec<bool>,
+        current: usize,
+        /// Probe transfer size (the migrating model's wire bytes).
+        model_bytes: u64,
+        /// Last `(t, pick)`: re-asking for the same round returns the
+        /// memoized pick instead of advancing the tour twice.
+        cache: Option<(usize, usize)>,
+    },
 }
 
 impl ClusterSchedule {
@@ -26,52 +56,155 @@ impl ClusterSchedule {
 
     pub fn random(clusters: usize, seed: u64) -> ClusterSchedule {
         assert!(clusters > 0);
-        ClusterSchedule::Random { clusters, rng: Rng::new(seed), last: None }
+        ClusterSchedule::Random { clusters, seed, cache: None }
     }
 
     /// Greedy nearest-neighbor tour over a pairwise hop matrix
     /// (`hops[i][j]` = hop distance between BS i and BS j).
     pub fn hop_aware(hops: &[Vec<usize>]) -> ClusterSchedule {
-        let m = hops.len();
-        assert!(m > 0);
-        let mut order = Vec::with_capacity(m);
-        let mut visited = vec![false; m];
-        let mut cur = 0usize;
-        order.push(0);
-        visited[0] = true;
-        for _ in 1..m {
-            let next = (0..m)
-                .filter(|&j| !visited[j])
-                .min_by_key(|&j| (hops[cur][j], j))
-                .unwrap();
-            order.push(next);
-            visited[next] = true;
-            cur = next;
-        }
-        ClusterSchedule::HopAware { order }
+        ClusterSchedule::HopAware { order: greedy_tour(hops) }
     }
 
-    /// The active cluster for round `t`.  For the random schedule this
-    /// must be called with consecutive `t` (it advances internal state).
+    /// Latency-aware schedule over `topo`'s base stations; candidate
+    /// migrations are probed as `model_bytes` transfers.
+    pub fn latency_aware(topo: &Topology, model_bytes: u64) -> ClusterSchedule {
+        let bs = topo.base_stations();
+        assert!(!bs.is_empty(), "latency_aware needs base stations");
+        let rt = RouteTable::hops(topo);
+        let hops: Vec<Vec<usize>> = bs
+            .iter()
+            .map(|&a| {
+                bs.iter()
+                    .map(|&b| rt.dist(a, b).unwrap_or(usize::MAX / 2))
+                    .collect()
+            })
+            .collect();
+        ClusterSchedule::LatencyAware {
+            topo: topo.clone(),
+            hop_order: greedy_tour(&hops),
+            visited: vec![false; bs.len()],
+            current: 0,
+            model_bytes,
+            cache: None,
+        }
+    }
+
+    /// The active cluster for round `t`.  Equivalent to
+    /// [`ClusterSchedule::next_on`] with no live network state.
     pub fn next(&mut self, t: usize) -> usize {
+        self.next_on(t, None)
+    }
+
+    /// The active cluster for round `t`, optionally informed by the live
+    /// network state `net` (only the latency-aware schedule reads it).
+    /// Contracts: `Sequential`/`HopAware` are pure functions of `t`;
+    /// `Random` is a pure function of `(seed, t)` and accepts arbitrary
+    /// (skip-ahead / replayed) `t`; `LatencyAware` advances tour state
+    /// and must be called with consecutive rounds — though re-asking for
+    /// the *same* `t` returns the memoized pick instead of advancing.
+    pub fn next_on(&mut self, t: usize, net: Option<&NetSim>) -> usize {
         match self {
             ClusterSchedule::Sequential { clusters } => t % *clusters,
             ClusterSchedule::HopAware { order } => order[t % order.len()],
-            ClusterSchedule::Random { clusters, rng, last } => {
-                let m = if *clusters == 1 {
-                    0
-                } else {
-                    // Avoid training the same cluster twice in a row: the
-                    // migration "flow" always moves.
-                    loop {
-                        let c = rng.below(*clusters);
-                        if Some(c) != *last {
-                            break c;
-                        }
+            ClusterSchedule::Random { clusters, seed, cache } => {
+                let m = *clusters;
+                if m == 1 {
+                    return 0;
+                }
+                // Replay the chain c(i) = (c(i-1) + 1 + r(i)) mod m from
+                // the nearest memoized point at or before `t`; each step
+                // offset r(i) in [0, m-2] keeps consecutive rounds on
+                // different clusters.
+                let (mut i, mut c) = match *cache {
+                    Some((ct, cc)) if ct <= t => (ct, cc),
+                    _ => (0, random_draw(*seed, 0).below(m)),
+                };
+                while i < t {
+                    i += 1;
+                    c = (c + 1 + random_draw(*seed, i).below(m - 1)) % m;
+                }
+                *cache = Some((t, c));
+                c
+            }
+            ClusterSchedule::LatencyAware {
+                topo,
+                hop_order,
+                visited,
+                current,
+                model_bytes,
+                cache,
+            } => {
+                let m = visited.len();
+                if m == 1 {
+                    return 0;
+                }
+                if let Some((ct, cp)) = *cache {
+                    if ct == t {
+                        // Same round re-planned: don't advance the tour.
+                        return cp;
+                    }
+                }
+                if t == 0 {
+                    // Anchor the tour where HopAware anchors it.
+                    visited.fill(false);
+                    let start = hop_order[0];
+                    visited[start] = true;
+                    *current = start;
+                    *cache = Some((0, start));
+                    return start;
+                }
+                if visited.iter().all(|&v| v) {
+                    // Cycle complete: everything is fair game again except
+                    // an immediate repeat of the current cluster (it stays
+                    // eligible as soon as the tour moves off it).
+                    visited.fill(false);
+                }
+                // The route table is O(1) to build (paths are computed on
+                // demand); the idle fallback sim is hoisted so candidates
+                // clone an Arc-shared handle, not the topology.
+                let rt = RouteTable::latency(topo);
+                let idle;
+                let base: &NetSim = match net {
+                    Some(n) => n,
+                    None => {
+                        idle = NetSim::new(topo);
+                        &idle
                     }
                 };
-                *last = Some(m);
-                m
+                let src = topo.edge_bs(*current).expect("current BS");
+                let mut best: Option<(f64, usize, usize)> = None;
+                for j in 0..m {
+                    if visited[j] || j == *current {
+                        continue;
+                    }
+                    let dst = topo.edge_bs(j).expect("candidate BS");
+                    let mut probe = base.clone();
+                    let at = probe.now_s();
+                    let secs = match probe.submit(&rt, src, dst, *model_bytes, at) {
+                        Ok(id) => probe
+                            .run()
+                            .into_iter()
+                            .find(|o| o.id == id)
+                            .map(|o| o.delivered_s - at)
+                            .unwrap_or(f64::INFINITY),
+                        Err(_) => f64::INFINITY,
+                    };
+                    let rank = hop_order
+                        .iter()
+                        .position(|&x| x == j)
+                        .unwrap_or(usize::MAX);
+                    let cand = (secs, rank, j);
+                    best = Some(match best {
+                        None => cand,
+                        Some(b) if cand < b => cand,
+                        Some(b) => b,
+                    });
+                }
+                let pick = best.map(|(_, _, j)| j).unwrap_or(*current);
+                visited[pick] = true;
+                *current = pick;
+                *cache = Some((t, pick));
+                pick
             }
         }
     }
@@ -81,13 +214,44 @@ impl ClusterSchedule {
             ClusterSchedule::Sequential { clusters } => *clusters,
             ClusterSchedule::Random { clusters, .. } => *clusters,
             ClusterSchedule::HopAware { order } => order.len(),
+            ClusterSchedule::LatencyAware { visited, .. } => visited.len(),
         }
     }
+}
+
+/// Greedy nearest-neighbor tour over a pairwise distance matrix, anchored
+/// at 0, ties broken by index.
+fn greedy_tour(dist: &[Vec<usize>]) -> Vec<usize> {
+    let m = dist.len();
+    assert!(m > 0);
+    let mut order = Vec::with_capacity(m);
+    let mut visited = vec![false; m];
+    let mut cur = 0usize;
+    order.push(0);
+    visited[0] = true;
+    for _ in 1..m {
+        let next = (0..m)
+            .filter(|&j| !visited[j])
+            .min_by_key(|&j| (dist[cur][j], j))
+            .unwrap();
+        order.push(next);
+        visited[next] = true;
+        cur = next;
+    }
+    order
+}
+
+/// Stateless per-round stream for the random schedule: a fresh generator
+/// keyed by `(seed, t)` (odd-constant mix keeps the keys distinct).
+fn random_draw(seed: u64, t: usize) -> Rng {
+    Rng::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::TopologyKind;
+    use crate::topology::builder::{build, TopologyParams};
 
     #[test]
     fn sequential_covers_all_every_m_rounds() {
@@ -129,6 +293,21 @@ mod tests {
     }
 
     #[test]
+    fn random_skip_ahead_matches_sequential_replay() {
+        // The draw is a function of (seed, t): jumping straight to any t —
+        // forward or backward — must reproduce the consecutively-generated
+        // value at that round.
+        let mut seq = ClusterSchedule::random(5, 42);
+        let vals: Vec<usize> = (0..30).map(|t| seq.next(t)).collect();
+        let mut skip = ClusterSchedule::random(5, 42);
+        assert_eq!(skip.next(17), vals[17]);
+        assert_eq!(skip.next(3), vals[3], "replay before the cache point");
+        assert_eq!(skip.next(29), vals[29]);
+        assert_eq!(skip.next(0), vals[0]);
+        assert_eq!(skip.next(29), vals[29], "same t twice");
+    }
+
+    #[test]
     fn hop_aware_visits_all_following_cheap_links() {
         // Line graph distances: 0-1-2-3 => tour must be 0,1,2,3.
         let hops = vec![
@@ -166,5 +345,103 @@ mod tests {
         for t in 0..50 {
             assert_eq!(a.next(t), b.next(t));
         }
+    }
+
+    #[test]
+    fn latency_aware_tours_every_cluster_each_cycle() {
+        let topo =
+            build(&TopologyParams::new(TopologyKind::Hybrid, 8, 2)).unwrap();
+        let mut s = ClusterSchedule::latency_aware(&topo, 100_000);
+        assert_eq!(s.clusters(), 8);
+        for cycle in 0..3 {
+            let mut seen: Vec<usize> =
+                (cycle * 8..cycle * 8 + 8).map(|t| s.next(t)).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..8).collect::<Vec<_>>(), "cycle {cycle}");
+        }
+    }
+
+    #[test]
+    fn latency_aware_same_round_is_idempotent() {
+        let topo =
+            build(&TopologyParams::new(TopologyKind::DepthLinear, 5, 1))
+                .unwrap();
+        let mut s = ClusterSchedule::latency_aware(&topo, 10_000);
+        assert_eq!(s.next(0), s.next(0));
+        let a = s.next(1);
+        assert_eq!(s.next(1), a, "re-planning a round must not advance");
+        let b = s.next(2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn latency_aware_never_repeats_consecutively() {
+        let topo =
+            build(&TopologyParams::new(TopologyKind::BreadthParallel, 6, 2))
+                .unwrap();
+        let mut s = ClusterSchedule::latency_aware(&topo, 50_000);
+        let mut last = usize::MAX;
+        for t in 0..24 {
+            let m = s.next(t);
+            assert_ne!(m, last, "round {t}");
+            last = m;
+        }
+    }
+
+    #[test]
+    fn latency_aware_idle_matches_hop_aware_on_uniform_links() {
+        // DepthLinear's BS chain has uniform per-hop latency, so the idle
+        // latency probe ranks candidates exactly like hop counts: the two
+        // tours coincide over the first cycle.  (Later cycles diverge by
+        // design: HopAware replays its fixed order while LatencyAware
+        // re-plans from wherever the previous cycle ended.)
+        let topo =
+            build(&TopologyParams::new(TopologyKind::DepthLinear, 6, 2))
+                .unwrap();
+        let mut lat = ClusterSchedule::latency_aware(&topo, 100_000);
+        let bs = topo.base_stations();
+        let rt = RouteTable::hops(&topo);
+        let hops: Vec<Vec<usize>> = bs
+            .iter()
+            .map(|&a| bs.iter().map(|&b| rt.dist(a, b).unwrap()).collect())
+            .collect();
+        let mut hop = ClusterSchedule::hop_aware(&hops);
+        for t in 0..6 {
+            assert_eq!(lat.next(t), hop.next(t), "round {t}");
+        }
+    }
+
+    #[test]
+    fn latency_aware_prefers_the_less_congested_target() {
+        // BreadthParallel's BS ring: after 0 -> 1 the idle tour continues
+        // to the adjacent BS2 (one 9 ms hop beats two to BS3).  Saturating
+        // the BS1-BS2 ring link must flip the pick to BS3, whose latency
+        // route rides the other side of the ring (BS1-BS0-BS3) and stays
+        // clean.
+        let topo =
+            build(&TopologyParams::new(TopologyKind::BreadthParallel, 4, 1))
+                .unwrap();
+        let mk = || {
+            let mut s = ClusterSchedule::latency_aware(&topo, 1_000_000);
+            assert_eq!(s.next(0), 0); // anchor
+            assert_eq!(s.next(1), 1); // nearest, hop-order tie-break
+            s
+        };
+        let mut idle = mk();
+        assert_eq!(idle.next(2), 2, "idle network continues around the ring");
+
+        let mut busy = mk();
+        let rt = RouteTable::latency(&topo);
+        let mut sim = NetSim::new(&topo);
+        let a = topo.edge_bs(1).unwrap();
+        let b = topo.edge_bs(2).unwrap();
+        for _ in 0..50 {
+            sim.submit(&rt, a, b, 10_000_000, 0.0).unwrap();
+        }
+        assert_eq!(
+            busy.next_on(2, Some(&sim)),
+            3,
+            "congestion on BS1-BS2 must steer the tour to BS3"
+        );
     }
 }

@@ -8,6 +8,7 @@
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::data::partition::Federation;
 use crate::fl::scheduler::ClusterSchedule;
+use crate::netsim::NetSim;
 use crate::rng::Rng;
 use crate::topology::graph::Topology;
 use crate::topology::route::RouteTable;
@@ -59,10 +60,21 @@ pub enum Strategy {
 
 impl Strategy {
     /// Build the strategy for an experiment config.  `topo` supplies the
-    /// BS hop-distance matrix for the hop-aware migration circuit.
-    pub fn for_config(cfg: &ExperimentConfig, fed: &Federation, topo: &Topology) -> Strategy {
+    /// BS hop-distance matrix for the hop-aware migration circuit;
+    /// `model_bytes` sizes the latency-aware schedule's probe transfers
+    /// (the migrating model's wire bytes).
+    pub fn for_config(
+        cfg: &ExperimentConfig,
+        fed: &Federation,
+        topo: &Topology,
+        model_bytes: u64,
+    ) -> Strategy {
         let seed = cfg.seed ^ 0x57A7E617;
         match cfg.algorithm {
+            Algorithm::EdgeFlowLatency => Strategy::EdgeFlow {
+                schedule: ClusterSchedule::latency_aware(topo, model_bytes),
+                current: 0,
+            },
             Algorithm::EdgeFlowHop => {
                 let bs = topo.base_stations();
                 let rt = RouteTable::hops(topo);
@@ -109,12 +121,20 @@ impl Strategy {
                 ClusterSchedule::Sequential { .. } => "edgeflow_seq",
                 ClusterSchedule::Random { .. } => "edgeflow_rand",
                 ClusterSchedule::HopAware { .. } => "edgeflow_hop",
+                ClusterSchedule::LatencyAware { .. } => "edgeflow_latency",
             },
         }
     }
 
-    /// Plan round `t`.
-    pub fn plan_round(&mut self, t: usize, fed: &Federation) -> RoundPlan {
+    /// Plan round `t`.  `net` is the live network state, read only by the
+    /// latency-aware migration schedule (pass `None` for the static
+    /// planners — they ignore it).
+    pub fn plan_round(
+        &mut self,
+        t: usize,
+        fed: &Federation,
+        net: Option<&NetSim>,
+    ) -> RoundPlan {
         match self {
             Strategy::FedAvg { rng, n_sample } => {
                 let all = fed.clients.len();
@@ -161,7 +181,7 @@ impl Strategy {
                 }
             }
             Strategy::EdgeFlow { schedule, current } => {
-                let m = schedule.next(t);
+                let m = schedule.next_on(t, net);
                 let from = *current;
                 *current = m;
                 RoundPlan {
@@ -216,8 +236,8 @@ mod tests {
     #[test]
     fn fedavg_samples_cluster_size_clients() {
         let f = fed();
-        let mut s = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &topo());
-        let p = s.plan_round(0, &f);
+        let mut s = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &topo(), 40_000);
+        let p = s.plan_round(0, &f, None);
         assert_eq!(p.participants().len(), 5);
         assert_eq!(p.aggregation, AggregationSite::Cloud);
         assert!(p.migration.is_none());
@@ -231,17 +251,17 @@ mod tests {
     #[test]
     fn fedavg_resamples_every_round() {
         let f = fed();
-        let mut s = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &topo());
-        let a = s.plan_round(0, &f).participants();
-        let b = s.plan_round(1, &f).participants();
+        let mut s = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &topo(), 40_000);
+        let a = s.plan_round(0, &f, None).participants();
+        let b = s.plan_round(1, &f, None).participants();
         assert_ne!(a, b); // overwhelmingly likely with 20 choose 5
     }
 
     #[test]
     fn hierfl_includes_everyone_grouped() {
         let f = fed();
-        let mut s = Strategy::for_config(&cfg(Algorithm::HierFl), &f, &topo());
-        let p = s.plan_round(0, &f);
+        let mut s = Strategy::for_config(&cfg(Algorithm::HierFl), &f, &topo(), 40_000);
+        let p = s.plan_round(0, &f, None);
         assert_eq!(p.groups.len(), 4);
         assert_eq!(p.participants().len(), 20);
     }
@@ -249,10 +269,10 @@ mod tests {
     #[test]
     fn seqfl_walks_one_client_at_a_time() {
         let f = fed();
-        let mut s = Strategy::for_config(&cfg(Algorithm::SeqFl), &f, &topo());
+        let mut s = Strategy::for_config(&cfg(Algorithm::SeqFl), &f, &topo(), 40_000);
         let mut seen = std::collections::BTreeSet::new();
         for t in 0..20 {
-            let p = s.plan_round(t, &f);
+            let p = s.plan_round(t, &f, None);
             assert_eq!(p.participants().len(), 1);
             assert_eq!(p.aggregation, AggregationSite::None);
             seen.insert(p.participants()[0]);
@@ -263,9 +283,9 @@ mod tests {
     #[test]
     fn edgeflow_seq_activates_whole_cluster_cyclically() {
         let f = fed();
-        let mut s = Strategy::for_config(&cfg(Algorithm::EdgeFlowSeq), &f, &topo());
+        let mut s = Strategy::for_config(&cfg(Algorithm::EdgeFlowSeq), &f, &topo(), 40_000);
         for t in 0..8 {
-            let p = s.plan_round(t, &f);
+            let p = s.plan_round(t, &f, None);
             assert_eq!(p.cluster, t % 4);
             assert_eq!(p.groups[0].1.len(), 5);
             assert_eq!(p.aggregation, AggregationSite::EdgeBs(t % 4));
@@ -276,11 +296,32 @@ mod tests {
     }
 
     #[test]
+    fn edgeflow_latency_tours_all_clusters() {
+        let f = fed();
+        let t = topo();
+        let mut s =
+            Strategy::for_config(&cfg(Algorithm::EdgeFlowLatency), &f, &t, 40_000);
+        assert_eq!(s.name(), "edgeflow_latency");
+        let mut seen = std::collections::BTreeSet::new();
+        for t_round in 0..4 {
+            let p = s.plan_round(t_round, &f, None);
+            assert_eq!(p.aggregation, AggregationSite::EdgeBs(p.cluster));
+            assert_eq!(p.groups[0].1.len(), 5);
+            if t_round > 0 {
+                let (from, to) = p.migration.unwrap();
+                assert_ne!(from, to, "tour must keep moving");
+            }
+            seen.insert(p.cluster);
+        }
+        assert_eq!(seen.len(), 4, "every cluster visited in one cycle");
+    }
+
+    #[test]
     fn edgeflow_members_match_federation() {
         let f = fed();
-        let mut s = Strategy::for_config(&cfg(Algorithm::EdgeFlowRand), &f, &topo());
+        let mut s = Strategy::for_config(&cfg(Algorithm::EdgeFlowRand), &f, &topo(), 40_000);
         for t in 0..10 {
-            let p = s.plan_round(t, &f);
+            let p = s.plan_round(t, &f, None);
             let m = p.cluster;
             for &id in &p.groups[0].1 {
                 assert_eq!(f.clients[id].cluster, m);

@@ -30,8 +30,16 @@ fn cli() -> Cli {
             flag_def("artifacts", "artifact directory", "artifacts"),
             flag("preset", "named preset (see `presets`)"),
             flag("config", "JSON config file"),
-            flag("algorithm", "fedavg|hierfl|seqfl|edgeflow_rand|edgeflow_seq|edgeflow_hop"),
+            flag(
+                "algorithm",
+                "fedavg|hierfl|seqfl|edgeflow_rand|edgeflow_seq|edgeflow_hop|edgeflow_latency",
+            ),
             flag("dropout", "per-round client dropout probability [0,1]"),
+            flag(
+                "deadline-s",
+                "round deadline in simulated network seconds (0 = none); \
+                 late uploads are excluded from aggregation",
+            ),
             flag("dataset", "synth_fashion|synth_cifar"),
             flag("dist", "iid|niid_a|niid_b|noniid<pct>"),
             flag("model", "artifact model variant"),
@@ -211,6 +219,9 @@ fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConf
     if let Some(v) = a.get_f64("dropout")? {
         cfg.dropout = v;
     }
+    if let Some(v) = a.get_f64("deadline-s")? {
+        cfg.deadline_s = v;
+    }
     if let Some(v) = a.get_usize("workers")? {
         cfg.workers = v;
     }
@@ -380,6 +391,7 @@ fn cmd_comm_sim(a: &Args) -> Result<()> {
         Algorithm::EdgeFlowRand,
         Algorithm::EdgeFlowSeq,
         Algorithm::EdgeFlowHop,
+        Algorithm::EdgeFlowLatency,
     ];
     println!(
         "model {model}: {param_count} parameters ({} per transfer)\n",

@@ -23,6 +23,14 @@ pub struct RoundRecord {
     pub aggregate_s: f64,
     /// Simulated network seconds for this round's transfers.
     pub net_s: f64,
+    /// Cumulative simulated wall-clock at the end of this round (the
+    /// persistent DES clock) — lets Fig-3/Fig-4 curves plot against
+    /// simulated time instead of round index.
+    pub clock_s: f64,
+    /// Clients whose simulated upload missed `deadline_s` this round;
+    /// their traffic is charged but they are excluded from the Eq. 3
+    /// reduction.  Empty when no deadline is set.
+    pub stragglers: Vec<usize>,
 }
 
 /// Full experiment result.
@@ -92,6 +100,8 @@ impl ExperimentMetrics {
             "train_s",
             "aggregate_s",
             "net_s",
+            "clock_s",
+            "stragglers",
         ]);
         for r in &self.rounds {
             w.row(&[
@@ -104,6 +114,13 @@ impl ExperimentMetrics {
                 format!("{}", r.train_s),
                 format!("{}", r.aggregate_s),
                 format!("{}", r.net_s),
+                format!("{}", r.clock_s),
+                // semicolon-joined ids: stays a single CSV field
+                r.stragglers
+                    .iter()
+                    .map(ToString::to_string)
+                    .collect::<Vec<_>>()
+                    .join(";"),
             ]);
         }
         w
@@ -128,6 +145,13 @@ impl ExperimentMetrics {
                         ("train_s", r.train_s.into()),
                         ("aggregate_s", r.aggregate_s.into()),
                         ("net_s", r.net_s.into()),
+                        ("clock_s", r.clock_s.into()),
+                        (
+                            "stragglers",
+                            Json::arr(
+                                r.stragglers.iter().map(|&s| Json::from(s)),
+                            ),
+                        ),
                     ])
                 })),
             ),
@@ -166,6 +190,8 @@ mod tests {
             train_s: 0.0,
             aggregate_s: 0.0,
             net_s: 0.0,
+            clock_s: 0.0,
+            stragglers: Vec::new(),
         }
     }
 
@@ -212,11 +238,33 @@ mod tests {
         let mut m = ExperimentMetrics::default();
         let mut r = rec(0, 0.5);
         r.net_s = 1.25;
+        r.clock_s = 3.5;
+        r.stragglers = vec![4, 9];
         m.push(r);
         let j = Json::parse(&m.to_json().dump()).unwrap();
         assert_eq!(j.f64_field("final_accuracy").unwrap(), 0.5);
         let r0 = &j.get("rounds").unwrap().as_arr().unwrap()[0];
         assert_eq!(r0.f64_field("net_s").unwrap(), 1.25);
+        assert_eq!(r0.f64_field("clock_s").unwrap(), 3.5);
+        assert_eq!(r0.get("stragglers").unwrap().as_arr().unwrap().len(), 2);
         assert!((m.total_net_s() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_carries_clock_and_stragglers() {
+        let mut m = ExperimentMetrics::default();
+        let mut r = rec(0, 0.1);
+        r.clock_s = 2.0;
+        r.stragglers = vec![3, 7];
+        m.push(r);
+        m.push(rec(1, 0.2));
+        let text = String::from_utf8(m.to_csv().as_bytes().to_vec()).unwrap();
+        let mut lines = text.lines();
+        let header = lines.next().unwrap();
+        assert!(header.ends_with("net_s,clock_s,stragglers"), "{header}");
+        let row0 = lines.next().unwrap();
+        assert!(row0.ends_with(",2,3;7"), "{row0}");
+        let row1 = lines.next().unwrap();
+        assert!(row1.ends_with(",0,"), "{row1}");
     }
 }

@@ -27,7 +27,7 @@ impl TransferOutcome {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Pending {
     id: usize,
     src: NodeId,
@@ -40,7 +40,7 @@ struct Pending {
 }
 
 /// Heap event: a transfer becomes ready to enter its next hop at `time`.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 struct Event {
     time: f64,
     seq: usize, // FIFO tie-break
@@ -55,42 +55,82 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // total_cmp: a poisoned (NaN) event time must order, not panic —
+        // link parameters are validated at `Topology::add_link`, but the
+        // heap stays safe even against hand-built topologies.
         self.time
-            .partial_cmp(&other.time)
-            .unwrap()
+            .total_cmp(&other.time)
             .then(self.seq.cmp(&other.seq))
     }
 }
 
 /// The simulator.  Deterministic: FIFO per link, ties broken by
 /// submission order.
-pub struct NetSim<'a> {
-    topo: &'a Topology,
+///
+/// A `NetSim` owns (a shared handle to) its topology and is
+/// **persistent**: state (`link_free_s`, the clock) carries across
+/// [`NetSim::run`] calls, so the simulated clock accumulates round after
+/// round, and a caller that keeps traffic in flight across submissions
+/// sees congestion compound instead of an idle network.  (A caller that
+/// drains every round gets idle links back at each boundary — the clock
+/// is then what persists.)  [`NetSim::reset`] restores round-zero
+/// semantics; [`Clone`] supports cheap what-if probes (e.g. the
+/// latency-aware scheduler's candidate transfers).
+#[derive(Clone)]
+pub struct NetSim {
+    /// Shared so probe clones don't deep-copy the graph.
+    topo: std::sync::Arc<Topology>,
     /// Next time each link is free (links are half-duplex single-servers).
     link_free_s: Vec<f64>,
     /// Accumulated busy seconds per link (for utilization reports).
     link_busy_s: Vec<f64>,
+    /// In-flight transfers only: [`NetSim::run`] compacts delivered ones
+    /// away (ids stay globally unique via `id_base`), so a long-lived
+    /// persistent sim stays O(round), not O(history).
     pending: Vec<Pending>,
     events: BinaryHeap<Reverse<Event>>,
     seq: usize,
     clock_s: f64,
+    /// Transfer ids below this belong to already-compacted runs.
+    id_base: usize,
 }
 
-impl<'a> NetSim<'a> {
-    pub fn new(topo: &'a Topology) -> NetSim<'a> {
+impl NetSim {
+    pub fn new(topo: &Topology) -> NetSim {
         NetSim {
-            topo,
+            topo: std::sync::Arc::new(topo.clone()),
             link_free_s: vec![0.0; topo.link_count()],
             link_busy_s: vec![0.0; topo.link_count()],
             pending: Vec::new(),
             events: BinaryHeap::new(),
             seq: 0,
             clock_s: 0.0,
+            id_base: 0,
         }
     }
 
-    /// Queue a transfer for delivery; routed on the latency-weighted
-    /// shortest path at submission time.
+    /// Drop all traffic history and return to an idle network at clock 0
+    /// — the pre-persistence escape hatch for per-round-makespan use.
+    pub fn reset(&mut self) {
+        for v in &mut self.link_free_s {
+            *v = 0.0;
+        }
+        for v in &mut self.link_busy_s {
+            *v = 0.0;
+        }
+        self.pending.clear();
+        self.events.clear();
+        self.seq = 0;
+        self.clock_s = 0.0;
+        self.id_base = 0;
+    }
+
+    /// Queue a transfer for delivery; routed on `routes` (the DES
+    /// contract is latency-weighted routing — pass
+    /// [`RouteTable::latency`] unless a test deliberately rides
+    /// hop-shortest paths) at submission time.  Once [`NetSim::run`] has
+    /// drained earlier traffic, `at_s` must not precede [`NetSim::now_s`]
+    /// (the clock is monotone).
     pub fn submit(
         &mut self,
         routes: &RouteTable,
@@ -102,7 +142,8 @@ impl<'a> NetSim<'a> {
         let path = routes
             .path(src, dst)
             .ok_or_else(|| Error::Topology(format!("no route {src:?} -> {dst:?}")))?;
-        let id = self.pending.len();
+        let idx = self.pending.len();
+        let id = self.id_base + idx;
         self.pending.push(Pending {
             id,
             src,
@@ -113,7 +154,7 @@ impl<'a> NetSim<'a> {
             next_hop: 0,
             queue_wait_s: 0.0,
         });
-        self.events.push(Reverse(Event { time: at_s, seq: self.seq, pending_idx: id }));
+        self.events.push(Reverse(Event { time: at_s, seq: self.seq, pending_idx: idx }));
         self.seq += 1;
         Ok(id)
     }
@@ -161,7 +202,11 @@ impl<'a> NetSim<'a> {
             }));
             self.seq += 1;
         }
-        done.sort_by(|a, b| a.delivered_s.partial_cmp(&b.delivered_s).unwrap());
+        // Everything delivered (the loop drains the heap): compact the
+        // bookkeeping so a persistent sim doesn't accumulate history.
+        self.id_base += self.pending.len();
+        self.pending.clear();
+        done.sort_by(|a, b| a.delivered_s.total_cmp(&b.delivered_s));
         done
     }
 
@@ -270,6 +315,96 @@ mod tests {
         sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
         sim.run();
         assert!((sim.utilization(LinkId(0), 2.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn state_persists_across_runs() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let first = sim.run();
+        assert!((sim.now_s() - 1.1).abs() < 1e-9);
+        // Same transfer submitted at the carried-forward clock: delivery
+        // time stacks on the first round instead of restarting at zero.
+        let at = sim.now_s();
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, at).unwrap();
+        let second = sim.run();
+        assert!((second[0].delivered_s - (first[0].delivered_s + 1.1)).abs() < 1e-9);
+        assert_eq!(second[0].queue_wait_s, 0.0, "link freed before resubmit");
+    }
+
+    #[test]
+    fn congestion_compounds_across_undrained_rounds() {
+        // Two "rounds" submitted into one persistent sim without draining
+        // in between: the second queues behind the first instead of
+        // seeing an idle network.
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.5).unwrap();
+        let out = sim.run();
+        assert!((out[1].queue_wait_s - 0.5).abs() < 1e-9, "{}", out[1].queue_wait_s);
+        assert!((out[1].delivered_s - 2.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_restores_idle_network() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let fresh = sim.run()[0].latency_s();
+        sim.reset();
+        assert_eq!(sim.now_s(), 0.0);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let out = sim.run();
+        assert_eq!(out[0].latency_s(), fresh);
+        assert_eq!(out[0].queue_wait_s, 0.0);
+    }
+
+    #[test]
+    fn cloned_probe_leaves_original_untouched() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        sim.run();
+        let clock = sim.now_s();
+        let mut probe = sim.clone();
+        probe.submit(&rt, NodeId(0), NodeId(1), 1_000_000, probe.now_s()).unwrap();
+        probe.run();
+        assert!(probe.now_s() > clock);
+        assert_eq!(sim.now_s(), clock, "probe must not advance the original");
+    }
+
+    #[test]
+    fn transfer_ids_stay_unique_across_compacted_runs() {
+        // run() compacts delivered bookkeeping; ids must keep advancing so
+        // a persistent caller can never confuse two rounds' transfers.
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        let a = sim.submit(&rt, NodeId(0), NodeId(1), 10, 0.0).unwrap();
+        sim.run();
+        let at = sim.now_s();
+        let b = sim.submit(&rt, NodeId(0), NodeId(1), 10, at).unwrap();
+        let out = sim.run();
+        assert_ne!(a, b);
+        assert_eq!(out[0].id, b);
+        sim.reset();
+        assert_eq!(sim.submit(&rt, NodeId(0), NodeId(1), 10, 0.0).unwrap(), 0);
+    }
+
+    #[test]
+    fn nan_event_times_order_without_panicking() {
+        // Event ordering is total: a poisoned time must not abort the heap.
+        let a = Event { time: f64::NAN, seq: 0, pending_idx: 0 };
+        let b = Event { time: 1.0, seq: 1, pending_idx: 1 };
+        let _ = a.cmp(&b);
+        let _ = b.cmp(&a);
+        assert_eq!(a.cmp(&a), std::cmp::Ordering::Equal);
     }
 
     #[test]

@@ -63,6 +63,16 @@ impl Topology {
     ) -> LinkId {
         assert!(a.0 < self.kinds.len() && b.0 < self.kinds.len(), "bad node");
         assert_ne!(a, b, "self-link");
+        // A poisoned link would propagate NaN event times through the DES;
+        // reject it at the source.
+        assert!(
+            bandwidth_mbps.is_finite() && bandwidth_mbps > 0.0,
+            "bad bandwidth {bandwidth_mbps} (must be finite and positive)"
+        );
+        assert!(
+            latency_ms.is_finite() && latency_ms >= 0.0,
+            "bad latency {latency_ms} (must be finite and non-negative)"
+        );
         let id = LinkId(self.links.len());
         self.links.push(Link { a, b, bandwidth_mbps, latency_ms });
         self.adj[a.0].push((b, id));
@@ -164,5 +174,23 @@ mod tests {
         let mut t = Topology::new();
         let a = t.add_node(NodeKind::Router);
         t.add_link(a, a, 1.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad latency")]
+    fn rejects_nan_latency() {
+        let mut t = Topology::new();
+        let a = t.add_node(NodeKind::Router);
+        let b = t.add_node(NodeKind::Router);
+        t.add_link(a, b, 1.0, f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad bandwidth")]
+    fn rejects_zero_bandwidth() {
+        let mut t = Topology::new();
+        let a = t.add_node(NodeKind::Router);
+        let b = t.add_node(NodeKind::Router);
+        t.add_link(a, b, 0.0, 1.0);
     }
 }

@@ -32,6 +32,23 @@ fn unknown_flag_exits_2() {
 }
 
 #[test]
+fn train_help_lists_new_knobs() {
+    let out = bin().args(["train", "--help"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--deadline-s"), "{text}");
+    assert!(text.contains("edgeflow_latency"), "{text}");
+}
+
+#[test]
+fn train_rejects_negative_deadline() {
+    let out = bin().args(["train", "--deadline-s", "-2"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("deadline_s"), "{text}");
+}
+
+#[test]
 fn presets_print() {
     let out = bin().arg("presets").output().unwrap();
     assert!(out.status.success());

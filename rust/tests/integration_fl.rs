@@ -330,6 +330,158 @@ fn rounds_report_simulated_network_time() {
 }
 
 #[test]
+fn clock_s_accumulates_round_makespans() {
+    // The persistent DES: each round opens at the previous round's clock,
+    // so clock_s is the running sum of per-round makespans — the simulated
+    // wall-clock axis for time-resolved convergence curves.
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 5;
+    let mut r = Runner::with_engine(e, cfg).unwrap();
+    let report = r.run().unwrap();
+    let mut expected = 0.0;
+    for rec in &report.metrics.rounds {
+        expected += rec.net_s;
+        assert!(
+            (rec.clock_s - expected).abs() < 1e-9,
+            "round {}: clock {} vs accumulated {}",
+            rec.round,
+            rec.clock_s,
+            expected
+        );
+    }
+    assert!((r.net_clock_s() - expected).abs() < 1e-9);
+}
+
+#[test]
+fn net_s_monotone_in_model_size() {
+    // Same federation, same schedule, same transfers — only the model's
+    // wire bytes differ, so per-round simulated network time must not
+    // decrease with model size.
+    let Some(e) = engine() else { return };
+    let run = |model: &str| {
+        let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+        cfg.model = model.into();
+        cfg.clients = 4;
+        cfg.clusters = 2;
+        cfg.rounds = 3;
+        cfg.samples_per_client = 64;
+        cfg.test_samples = 100;
+        cfg.eval_every = 3;
+        let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+        let bytes = r.state().param_bytes();
+        (bytes, r.run().unwrap())
+    };
+    let (bytes_a, rep_a) = run("fashion_mlp");
+    let (bytes_b, rep_b) = run("fashion_cnn_slim_fast");
+    let ((_, small), (b_big, big)) = if bytes_a <= bytes_b {
+        ((bytes_a, rep_a), (bytes_b, rep_b))
+    } else {
+        ((bytes_b, rep_b), (bytes_a, rep_a))
+    };
+    for (s, b) in small.metrics.rounds.iter().zip(&big.metrics.rounds) {
+        assert!(
+            b.net_s >= s.net_s,
+            "round {}: {} bytes took {}s vs {}s",
+            s.round,
+            b_big,
+            b.net_s,
+            s.net_s
+        );
+    }
+}
+
+#[test]
+fn all_dropped_rounds_leave_net_clock_unchanged() {
+    // A lost round moves no bytes, so the persistent sim clock must not
+    // advance — the simulated time axis only runs when traffic flows.
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 3;
+    cfg.dropout = 1.0;
+    let mut r = Runner::with_engine(e, cfg).unwrap();
+    let report = r.run().unwrap();
+    assert_eq!(r.net_clock_s(), 0.0);
+    for rec in &report.metrics.rounds {
+        assert_eq!(rec.net_s, 0.0);
+        assert_eq!(rec.clock_s, 0.0);
+        assert!(rec.stragglers.is_empty());
+    }
+}
+
+#[test]
+fn impossible_deadline_freezes_model_but_charges_traffic() {
+    // deadline_s far below any physical delivery time: every upload is
+    // late, every round records its cluster as stragglers, the model
+    // never moves — but the (late) traffic is still charged and the sim
+    // clock still advances.
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 3;
+    cfg.deadline_s = 1e-9;
+    let mut r = Runner::with_engine(e, cfg).unwrap();
+    let before = r.state().data.clone();
+    let report = r.run().unwrap();
+    assert_eq!(r.state().data, before, "all-straggled rounds must not train");
+    assert!(report.total_byte_hops > 0, "late uploads still transmit");
+    assert!(r.net_clock_s() > 0.0);
+    for rec in &report.metrics.rounds {
+        assert!(rec.train_loss.is_nan());
+        assert_eq!(rec.stragglers.len(), 5, "whole cluster late (N_m = 5)");
+        assert!(rec.net_s > 0.0);
+    }
+}
+
+#[test]
+fn generous_deadline_matches_no_deadline_run() {
+    // A deadline nothing can miss must not perturb the run in any way.
+    let Some(e) = engine() else { return };
+    let run = |deadline_s: f64| {
+        let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+        cfg.rounds = 4;
+        cfg.deadline_s = deadline_s;
+        let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+        let rep = r.run().unwrap();
+        (r.state().data.clone(), rep)
+    };
+    let (state_none, rep_none) = run(0.0);
+    let (state_slack, rep_slack) = run(1e9);
+    assert_eq!(state_none, state_slack);
+    assert_eq!(rep_none.total_byte_hops, rep_slack.total_byte_hops);
+    for (a, b) in rep_none
+        .metrics
+        .rounds
+        .iter()
+        .zip(&rep_slack.metrics.rounds)
+    {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert!(b.stragglers.is_empty());
+    }
+}
+
+#[test]
+fn edgeflow_latency_trains_end_to_end() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowLatency);
+    cfg.topology = TopologyKind::Hybrid;
+    cfg.rounds = 12;
+    let report = Runner::with_engine(e, cfg).unwrap().run().unwrap();
+    assert_eq!(report.algorithm, "edgeflow_latency");
+    assert!(report.final_loss.is_finite());
+    assert!(report.final_accuracy > 0.1);
+    // the tour visits every cluster in each 4-round cycle
+    for cycle in 0..3 {
+        let mut seen: Vec<usize> = report.metrics.rounds
+            [cycle * 4..cycle * 4 + 4]
+            .iter()
+            .map(|r| r.cluster)
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3], "cycle {cycle}");
+    }
+}
+
+#[test]
 fn dropout_half_still_trains() {
     let Some(e) = engine() else { return };
     let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);

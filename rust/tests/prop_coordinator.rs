@@ -291,9 +291,9 @@ fn prop_fedavg_sampling_without_replacement() {
         };
         let topo = build(&TopologyParams::new(TopologyKind::Simple, clusters, clients / clusters))
             .map_err(|e| e.to_string())?;
-        let mut s = Strategy::for_config(&cfg, &fed, &topo);
+        let mut s = Strategy::for_config(&cfg, &fed, &topo, 40_000);
         for t in 0..10 {
-            let p = s.plan_round(t, &fed);
+            let p = s.plan_round(t, &fed, None);
             let mut ids = p.participants();
             let n = ids.len();
             ids.sort_unstable();
@@ -333,6 +333,7 @@ fn prop_config_json_roundtrip() {
             seed: g.int(0, 1 << 30) as u64,
             workers: g.int(0, 8),
             dropout: g.int(0, 99) as f64 / 100.0,
+            deadline_s: g.int(0, 50) as f64 / 10.0,
         };
         let cfg = cfg.validate().map_err(|e| e.to_string())?;
         let text = cfg.to_json().pretty();
