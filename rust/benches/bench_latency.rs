@@ -50,7 +50,10 @@ fn run_schedule(
     .expect("federation");
     let topo = build(params).expect("topology");
     let routes = RouteTable::hops(&topo);
-    let sim_routes = RouteTable::latency(&topo);
+    // Like the runner: the DES rides bandwidth-aware transfer-time
+    // routes sized to the migrating model, so the latency-aware
+    // schedule's probes predict exactly what its migrations pay.
+    let sim_routes = RouteTable::transfer_time(&topo, MODEL_BYTES);
     let cfg = ExperimentConfig {
         algorithm: alg,
         clients,

@@ -66,6 +66,38 @@ impl Algorithm {
     ];
 }
 
+/// What happens to a client whose simulated upload misses the round
+/// deadline (`deadline_s`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StragglerPolicy {
+    /// The late update is discarded: the straggler is excluded from the
+    /// round's Eq. 3 reduction and its work is lost (PR 2 behavior).
+    Drop,
+    /// Straggler re-inclusion: the late update is held in session state
+    /// and folded, with its Eq. 3 sample weight, into the next round's
+    /// reduction instead of being discarded.
+    Defer,
+}
+
+impl StragglerPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StragglerPolicy::Drop => "drop",
+            StragglerPolicy::Defer => "defer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<StragglerPolicy> {
+        match s {
+            "drop" => Ok(StragglerPolicy::Drop),
+            "defer" => Ok(StragglerPolicy::Defer),
+            other => Err(Error::Config(format!(
+                "unknown straggler policy {other:?} (drop|defer)"
+            ))),
+        }
+    }
+}
+
 /// Client data distribution (paper §IV.A, Fig 2).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Distribution {
@@ -245,6 +277,10 @@ pub struct ExperimentConfig {
     /// excluded from the round's Eq. 3 reduction and recorded in
     /// `RoundRecord::stragglers`.
     pub deadline_s: f64,
+    /// What to do with a straggler's late update: `drop` discards it
+    /// (default), `defer` folds it into the next round's reduction with
+    /// its Eq. 3 weight (`RoundRecord::deferred` records the fold).
+    pub straggler_policy: StragglerPolicy,
 }
 
 impl Default for ExperimentConfig {
@@ -270,6 +306,7 @@ impl Default for ExperimentConfig {
             workers: 1,
             dropout: 0.0,
             deadline_s: 0.0,
+            straggler_policy: StragglerPolicy::Drop,
         }
     }
 }
@@ -352,6 +389,7 @@ impl ExperimentConfig {
             ("workers", self.workers.into()),
             ("dropout", self.dropout.into()),
             ("deadline_s", self.deadline_s.into()),
+            ("straggler_policy", self.straggler_policy.name().into()),
         ])
     }
 
@@ -413,6 +451,11 @@ impl ExperimentConfig {
                 .get("deadline_s")
                 .and_then(Json::as_f64)
                 .unwrap_or(d.deadline_s),
+            straggler_policy: match v.get("straggler_policy").and_then(Json::as_str)
+            {
+                Some(s) => StragglerPolicy::parse(s)?,
+                None => d.straggler_policy,
+            },
         };
         cfg.validate()
     }
@@ -586,6 +629,28 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.deadline_s = f64::NAN;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn straggler_policy_parses_and_roundtrips() {
+        assert_eq!(StragglerPolicy::parse("drop").unwrap(), StragglerPolicy::Drop);
+        assert_eq!(
+            StragglerPolicy::parse("defer").unwrap(),
+            StragglerPolicy::Defer
+        );
+        assert!(StragglerPolicy::parse("hold").is_err());
+        let cfg = ExperimentConfig {
+            straggler_policy: StragglerPolicy::Defer,
+            ..ExperimentConfig::default()
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.straggler_policy, StragglerPolicy::Defer);
+        // absent field keeps the drop default
+        let none = Json::parse("{}").unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&none).unwrap().straggler_policy,
+            StragglerPolicy::Drop
+        );
     }
 
     #[test]

@@ -41,8 +41,9 @@ pub struct RoundComm {
 /// Record one round's transfers into `acc` (routed on `routes` — the
 /// paper's hop-count load metric); optionally simulate their timing in a
 /// DES.  `sim` carries its own route table (submitted at `at_s`): the
-/// simulator's contract is latency-weighted routing, which on diamond
-/// topologies disagrees with the hop-shortest accounting routes.
+/// simulator rides time-weighted routes — latency, or bandwidth-aware
+/// transfer time when the model size is known — which on diamond
+/// topologies disagree with the hop-shortest accounting routes.
 #[allow(clippy::too_many_arguments)]
 pub fn record_round(
     plan: &RoundPlan,

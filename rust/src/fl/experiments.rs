@@ -12,6 +12,11 @@
 //! one compiled-executable cache).  Cell results are collected in cell
 //! order, so suite output is identical at any worker count; per-cell
 //! runners stay sequential to avoid oversubscribing the host.
+//!
+//! Cells drive the stepwise session API directly — `step()` until done,
+//! then `report()` — rather than the `run()` convenience loop, so suite
+//! cells and any future per-round suite instrumentation share one code
+//! path with external drivers.
 
 use std::sync::Arc;
 
@@ -30,6 +35,15 @@ use crate::topology::builder::{build, TopologyParams};
 use crate::topology::route::RouteTable;
 use crate::util::error::Result;
 use crate::util::table::{Align, Table};
+
+/// Drive one experiment cell through the stepwise session API.
+fn run_cell(engine: &Arc<Engine>, cfg: ExperimentConfig) -> Result<RunReport> {
+    let mut r = Runner::with_engine(engine.clone(), cfg)?;
+    while !r.is_done() {
+        r.step()?;
+    }
+    Ok(r.report())
+}
 
 /// Scale knobs for the training suites.
 #[derive(Debug, Clone)]
@@ -125,7 +139,7 @@ pub fn table1(engine: &Arc<Engine>, o: &SuiteOptions, fast: bool) -> Result<(Tab
         let (ds, dist, alg) = &specs[i];
         let cfg = base_config(*ds, dist.clone(), *alg, o);
         log::info!("table1 cell: {}", cfg.name);
-        Runner::with_engine(engine.clone(), cfg)?.run()
+        run_cell(engine, cfg)
     })?;
     let results: Vec<Cell> = specs
         .into_iter()
@@ -189,7 +203,7 @@ pub fn fig3a(
         cfg.clusters = 100 / n_m;
         cfg.name = format!("fig3a_nm{n_m}");
         log::info!("fig3a: N_m = {n_m}");
-        Runner::with_engine(engine.clone(), cfg)?.run()
+        run_cell(engine, cfg)
     })?;
     Ok(cluster_sizes.iter().copied().zip(reports).collect())
 }
@@ -212,7 +226,7 @@ pub fn fig3b(
         cfg.local_steps = k;
         cfg.name = format!("fig3b_k{k}");
         log::info!("fig3b: K = {k}");
-        Runner::with_engine(engine.clone(), cfg)?.run()
+        run_cell(engine, cfg)
     })?;
     Ok(ks.iter().copied().zip(reports).collect())
 }
@@ -273,11 +287,11 @@ pub fn fig4(
         let kind = TopologyKind::ALL[ti];
         let topo = build(&TopologyParams::new(kind, clusters, clients_per_cluster))?;
         // Hop-count routes drive the accounting (the paper's metric is
-        // hop-weighted); the DES rides the latency-weighted routes its
-        // contract documents — the two disagree e.g. on the BS-ring
-        // shortcuts of the breadth structures.
+        // hop-weighted); the DES rides bandwidth-aware transfer-time
+        // routes sized to the model, like the runner — the two disagree
+        // e.g. on the BS-ring shortcuts of the breadth structures.
         let routes = RouteTable::hops(&topo);
-        let sim_routes = RouteTable::latency(&topo);
+        let sim_routes = RouteTable::transfer_time(&topo, model_bytes);
         let mut per_alg: Vec<(Algorithm, f64, f64, f64)> = Vec::new();
         for &alg in algorithms {
             let cfg = ExperimentConfig {

@@ -7,8 +7,15 @@
 //!   a topology (drives Fig 4 and the in-training accounting).
 //! * [`strategy`] — round planning for FedAvg / Hierarchical FL /
 //!   Sequential FL / EdgeFLowRand / EdgeFLowSeq.
-//! * [`runner`] — the experiment driver: train loop, aggregation,
-//!   evaluation, metrics.
+//! * [`runner`] — the experiment driver as a **stepwise round session**:
+//!   [`Runner::step`] executes one round and returns a typed
+//!   [`session::RoundOutcome`]; `run()` is a thin loop over it.
+//!   [`runner::RunnerCheckpoint`] serializes the whole session for
+//!   bit-identical resume.
+//! * [`session`] — the session vocabulary: [`session::RoundObserver`]
+//!   hooks with the [`session::RoundControl`] back-channel (early stop,
+//!   adaptive deadlines), built-in progress/metrics observers, and the
+//!   straggler re-inclusion pool behind `straggler_policy = defer`.
 //! * [`theory`] — Theorem 1's convergence bound (Eq. 8), term by term.
 
 pub mod aggregate;
@@ -17,9 +24,11 @@ pub mod compress;
 pub mod experiments;
 pub mod runner;
 pub mod scheduler;
+pub mod session;
 pub mod strategy;
 pub mod theory;
 
-pub use runner::{Runner, RunReport};
+pub use runner::{RunReport, Runner, RunnerCheckpoint};
 pub use scheduler::ClusterSchedule;
+pub use session::{LostCause, RoundControl, RoundObserver, RoundOutcome};
 pub use strategy::{RoundPlan, Strategy};

@@ -1,5 +1,26 @@
 //! The experiment driver: wires data, topology, runtime and strategy into
-//! the round loop of Algorithm 1.
+//! the round loop of Algorithm 1 — exposed as a **stepwise round
+//! session**.
+//!
+//! [`Runner::step`] executes exactly one round (plan → communicate →
+//! train → aggregate → migrate) and returns a typed
+//! [`RoundOutcome`]; [`Runner::run`] is nothing but a thin loop over
+//! `step()` that any caller can reimplement.  Around the session:
+//!
+//! * [`RoundObserver`]s hook the phases of each round and can request
+//!   early stop / deadline changes through [`RoundControl`] (see
+//!   [`crate::fl::session`]); progress logging is the built-in
+//!   [`crate::fl::session::ProgressObserver`].
+//! * [`Runner::checkpoint`] / [`Runner::restore`] serialize the whole
+//!   session — model state, the persistent [`NetSim`] clock, every RNG
+//!   stream, the scheduler cursor, accumulated metrics and pending
+//!   deferred updates — such that a run checkpointed at round T and
+//!   resumed is **bit-identical** to the uninterrupted run (wall-clock
+//!   phase timings excepted, by nature).
+//! * `straggler_policy = defer` re-includes stragglers: a late update is
+//!   held in the session's [`crate::fl::session::DeferredPool`] and
+//!   folded, with its Eq. 3 sample weight, into the next round's
+//!   reduction instead of being discarded.
 //!
 //! Local updates within a round fan out across a [`WorkerPool`]: each
 //! worker owns one `LocalUpdateExe` handle and pulls `(group, client)`
@@ -10,14 +31,19 @@
 
 use std::sync::Arc;
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, StragglerPolicy};
 use crate::data::loader::ClientLoader;
 use crate::data::partition::{build_federation, Federation};
 use crate::fl::aggregate::par_reduce_states_weighted;
 use crate::fl::comm::{record_round, CommOptions};
-use crate::fl::strategy::Strategy;
+use crate::fl::session::{
+    DeferredPool, DeferredUpdate, LostCause, ProgressObserver, RoundControl,
+    RoundObserver, RoundOutcome,
+};
+use crate::fl::strategy::{AggregationSite, Strategy};
 use crate::metrics::{ExperimentMetrics, RoundRecord};
-use crate::netsim::NetSim;
+use crate::netsim::{NetSim, NetSimState};
+use crate::rng::{Rng, RngState};
 use crate::runtime::executor::{Engine, EvalExe, LocalUpdateExe};
 use crate::runtime::params::ModelState;
 use crate::runtime::pool::WorkerPool;
@@ -26,7 +52,9 @@ use crate::topology::builder::{build, TopologyParams};
 use crate::topology::graph::Topology;
 use crate::topology::route::RouteTable;
 use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 use crate::util::timer::Timer;
+use crate::util::{bytes_from_hex, bytes_to_hex, f64_from_hex, f64_to_hex};
 
 /// Result summary of one experiment run.
 #[derive(Debug, Clone)]
@@ -35,15 +63,20 @@ pub struct RunReport {
     pub algorithm: &'static str,
     pub final_accuracy: f64,
     pub best_accuracy: f64,
+    /// Last *finite* per-round training loss (a final round lost to
+    /// dropout/stragglers must not turn this NaN).
     pub final_loss: f64,
     pub total_byte_hops: u64,
+    /// Rounds actually executed (== configured rounds unless an observer
+    /// stopped the session early).
     pub rounds: usize,
     pub metrics: ExperimentMetrics,
-    /// Wall-clock seconds by phase (train/aggregate/eval/comm).
+    /// Wall-clock seconds by phase (train/aggregate/eval/comm) — this
+    /// process's work only; timings do not survive checkpoint/resume.
     pub phase_seconds: Vec<(String, f64)>,
 }
 
-/// The experiment runner.
+/// The experiment runner: a stepwise round session over Algorithm 1.
 pub struct Runner {
     pub cfg: ExperimentConfig,
     engine: Arc<Engine>,
@@ -60,7 +93,7 @@ pub struct Runner {
     pool: WorkerPool,
     pub accountant: CommAccountant,
     /// Failure-injection stream (client dropout).
-    dropout_rng: crate::rng::Rng,
+    dropout_rng: Rng,
     /// Persistent network DES: link state and the simulated clock carry
     /// across rounds, so `clock_s` accumulates into a simulated
     /// wall-clock.  Rounds are synchronous barriers (each drains before
@@ -68,6 +101,22 @@ pub struct Runner {
     /// — contention lives *within* a round; the carried state is the
     /// clock.  `NetSim::reset` restores round-zero semantics.
     net: NetSim,
+    // ------------------------------------------------- session state
+    /// Next round to execute (== rounds executed so far, counting any
+    /// restored history).
+    cursor: usize,
+    /// Set by an observer's stop request; `is_done()` honors it.
+    stopped: bool,
+    /// Active round deadline in simulated seconds (0 = off).  Starts at
+    /// `cfg.deadline_s`; observers may adjust it per round.
+    deadline_s: f64,
+    /// Per-round records accumulated across `step()` calls (and restored
+    /// by `restore()`).
+    metrics: ExperimentMetrics,
+    timer: Timer,
+    /// Straggler re-inclusion pool (`straggler_policy = defer`).
+    deferred: DeferredPool,
+    observers: Vec<Box<dyn RoundObserver>>,
 }
 
 impl Runner {
@@ -129,7 +178,10 @@ impl Runner {
             .map(|_| engine.local_update(&cfg.model, &cfg.optimizer, cfg.local_steps))
             .collect::<Result<Vec<_>>>()?;
         let ev = engine.eval(&cfg.model, &cfg.optimizer)?;
-        let dropout_rng = crate::rng::Rng::new(cfg.seed ^ 0xD509_0A7);
+        let dropout_rng = Rng::new(cfg.seed ^ 0xD509_0A7);
+        let observers: Vec<Box<dyn RoundObserver>> =
+            vec![Box::new(ProgressObserver::new(strategy.name()))];
+        let deadline_s = cfg.deadline_s;
         Ok(Runner {
             cfg,
             engine,
@@ -144,6 +196,13 @@ impl Runner {
             accountant: CommAccountant::new(),
             dropout_rng,
             net,
+            cursor: 0,
+            stopped: false,
+            deadline_s,
+            metrics: ExperimentMetrics::default(),
+            timer: Timer::new(),
+            deferred: DeferredPool::default(),
+            observers,
         })
     }
 
@@ -160,6 +219,34 @@ impl Runner {
     /// The shared engine.
     pub fn engine(&self) -> &Arc<Engine> {
         &self.engine
+    }
+
+    /// Metrics accumulated so far (every executed round's record).
+    pub fn metrics(&self) -> &ExperimentMetrics {
+        &self.metrics
+    }
+
+    /// Next round index (== rounds executed so far).
+    pub fn round(&self) -> usize {
+        self.cursor
+    }
+
+    /// True once every configured round ran or an observer stopped the
+    /// session.
+    pub fn is_done(&self) -> bool {
+        self.stopped || self.cursor >= self.cfg.rounds
+    }
+
+    /// Clients with a pending deferred late update (straggler
+    /// re-inclusion), ascending.
+    pub fn pending_deferrals(&self) -> Vec<usize> {
+        self.deferred.clients()
+    }
+
+    /// Attach an observer; hooks fire in attachment order, after the
+    /// built-in progress logger.
+    pub fn add_observer(&mut self, observer: Box<dyn RoundObserver>) {
+        self.observers.push(observer);
     }
 
     /// Evaluate the current global model on the held-out test set.
@@ -189,240 +276,642 @@ impl Runner {
         self.lus[0].run(&self.state, &batch, self.cfg.lr as f32)
     }
 
-    /// Run the full experiment.
-    pub fn run(&mut self) -> Result<RunReport> {
-        let mut metrics = ExperimentMetrics::default();
-        let mut timer = Timer::new();
-        // Byte-hop accounting stays on hop-shortest routes (the paper's
-        // load metric); the DES rides the latency-weighted routes its
-        // contract documents — on diamond topologies the two disagree.
-        let routes = RouteTable::hops(&self.topo);
-        let sim_routes = RouteTable::latency(&self.topo);
+    /// Execute exactly one round — the session's unit of progress — and
+    /// return its typed outcome.  Errors once the session [`is
+    /// done`](Runner::is_done).
+    pub fn step(&mut self) -> Result<RoundOutcome> {
+        if self.is_done() {
+            return Err(Error::Config(format!(
+                "round session is complete after {} rounds — step() has \
+                 nothing left to execute",
+                self.cursor
+            )));
+        }
+        let t = self.cursor;
+        self.timer.lap("idle");
         let model_bytes = self.state.param_bytes();
-        let rounds = self.cfg.rounds;
-        let deadline = self.cfg.deadline_s;
 
-        for t in 0..rounds {
-            timer.lap("idle");
-            let mut plan = self.strategy.plan_round(t, &self.fed, Some(&self.net));
+        let mut plan = self.strategy.plan_round(t, &self.fed, Some(&self.net));
+        self.notify(|o, ctl| o.on_plan(t, &plan, ctl));
 
-            // --- failure injection ---------------------------------------
-            if self.cfg.dropout > 0.0 {
-                let p = self.cfg.dropout;
-                for (_m, members) in &mut plan.groups {
-                    members.retain(|_| !self.dropout_rng.chance(p));
-                }
-                plan.groups.retain(|(_, v)| !v.is_empty());
-                if plan.groups.is_empty() {
-                    // Every selected client dropped: the round is lost; the
-                    // model (and any scheduled migration) carries over, and
-                    // nothing touches the network, so the persistent sim
-                    // clock stays put.
-                    log::debug!("round {t}: all participants dropped");
-                    metrics.push(lost_round_record(
-                        t,
-                        plan.cluster,
-                        0,
-                        0.0,
-                        self.net.now_s(),
-                        Vec::new(),
-                    ));
-                    continue;
-                }
+        // --- failure injection ---------------------------------------
+        if self.cfg.dropout > 0.0 {
+            let p = self.cfg.dropout;
+            for (_m, members) in &mut plan.groups {
+                members.retain(|_| !self.dropout_rng.chance(p));
             }
-
-            // --- communication accounting + network simulation -----------
-            // Simulated *before* the numeric work: delivery times decide
-            // which uploads make the round's deadline, and stragglers must
-            // be excluded from the Eq. 3 reduction below.  (The DES is
-            // independent of the trained values, so the reordering cannot
-            // change any report.)
-            let round_start = self.net.now_s();
-            let comm = record_round(
-                &plan,
-                &self.topo,
-                &routes,
-                &mut self.accountant,
-                model_bytes,
-                t,
-                CommOptions::default(),
-                Some((&mut self.net, &sim_routes, round_start)),
-            )?;
-            let byte_hops = comm.byte_hops;
-            let outcomes = self.net.run();
-            // The round's simulated network time is the makespan of its
-            // transfers on the carried-forward network state.
-            let net_s = outcomes
-                .iter()
-                .map(|o| o.delivered_s)
-                .fold(round_start, f64::max)
-                - round_start;
-            let mut stragglers: Vec<usize> = Vec::new();
-            if deadline > 0.0 {
-                for &(client, sim_id) in &comm.uploads {
-                    let late = outcomes
-                        .iter()
-                        .find(|o| o.id == sim_id)
-                        .is_some_and(|o| o.delivered_s - round_start > deadline);
-                    if late {
-                        stragglers.push(client);
-                    }
-                }
-                stragglers.sort_unstable();
-                if !stragglers.is_empty() {
-                    log::debug!(
-                        "round {t}: {} stragglers past deadline_s={deadline}",
-                        stragglers.len()
-                    );
-                    for (_m, members) in &mut plan.groups {
-                        members.retain(|id| !stragglers.contains(id));
-                    }
-                    plan.groups.retain(|(_, v)| !v.is_empty());
-                }
-            }
-            timer.lap("comm");
-
+            plan.groups.retain(|(_, v)| !v.is_empty());
             if plan.groups.is_empty() {
-                // Every surviving client straggled: the traffic was spent,
-                // but nothing aggregates; the model carries over.
-                metrics.push(lost_round_record(
+                // Every selected client dropped: the round is lost; the
+                // model (and any scheduled migration) carries over, and
+                // nothing touches the network, so the persistent sim
+                // clock stays put.
+                log::debug!("round {t}: all participants dropped");
+                let record = lost_round_record(
                     t,
                     plan.cluster,
-                    byte_hops,
-                    net_s,
+                    0,
+                    0.0,
                     self.net.now_s(),
-                    stragglers,
-                ));
-                continue;
-            }
-
-            // --- local updates (fanned out across the pool) --------------
-            // Groups run one after another; members *within* a group fan
-            // out across the pool and come back in member order, so the
-            // loss vector and the reduction below see an identical
-            // operand sequence at any worker count.  Per-group fan-out
-            // also bounds peak memory at one group's states (HierFL's
-            // full-participation rounds would otherwise hold every
-            // client's state at once), and each group's partial is
-            // reduced — by sample count, paper Eq. 3 — before the next
-            // group trains.
-            let mut losses = Vec::new();
-            let mut group_states: Vec<(f64, ModelState)> =
-                Vec::with_capacity(plan.groups.len());
-            for (_m, members) in &plan.groups {
-                let results: Vec<Result<(ModelState, f32)>> = {
-                    let state = &self.state;
-                    let loader = &self.loader;
-                    let fed = &self.fed;
-                    let lus = &self.lus;
-                    let k = self.cfg.local_steps;
-                    let lr = self.cfg.lr as f32;
-                    self.pool.run(members.len(), move |i, w| {
-                        let id = members[i];
-                        let batch =
-                            loader.local_batches(&fed.train, &fed.clients[id], t, k);
-                        lus[w].run(state, &batch, lr)
-                    })
-                };
-                let mut weighted = Vec::with_capacity(members.len());
-                for (&id, r) in members.iter().zip(results) {
-                    let (s, loss) = r?;
-                    if !loss.is_finite() {
-                        return Err(Error::Data(format!(
-                            "non-finite loss at round {t} client {id} — \
-                             lower the learning rate"
-                        )));
-                    }
-                    losses.push(loss as f64);
-                    weighted.push((self.client_weight(id), s));
-                }
-                group_states.push(par_reduce_states_weighted(weighted, &self.pool)?);
-            }
-            let train_s = timer.lap("train").as_secs_f64();
-
-            // --- aggregation (Eq. 3) -------------------------------------
-            // Each group partial carries its summed sample count, so the
-            // cloud (or a multi-group edge plan) also aggregates per
-            // Eq. 3 — not by contributing-group count, and never by
-            // dropping surplus groups.  An empty plan is a typed error.
-            if group_states.is_empty() {
-                return Err(Error::Data(format!(
-                    "round {t}: aggregation plan has no surviving groups"
-                )));
-            }
-            let (_total_w, merged) =
-                par_reduce_states_weighted(group_states, &self.pool)?;
-            self.state = merged;
-            let aggregate_s = timer.lap("aggregate").as_secs_f64();
-
-            // --- evaluation -----------------------------------------------
-            let eval_now = t + 1 == rounds
-                || (self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0);
-            let (test_loss, test_acc) = if eval_now {
-                let (l, a) = self.evaluate()?;
-                (l, a)
-            } else {
-                (f64::NAN, f64::NAN)
-            };
-            let _ = timer.lap("eval");
-
-            let train_loss =
-                losses.iter().sum::<f64>() / losses.len().max(1) as f64;
-            if eval_now {
-                log::info!(
-                    "[{}] round {t:>4} cluster {:>3} loss {train_loss:.4} \
-                     acc {:.4} ({} byte-hops)",
-                    self.strategy.name(),
-                    plan_cluster_label(plan.cluster),
-                    test_acc,
-                    byte_hops
+                    Vec::new(),
                 );
+                return self
+                    .finish(RoundOutcome::Lost { record, cause: LostCause::AllDropped });
             }
-            metrics.push(RoundRecord {
-                round: t,
-                cluster: plan.cluster,
-                train_loss,
-                test_accuracy: test_acc,
-                test_loss,
-                comm_byte_hops: byte_hops,
-                train_s,
-                aggregate_s,
-                net_s,
-                clock_s: self.net.now_s(),
-                stragglers,
-            });
         }
 
-        let final_loss = metrics
-            .rounds
-            .last()
-            .map(|r| r.train_loss)
-            .unwrap_or(f64::NAN);
-        Ok(RunReport {
+        // --- communication accounting + network simulation -----------
+        // Simulated *before* the numeric work: delivery times decide
+        // which uploads make the round's deadline, and stragglers must
+        // be excluded from the Eq. 3 reduction below.  (The DES is
+        // independent of the trained values, so the reordering cannot
+        // change any report.)
+        // Byte-hop accounting stays on hop-shortest routes (the paper's
+        // load metric); the DES rides bandwidth-aware transfer-time
+        // routes sized to the migrating model, so bulk transfers stop
+        // preferring thin low-latency links.  (Both tables borrow the
+        // topology and are rebuilt where needed — construction is O(1),
+        // and holding them across the observer hooks would pin `self`.)
+        let routes = RouteTable::hops(&self.topo);
+        let sim_routes = RouteTable::transfer_time(&self.topo, model_bytes);
+        let round_start = self.net.now_s();
+        let comm = record_round(
+            &plan,
+            &self.topo,
+            &routes,
+            &mut self.accountant,
+            model_bytes,
+            t,
+            CommOptions::default(),
+            Some((&mut self.net, &sim_routes, round_start)),
+        )?;
+        let mut byte_hops = comm.byte_hops;
+        let outcomes = self.net.run();
+        // The round's simulated network time is the makespan of its
+        // transfers on the carried-forward network state.
+        let net_s = outcomes
+            .iter()
+            .map(|o| o.delivered_s)
+            .fold(round_start, f64::max)
+            - round_start;
+        let deadline = self.deadline_s;
+        let mut stragglers: Vec<usize> = Vec::new();
+        if deadline > 0.0 {
+            for &(client, sim_id) in &comm.uploads {
+                let late = outcomes
+                    .iter()
+                    .find(|o| o.id == sim_id)
+                    .is_some_and(|o| o.delivered_s - round_start > deadline);
+                if late {
+                    stragglers.push(client);
+                }
+            }
+            stragglers.sort_unstable();
+            if !stragglers.is_empty() {
+                log::debug!(
+                    "round {t}: {} stragglers past deadline_s={deadline}",
+                    stragglers.len()
+                );
+            }
+        }
+        self.notify(|o, ctl| o.on_comm(t, &comm, net_s, &stragglers, ctl));
+        self.timer.lap("comm");
+
+        // Under the drop policy a straggler neither trains nor
+        // aggregates; under defer it still trains below — its update is
+        // held for the next round — but is excluded from this round's
+        // partials either way.  The straggler list is sorted, so
+        // membership checks are binary searches, not linear scans.
+        let defer = self.cfg.straggler_policy == StragglerPolicy::Defer;
+        if !stragglers.is_empty() && !defer {
+            for (_m, members) in &mut plan.groups {
+                members.retain(|id| stragglers.binary_search(id).is_err());
+            }
+            plan.groups.retain(|(_, v)| !v.is_empty());
+        }
+
+        // Earlier rounds' deferred updates fold into *this* round's
+        // reduction (empty unless straggler_policy = defer); this
+        // round's new deferrals are taken after the drain, so an update
+        // can never fold into the round that produced it.  An
+        // all-dropped round returned above *without* draining — a round
+        // that never touches the network cannot transport the held
+        // states, so they stay pending for the next round that
+        // communicates.
+        let folded = self.deferred.drain_sorted();
+
+        // --- local updates (fanned out across the pool) --------------
+        // Groups run one after another; members *within* a group fan
+        // out across the pool and come back in member order, so the
+        // loss vector and the reduction below see an identical
+        // operand sequence at any worker count.  Per-group fan-out
+        // also bounds peak memory at one group's states (HierFL's
+        // full-participation rounds would otherwise hold every
+        // client's state at once), and each group's partial is
+        // reduced — by sample count, paper Eq. 3 — before the next
+        // group trains.
+        let mut loss_terms: Vec<(f64, f64)> = Vec::new(); // (Eq. 3 weight, loss)
+        let mut group_states: Vec<(f64, ModelState)> =
+            Vec::with_capacity(plan.groups.len());
+        for (_m, members) in &plan.groups {
+            let results: Vec<Result<(ModelState, f32)>> = {
+                let state = &self.state;
+                let loader = &self.loader;
+                let fed = &self.fed;
+                let lus = &self.lus;
+                let k = self.cfg.local_steps;
+                let lr = self.cfg.lr as f32;
+                self.pool.run(members.len(), move |i, w| {
+                    let id = members[i];
+                    let batch =
+                        loader.local_batches(&fed.train, &fed.clients[id], t, k);
+                    lus[w].run(state, &batch, lr)
+                })
+            };
+            let mut weighted = Vec::with_capacity(members.len());
+            for (&id, r) in members.iter().zip(results) {
+                let (s, loss) = r?;
+                if !loss.is_finite() {
+                    return Err(Error::Data(format!(
+                        "non-finite loss at round {t} client {id} — \
+                         lower the learning rate"
+                    )));
+                }
+                let weight = self.client_weight(id);
+                if stragglers.binary_search(&id).is_ok() {
+                    // Straggler re-inclusion: hold the late update for
+                    // the next round (a client straggling again before
+                    // the pool drains replaces its older entry — never
+                    // two updates from one client in one reduction).
+                    self.deferred.defer(DeferredUpdate {
+                        client: id,
+                        round: t,
+                        weight,
+                        loss: loss as f64,
+                        state: s,
+                    });
+                } else {
+                    loss_terms.push((weight, loss as f64));
+                    weighted.push((weight, s));
+                }
+            }
+            if !weighted.is_empty() {
+                group_states.push(par_reduce_states_weighted(weighted, &self.pool)?);
+            }
+        }
+        let train_s = self.timer.lap("train").as_secs_f64();
+
+        // --- aggregation (Eq. 3) -------------------------------------
+        // Each group partial carries its summed sample count, so the
+        // cloud (or a multi-group edge plan) also aggregates per
+        // Eq. 3 — not by contributing-group count, and never by
+        // dropping surplus groups.  Folded deferred updates join the
+        // reduction after the partials, in client-id order, each with
+        // its own Eq. 3 weight.
+        let mut operands = group_states;
+        let mut deferred_ids = Vec::with_capacity(folded.len());
+        // Clients contributing a fresh on-time update this round (their
+        // Eq. 3 entries are already inside the group partials).  A
+        // pending stale update from such a client is *superseded* and
+        // must not fold next to the fresh one — a reduction carries at
+        // most one update per client, and the freshest wins.  (Rotating
+        // schedules like EdgeFLow never hit this; FedAvg resampling and
+        // HierFL full participation do.)
+        let mut on_time: Vec<usize> = if folded.is_empty() {
+            Vec::new()
+        } else {
+            plan.groups
+                .iter()
+                .flat_map(|(_, ms)| ms.iter().copied())
+                .filter(|id| stragglers.binary_search(id).is_err())
+                .collect()
+        };
+        on_time.sort_unstable();
+        // A folded update was delivered (late) to its *own* cluster's BS
+        // back when it straggled; reaching this round's aggregation site
+        // is one more model-sized transfer, charged to this round's
+        // byte-hops under the "deferred" label (the paper's load metric
+        // must not get straggler re-inclusion for free).  Its timing
+        // piggybacks on the round barrier — the held state travels
+        // alongside the migration, so no extra DES transfer is
+        // simulated.
+        // (Folded non-empty implies the defer policy, which never empties
+        // plan.groups — so groups[0] is safe in the SeqFL arm.)
+        let site_node = if folded.is_empty() {
+            None
+        } else {
+            Some(match plan.aggregation {
+                AggregationSite::Cloud => self.topo.cloud()?,
+                AggregationSite::EdgeBs(m) => self.topo.edge_bs(m)?,
+                AggregationSite::None => self.topo.edge_bs(plan.groups[0].0)?,
+            })
+        };
+        for d in folded {
+            if on_time.binary_search(&d.client).is_ok() {
+                log::debug!(
+                    "round {t}: client {}'s deferred round-{} update is \
+                     superseded by its on-time update and dropped",
+                    d.client,
+                    d.round
+                );
+                continue;
+            }
+            let site = site_node.expect("folded non-empty implies a site");
+            let from = self.topo.edge_bs(self.fed.clients[d.client].cluster)?;
+            if from != site {
+                let fold_routes = RouteTable::hops(&self.topo);
+                let hops = self.accountant.record(
+                    &self.topo,
+                    &fold_routes,
+                    from,
+                    site,
+                    model_bytes,
+                    "deferred",
+                    t,
+                )?;
+                byte_hops += model_bytes * hops as u64;
+            }
+            deferred_ids.push(d.client);
+            loss_terms.push((d.weight, d.loss));
+            operands.push((d.weight, d.state));
+        }
+        if operands.is_empty() {
+            // Every survivor straggled and nothing was pending: the
+            // traffic was spent, but nothing aggregates; the model
+            // carries over.
+            let record = lost_round_record(
+                t,
+                plan.cluster,
+                byte_hops,
+                net_s,
+                self.net.now_s(),
+                stragglers,
+            );
+            return self
+                .finish(RoundOutcome::Lost { record, cause: LostCause::AllStraggled });
+        }
+        let (_total_w, merged) = par_reduce_states_weighted(operands, &self.pool)?;
+        let aggregate_s = self.timer.lap("aggregate").as_secs_f64();
+        self.notify(|o, ctl| o.on_aggregate(t, &merged, ctl));
+        self.state = merged;
+
+        // --- evaluation ----------------------------------------------
+        let eval_now = t + 1 == self.cfg.rounds
+            || (self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0);
+        let (test_loss, test_acc) = if eval_now {
+            self.evaluate()?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let _ = self.timer.lap("eval");
+
+        // Per-round training loss weighted by the same Eq. 3 sample
+        // counts the aggregation uses — a uniform mean would misreport
+        // unbalanced federations.  Folded deferred updates contribute
+        // here too: the reported loss covers exactly this round's
+        // reduction operands.
+        let weight_sum: f64 = loss_terms.iter().map(|(w, _)| w).sum();
+        let train_loss =
+            loss_terms.iter().map(|(w, l)| w * l).sum::<f64>() / weight_sum;
+        let record = RoundRecord {
+            round: t,
+            cluster: plan.cluster,
+            train_loss,
+            test_accuracy: test_acc,
+            test_loss,
+            comm_byte_hops: byte_hops,
+            train_s,
+            aggregate_s,
+            net_s,
+            clock_s: self.net.now_s(),
+            stragglers,
+            deferred: deferred_ids,
+        };
+        self.finish(RoundOutcome::Completed { record, migration: plan.migration })
+    }
+
+    /// Record the round, advance the cursor, fire `on_round_end`.
+    fn finish(&mut self, outcome: RoundOutcome) -> Result<RoundOutcome> {
+        self.metrics.push(outcome.record().clone());
+        self.cursor += 1;
+        let t = outcome.round();
+        self.notify(|o, ctl| o.on_round_end(t, &outcome, ctl));
+        Ok(outcome)
+    }
+
+    /// Fire `f` over every observer (detached so hooks can receive
+    /// borrowed round data) and honor any control requests afterwards.
+    fn notify(&mut self, mut f: impl FnMut(&mut dyn RoundObserver, &mut RoundControl)) {
+        if self.observers.is_empty() {
+            return;
+        }
+        let mut obs = std::mem::take(&mut self.observers);
+        let mut ctl = RoundControl::default();
+        for o in obs.iter_mut() {
+            f(o.as_mut(), &mut ctl);
+        }
+        self.observers = obs;
+        self.apply_control(ctl);
+    }
+
+    /// Honor an observer's control requests.
+    fn apply_control(&mut self, ctl: RoundControl) {
+        if ctl.stop_requested() {
+            self.stopped = true;
+        }
+        if let Some(d) = ctl.deadline_override() {
+            if d.is_finite() && d >= 0.0 {
+                self.deadline_s = d;
+            } else {
+                log::warn!("ignoring invalid deadline override {d}");
+            }
+        }
+    }
+
+    /// Result summary of the rounds executed so far.  Callable at any
+    /// round boundary; after a restore it covers the whole run (records
+    /// travel in the checkpoint), while `phase_seconds` covers only this
+    /// process's work.
+    pub fn report(&self) -> RunReport {
+        RunReport {
             name: self.cfg.name.clone(),
             algorithm: self.strategy.name(),
-            final_accuracy: metrics.final_accuracy(),
-            best_accuracy: metrics.best_accuracy(),
-            final_loss,
-            total_byte_hops: metrics.total_byte_hops(),
-            rounds,
-            metrics,
-            phase_seconds: timer.laps(),
+            final_accuracy: self.metrics.final_accuracy(),
+            best_accuracy: self.metrics.best_accuracy(),
+            final_loss: self.metrics.final_train_loss(),
+            total_byte_hops: self.metrics.total_byte_hops(),
+            rounds: self.metrics.rounds.len(),
+            metrics: self.metrics.clone(),
+            phase_seconds: self.timer.laps(),
+        }
+    }
+
+    /// Run the session to completion: a thin loop over [`Runner::step`].
+    /// Callers that need checkpoints, pacing, or custom stop conditions
+    /// drive `step()` themselves.
+    pub fn run(&mut self) -> Result<RunReport> {
+        while !self.is_done() {
+            self.step()?;
+        }
+        Ok(self.report())
+    }
+
+    // ------------------------------------------------ checkpoint/resume
+
+    /// Snapshot the session at a round boundary.  Captures the config,
+    /// round cursor, model state, the persistent DES's carried clock and
+    /// link state, the dropout RNG stream, the strategy's scheduler
+    /// cursor, every accumulated round record, and pending deferred
+    /// updates — everything `restore` needs to continue bit-identically.
+    /// (The loader's minibatch stream is a pure function of
+    /// `(seed, client, round)` and needs no state.)
+    pub fn checkpoint(&self) -> Result<RunnerCheckpoint> {
+        Ok(RunnerCheckpoint {
+            cfg: self.cfg.clone(),
+            cursor: self.cursor,
+            stopped: self.stopped,
+            deadline_s: self.deadline_s,
+            state_blob: self.state.to_blob(),
+            net: self.net.state()?,
+            dropout_rng: self.dropout_rng.state(),
+            strategy: self.strategy.checkpoint(),
+            records: self.metrics.rounds.clone(),
+            deferred: self
+                .deferred
+                .entries()
+                .iter()
+                .map(|d| DeferredBlob {
+                    client: d.client,
+                    round: d.round,
+                    weight: d.weight,
+                    loss: d.loss,
+                    blob: d.state.to_blob(),
+                })
+                .collect(),
         })
+    }
+
+    /// Restore a [`RunnerCheckpoint`] onto a runner built from the
+    /// *same* config.  A run checkpointed at round T and restored
+    /// produces a `RunReport` bit-identical to the uninterrupted run's
+    /// (wall-clock phase timings excepted).  The communication
+    /// accountant restarts empty — per-round byte-hops are deltas and
+    /// the totals live in the restored records.
+    pub fn restore(&mut self, ck: &RunnerCheckpoint) -> Result<()> {
+        if ck.cfg.to_json().dump() != self.cfg.to_json().dump() {
+            return Err(Error::Config(
+                "checkpoint was taken under a different config — build the \
+                 runner from the checkpoint's cfg (Runner::resume)"
+                    .into(),
+            ));
+        }
+        let layout = self.state.layout.clone();
+        self.state = ModelState::from_blob(layout.clone(), &ck.state_blob)?;
+        self.net.restore(&ck.net)?;
+        self.dropout_rng = Rng::from_state(&ck.dropout_rng);
+        self.strategy.restore(&ck.strategy)?;
+        self.metrics = ExperimentMetrics { rounds: ck.records.clone() };
+        self.accountant = CommAccountant::new();
+        self.deferred = DeferredPool::default();
+        for d in &ck.deferred {
+            self.deferred.defer(DeferredUpdate {
+                client: d.client,
+                round: d.round,
+                weight: d.weight,
+                loss: d.loss,
+                state: ModelState::from_blob(layout.clone(), &d.blob)?,
+            });
+        }
+        self.cursor = ck.cursor;
+        self.stopped = ck.stopped;
+        self.deadline_s = ck.deadline_s;
+        self.timer = Timer::new();
+        Ok(())
+    }
+
+    /// Build a runner from a checkpoint's embedded config and restore
+    /// the session — the one-call resume path behind `--resume`.
+    pub fn resume(engine: Arc<Engine>, ck: &RunnerCheckpoint) -> Result<Runner> {
+        let mut r = Runner::with_engine(engine, ck.cfg.clone())?;
+        r.restore(ck)?;
+        Ok(r)
     }
 }
 
-fn plan_cluster_label(m: usize) -> String {
-    if m == usize::MAX {
-        "-".to_string()
-    } else {
-        m.to_string()
+/// A pending straggler update in wire form (model state as the
+/// little-endian `*_init.bin` blob format).
+#[derive(Debug, Clone)]
+pub struct DeferredBlob {
+    pub client: usize,
+    pub round: usize,
+    pub weight: f64,
+    pub loss: f64,
+    pub blob: Vec<u8>,
+}
+
+/// Serializable session snapshot (see [`Runner::checkpoint`]).  Floats
+/// travel as bit patterns, blobs as hex — the resume-is-bit-identical
+/// contract leaves no room for decimal round-trips.
+#[derive(Debug, Clone)]
+pub struct RunnerCheckpoint {
+    pub cfg: ExperimentConfig,
+    pub cursor: usize,
+    pub stopped: bool,
+    /// Active (possibly observer-adjusted) round deadline.
+    pub deadline_s: f64,
+    /// Model state in the little-endian blob format.
+    pub state_blob: Vec<u8>,
+    pub net: NetSimState,
+    pub dropout_rng: RngState,
+    /// Strategy cursor/stream state ([`Strategy::checkpoint`]).
+    pub strategy: Json,
+    pub records: Vec<RoundRecord>,
+    /// Pending straggler re-inclusion updates.
+    pub deferred: Vec<DeferredBlob>,
+}
+
+impl RunnerCheckpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", 1usize.into()),
+            ("cfg", self.cfg.to_json()),
+            ("cursor", self.cursor.into()),
+            ("stopped", self.stopped.into()),
+            ("deadline_s", f64_to_hex(self.deadline_s).into()),
+            ("state_hex", bytes_to_hex(&self.state_blob).into()),
+            (
+                "net",
+                Json::obj(vec![
+                    (
+                        "link_free_s",
+                        Json::arr(
+                            self.net
+                                .link_free_s
+                                .iter()
+                                .map(|&v| Json::from(f64_to_hex(v))),
+                        ),
+                    ),
+                    (
+                        "link_busy_s",
+                        Json::arr(
+                            self.net
+                                .link_busy_s
+                                .iter()
+                                .map(|&v| Json::from(f64_to_hex(v))),
+                        ),
+                    ),
+                    ("clock_s", f64_to_hex(self.net.clock_s).into()),
+                    ("seq", self.net.seq.into()),
+                    ("id_base", self.net.id_base.into()),
+                ]),
+            ),
+            ("dropout_rng", self.dropout_rng.to_json()),
+            ("strategy", self.strategy.clone()),
+            (
+                "records",
+                Json::arr(self.records.iter().map(|r| r.to_ckpt_json())),
+            ),
+            (
+                "deferred",
+                Json::arr(self.deferred.iter().map(|d| {
+                    Json::obj(vec![
+                        ("client", d.client.into()),
+                        ("round", d.round.into()),
+                        ("weight", f64_to_hex(d.weight).into()),
+                        ("loss", f64_to_hex(d.loss).into()),
+                        ("state_hex", bytes_to_hex(&d.blob).into()),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunnerCheckpoint> {
+        let version = j.usize_field("version")?;
+        if version != 1 {
+            return Err(Error::Config(format!(
+                "unsupported checkpoint version {version}"
+            )));
+        }
+        let netj = j.req("net")?;
+        let hex_vec = |field: &str| -> Result<Vec<f64>> {
+            netj.req(field)?
+                .as_arr()
+                .ok_or_else(|| Error::Json(format!("field {field:?} must be an array")))?
+                .iter()
+                .map(|x| {
+                    f64_from_hex(x.as_str().ok_or_else(|| {
+                        Error::Json(format!("field {field:?} holds a non-hex entry"))
+                    })?)
+                })
+                .collect()
+        };
+        let records = j
+            .req("records")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("records must be an array".into()))?
+            .iter()
+            .map(RoundRecord::from_ckpt_json)
+            .collect::<Result<Vec<_>>>()?;
+        let deferred = j
+            .req("deferred")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("deferred must be an array".into()))?
+            .iter()
+            .map(|d| {
+                Ok(DeferredBlob {
+                    client: d.usize_field("client")?,
+                    round: d.usize_field("round")?,
+                    weight: f64_from_hex(d.str_field("weight")?)?,
+                    loss: f64_from_hex(d.str_field("loss")?)?,
+                    blob: bytes_from_hex(d.str_field("state_hex")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunnerCheckpoint {
+            cfg: ExperimentConfig::from_json(j.req("cfg")?)?,
+            cursor: j.usize_field("cursor")?,
+            stopped: j
+                .req("stopped")?
+                .as_bool()
+                .ok_or_else(|| Error::Json("stopped must be a bool".into()))?,
+            deadline_s: f64_from_hex(j.str_field("deadline_s")?)?,
+            state_blob: bytes_from_hex(j.str_field("state_hex")?)?,
+            net: NetSimState {
+                link_free_s: hex_vec("link_free_s")?,
+                link_busy_s: hex_vec("link_busy_s")?,
+                clock_s: f64_from_hex(netj.str_field("clock_s")?)?,
+                seq: netj.usize_field("seq")?,
+                id_base: netj.usize_field("id_base")?,
+            },
+            dropout_rng: RngState::from_json(j.req("dropout_rng")?)?,
+            strategy: j.req("strategy")?.clone(),
+            records,
+            deferred,
+        })
+    }
+
+    /// Write the checkpoint as pretty JSON — atomically (temp file +
+    /// rename), so an interrupt mid-write can never destroy the
+    /// previous good checkpoint; surviving exactly such interrupts is
+    /// what checkpointing is for.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, self.to_json().pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`RunnerCheckpoint::save`].
+    pub fn load(path: &str) -> Result<RunnerCheckpoint> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
     }
 }
 
 /// Carry-over record for a round that trained nothing (all participants
-/// dropped, or every survivor straggled past the deadline): NaN losses,
-/// whatever traffic/clock the round did spend, and the model unchanged.
+/// dropped, or every survivor straggled past the deadline with nothing
+/// pending): NaN losses, whatever traffic/clock the round did spend, and
+/// the model unchanged.
 fn lost_round_record(
     round: usize,
     cluster: usize,
@@ -443,6 +932,7 @@ fn lost_round_record(
         net_s,
         clock_s,
         stragglers,
+        deferred: Vec::new(),
     }
 }
 

@@ -5,6 +5,8 @@ use crate::netsim::NetSim;
 use crate::rng::Rng;
 use crate::topology::graph::Topology;
 use crate::topology::route::RouteTable;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 
 /// EdgeFLow's inter-cluster migration order.
 #[derive(Debug)]
@@ -25,7 +27,8 @@ pub enum ClusterSchedule {
     /// Latency-aware tour: the next migration target is the unvisited
     /// cluster with the smallest *simulated* BS->BS transfer time on the
     /// current network state (candidate transfers probed on a cloned
-    /// [`NetSim`] over the latency `RouteTable`), ties broken by the
+    /// [`NetSim`] over the bandwidth-aware transfer-time `RouteTable`
+    /// sized to the migrating model), ties broken by the
     /// HopAware tour position.  Every cluster is still visited once per
     /// cycle.  The probe accounts for bandwidth, store-and-forward and
     /// queueing — unlike hop counts — and steers around congestion
@@ -161,8 +164,11 @@ impl ClusterSchedule {
                 }
                 // The route table is O(1) to build (paths are computed on
                 // demand); the idle fallback sim is hoisted so candidates
-                // clone an Arc-shared handle, not the topology.
-                let rt = RouteTable::latency(topo);
+                // clone an Arc-shared handle, not the topology.  Probes
+                // ride the bandwidth-aware routes the runner's DES rides
+                // for model-sized transfers, so the predicted and actual
+                // migration paths agree.
+                let rt = RouteTable::transfer_time(topo, *model_bytes);
                 let idle;
                 let base: &NetSim = match net {
                     Some(n) => n,
@@ -216,6 +222,99 @@ impl ClusterSchedule {
             ClusterSchedule::HopAware { order } => order.len(),
             ClusterSchedule::LatencyAware { visited, .. } => visited.len(),
         }
+    }
+
+    /// Serializable tour state for checkpoint/resume.  `Sequential`,
+    /// `HopAware` and `Random` are (pure) functions of `t` and carry no
+    /// state worth saving; `LatencyAware` must persist its cycle
+    /// bookkeeping (visited set, tour position, last-round memo) so a
+    /// restored schedule continues the exact same tour.
+    pub fn checkpoint(&self) -> Json {
+        match self {
+            ClusterSchedule::Sequential { .. } => {
+                Json::obj(vec![("kind", "sequential".into())])
+            }
+            ClusterSchedule::Random { .. } => {
+                Json::obj(vec![("kind", "random".into())])
+            }
+            ClusterSchedule::HopAware { .. } => {
+                Json::obj(vec![("kind", "hop_aware".into())])
+            }
+            ClusterSchedule::LatencyAware { visited, current, cache, .. } => {
+                Json::obj(vec![
+                    ("kind", "latency_aware".into()),
+                    ("visited", Json::arr(visited.iter().map(|&v| Json::from(v)))),
+                    ("current", (*current).into()),
+                    (
+                        "cache",
+                        match cache {
+                            Some((t, pick)) => Json::arr(vec![
+                                Json::from(*t),
+                                Json::from(*pick),
+                            ]),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            }
+        }
+    }
+
+    /// Restore a [`ClusterSchedule::checkpoint`] snapshot onto a schedule
+    /// built from the same config; the continuation is identical to the
+    /// uninterrupted schedule's.
+    pub fn restore(&mut self, j: &Json) -> Result<()> {
+        let kind = j.str_field("kind")?;
+        let want = match self {
+            ClusterSchedule::Sequential { .. } => "sequential",
+            ClusterSchedule::Random { .. } => "random",
+            ClusterSchedule::HopAware { .. } => "hop_aware",
+            ClusterSchedule::LatencyAware { .. } => "latency_aware",
+        };
+        if kind != want {
+            return Err(Error::Config(format!(
+                "checkpoint schedule kind {kind:?} does not match the \
+                 configured {want:?}"
+            )));
+        }
+        if let ClusterSchedule::LatencyAware { visited, current, cache, .. } = self
+        {
+            let vj = j
+                .req("visited")?
+                .as_arr()
+                .ok_or_else(|| Error::Json("visited must be an array".into()))?;
+            if vj.len() != visited.len() {
+                return Err(Error::Config(format!(
+                    "checkpoint tour covers {} clusters, schedule has {}",
+                    vj.len(),
+                    visited.len()
+                )));
+            }
+            for (slot, v) in visited.iter_mut().zip(vj) {
+                *slot = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Json("visited entry must be a bool".into()))?;
+            }
+            *current = j.usize_field("current")?;
+            *cache = match j.req("cache")? {
+                Json::Null => None,
+                v => {
+                    let pair = v
+                        .as_arr()
+                        .ok_or_else(|| Error::Json("cache must be [t, pick]".into()))?;
+                    if pair.len() != 2 {
+                        return Err(Error::Json("cache must be [t, pick]".into()));
+                    }
+                    let get = |x: &Json| {
+                        x.as_usize().ok_or_else(|| {
+                            Error::Json("cache entries must be integers".into())
+                        })
+                    };
+                    Some((get(&pair[0])?, get(&pair[1])?))
+                }
+            };
+        }
+        Ok(())
     }
 }
 
@@ -409,6 +508,46 @@ mod tests {
         for t in 0..6 {
             assert_eq!(lat.next(t), hop.next(t), "round {t}");
         }
+    }
+
+    #[test]
+    fn latency_aware_checkpoint_resumes_the_same_tour() {
+        // Run one schedule straight through; checkpoint a second copy
+        // mid-cycle (through a JSON text round-trip, like a checkpoint
+        // file) and restore into a third built from the same config —
+        // the continuation must reproduce the uninterrupted tour.
+        let topo =
+            build(&TopologyParams::new(TopologyKind::Hybrid, 8, 2)).unwrap();
+        let mut whole = ClusterSchedule::latency_aware(&topo, 100_000);
+        let reference: Vec<usize> = (0..16).map(|t| whole.next(t)).collect();
+
+        let mut first = ClusterSchedule::latency_aware(&topo, 100_000);
+        for (t, &want) in reference.iter().enumerate().take(5) {
+            assert_eq!(first.next(t), want);
+        }
+        let text = first.checkpoint().dump();
+        let snap = crate::util::json::Json::parse(&text).unwrap();
+        let mut resumed = ClusterSchedule::latency_aware(&topo, 100_000);
+        resumed.restore(&snap).unwrap();
+        for (t, &want) in reference.iter().enumerate().skip(5) {
+            assert_eq!(resumed.next(t), want, "round {t}");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_kind_and_size() {
+        let topo =
+            build(&TopologyParams::new(TopologyKind::DepthLinear, 4, 1)).unwrap();
+        let mut lat = ClusterSchedule::latency_aware(&topo, 1_000);
+        let seq_snap = ClusterSchedule::sequential(4).checkpoint();
+        assert!(lat.restore(&seq_snap).is_err(), "kind mismatch");
+        let bigger =
+            build(&TopologyParams::new(TopologyKind::DepthLinear, 6, 1)).unwrap();
+        let big_snap = ClusterSchedule::latency_aware(&bigger, 1_000).checkpoint();
+        assert!(lat.restore(&big_snap).is_err(), "cluster-count mismatch");
+        // Matching snapshot restores fine.
+        let ok = ClusterSchedule::latency_aware(&topo, 1_000).checkpoint();
+        assert!(lat.restore(&ok).is_ok());
     }
 
     #[test]

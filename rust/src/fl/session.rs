@@ -1,0 +1,374 @@
+//! Stepwise round-session vocabulary.
+//!
+//! [`crate::fl::runner::Runner::step`] executes exactly one round of
+//! Algorithm 1 and returns a typed [`RoundOutcome`]; callers that need
+//! more than "run to completion" (schedulers, controllers, checkpointers,
+//! experiment drivers) compose with the round loop through this module
+//! instead of patching the loop itself:
+//!
+//! * [`RoundObserver`] — hooks into the phases of a round (`on_plan`,
+//!   `on_comm`, `on_aggregate`, `on_round_end`).  Progress logging and
+//!   live metrics export ship as built-in observers
+//!   ([`ProgressObserver`], [`MetricsCsvObserver`]).
+//! * [`RoundControl`] — the observer return channel: request an early
+//!   stop or adjust the round deadline (per-cluster adaptive deadlines
+//!   are an observer, not runner surgery).
+//! * [`DeferredPool`] — session state behind straggler *re-inclusion*
+//!   (`straggler_policy = defer`): a late update is held here with its
+//!   Eq. 3 sample weight and folded into the next reduction instead of
+//!   being discarded.
+
+use crate::fl::comm::RoundComm;
+use crate::fl::strategy::RoundPlan;
+use crate::metrics::{ExperimentMetrics, RoundRecord};
+use crate::runtime::params::ModelState;
+
+/// Why a round trained nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LostCause {
+    /// Failure injection removed every selected client before upload; no
+    /// traffic moved, the sim clock did not advance.  Pending deferred
+    /// updates stay held: a round that never touches the network cannot
+    /// transport them, so they fold into the next communicating round.
+    AllDropped,
+    /// Every surviving upload missed the deadline (and, under `defer`,
+    /// no earlier-round update was pending): traffic was spent but
+    /// nothing aggregated.
+    AllStraggled,
+}
+
+/// Typed result of executing exactly one round.
+#[derive(Debug, Clone)]
+pub enum RoundOutcome {
+    /// The round aggregated: the global model moved.
+    Completed {
+        record: RoundRecord,
+        /// BS -> BS model migration this round rode in on
+        /// (EdgeFLow/SeqFL), as `(from_cluster, to_cluster)`.
+        migration: Option<(usize, usize)>,
+    },
+    /// The round trained nothing; the model (and any scheduled
+    /// migration) carries over.
+    Lost { record: RoundRecord, cause: LostCause },
+}
+
+impl RoundOutcome {
+    /// The round's metrics record, whichever way it went.
+    pub fn record(&self) -> &RoundRecord {
+        match self {
+            RoundOutcome::Completed { record, .. } => record,
+            RoundOutcome::Lost { record, .. } => record,
+        }
+    }
+
+    /// Round index.
+    pub fn round(&self) -> usize {
+        self.record().round
+    }
+
+    pub fn is_lost(&self) -> bool {
+        matches!(self, RoundOutcome::Lost { .. })
+    }
+}
+
+/// Observer return channel: every hook receives one of these and may
+/// request session-level adjustments; the runner applies them after the
+/// hook returns.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundControl {
+    stop: bool,
+    deadline_s: Option<f64>,
+}
+
+impl RoundControl {
+    /// Stop the session after the current round completes:
+    /// `Runner::is_done()` turns true and `run()`'s loop exits cleanly.
+    pub fn request_stop(&mut self) {
+        self.stop = true;
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop
+    }
+
+    /// Override the round deadline from here on (`0` disables).  Set
+    /// during `on_plan` it applies to the round being planned — the hook
+    /// for per-cluster adaptive deadlines.
+    pub fn set_deadline_s(&mut self, deadline_s: f64) {
+        self.deadline_s = Some(deadline_s);
+    }
+
+    pub fn deadline_override(&self) -> Option<f64> {
+        self.deadline_s
+    }
+}
+
+/// Hooks into the phases of one round.  All hooks default to no-ops;
+/// implement the ones you need.  Within a round the runner fires, in
+/// order: `on_plan` (after the strategy planned, before failure
+/// injection), `on_comm` (after the DES delivered the round's transfers
+/// and stragglers are known; skipped when the round was lost to
+/// dropout), `on_aggregate` (after the global model moved; skipped for
+/// lost rounds), `on_round_end` (always, with the typed outcome).
+pub trait RoundObserver {
+    fn on_plan(&mut self, _t: usize, _plan: &RoundPlan, _ctl: &mut RoundControl) {}
+
+    fn on_comm(
+        &mut self,
+        _t: usize,
+        _comm: &RoundComm,
+        _net_s: f64,
+        _stragglers: &[usize],
+        _ctl: &mut RoundControl,
+    ) {
+    }
+
+    fn on_aggregate(
+        &mut self,
+        _t: usize,
+        _state: &ModelState,
+        _ctl: &mut RoundControl,
+    ) {
+    }
+
+    fn on_round_end(
+        &mut self,
+        _t: usize,
+        _outcome: &RoundOutcome,
+        _ctl: &mut RoundControl,
+    ) {
+    }
+}
+
+/// Built-in observer: the round loop's progress logging, re-expressed as
+/// an observer (one `info` line per evaluated round).
+#[derive(Debug)]
+pub struct ProgressObserver {
+    /// Algorithm label for the log line (`Strategy::name()`).
+    algorithm: &'static str,
+}
+
+impl ProgressObserver {
+    pub fn new(algorithm: &'static str) -> ProgressObserver {
+        ProgressObserver { algorithm }
+    }
+}
+
+impl RoundObserver for ProgressObserver {
+    fn on_round_end(
+        &mut self,
+        t: usize,
+        outcome: &RoundOutcome,
+        _ctl: &mut RoundControl,
+    ) {
+        let r = outcome.record();
+        if !r.test_accuracy.is_nan() {
+            let cluster = if r.cluster == usize::MAX {
+                "-".to_string()
+            } else {
+                r.cluster.to_string()
+            };
+            log::info!(
+                "[{}] round {t:>4} cluster {:>3} loss {:.4} acc {:.4} \
+                 ({} byte-hops)",
+                self.algorithm,
+                cluster,
+                r.train_loss,
+                r.test_accuracy,
+                r.comm_byte_hops
+            );
+        }
+    }
+}
+
+/// Built-in observer: live per-round metrics export.  After every round
+/// the accumulated records are rewritten to `path` as the standard
+/// metrics CSV, so a long run's curves are inspectable (and survive a
+/// crash) without waiting for the final report.
+#[derive(Debug)]
+pub struct MetricsCsvObserver {
+    path: String,
+    metrics: ExperimentMetrics,
+}
+
+impl MetricsCsvObserver {
+    pub fn new(path: &str) -> MetricsCsvObserver {
+        MetricsCsvObserver { path: path.to_string(), metrics: ExperimentMetrics::default() }
+    }
+}
+
+impl RoundObserver for MetricsCsvObserver {
+    fn on_round_end(
+        &mut self,
+        _t: usize,
+        outcome: &RoundOutcome,
+        _ctl: &mut RoundControl,
+    ) {
+        self.metrics.push(outcome.record().clone());
+        if let Err(e) = self.metrics.to_csv().save(&self.path) {
+            log::warn!("metrics export to {} failed: {e}", self.path);
+        }
+    }
+}
+
+/// One straggler's late local update, held for re-inclusion.
+#[derive(Debug, Clone)]
+pub struct DeferredUpdate {
+    pub client: usize,
+    /// Round the update was trained in (against that round's opening
+    /// global state).
+    pub round: usize,
+    /// Eq. 3 aggregation weight (the client's sample count).
+    pub weight: f64,
+    /// The update's training loss, folded into the destination round's
+    /// weighted `train_loss` alongside its state.
+    pub loss: f64,
+    pub state: ModelState,
+}
+
+/// Session state for straggler re-inclusion: at most one pending update
+/// per client, kept sorted by client id so the fold order (and therefore
+/// every f32 rounding decision downstream) is deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct DeferredPool {
+    entries: Vec<DeferredUpdate>,
+}
+
+impl DeferredPool {
+    /// Hold a late update.  A client that straggles again while an older
+    /// update of theirs is still pending (possible when lost rounds keep
+    /// the pool from draining) *replaces* it — folding both would
+    /// double-count the client in one reduction.
+    pub fn defer(&mut self, u: DeferredUpdate) {
+        match self.entries.binary_search_by_key(&u.client, |d| d.client) {
+            Ok(i) => self.entries[i] = u,
+            Err(i) => self.entries.insert(i, u),
+        }
+    }
+
+    /// Take every pending update, in client-id order, leaving the pool
+    /// empty.
+    pub fn drain_sorted(&mut self) -> Vec<DeferredUpdate> {
+        std::mem::take(&mut self.entries)
+    }
+
+    /// Pending updates, in client-id order.
+    pub fn entries(&self) -> &[DeferredUpdate] {
+        &self.entries
+    }
+
+    /// Pending client ids, ascending.
+    pub fn clients(&self) -> Vec<usize> {
+        self.entries.iter().map(|d| d.client).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{TensorSpec, VariantSpec};
+    use crate::runtime::params::StateLayout;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    fn tiny_layout() -> Arc<StateLayout> {
+        let v = VariantSpec {
+            name: "t".into(),
+            arch: "mlp".into(),
+            image: (1, 1, 1),
+            classes: 2,
+            train_batch: 1,
+            eval_batch: 1,
+            k_values: vec![1],
+            optimizers: vec!["sgd".into()],
+            params: vec![TensorSpec { name: "w".into(), shape: vec![2] }],
+            bn_state: vec![],
+            opt_state: BTreeMap::from([("sgd".to_string(), vec![])]),
+            init_blob: BTreeMap::new(),
+            eval_exe: "e".into(),
+            local_update: BTreeMap::new(),
+        };
+        StateLayout::new(&v, "sgd").unwrap()
+    }
+
+    fn update(client: usize, round: usize, fill: f32) -> DeferredUpdate {
+        let mut state = ModelState::zeros(tiny_layout());
+        state.data.fill(fill);
+        DeferredUpdate { client, round, weight: 10.0, loss: 1.0, state }
+    }
+
+    #[test]
+    fn pool_keeps_client_order_and_drains_empty() {
+        let mut p = DeferredPool::default();
+        assert!(p.is_empty());
+        p.defer(update(7, 0, 1.0));
+        p.defer(update(2, 0, 2.0));
+        p.defer(update(5, 0, 3.0));
+        assert_eq!(p.clients(), vec![2, 5, 7]);
+        assert_eq!(p.len(), 3);
+        let drained = p.drain_sorted();
+        assert_eq!(
+            drained.iter().map(|d| d.client).collect::<Vec<_>>(),
+            vec![2, 5, 7]
+        );
+        assert!(p.is_empty());
+        assert!(p.drain_sorted().is_empty());
+    }
+
+    #[test]
+    fn double_straggler_replaces_never_double_counts() {
+        // A client straggling twice before the pool drains must end up
+        // with exactly one pending update — the newest.
+        let mut p = DeferredPool::default();
+        p.defer(update(3, 0, 1.0));
+        p.defer(update(4, 0, 1.0));
+        p.defer(update(3, 2, 9.0)); // client 3 straggles again
+        assert_eq!(p.len(), 2, "no duplicate entry for client 3");
+        assert_eq!(p.clients(), vec![3, 4]);
+        let d3 = &p.entries()[0];
+        assert_eq!(d3.client, 3);
+        assert_eq!(d3.round, 2, "the newer update wins");
+        assert_eq!(d3.state.data[0], 9.0);
+    }
+
+    #[test]
+    fn control_carries_stop_and_deadline() {
+        let mut c = RoundControl::default();
+        assert!(!c.stop_requested());
+        assert_eq!(c.deadline_override(), None);
+        c.request_stop();
+        c.set_deadline_s(2.5);
+        assert!(c.stop_requested());
+        assert_eq!(c.deadline_override(), Some(2.5));
+    }
+
+    #[test]
+    fn outcome_accessors() {
+        let record = RoundRecord {
+            round: 4,
+            cluster: 1,
+            train_loss: f64::NAN,
+            test_accuracy: f64::NAN,
+            test_loss: f64::NAN,
+            comm_byte_hops: 0,
+            train_s: 0.0,
+            aggregate_s: 0.0,
+            net_s: 0.0,
+            clock_s: 0.0,
+            stragglers: Vec::new(),
+            deferred: Vec::new(),
+        };
+        let lost = RoundOutcome::Lost { record, cause: LostCause::AllDropped };
+        assert!(lost.is_lost());
+        assert_eq!(lost.round(), 4);
+        assert!(lost.record().train_loss.is_nan());
+    }
+}

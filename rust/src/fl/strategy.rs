@@ -9,9 +9,11 @@ use crate::config::{Algorithm, ExperimentConfig};
 use crate::data::partition::Federation;
 use crate::fl::scheduler::ClusterSchedule;
 use crate::netsim::NetSim;
-use crate::rng::Rng;
+use crate::rng::{Rng, RngState};
 use crate::topology::graph::Topology;
 use crate::topology::route::RouteTable;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 
 /// Where this round's aggregation runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -196,6 +198,74 @@ impl Strategy {
             }
         }
     }
+
+    /// Serializable planner state for checkpoint/resume: the FedAvg
+    /// sampling stream, SeqFL's tour cursor and previous site, and
+    /// EdgeFLow's current cluster + schedule bookkeeping — everything
+    /// that makes round `t+1`'s plan depend on history.  (`HierFl` plans
+    /// are stateless.)
+    pub fn checkpoint(&self) -> Json {
+        match self {
+            Strategy::FedAvg { rng, n_sample } => Json::obj(vec![
+                ("kind", "fedavg".into()),
+                ("rng", rng.state().to_json()),
+                ("n_sample", (*n_sample).into()),
+            ]),
+            Strategy::HierFl => Json::obj(vec![("kind", "hierfl".into())]),
+            Strategy::SeqFl { cursor, last_cluster, .. } => Json::obj(vec![
+                ("kind", "seqfl".into()),
+                ("cursor", (*cursor).into()),
+                (
+                    "last_cluster",
+                    match last_cluster {
+                        Some(c) => Json::from(*c),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+            Strategy::EdgeFlow { schedule, current } => Json::obj(vec![
+                ("kind", "edgeflow".into()),
+                ("current", (*current).into()),
+                ("schedule", schedule.checkpoint()),
+            ]),
+        }
+    }
+
+    /// Restore a [`Strategy::checkpoint`] snapshot onto a strategy built
+    /// from the same config (the derived pieces — SeqFL's shuffled
+    /// order, EdgeFLow's tour matrices — are rebuilt by
+    /// [`Strategy::for_config`]; only the mutable cursors travel).
+    pub fn restore(&mut self, j: &Json) -> Result<()> {
+        let kind = j.str_field("kind")?;
+        match (self, kind) {
+            (Strategy::FedAvg { rng, n_sample }, "fedavg") => {
+                *rng = Rng::from_state(&RngState::from_json(j.req("rng")?)?);
+                *n_sample = j.usize_field("n_sample")?;
+            }
+            (Strategy::HierFl, "hierfl") => {}
+            (Strategy::SeqFl { cursor, last_cluster, .. }, "seqfl") => {
+                *cursor = j.usize_field("cursor")?;
+                *last_cluster = match j.req("last_cluster")? {
+                    Json::Null => None,
+                    v => Some(v.as_usize().ok_or_else(|| {
+                        Error::Json("last_cluster must be an integer".into())
+                    })?),
+                };
+            }
+            (Strategy::EdgeFlow { schedule, current }, "edgeflow") => {
+                *current = j.usize_field("current")?;
+                schedule.restore(j.req("schedule")?)?;
+            }
+            (other, kind) => {
+                return Err(Error::Config(format!(
+                    "checkpoint strategy kind {kind:?} does not match the \
+                     configured {:?}",
+                    other.name()
+                )))
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +384,74 @@ mod tests {
             seen.insert(p.cluster);
         }
         assert_eq!(seen.len(), 4, "every cluster visited in one cycle");
+    }
+
+    #[test]
+    fn checkpoint_resumes_fedavg_sampling_stream() {
+        let f = fed();
+        let t = topo();
+        let mut whole = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &t, 40_000);
+        let reference: Vec<Vec<usize>> =
+            (0..8).map(|r| whole.plan_round(r, &f, None).participants()).collect();
+
+        let mut first = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &t, 40_000);
+        for (r, want) in reference.iter().enumerate().take(3) {
+            assert_eq!(&first.plan_round(r, &f, None).participants(), want);
+        }
+        let snap_text = first.checkpoint().dump();
+        let snap = crate::util::json::Json::parse(&snap_text).unwrap();
+        let mut resumed =
+            Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &t, 40_000);
+        resumed.restore(&snap).unwrap();
+        for (r, want) in reference.iter().enumerate().skip(3) {
+            assert_eq!(
+                &resumed.plan_round(r, &f, None).participants(),
+                want,
+                "round {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_resumes_seqfl_and_edgeflow_migration_state() {
+        let f = fed();
+        let t = topo();
+        for alg in [Algorithm::SeqFl, Algorithm::EdgeFlowSeq, Algorithm::EdgeFlowHop]
+        {
+            let mut whole = Strategy::for_config(&cfg(alg), &f, &t, 40_000);
+            let reference: Vec<(Vec<usize>, Option<(usize, usize)>)> = (0..8)
+                .map(|r| {
+                    let p = whole.plan_round(r, &f, None);
+                    (p.participants(), p.migration)
+                })
+                .collect();
+            let mut first = Strategy::for_config(&cfg(alg), &f, &t, 40_000);
+            for r in 0..4 {
+                first.plan_round(r, &f, None);
+            }
+            let snap = crate::util::json::Json::parse(&first.checkpoint().dump())
+                .unwrap();
+            let mut resumed = Strategy::for_config(&cfg(alg), &f, &t, 40_000);
+            resumed.restore(&snap).unwrap();
+            for (r, want) in reference.iter().enumerate().skip(4) {
+                let p = resumed.plan_round(r, &f, None);
+                assert_eq!(p.participants(), want.0, "{alg:?} round {r}");
+                assert_eq!(
+                    p.migration, want.1,
+                    "{alg:?} round {r}: migration state must survive restore"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_wrong_strategy_kind() {
+        let f = fed();
+        let t = topo();
+        let snap = Strategy::for_config(&cfg(Algorithm::HierFl), &f, &t, 40_000)
+            .checkpoint();
+        let mut fedavg = Strategy::for_config(&cfg(Algorithm::FedAvg), &f, &t, 40_000);
+        assert!(fedavg.restore(&snap).is_err());
     }
 
     #[test]

@@ -10,11 +10,13 @@ use std::sync::Arc;
 
 use edgeflow::cli::{flag, flag_def, switch, workers_flag, Args, Cli, CommandSpec};
 use edgeflow::config::{
-    preset, Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind, PRESETS,
+    preset, Algorithm, DatasetKind, Distribution, ExperimentConfig, StragglerPolicy,
+    TopologyKind, PRESETS,
 };
 use edgeflow::data::partition::build_federation;
 use edgeflow::fl::experiments::{fig3a, fig3b, fig4, table1, SuiteOptions};
-use edgeflow::fl::runner::Runner;
+use edgeflow::fl::runner::{Runner, RunnerCheckpoint};
+use edgeflow::fl::session::MetricsCsvObserver;
 use edgeflow::fl::theory::{bound, k_scan, TheoryParams};
 use edgeflow::metrics::smooth;
 use edgeflow::runtime::executor::Engine;
@@ -40,6 +42,24 @@ fn cli() -> Cli {
                 "round deadline in simulated network seconds (0 = none); \
                  late uploads are excluded from aggregation",
             ),
+            flag(
+                "straggler-policy",
+                "drop|defer: discard a straggler's late update, or fold it \
+                 into the next round's reduction (straggler re-inclusion)",
+            ),
+            flag(
+                "checkpoint-every",
+                "write a session checkpoint every N rounds (0 = off)",
+            ),
+            flag(
+                "checkpoint",
+                "checkpoint file path (default: <name>.ckpt.json)",
+            ),
+            flag(
+                "resume",
+                "resume from a checkpoint file (bit-identical continuation; \
+                 other config flags are ignored)",
+            ),
             flag("dataset", "synth_fashion|synth_cifar"),
             flag("dist", "iid|niid_a|niid_b|noniid<pct>"),
             flag("model", "artifact model variant"),
@@ -57,6 +77,11 @@ fn cli() -> Cli {
             workers_flag(),
             flag("out", "write metrics CSV here"),
             flag("out-json", "write metrics JSON here"),
+            flag(
+                "live-csv",
+                "rewrite a metrics CSV here after every round (live export \
+                 that survives a crash)",
+            ),
             switch("verbose", "debug logging"),
         ]
     };
@@ -109,6 +134,12 @@ fn cli() -> Cli {
                 flags: vec![
                     flag_def("artifacts", "artifact directory (for param counts)", "artifacts"),
                     flag_def("model", "model variant for the parameter count", "fashion_mlp"),
+                    flag(
+                        "param-count",
+                        "parameter count override (skips the artifact manifest \
+                         — lets the pure-coordination study run without \
+                         artifacts, e.g. in CI)",
+                    ),
                     flag_def("rounds", "rounds to average over", "100"),
                     flag_def("clusters", "cluster count M", "10"),
                     flag_def("cluster-size", "clients per cluster N_m", "10"),
@@ -117,6 +148,7 @@ fn cli() -> Cli {
                     switch("latency", "print DES latency column"),
                     flag_def("codec", "transfer codec: none|int8|top<pct>", "none"),
                     flag("out", "write results CSV here"),
+                    flag("out-json", "write results JSON here"),
                     switch("verbose", "debug logging"),
                 ],
                 positional: vec![],
@@ -222,6 +254,9 @@ fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConf
     if let Some(v) = a.get_f64("deadline-s")? {
         cfg.deadline_s = v;
     }
+    if let Some(s) = a.get("straggler-policy") {
+        cfg.straggler_policy = StragglerPolicy::parse(s)?;
+    }
     if let Some(v) = a.get_usize("workers")? {
         cfg.workers = v;
     }
@@ -246,17 +281,48 @@ fn suite_options(a: &Args) -> Result<SuiteOptions> {
 }
 
 fn cmd_train(a: &Args) -> Result<()> {
-    let base = if let Some(p) = a.get("preset") {
-        preset(p)?
-    } else if let Some(path) = a.get("config") {
-        ExperimentConfig::load(path)?
+    let artifacts = a.get("artifacts").unwrap();
+    let mut runner = if let Some(path) = a.get("resume") {
+        // A resumed session must replay bit-identically, so the config
+        // comes from the checkpoint; overriding flags are ignored.
+        let ck = RunnerCheckpoint::load(path)?;
+        log::info!(
+            "resuming {:?} at round {} from {path}",
+            ck.cfg.name,
+            ck.cursor
+        );
+        let engine = Arc::new(Engine::load(artifacts)?);
+        Runner::resume(engine, &ck)?
     } else {
-        ExperimentConfig::default()
+        let base = if let Some(p) = a.get("preset") {
+            preset(p)?
+        } else if let Some(path) = a.get("config") {
+            ExperimentConfig::load(path)?
+        } else {
+            ExperimentConfig::default()
+        };
+        let cfg = apply_overrides(base, a)?;
+        log::info!("config: {}", cfg.to_json().dump());
+        Runner::new(cfg, artifacts)?
     };
-    let cfg = apply_overrides(base, a)?;
-    log::info!("config: {}", cfg.to_json().dump());
-    let mut runner = Runner::new(cfg, a.get("artifacts").unwrap())?;
-    let report = runner.run()?;
+    if let Some(path) = a.get("live-csv") {
+        runner.add_observer(Box::new(MetricsCsvObserver::new(path)));
+    }
+    // Drive the stepwise session: one step per round, with periodic
+    // checkpoints when requested.
+    let ckpt_every = a.get_usize("checkpoint-every")?.unwrap_or(0);
+    let ckpt_path = a
+        .get("checkpoint")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{}.ckpt.json", runner.cfg.name));
+    while !runner.is_done() {
+        runner.step()?;
+        if ckpt_every > 0 && runner.round() % ckpt_every == 0 {
+            runner.checkpoint()?.save(&ckpt_path)?;
+            log::info!("checkpoint at round {} -> {ckpt_path}", runner.round());
+        }
+    }
+    let report = runner.report();
     println!(
         "\n[{}] {} rounds: final acc {:.2}%  best {:.2}%  loss {:.4}  comm {:.3e} byte-hops",
         report.algorithm,
@@ -361,9 +427,16 @@ fn cmd_fig3(a: &Args) -> Result<()> {
 }
 
 fn cmd_comm_sim(a: &Args) -> Result<()> {
-    let manifest = Manifest::load(a.get("artifacts").unwrap())?;
     let model = a.get("model").unwrap();
-    let raw_param_count = manifest.variant(model)?.param_count();
+    // Fig 4 is pure coordination: with an explicit --param-count it
+    // needs no artifacts at all (the manifest only supplies this one
+    // number).
+    let raw_param_count = match a.get_usize("param-count")? {
+        Some(n) => n,
+        None => Manifest::load(a.get("artifacts").unwrap())?
+            .variant(model)?
+            .param_count(),
+    };
     // Compression codecs shrink every model transfer; express the codec's
     // wire size as an equivalent f32 parameter count so the topology math
     // is unchanged (ratios between algorithms are codec-invariant, the
@@ -436,6 +509,24 @@ fn cmd_comm_sim(a: &Args) -> Result<()> {
             ]);
         }
         csv.save(path)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = a.get("out-json") {
+        let j = edgeflow::util::json::Json::arr(results.iter().map(|r| {
+            edgeflow::util::json::Json::obj(vec![
+                ("topology", r.topology.name().into()),
+                ("algorithm", r.algorithm.name().into()),
+                ("byte_hops_per_round", r.byte_hops_per_round.into()),
+                ("vs_fedavg", r.vs_fedavg.into()),
+                ("latency_s", r.round_latency_s.into()),
+                ("participants_per_round", r.participants_per_round.into()),
+                (
+                    "byte_hops_per_participant",
+                    r.byte_hops_per_participant().into(),
+                ),
+            ])
+        }));
+        std::fs::write(path, j.pretty())?;
         println!("wrote {path}");
     }
     Ok(())

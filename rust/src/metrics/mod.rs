@@ -1,7 +1,9 @@
 //! Experiment metrics: per-round records, curves, smoothing, exporters.
 
 use crate::util::csv::CsvWriter;
+use crate::util::error::{Error, Result};
 use crate::util::json::Json;
+use crate::util::{f64_from_hex, f64_to_hex, u64_from_hex, u64_to_hex};
 
 /// One communication round's record.
 #[derive(Debug, Clone)]
@@ -9,7 +11,9 @@ pub struct RoundRecord {
     pub round: usize,
     /// Active cluster (participating set) this round.
     pub cluster: usize,
-    /// Mean training loss over the round's local updates.
+    /// Training loss over the round's reduction operands, weighted by
+    /// the same Eq. 3 sample counts the aggregation uses (folded
+    /// deferred updates included).  NaN for a lost round.
     pub train_loss: f64,
     /// Test accuracy in [0,1]; NaN when not evaluated this round.
     pub test_accuracy: f64,
@@ -31,6 +35,65 @@ pub struct RoundRecord {
     /// their traffic is charged but they are excluded from the Eq. 3
     /// reduction.  Empty when no deadline is set.
     pub stragglers: Vec<usize>,
+    /// Clients whose *earlier-round* late updates were folded into this
+    /// round's Eq. 3 reduction (straggler re-inclusion,
+    /// `straggler_policy = defer`).  Empty under the drop policy.
+    pub deferred: Vec<usize>,
+}
+
+impl RoundRecord {
+    /// Checkpoint-grade JSON: every float travels as its bit pattern so a
+    /// restored record is bit-identical (NaN losses of lost rounds
+    /// included — plain JSON numbers cannot carry them at all).
+    pub fn to_ckpt_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", self.round.into()),
+            // cluster may be the usize::MAX "no cluster" sentinel, which
+            // does not survive a f64 JSON number exactly.
+            ("cluster", u64_to_hex(self.cluster as u64).into()),
+            ("train_loss", f64_to_hex(self.train_loss).into()),
+            ("test_accuracy", f64_to_hex(self.test_accuracy).into()),
+            ("test_loss", f64_to_hex(self.test_loss).into()),
+            ("comm_byte_hops", u64_to_hex(self.comm_byte_hops).into()),
+            ("train_s", f64_to_hex(self.train_s).into()),
+            ("aggregate_s", f64_to_hex(self.aggregate_s).into()),
+            ("net_s", f64_to_hex(self.net_s).into()),
+            ("clock_s", f64_to_hex(self.clock_s).into()),
+            ("stragglers", Json::arr(self.stragglers.iter().map(|&s| Json::from(s)))),
+            ("deferred", Json::arr(self.deferred.iter().map(|&s| Json::from(s)))),
+        ])
+    }
+
+    /// Inverse of [`RoundRecord::to_ckpt_json`].
+    pub fn from_ckpt_json(j: &Json) -> Result<RoundRecord> {
+        let hex_f64 = |k: &str| -> Result<f64> { f64_from_hex(j.str_field(k)?) };
+        let ids = |k: &str| -> Result<Vec<usize>> {
+            j.req(k)?
+                .as_arr()
+                .ok_or_else(|| Error::Json(format!("field {k:?} must be an array")))?
+                .iter()
+                .map(|v| {
+                    v.as_usize().ok_or_else(|| {
+                        Error::Json(format!("field {k:?} holds a non-integer"))
+                    })
+                })
+                .collect()
+        };
+        Ok(RoundRecord {
+            round: j.usize_field("round")?,
+            cluster: u64_from_hex(j.str_field("cluster")?)? as usize,
+            train_loss: hex_f64("train_loss")?,
+            test_accuracy: hex_f64("test_accuracy")?,
+            test_loss: hex_f64("test_loss")?,
+            comm_byte_hops: u64_from_hex(j.str_field("comm_byte_hops")?)?,
+            train_s: hex_f64("train_s")?,
+            aggregate_s: hex_f64("aggregate_s")?,
+            net_s: hex_f64("net_s")?,
+            clock_s: hex_f64("clock_s")?,
+            stragglers: ids("stragglers")?,
+            deferred: ids("deferred")?,
+        })
+    }
 }
 
 /// Full experiment result.
@@ -51,6 +114,19 @@ impl ExperimentMetrics {
             .rev()
             .map(|r| r.test_accuracy)
             .find(|a| !a.is_nan())
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Final per-round training loss, skipping back over rounds that
+    /// trained nothing (lost to dropout or stragglers, NaN loss) — the
+    /// same spirit as [`ExperimentMetrics::final_accuracy`].  NaN only
+    /// when no round ever trained.
+    pub fn final_train_loss(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .map(|r| r.train_loss)
+            .find(|l| l.is_finite())
             .unwrap_or(f64::NAN)
     }
 
@@ -102,6 +178,7 @@ impl ExperimentMetrics {
             "net_s",
             "clock_s",
             "stragglers",
+            "deferred",
         ]);
         for r in &self.rounds {
             w.row(&[
@@ -117,6 +194,11 @@ impl ExperimentMetrics {
                 format!("{}", r.clock_s),
                 // semicolon-joined ids: stays a single CSV field
                 r.stragglers
+                    .iter()
+                    .map(ToString::to_string)
+                    .collect::<Vec<_>>()
+                    .join(";"),
+                r.deferred
                     .iter()
                     .map(ToString::to_string)
                     .collect::<Vec<_>>()
@@ -150,6 +232,12 @@ impl ExperimentMetrics {
                             "stragglers",
                             Json::arr(
                                 r.stragglers.iter().map(|&s| Json::from(s)),
+                            ),
+                        ),
+                        (
+                            "deferred",
+                            Json::arr(
+                                r.deferred.iter().map(|&s| Json::from(s)),
                             ),
                         ),
                     ])
@@ -192,6 +280,7 @@ mod tests {
             net_s: 0.0,
             clock_s: 0.0,
             stragglers: Vec::new(),
+            deferred: Vec::new(),
         }
     }
 
@@ -240,6 +329,7 @@ mod tests {
         r.net_s = 1.25;
         r.clock_s = 3.5;
         r.stragglers = vec![4, 9];
+        r.deferred = vec![1];
         m.push(r);
         let j = Json::parse(&m.to_json().dump()).unwrap();
         assert_eq!(j.f64_field("final_accuracy").unwrap(), 0.5);
@@ -247,6 +337,7 @@ mod tests {
         assert_eq!(r0.f64_field("net_s").unwrap(), 1.25);
         assert_eq!(r0.f64_field("clock_s").unwrap(), 3.5);
         assert_eq!(r0.get("stragglers").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(r0.get("deferred").unwrap().as_arr().unwrap().len(), 1);
         assert!((m.total_net_s() - 1.25).abs() < 1e-12);
     }
 
@@ -256,15 +347,58 @@ mod tests {
         let mut r = rec(0, 0.1);
         r.clock_s = 2.0;
         r.stragglers = vec![3, 7];
+        r.deferred = vec![9];
         m.push(r);
         m.push(rec(1, 0.2));
         let text = String::from_utf8(m.to_csv().as_bytes().to_vec()).unwrap();
         let mut lines = text.lines();
         let header = lines.next().unwrap();
-        assert!(header.ends_with("net_s,clock_s,stragglers"), "{header}");
+        assert!(
+            header.ends_with("net_s,clock_s,stragglers,deferred"),
+            "{header}"
+        );
         let row0 = lines.next().unwrap();
-        assert!(row0.ends_with(",2,3;7"), "{row0}");
+        assert!(row0.ends_with(",2,3;7,9"), "{row0}");
         let row1 = lines.next().unwrap();
-        assert!(row1.ends_with(",0,"), "{row1}");
+        assert!(row1.ends_with(",0,,"), "{row1}");
+    }
+
+    #[test]
+    fn final_train_loss_skips_lost_rounds() {
+        let mut m = ExperimentMetrics::default();
+        assert!(m.final_train_loss().is_nan(), "empty metrics");
+        let mut r0 = rec(0, 0.5);
+        r0.train_loss = 0.75;
+        m.push(r0);
+        // Final round lost to dropout/stragglers: NaN loss must not leak
+        // into the headline number.
+        let mut r1 = rec(1, f64::NAN);
+        r1.train_loss = f64::NAN;
+        m.push(r1);
+        assert_eq!(m.final_train_loss(), 0.75);
+    }
+
+    #[test]
+    fn ckpt_json_roundtrips_bit_exactly() {
+        let mut r = rec(3, f64::NAN);
+        r.cluster = usize::MAX; // the FedAvg "no cluster" sentinel
+        r.train_loss = f64::NAN; // lost round
+        r.net_s = 0.1 + 0.2; // a value with no short decimal form
+        r.clock_s = 1e-300;
+        r.comm_byte_hops = u64::MAX;
+        r.stragglers = vec![4, 9];
+        r.deferred = vec![2];
+        let text = r.to_ckpt_json().dump();
+        let back =
+            RoundRecord::from_ckpt_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.round, r.round);
+        assert_eq!(back.cluster, r.cluster);
+        assert_eq!(back.train_loss.to_bits(), r.train_loss.to_bits());
+        assert_eq!(back.test_accuracy.to_bits(), r.test_accuracy.to_bits());
+        assert_eq!(back.net_s.to_bits(), r.net_s.to_bits());
+        assert_eq!(back.clock_s.to_bits(), r.clock_s.to_bits());
+        assert_eq!(back.comm_byte_hops, r.comm_byte_hops);
+        assert_eq!(back.stragglers, r.stragglers);
+        assert_eq!(back.deferred, r.deferred);
     }
 }

@@ -9,4 +9,4 @@
 
 pub mod sim;
 
-pub use sim::{NetSim, TransferOutcome};
+pub use sim::{NetSim, NetSimState, TransferOutcome};

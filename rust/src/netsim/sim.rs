@@ -126,9 +126,10 @@ impl NetSim {
     }
 
     /// Queue a transfer for delivery; routed on `routes` (the DES
-    /// contract is latency-weighted routing — pass
-    /// [`RouteTable::latency`] unless a test deliberately rides
-    /// hop-shortest paths) at submission time.  Once [`NetSim::run`] has
+    /// contract is time-weighted routing — [`RouteTable::latency`], or
+    /// [`RouteTable::transfer_time`] when the payload size is known —
+    /// unless a test deliberately rides hop-shortest paths) at
+    /// submission time.  Once [`NetSim::run`] has
     /// drained earlier traffic, `at_s` must not precede [`NetSim::now_s`]
     /// (the clock is monotone).
     pub fn submit(
@@ -222,6 +223,63 @@ impl NetSim {
     pub fn now_s(&self) -> f64 {
         self.clock_s
     }
+
+    /// Snapshot the carried state for a checkpoint.  Only a *drained* sim
+    /// can snapshot — in-flight transfers live in the event heap and are
+    /// deliberately not serialized (the runner's rounds are synchronous
+    /// barriers, so at every round boundary the heap is empty).
+    pub fn state(&self) -> Result<NetSimState> {
+        if !self.pending.is_empty() || !self.events.is_empty() {
+            return Err(Error::Data(format!(
+                "cannot checkpoint a NetSim with {} in-flight transfers — \
+                 run() to drain first",
+                self.pending.len()
+            )));
+        }
+        Ok(NetSimState {
+            link_free_s: self.link_free_s.clone(),
+            link_busy_s: self.link_busy_s.clone(),
+            clock_s: self.clock_s,
+            seq: self.seq,
+            id_base: self.id_base,
+        })
+    }
+
+    /// Restore a snapshot taken by [`NetSim::state`] onto a sim built
+    /// over the same topology.  The continuation — clocks, FIFO
+    /// tie-breaks, transfer ids — is bit-identical to the uninterrupted
+    /// sim's.
+    pub fn restore(&mut self, st: &NetSimState) -> Result<()> {
+        if st.link_free_s.len() != self.link_free_s.len()
+            || st.link_busy_s.len() != self.link_busy_s.len()
+        {
+            return Err(Error::Data(format!(
+                "NetSim snapshot has {} links, topology has {}",
+                st.link_free_s.len(),
+                self.link_free_s.len()
+            )));
+        }
+        self.link_free_s.clone_from(&st.link_free_s);
+        self.link_busy_s.clone_from(&st.link_busy_s);
+        self.pending.clear();
+        self.events.clear();
+        self.clock_s = st.clock_s;
+        self.seq = st.seq;
+        self.id_base = st.id_base;
+        Ok(())
+    }
+}
+
+/// Serializable carried state of a drained [`NetSim`] (checkpoint/resume):
+/// per-link free/busy times, the monotone clock, the FIFO tie-break
+/// counter and the transfer-id base.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetSimState {
+    pub link_free_s: Vec<f64>,
+    pub link_busy_s: Vec<f64>,
+    pub clock_s: f64,
+    pub seq: usize,
+    pub id_base: usize,
 }
 
 #[cfg(test)]
@@ -395,6 +453,60 @@ mod tests {
         assert_eq!(out[0].id, b);
         sim.reset();
         assert_eq!(sim.submit(&rt, NodeId(0), NodeId(1), 10, 0.0).unwrap(), 0);
+    }
+
+    #[test]
+    fn snapshot_restore_continues_bit_identically() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        // Reference: one uninterrupted sim over two rounds of traffic.
+        let mut whole = NetSim::new(&t);
+        whole.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        whole.run();
+        let at = whole.now_s();
+        whole.submit(&rt, NodeId(0), NodeId(1), 700_000, at).unwrap();
+        let ref_out = whole.run();
+
+        // Same first round, then checkpoint + restore into a fresh sim.
+        let mut first = NetSim::new(&t);
+        first.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        first.run();
+        let snap = first.state().unwrap();
+        let mut resumed = NetSim::new(&t);
+        resumed.restore(&snap).unwrap();
+        assert_eq!(resumed.now_s().to_bits(), first.now_s().to_bits());
+        let at = resumed.now_s();
+        let id = resumed.submit(&rt, NodeId(0), NodeId(1), 700_000, at).unwrap();
+        let out = resumed.run();
+        assert_eq!(id, ref_out[0].id, "transfer ids must continue");
+        assert_eq!(
+            out[0].delivered_s.to_bits(),
+            ref_out[0].delivered_s.to_bits()
+        );
+        assert_eq!(
+            out[0].queue_wait_s.to_bits(),
+            ref_out[0].queue_wait_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn snapshot_refuses_inflight_transfers() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut sim = NetSim::new(&t);
+        sim.submit(&rt, NodeId(0), NodeId(1), 1_000, 0.0).unwrap();
+        assert!(sim.state().is_err(), "undrained sim must not checkpoint");
+        sim.run();
+        assert!(sim.state().is_ok());
+        // Restore onto a mismatched topology is a typed error.
+        let mut bigger = Topology::new();
+        let a = bigger.add_node(NodeKind::Router);
+        let b = bigger.add_node(NodeKind::Router);
+        let c = bigger.add_node(NodeKind::Router);
+        bigger.add_link(a, b, 1.0, 1.0);
+        bigger.add_link(b, c, 1.0, 1.0);
+        let mut other = NetSim::new(&bigger);
+        assert!(other.restore(&sim.state().unwrap()).is_err());
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! No crates.io RNG is vendored in this image; the generators below are
 //! the reference implementations of Blackman & Vigna.
 
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::{f64_from_hex, f64_to_hex, u64_from_hex, u64_to_hex};
+
 /// SplitMix64 — used for seeding and cheap stateless streams.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -35,6 +39,58 @@ pub struct Rng {
     spare_normal: Option<f64>,
 }
 
+/// Serializable generator state: everything a [`Rng`] needs to continue
+/// its stream bit-exactly after a checkpoint/resume cycle (the xoshiro
+/// words plus the cached Box-Muller spare).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RngState {
+    pub s: [u64; 4],
+    pub spare_normal: Option<f64>,
+}
+
+impl RngState {
+    /// Checkpoint-grade JSON: u64 words and the f64 spare travel as hex
+    /// bit patterns (JSON numbers top out at 2^53 of integer precision).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("s", Json::arr(self.s.iter().map(|&w| Json::from(u64_to_hex(w))))),
+            (
+                "spare_normal",
+                match self.spare_normal {
+                    Some(v) => Json::from(f64_to_hex(v)),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RngState> {
+        let arr = j
+            .req("s")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("rng state field \"s\" must be an array".into()))?;
+        if arr.len() != 4 {
+            return Err(Error::Json(format!(
+                "rng state has {} words, want 4",
+                arr.len()
+            )));
+        }
+        let mut s = [0u64; 4];
+        for (i, v) in arr.iter().enumerate() {
+            s[i] = u64_from_hex(v.as_str().ok_or_else(|| {
+                Error::Json("rng state word must be a hex string".into())
+            })?)?;
+        }
+        let spare_normal = match j.req("spare_normal")? {
+            Json::Null => None,
+            v => Some(f64_from_hex(v.as_str().ok_or_else(|| {
+                Error::Json("spare_normal must be a hex string".into())
+            })?)?),
+        };
+        Ok(RngState { s, spare_normal })
+    }
+}
+
 impl Rng {
     /// Seed via SplitMix64 per the xoshiro authors' recommendation.
     pub fn new(seed: u64) -> Rng {
@@ -48,6 +104,17 @@ impl Rng {
     /// Independent child stream (for per-client / per-cluster RNGs).
     pub fn fork(&mut self, tag: u64) -> Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Snapshot the stream position (checkpoint/resume).
+    pub fn state(&self) -> RngState {
+        RngState { s: self.s, spare_normal: self.spare_normal }
+    }
+
+    /// Rebuild a generator mid-stream from a [`RngState`] snapshot; the
+    /// continuation is bit-identical to the uninterrupted stream.
+    pub fn from_state(st: &RngState) -> Rng {
+        Rng { s: st.s, spare_normal: st.spare_normal }
     }
 
     #[inline]
@@ -295,6 +362,36 @@ mod tests {
         }
         assert!(hits[2] > hits[1] && hits[1] > hits[0], "{hits:?}");
         assert!((hits[2] as f64 / 30_000.0 - 0.7).abs() < 0.03);
+    }
+
+    #[test]
+    fn state_snapshot_resumes_bit_identically() {
+        let mut a = Rng::new(123);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        a.normal(); // park a spare in the Box-Muller cache
+        let snap = a.state();
+        let mut b = Rng::from_state(&snap);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_eq!(a.normal(), b.normal());
+    }
+
+    #[test]
+    fn state_json_roundtrips() {
+        let mut r = Rng::new(7);
+        r.normal();
+        let st = r.state();
+        let back = RngState::from_json(&st.to_json()).unwrap();
+        assert_eq!(back, st);
+        // parse through text too (what a checkpoint file does)
+        let text = st.to_json().dump();
+        let reparsed =
+            RngState::from_json(&crate::util::json::Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(reparsed, st);
     }
 
     #[test]

@@ -1,34 +1,61 @@
-//! Shortest-path routing: BFS hop counts and Dijkstra latency paths.
+//! Shortest-path routing: hop counts, Dijkstra latency paths, and
+//! bandwidth-aware transfer-time paths (`latency + bytes/bandwidth`).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::topology::graph::{LinkId, NodeId, Topology};
 
+/// Per-link Dijkstra weight.
+#[derive(Debug, Clone, Copy)]
+enum EdgeWeight {
+    /// Unit weight: hop-count routing.
+    Hops,
+    /// Propagation latency only (ms).
+    Latency,
+    /// Seconds to push `bytes` across the link: propagation latency plus
+    /// serialization time at the link's bandwidth.  Unlike pure latency
+    /// this stops a bulk transfer from preferring a thin low-latency
+    /// link over a fat slightly-slower one.
+    TransferTime { bytes: u64 },
+}
+
 /// All-pairs-on-demand route table.  Paths are recomputed per source; for
 /// the graph sizes here (hundreds of nodes) this is microseconds.
 pub struct RouteTable<'a> {
     topo: &'a Topology,
-    /// Edge weight: None = hop count, Some = latency-weighted Dijkstra.
-    weighted: bool,
+    weighting: EdgeWeight,
 }
 
 impl<'a> RouteTable<'a> {
     /// Hop-count routing (the paper's communication-load metric).
     pub fn hops(topo: &'a Topology) -> RouteTable<'a> {
-        RouteTable { topo, weighted: false }
+        RouteTable { topo, weighting: EdgeWeight::Hops }
     }
 
-    /// Latency-weighted routing (used by the DES for path selection).
+    /// Latency-weighted routing (path selection when the transfer size is
+    /// unknown or negligible).
     pub fn latency(topo: &'a Topology) -> RouteTable<'a> {
-        RouteTable { topo, weighted: true }
+        RouteTable { topo, weighting: EdgeWeight::Latency }
+    }
+
+    /// Bandwidth-aware routing for a transfer of `bytes`: each link costs
+    /// `latency + bytes/bandwidth` seconds.  This is what the DES rides
+    /// when the model size is known — big migrations stop preferring
+    /// thin low-latency links (ROADMAP open item).
+    pub fn transfer_time(topo: &'a Topology, bytes: u64) -> RouteTable<'a> {
+        RouteTable { topo, weighting: EdgeWeight::TransferTime { bytes } }
     }
 
     fn weight(&self, l: LinkId) -> f64 {
-        if self.weighted {
-            self.topo.link(l).latency_ms
-        } else {
-            1.0
+        let link = self.topo.link(l);
+        match self.weighting {
+            EdgeWeight::Hops => 1.0,
+            EdgeWeight::Latency => link.latency_ms,
+            EdgeWeight::TransferTime { bytes } => {
+                link.latency_ms / 1e3
+                    + (bytes as f64 * 8.0) / (link.bandwidth_mbps * 1e6)
+            }
         }
     }
 
@@ -148,6 +175,69 @@ mod tests {
             cur = if link.a == cur { link.b } else { link.a };
         }
         assert_eq!(cur, c);
+    }
+
+    /// a — c direct over a thin fast link; a — b — c over fat slow links.
+    /// Latency routing always takes the shortcut; transfer-time routing
+    /// must abandon it once the payload is big enough that serialization
+    /// dominates propagation.
+    fn thin_shortcut() -> (Topology, NodeId, NodeId) {
+        let mut t = Topology::new();
+        let a = t.add_node(NodeKind::Router);
+        let b = t.add_node(NodeKind::Router);
+        let c = t.add_node(NodeKind::Router);
+        t.add_link(a, c, 1.0, 1.0); // 1 Mbps, 1 ms: thin and fast
+        t.add_link(a, b, 1_000.0, 10.0); // 1 Gbps, 10 ms: fat and slower
+        t.add_link(b, c, 1_000.0, 10.0);
+        (t, a, c)
+    }
+
+    #[test]
+    fn transfer_time_routing_diverges_from_latency_on_big_payloads() {
+        let (t, a, c) = thin_shortcut();
+        // Latency routing: 1 ms direct beats 20 ms via b, at any size.
+        assert_eq!(RouteTable::latency(&t).path(a, c).unwrap().len(), 1);
+        // Tiny payload: serialization is negligible, shortcut still wins.
+        let small = RouteTable::transfer_time(&t, 100);
+        assert_eq!(small.path(a, c).unwrap().len(), 1);
+        // 1 MB: 8 s on the 1 Mbps shortcut vs ~36 ms via b — the
+        // bandwidth-aware table must leave the thin link.
+        let big = RouteTable::transfer_time(&t, 1_000_000);
+        assert_eq!(big.path(a, c).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn des_delivers_faster_on_transfer_time_routes() {
+        // Regression for the ROADMAP open item: ride the same 1 MB
+        // transfer through the DES on both route tables; the
+        // bandwidth-aware route must deliver strictly (and dramatically)
+        // earlier than the latency-shortest one.
+        let (t, a, c) = thin_shortcut();
+        let lat = RouteTable::latency(&t);
+        let tt = RouteTable::transfer_time(&t, 1_000_000);
+        let run_on = |rt: &RouteTable| {
+            let mut sim = crate::netsim::NetSim::new(&t);
+            sim.submit(rt, a, c, 1_000_000, 0.0).unwrap();
+            sim.run()[0].latency_s()
+        };
+        let on_latency_route = run_on(&lat);
+        let on_transfer_route = run_on(&tt);
+        assert!((on_latency_route - 8.001).abs() < 1e-9, "{on_latency_route}");
+        assert!(
+            on_transfer_route < on_latency_route / 100.0,
+            "{on_transfer_route} vs {on_latency_route}"
+        );
+    }
+
+    #[test]
+    fn transfer_time_matches_latency_on_uniform_links() {
+        // When every link has the same bandwidth, serialization adds a
+        // uniform per-hop cost and the latency differences decide the
+        // route exactly as they do for pure latency weighting.
+        let (t, a, _b, c) = diamond();
+        let lat = RouteTable::latency(&t);
+        let tt = RouteTable::transfer_time(&t, 50_000);
+        assert_eq!(lat.path(a, c).unwrap(), tt.path(a, c).unwrap());
     }
 
     #[test]

@@ -45,6 +45,57 @@ pub fn human_duration(d: std::time::Duration) -> String {
     }
 }
 
+/// Lowercase hex encoding (checkpoint blobs).
+pub fn bytes_to_hex(bytes: &[u8]) -> String {
+    const DIGITS: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(DIGITS[(b >> 4) as usize] as char);
+        s.push(DIGITS[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Inverse of [`bytes_to_hex`].
+pub fn bytes_from_hex(s: &str) -> Result<Vec<u8>> {
+    if !s.is_ascii() {
+        return Err(Error::Json("hex string holds non-ASCII bytes".into()));
+    }
+    if s.len() % 2 != 0 {
+        return Err(Error::Json(format!("odd hex length {}", s.len())));
+    }
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|_| Error::Json(format!("bad hex byte at {}", 2 * i)))
+        })
+        .collect()
+}
+
+/// Bit-exact f64 serialization for checkpoints: JSON numbers cannot carry
+/// NaN and a decimal round-trip is one rounding bug away from breaking
+/// the resume-is-bit-identical contract, so checkpoint floats travel as
+/// the 16-hex-digit bit pattern instead.
+pub fn f64_to_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Inverse of [`f64_to_hex`].
+pub fn f64_from_hex(s: &str) -> Result<f64> {
+    u64_from_hex(s).map(f64::from_bits)
+}
+
+/// u64 as hex (values above 2^53 would lose precision as JSON numbers).
+pub fn u64_to_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`u64_to_hex`].
+pub fn u64_from_hex(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16)
+        .map_err(|_| Error::Json(format!("bad u64 hex {s:?}")))
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -88,6 +139,22 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(mean(&[2.0, 4.0]), 3.0);
         assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hex_roundtrips_bytes_and_bits() {
+        let blob = vec![0u8, 1, 0xab, 0xff, 0x10];
+        assert_eq!(bytes_from_hex(&bytes_to_hex(&blob)).unwrap(), blob);
+        assert!(bytes_from_hex("abc").is_err());
+        assert!(bytes_from_hex("zz").is_err());
+        for v in [0.0, -0.0, 1.5, f64::NAN, f64::INFINITY, -1e-300] {
+            let back = f64_from_hex(&f64_to_hex(v)).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+        for v in [0u64, 1, u64::MAX, 1 << 60] {
+            assert_eq!(u64_from_hex(&u64_to_hex(v)).unwrap(), v);
+        }
+        assert!(u64_from_hex("not hex").is_err());
     }
 
     #[test]

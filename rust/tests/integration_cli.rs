@@ -38,6 +38,63 @@ fn train_help_lists_new_knobs() {
     let text = String::from_utf8_lossy(&out.stderr);
     assert!(text.contains("--deadline-s"), "{text}");
     assert!(text.contains("edgeflow_latency"), "{text}");
+    assert!(text.contains("--straggler-policy"), "{text}");
+    assert!(text.contains("--checkpoint-every"), "{text}");
+    assert!(text.contains("--resume"), "{text}");
+}
+
+#[test]
+fn train_rejects_bad_straggler_policy() {
+    let out = bin()
+        .args(["train", "--straggler-policy", "hold"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("straggler"), "{text}");
+}
+
+#[test]
+fn comm_sim_runs_without_artifacts_via_param_count() {
+    // The Fig-4 study is pure coordination: an explicit --param-count
+    // must make it runnable with no artifact manifest at all (this is
+    // what CI's smoke-metrics job leans on).
+    let csv = std::env::temp_dir().join("edgeflow_cli_fig4.csv");
+    let json = std::env::temp_dir().join("edgeflow_cli_fig4.json");
+    let out = bin()
+        .args([
+            "comm-sim",
+            "--param-count", "50000",
+            "--rounds", "8",
+            "--clusters", "4",
+            "--cluster-size", "4",
+            "--latency",
+            "--out", csv.to_str().unwrap(),
+            "--out-json", json.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Fig 4"));
+    assert!(text.contains("mean transfer latency"));
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert!(csv_text.lines().count() > 1, "{csv_text}");
+    let json_text = std::fs::read_to_string(&json).unwrap();
+    assert!(json_text.contains("byte_hops_per_round"), "{json_text}");
+}
+
+#[test]
+fn train_resume_rejects_missing_checkpoint() {
+    let out = bin()
+        .args(["train", "--resume", "/nonexistent/ck.json"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
 }
 
 #[test]

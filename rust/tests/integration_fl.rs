@@ -2,13 +2,22 @@
 //! Runner loop (data -> PJRT local updates -> aggregation -> migration ->
 //! eval) for every algorithm.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use edgeflow::config::{
-    Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind,
+    Algorithm, DatasetKind, Distribution, ExperimentConfig, StragglerPolicy,
+    TopologyKind,
 };
-use edgeflow::fl::runner::Runner;
+use edgeflow::fl::aggregate::reduce_states_weighted;
+use edgeflow::fl::comm::RoundComm;
+use edgeflow::fl::runner::{RunReport, Runner, RunnerCheckpoint};
+use edgeflow::fl::session::{
+    MetricsCsvObserver, RoundControl, RoundObserver, RoundOutcome,
+};
+use edgeflow::fl::strategy::RoundPlan;
 use edgeflow::runtime::executor::Engine;
+use edgeflow::runtime::params::ModelState;
+use edgeflow::util::json::Json;
 
 fn engine() -> Option<Arc<Engine>> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -16,6 +25,16 @@ fn engine() -> Option<Arc<Engine>> {
         return None;
     }
     Some(Arc::new(Engine::load("artifacts").expect("engine")))
+}
+
+/// Worker count for the round loop, settable by the CI matrix
+/// (`EDGEFLOW_TEST_WORKERS=2 cargo test`).  Reports are bit-identical at
+/// any value, so the whole suite must pass unchanged.
+fn env_workers() -> usize {
+    std::env::var("EDGEFLOW_TEST_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
 }
 
 fn tiny_cfg(alg: Algorithm) -> ExperimentConfig {
@@ -34,6 +53,7 @@ fn tiny_cfg(alg: Algorithm) -> ExperimentConfig {
         eval_every: 4,
         seed: 3,
         lr: 2e-3, // short runs: push Adam a little harder than the paper default
+        workers: env_workers(),
         ..ExperimentConfig::default()
     }
 }
@@ -509,6 +529,431 @@ fn dropout_half_still_trains() {
     full.rounds = 20;
     let full_rep = Runner::with_engine(e, full).unwrap().run().unwrap();
     assert!(report.total_byte_hops < full_rep.total_byte_hops);
+}
+
+#[test]
+fn fig4_results_identical_at_env_worker_count() {
+    // Engine-free (pure coordination), so this runs in CI and gives the
+    // workers={1,2} matrix real teeth: the suite-level cell pool must be
+    // bit-invariant in EDGEFLOW_TEST_WORKERS even when every
+    // artifact-gated test above skips.
+    use edgeflow::fl::experiments::fig4;
+    let algs = [
+        Algorithm::FedAvg,
+        Algorithm::HierFl,
+        Algorithm::EdgeFlowSeq,
+        Algorithm::EdgeFlowLatency,
+    ];
+    let (_, seq) = fig4(50_000, 4, 3, 10, &algs, 0, 1).unwrap();
+    let (_, par) = fig4(50_000, 4, 3, 10, &algs, 0, env_workers()).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.topology, b.topology);
+        assert_eq!(a.algorithm, b.algorithm);
+        assert_eq!(
+            a.byte_hops_per_round.to_bits(),
+            b.byte_hops_per_round.to_bits(),
+            "{:?}/{:?}",
+            a.topology,
+            a.algorithm
+        );
+        assert_eq!(a.vs_fedavg.to_bits(), b.vs_fedavg.to_bits());
+        assert_eq!(a.round_latency_s.to_bits(), b.round_latency_s.to_bits());
+        assert_eq!(
+            a.participants_per_round.to_bits(),
+            b.participants_per_round.to_bits()
+        );
+    }
+}
+
+/// The deterministic half of two reports must agree bit-for-bit.
+/// Wall-clock phase timings (`train_s`/`aggregate_s`/`phase_seconds`)
+/// are excluded by nature — they measure this process, not the run.
+fn assert_reports_bit_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.name, b.name);
+    assert_eq!(a.algorithm, b.algorithm);
+    assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+    assert_eq!(a.best_accuracy.to_bits(), b.best_accuracy.to_bits());
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(a.total_byte_hops, b.total_byte_hops);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.metrics.rounds.len(), b.metrics.rounds.len());
+    for (x, y) in a.metrics.rounds.iter().zip(&b.metrics.rounds) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.cluster, y.cluster, "round {}", x.round);
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "round {}",
+            x.round
+        );
+        assert_eq!(x.test_accuracy.to_bits(), y.test_accuracy.to_bits());
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+        assert_eq!(x.comm_byte_hops, y.comm_byte_hops);
+        assert_eq!(x.net_s.to_bits(), y.net_s.to_bits(), "round {}", x.round);
+        assert_eq!(x.clock_s.to_bits(), y.clock_s.to_bits(), "round {}", x.round);
+        assert_eq!(x.stragglers, y.stragglers);
+        assert_eq!(x.deferred, y.deferred);
+    }
+}
+
+#[test]
+fn checkpoint_then_resume_is_bit_identical_to_uninterrupted() {
+    // The session API's headline contract, across algorithm families:
+    // run A straight through; run B steps to round 3, checkpoints
+    // (through the serialized JSON, like a checkpoint file), is rebuilt
+    // via Runner::resume, and finishes — reports and final model must
+    // agree bit-for-bit.  Dropout exercises the RNG stream, a deadline
+    // + defer the straggler pool, edgeflow_latency the persistent-DES
+    // probes and tour state.
+    let Some(e) = engine() else { return };
+    for (alg, topo, deadline, policy) in [
+        (
+            Algorithm::EdgeFlowSeq,
+            TopologyKind::Simple,
+            1e-9,
+            StragglerPolicy::Defer,
+        ),
+        (
+            Algorithm::EdgeFlowLatency,
+            TopologyKind::Hybrid,
+            0.0,
+            StragglerPolicy::Drop,
+        ),
+        (Algorithm::HierFl, TopologyKind::Simple, 0.0, StragglerPolicy::Drop),
+    ] {
+        let mk = || {
+            let mut cfg = tiny_cfg(alg);
+            cfg.topology = topo;
+            cfg.rounds = if alg == Algorithm::HierFl { 4 } else { 6 };
+            cfg.dropout = 0.2;
+            cfg.deadline_s = deadline;
+            cfg.straggler_policy = policy;
+            cfg.eval_every = 2;
+            cfg
+        };
+        let mut whole = Runner::with_engine(e.clone(), mk()).unwrap();
+        let ref_report = whole.run().unwrap();
+
+        let mut first = Runner::with_engine(e.clone(), mk()).unwrap();
+        for _ in 0..3 {
+            first.step().unwrap();
+        }
+        let ck = first.checkpoint().unwrap();
+        let text = ck.to_json().pretty();
+        let ck2 = RunnerCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(ck2.cursor, 3);
+        let mut resumed = Runner::resume(e.clone(), &ck2).unwrap();
+        assert_eq!(resumed.round(), 3, "{alg:?}");
+        assert_eq!(
+            resumed.net_clock_s().to_bits(),
+            first.net_clock_s().to_bits(),
+            "{alg:?}: restored DES clock"
+        );
+        let report = resumed.run().unwrap();
+        assert_reports_bit_identical(&ref_report, &report);
+        assert_eq!(
+            whole.state().data,
+            resumed.state().data,
+            "{alg:?}: final model state after resume"
+        );
+    }
+}
+
+#[test]
+fn restore_rejects_a_different_config() {
+    let Some(e) = engine() else { return };
+    let mut r = Runner::with_engine(e.clone(), tiny_cfg(Algorithm::EdgeFlowSeq))
+        .unwrap();
+    r.step().unwrap();
+    let ck = r.checkpoint().unwrap();
+    let mut other_cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    other_cfg.seed = 99;
+    let mut other = Runner::with_engine(e, other_cfg).unwrap();
+    assert!(other.restore(&ck).is_err(), "config mismatch must be typed");
+}
+
+/// Observer that records which hooks fired, in order.
+struct RecordingObserver(Arc<Mutex<Vec<String>>>);
+
+impl RoundObserver for RecordingObserver {
+    fn on_plan(&mut self, t: usize, _plan: &RoundPlan, _ctl: &mut RoundControl) {
+        self.0.lock().unwrap().push(format!("plan:{t}"));
+    }
+    fn on_comm(
+        &mut self,
+        t: usize,
+        _comm: &RoundComm,
+        _net_s: f64,
+        _stragglers: &[usize],
+        _ctl: &mut RoundControl,
+    ) {
+        self.0.lock().unwrap().push(format!("comm:{t}"));
+    }
+    fn on_aggregate(&mut self, t: usize, _state: &ModelState, _ctl: &mut RoundControl) {
+        self.0.lock().unwrap().push(format!("aggregate:{t}"));
+    }
+    fn on_round_end(
+        &mut self,
+        t: usize,
+        outcome: &RoundOutcome,
+        _ctl: &mut RoundControl,
+    ) {
+        let tag = if outcome.is_lost() { "lost" } else { "end" };
+        self.0.lock().unwrap().push(format!("{tag}:{t}"));
+    }
+}
+
+#[test]
+fn observer_callbacks_fire_in_phase_order() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 2;
+    let calls = Arc::new(Mutex::new(Vec::new()));
+    let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+    r.add_observer(Box::new(RecordingObserver(calls.clone())));
+    r.run().unwrap();
+    assert_eq!(
+        *calls.lock().unwrap(),
+        vec![
+            "plan:0",
+            "comm:0",
+            "aggregate:0",
+            "end:0",
+            "plan:1",
+            "comm:1",
+            "aggregate:1",
+            "end:1"
+        ]
+    );
+
+    // An all-dropped round skips comm and aggregate but still closes.
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 1;
+    cfg.dropout = 1.0;
+    let calls = Arc::new(Mutex::new(Vec::new()));
+    let mut r = Runner::with_engine(e, cfg).unwrap();
+    r.add_observer(Box::new(RecordingObserver(calls.clone())));
+    r.run().unwrap();
+    assert_eq!(*calls.lock().unwrap(), vec!["plan:0", "lost:0"]);
+}
+
+/// Observer that stops the session once `limit` rounds have run.
+struct StopAfter(usize);
+
+impl RoundObserver for StopAfter {
+    fn on_round_end(&mut self, t: usize, _o: &RoundOutcome, ctl: &mut RoundControl) {
+        if t + 1 >= self.0 {
+            ctl.request_stop();
+        }
+    }
+}
+
+#[test]
+fn observer_can_stop_the_session_early() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 8;
+    let mut r = Runner::with_engine(e, cfg).unwrap();
+    r.add_observer(Box::new(StopAfter(3)));
+    let report = r.run().unwrap();
+    assert!(r.is_done());
+    assert_eq!(report.rounds, 3);
+    assert_eq!(report.metrics.rounds.len(), 3);
+    assert!(r.step().is_err(), "stepping a stopped session is a typed error");
+}
+
+/// Observer that switches the deadline on from round `from` (per-cluster
+/// adaptive deadlines are this, with a policy instead of a constant).
+struct DeadlineFromRound {
+    from: usize,
+    deadline_s: f64,
+}
+
+impl RoundObserver for DeadlineFromRound {
+    fn on_plan(&mut self, t: usize, _plan: &RoundPlan, ctl: &mut RoundControl) {
+        if t == self.from {
+            ctl.set_deadline_s(self.deadline_s);
+        }
+    }
+}
+
+#[test]
+fn observer_deadline_override_applies_to_the_planned_round() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 3;
+    let mut r = Runner::with_engine(e, cfg).unwrap();
+    r.add_observer(Box::new(DeadlineFromRound { from: 1, deadline_s: 1e-9 }));
+    let report = r.run().unwrap();
+    let recs = &report.metrics.rounds;
+    assert!(recs[0].stragglers.is_empty(), "no deadline at round 0");
+    assert!(!recs[0].train_loss.is_nan());
+    for rec in &recs[1..] {
+        assert_eq!(
+            rec.stragglers.len(),
+            5,
+            "round {} under the 1e-9 deadline (N_m = 5)",
+            rec.round
+        );
+        assert!(
+            rec.train_loss.is_nan(),
+            "drop policy: all-straggled rounds are lost"
+        );
+    }
+}
+
+#[test]
+fn defer_policy_folds_late_updates_into_the_next_round() {
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 3;
+    cfg.deadline_s = 1e-9; // every upload is late
+    cfg.straggler_policy = StragglerPolicy::Defer;
+    let mut r = Runner::with_engine(e.clone(), cfg.clone()).unwrap();
+
+    // Probe the expected fold with a second runner sharing the engine:
+    // cluster 0's round-0 updates against the initial state, reduced
+    // with their Eq. 3 sample weights in client-id order.
+    let probe = Runner::with_engine(e, cfg).unwrap();
+    let members = probe.fed.cluster_members(0);
+    let mut weighted = Vec::new();
+    let mut loss_terms: Vec<(f64, f64)> = Vec::new();
+    for &id in &members {
+        let (s, loss) = probe.local_update_for(id, 0).unwrap();
+        loss_terms.push((probe.client_weight(id), loss as f64));
+        weighted.push((probe.client_weight(id), s));
+    }
+    let (_w, expected) = reduce_states_weighted(weighted).unwrap();
+
+    // Round 0: everyone straggles and nothing is pending — the round is
+    // lost, but (unlike drop) the late updates are held, not discarded.
+    let out0 = r.step().unwrap();
+    assert!(out0.is_lost());
+    assert_eq!(out0.record().stragglers, members);
+    assert!(out0.record().deferred.is_empty());
+    assert_eq!(r.pending_deferrals(), members);
+
+    // Round 1: cluster 1 trains (and straggles again) while round 0's
+    // late updates fold in — the model moves exactly to their Eq. 3
+    // reduction, one round late.
+    let out1 = r.step().unwrap();
+    assert!(!out1.is_lost());
+    assert_eq!(out1.record().deferred, members);
+    assert_eq!(out1.record().stragglers, probe.fed.cluster_members(1));
+    assert_eq!(
+        r.state().data,
+        expected.data,
+        "fold must equal the Eq. 3 reduction of the deferred updates"
+    );
+    let wsum: f64 = loss_terms.iter().map(|(w, _)| w).sum();
+    let want_loss = loss_terms.iter().map(|(w, l)| w * l).sum::<f64>() / wsum;
+    assert_eq!(
+        out1.record().train_loss.to_bits(),
+        want_loss.to_bits(),
+        "round 1's weighted loss covers exactly the folded operands"
+    );
+
+    // Round 2 folds cluster 1's updates in turn; every straggle event
+    // folds at most once (one pending update per client, ever).
+    let out2 = r.step().unwrap();
+    assert_eq!(out2.record().deferred, probe.fed.cluster_members(1));
+    assert_eq!(r.pending_deferrals(), probe.fed.cluster_members(2));
+}
+
+#[test]
+fn metrics_csv_observer_exports_live_rows() {
+    // The built-in live exporter (and `train --live-csv`): after every
+    // round the file holds all rounds so far, so a crash mid-run leaves
+    // an inspectable curve behind.
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+    cfg.rounds = 3;
+    let path = std::env::temp_dir().join("edgeflow_live_metrics_test.csv");
+    let path_s = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+    let mut r = Runner::with_engine(e, cfg).unwrap();
+    r.add_observer(Box::new(MetricsCsvObserver::new(&path_s)));
+    r.step().unwrap();
+    let after_one = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(after_one.lines().count(), 2, "header + round 0");
+    r.run().unwrap();
+    let after_all = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(after_all.lines().count(), 4, "header + all 3 rounds");
+    assert!(after_all.starts_with("round,"), "{after_all}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn defer_never_double_counts_an_on_time_client() {
+    // HierFl trains every client every round.  Round 0 runs under an
+    // impossible deadline (every update deferred); round 1's deadline is
+    // lifted, so every client delivers a *fresh* on-time update while
+    // its stale round-0 update is still pending — the stale entries are
+    // superseded and must NOT fold next to the fresh ones (that would
+    // double the client's Eq. 3 weight in one reduction).
+    let Some(e) = engine() else { return };
+    let mut cfg = tiny_cfg(Algorithm::HierFl);
+    cfg.rounds = 2;
+    cfg.straggler_policy = StragglerPolicy::Defer;
+    let mut r = Runner::with_engine(e.clone(), cfg.clone()).unwrap();
+    r.add_observer(Box::new(DeadlineFromRound { from: 0, deadline_s: 1e-9 }));
+    r.add_observer(Box::new(DeadlineFromRound { from: 1, deadline_s: 0.0 }));
+
+    let out0 = r.step().unwrap();
+    assert!(out0.is_lost());
+    assert_eq!(r.pending_deferrals().len(), 20, "all clients deferred");
+
+    let out1 = r.step().unwrap();
+    assert!(!out1.is_lost());
+    assert!(out1.record().stragglers.is_empty());
+    assert!(
+        out1.record().deferred.is_empty(),
+        "stale updates superseded by on-time ones must not fold"
+    );
+    assert!(
+        r.pending_deferrals().is_empty(),
+        "superseded entries are discarded, not re-queued"
+    );
+
+    // Round 1's model must equal the plain Eq. 3 aggregation of the
+    // fresh round-1 updates alone (trained against the unchanged
+    // initial state): per-cluster partials, then the cross-cluster
+    // reduction — no stale weight anywhere.
+    let probe = Runner::with_engine(e, cfg).unwrap();
+    let mut partials = Vec::new();
+    for m in 0..4 {
+        let weighted: Vec<(f64, ModelState)> = probe
+            .fed
+            .cluster_members(m)
+            .iter()
+            .map(|&id| {
+                (probe.client_weight(id), probe.local_update_for(id, 1).unwrap().0)
+            })
+            .collect();
+        partials.push(reduce_states_weighted(weighted).unwrap());
+    }
+    let (_w, expected) = reduce_states_weighted(partials).unwrap();
+    assert_eq!(r.state().data, expected.data, "no double-counted client");
+}
+
+#[test]
+fn defer_without_deadline_changes_nothing() {
+    // straggler_policy=defer with no deadline (or no stragglers) must be
+    // a strict no-op: bit-identical to the drop-policy run.
+    let Some(e) = engine() else { return };
+    let run_with = |policy: StragglerPolicy| {
+        let mut cfg = tiny_cfg(Algorithm::EdgeFlowSeq);
+        cfg.rounds = 4;
+        cfg.straggler_policy = policy;
+        let mut r = Runner::with_engine(e.clone(), cfg).unwrap();
+        let rep = r.run().unwrap();
+        (r.state().data.clone(), rep)
+    };
+    let (state_drop, rep_drop) = run_with(StragglerPolicy::Drop);
+    let (state_defer, rep_defer) = run_with(StragglerPolicy::Defer);
+    assert_eq!(state_drop, state_defer);
+    assert_reports_bit_identical(&rep_drop, &rep_defer);
 }
 
 #[test]

@@ -1,7 +1,10 @@
 //! Property tests over the coordinator invariants (DESIGN.md §7), using
 //! the in-tree seeded property harness (`edgeflow::testing::prop`).
 
-use edgeflow::config::{Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind};
+use edgeflow::config::{
+    Algorithm, DatasetKind, Distribution, ExperimentConfig, StragglerPolicy,
+    TopologyKind,
+};
 use edgeflow::data::partition::build_federation;
 use edgeflow::fl::aggregate::{mean_into, weighted_mean_into};
 use edgeflow::fl::scheduler::ClusterSchedule;
@@ -334,6 +337,11 @@ fn prop_config_json_roundtrip() {
             workers: g.int(0, 8),
             dropout: g.int(0, 99) as f64 / 100.0,
             deadline_s: g.int(0, 50) as f64 / 10.0,
+            straggler_policy: if g.bool() {
+                StragglerPolicy::Defer
+            } else {
+                StragglerPolicy::Drop
+            },
         };
         let cfg = cfg.validate().map_err(|e| e.to_string())?;
         let text = cfg.to_json().pretty();
@@ -346,6 +354,7 @@ fn prop_config_json_roundtrip() {
             || back.clients != cfg.clients
             || back.lr != cfg.lr
             || back.seed != cfg.seed
+            || back.straggler_policy != cfg.straggler_policy
         {
             return Err("round-trip mismatch".into());
         }
