@@ -11,12 +11,13 @@ use std::sync::Arc;
 
 use edgeflow::fl::experiments::{fig3a, fig3b, SuiteOptions};
 use edgeflow::fl::theory::{bound, k_scan, TheoryParams};
+use edgeflow::runtime::backend::TrainBackend;
 use edgeflow::runtime::executor::Engine;
 use edgeflow::util::table::{Align, Table};
 
 fn main() -> edgeflow::Result<()> {
     edgeflow::util::logging::init(false);
-    let engine = Arc::new(Engine::load("artifacts")?);
+    let engine: Arc<dyn TrainBackend> = Arc::new(Engine::load("artifacts")?);
     let opts = SuiteOptions {
         rounds: 40,
         samples_per_client: 100,
@@ -26,6 +27,7 @@ fn main() -> edgeflow::Result<()> {
         lr: 1e-3,
         // Sweep points are independent: fan them out across all cores.
         workers: 0,
+        ..SuiteOptions::default()
     };
 
     // ---- Fig 3(a): cluster size ---------------------------------------

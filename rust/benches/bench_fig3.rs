@@ -9,6 +9,7 @@ use std::sync::Arc;
 
 use edgeflow::fl::experiments::{fig3a, fig3b, SuiteOptions};
 use edgeflow::metrics::smooth;
+use edgeflow::runtime::backend::TrainBackend;
 use edgeflow::runtime::executor::Engine;
 use edgeflow::util::timer::Timer;
 
@@ -38,7 +39,8 @@ fn main() {
     // raise EDGEFLOW_F3_ROUNDS for paper-scale curves.
     let rounds =
         edgeflow::bench::env_usize("EDGEFLOW_F3_ROUNDS", if fast { 12 } else { 24 });
-    let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let engine: Arc<dyn TrainBackend> =
+        Arc::new(Engine::load("artifacts").expect("engine"));
     let workers = edgeflow::bench::env_usize("EDGEFLOW_WORKERS", 1);
     let opts = SuiteOptions {
         rounds,
@@ -48,6 +50,7 @@ fn main() {
         seed: 0,
         lr: 1e-3,
         workers,
+        ..SuiteOptions::default()
     };
     let mut timer = Timer::new();
 

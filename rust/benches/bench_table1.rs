@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use edgeflow::fl::experiments::{table1, SuiteOptions};
+use edgeflow::runtime::backend::TrainBackend;
 use edgeflow::runtime::executor::Engine;
 use edgeflow::util::timer::Timer;
 
@@ -23,7 +24,8 @@ fn main() {
     let rounds =
         edgeflow::bench::env_usize("EDGEFLOW_T1_ROUNDS", if fast { 10 } else { 30 });
 
-    let engine = Arc::new(Engine::load("artifacts").expect("engine"));
+    let engine: Arc<dyn TrainBackend> =
+        Arc::new(Engine::load("artifacts").expect("engine"));
     let workers = edgeflow::bench::env_usize("EDGEFLOW_WORKERS", 1);
     let opts = SuiteOptions {
         rounds,
@@ -33,6 +35,7 @@ fn main() {
         seed: 0,
         lr: 1e-3,
         workers,
+        ..SuiteOptions::default()
     };
     let mut timer = Timer::new();
     let (table, cells) = table1(&engine, &opts, fast).expect("table1");

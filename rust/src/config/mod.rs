@@ -1,8 +1,41 @@
 //! Typed experiment configuration with validation, JSON round-trip, and
 //! presets for every experiment in the paper's evaluation section.
 
+use crate::fl::compress::Codec;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
+use crate::util::{f64_from_hex, f64_to_hex};
+
+/// Which execution engine runs local updates and evaluation (see
+/// [`crate::runtime::backend`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT XLA/PJRT executables from `make artifacts`.
+    Xla,
+    /// Pure-Rust in-process trainer ([`crate::runtime::native`]) — no
+    /// artifacts, runs anywhere; supports the `*_linear`/`*_mlp`
+    /// variants with `sgd`/`momentum`.
+    Native,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Xla => "xla",
+            EngineKind::Native => "native",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "xla" => Ok(EngineKind::Xla),
+            "native" => Ok(EngineKind::Native),
+            other => Err(Error::Config(format!(
+                "unknown engine {other:?} (xla|native)"
+            ))),
+        }
+    }
+}
 
 /// Which FL algorithm coordinates the round loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -281,6 +314,14 @@ pub struct ExperimentConfig {
     /// (default), `defer` folds it into the next round's reduction with
     /// its Eq. 3 weight (`RoundRecord::deferred` records the fold).
     pub straggler_policy: StragglerPolicy,
+    /// Execution engine: `xla` (AOT artifacts) or `native` (pure-Rust
+    /// in-process trainer, no artifacts).
+    pub engine: EngineKind,
+    /// Model-transfer codec for the wire-size accounting: every
+    /// migration/upload/downlink is charged `codec.wire_bytes(params)`
+    /// instead of raw f32 bytes, and the DES sizes its transfers the
+    /// same way.  Accounting only — the payload itself stays lossless.
+    pub codec: Codec,
 }
 
 impl Default for ExperimentConfig {
@@ -307,6 +348,8 @@ impl Default for ExperimentConfig {
             dropout: 0.0,
             deadline_s: 0.0,
             straggler_policy: StragglerPolicy::Drop,
+            engine: EngineKind::Xla,
+            codec: Codec::None,
         }
     }
 }
@@ -337,9 +380,12 @@ impl ExperimentConfig {
         if !(self.lr > 0.0) {
             return Err(Error::Config(format!("lr must be positive, got {}", self.lr)));
         }
-        if self.optimizer != "sgd" && self.optimizer != "adam" {
+        if self.optimizer != "sgd"
+            && self.optimizer != "adam"
+            && self.optimizer != "momentum"
+        {
             return Err(Error::Config(format!(
-                "optimizer must be sgd|adam, got {:?}",
+                "optimizer must be sgd|momentum|adam, got {:?}",
                 self.optimizer
             )));
         }
@@ -368,7 +414,7 @@ impl ExperimentConfig {
     // ------------------------------------------------------------- JSON I/O
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", self.name.as_str().into()),
             ("algorithm", self.algorithm.name().into()),
             ("dataset", self.dataset.name().into()),
@@ -390,7 +436,17 @@ impl ExperimentConfig {
             ("dropout", self.dropout.into()),
             ("deadline_s", self.deadline_s.into()),
             ("straggler_policy", self.straggler_policy.name().into()),
-        ])
+            ("engine", self.engine.name().into()),
+            ("codec", self.codec.name().as_str().into()),
+        ];
+        // The decimal percent inside "codec" is the human-readable form;
+        // a top-k fraction also travels as exact bits so a checkpoint's
+        // embedded config restores bit-identically even for fractions
+        // whose percent form is lossy (e.g. 1/3).
+        if let Codec::TopK { keep_fraction } = self.codec {
+            pairs.push(("codec_keep_hex", f64_to_hex(keep_fraction).as_str().into()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<ExperimentConfig> {
@@ -455,6 +511,29 @@ impl ExperimentConfig {
             {
                 Some(s) => StragglerPolicy::parse(s)?,
                 None => d.straggler_policy,
+            },
+            engine: match v.get("engine").and_then(Json::as_str) {
+                Some(s) => EngineKind::parse(s)?,
+                None => d.engine,
+            },
+            codec: {
+                let codec = match v.get("codec").and_then(Json::as_str) {
+                    Some(s) => Codec::parse(s)?,
+                    None => d.codec,
+                };
+                match (codec, v.get("codec_keep_hex").and_then(Json::as_str)) {
+                    (Codec::TopK { .. }, Some(hex)) => {
+                        let keep_fraction = f64_from_hex(hex)?;
+                        if !(0.0 < keep_fraction && keep_fraction <= 1.0) {
+                            return Err(Error::Config(format!(
+                                "codec_keep_hex decodes to {keep_fraction}, \
+                                 outside (0, 1]"
+                            )));
+                        }
+                        Codec::TopK { keep_fraction }
+                    }
+                    (c, _) => c,
+                }
             },
         };
         cfg.validate()
@@ -651,6 +730,56 @@ mod tests {
             ExperimentConfig::from_json(&none).unwrap().straggler_policy,
             StragglerPolicy::Drop
         );
+    }
+
+    #[test]
+    fn engine_and_codec_roundtrip() {
+        let cfg = ExperimentConfig {
+            engine: EngineKind::Native,
+            codec: Codec::QuantizeInt8,
+            optimizer: "momentum".into(),
+            model: "fashion_mlp".into(),
+            ..ExperimentConfig::default()
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.engine, EngineKind::Native);
+        assert_eq!(back.codec, Codec::QuantizeInt8);
+        assert_eq!(back.optimizer, "momentum");
+        // absent fields keep the XLA / uncompressed defaults
+        let none = Json::parse("{}").unwrap();
+        let d = ExperimentConfig::from_json(&none).unwrap();
+        assert_eq!(d.engine, EngineKind::Xla);
+        assert_eq!(d.codec, Codec::None);
+        // top-k codec names survive the round-trip too
+        let cfg = ExperimentConfig {
+            codec: Codec::TopK { keep_fraction: 0.1 },
+            ..ExperimentConfig::default()
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.codec, Codec::TopK { keep_fraction: 0.1 });
+        // ... bit-exactly, even for fractions whose decimal percent form
+        // is lossy (the codec_keep_hex side channel): resume must not
+        // perturb wire accounting by 1 ulp of keep_fraction.
+        let kf = 1.0 / 3.0;
+        let cfg = ExperimentConfig {
+            codec: Codec::TopK { keep_fraction: kf },
+            ..ExperimentConfig::default()
+        };
+        match ExperimentConfig::from_json(&cfg.to_json()).unwrap().codec {
+            Codec::TopK { keep_fraction } => {
+                assert_eq!(keep_fraction.to_bits(), kf.to_bits())
+            }
+            other => panic!("expected TopK, got {other:?}"),
+        }
+        // a corrupt hex value is a typed error, not a silent fallback
+        let bad = Json::parse(
+            r#"{"codec": "top10", "codec_keep_hex": "7ff8000000000000"}"#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err(), "NaN keep fraction");
+        assert!(EngineKind::parse("tpu").is_err());
+        assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
     }
 
     #[test]

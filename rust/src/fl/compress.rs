@@ -57,11 +57,16 @@ impl Codec {
         }
     }
 
+    /// Canonical spec string accepted by [`Codec::parse`] (`top10`, not
+    /// `top10%`).  The decimal percent form is exact for fractions with
+    /// short decimal expansions; for the rest (e.g. 1/3) the config
+    /// layer carries the exact bits alongside (`codec_keep_hex`), so
+    /// checkpoint resume never sees a 1-ulp drift.
     pub fn name(&self) -> String {
         match self {
             Codec::None => "none".into(),
             Codec::QuantizeInt8 => "int8".into(),
-            Codec::TopK { keep_fraction } => format!("top{:.0}%", keep_fraction * 100.0),
+            Codec::TopK { keep_fraction } => format!("top{}", keep_fraction * 100.0),
         }
     }
 
@@ -244,6 +249,18 @@ mod tests {
         };
         assert!(err(0.5) < err(0.1));
         assert!(err(0.9) < err(0.5));
+    }
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for codec in [
+            Codec::None,
+            Codec::QuantizeInt8,
+            Codec::TopK { keep_fraction: 0.1 },
+            Codec::TopK { keep_fraction: 0.125 },
+        ] {
+            assert_eq!(Codec::parse(&codec.name()).unwrap(), codec);
+        }
     }
 
     #[test]

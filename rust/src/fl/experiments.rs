@@ -8,8 +8,10 @@
 //!
 //! Independent cells (Table-I dataset×distribution×algorithm runs, Fig-3
 //! sweep points, Fig-4 topologies) fan out across a [`WorkerPool`] when
-//! [`SuiteOptions::workers`] > 1, sharing one `Engine` (and therefore
-//! one compiled-executable cache).  Cell results are collected in cell
+//! [`SuiteOptions::workers`] > 1, sharing one
+//! [`TrainBackend`] (under the XLA engine that shares one
+//! compiled-executable cache; `SuiteOptions::engine = native` runs the
+//! same suites artifact-free).  Cell results are collected in cell
 //! order, so suite output is identical at any worker count; per-cell
 //! runners stay sequential to avoid oversubscribing the host.
 //!
@@ -21,14 +23,14 @@
 use std::sync::Arc;
 
 use crate::config::{
-    Algorithm, DatasetKind, Distribution, ExperimentConfig, TopologyKind,
+    Algorithm, DatasetKind, Distribution, EngineKind, ExperimentConfig, TopologyKind,
 };
 use crate::data::partition::build_federation;
 use crate::fl::comm::{record_round, CommOptions};
 use crate::fl::runner::{RunReport, Runner};
 use crate::fl::strategy::Strategy;
 use crate::netsim::NetSim;
-use crate::runtime::executor::Engine;
+use crate::runtime::backend::TrainBackend;
 use crate::runtime::pool::WorkerPool;
 use crate::topology::accounting::CommAccountant;
 use crate::topology::builder::{build, TopologyParams};
@@ -37,8 +39,8 @@ use crate::util::error::Result;
 use crate::util::table::{Align, Table};
 
 /// Drive one experiment cell through the stepwise session API.
-fn run_cell(engine: &Arc<Engine>, cfg: ExperimentConfig) -> Result<RunReport> {
-    let mut r = Runner::with_engine(engine.clone(), cfg)?;
+fn run_cell(backend: &Arc<dyn TrainBackend>, cfg: ExperimentConfig) -> Result<RunReport> {
+    let mut r = Runner::with_backend(backend.clone(), cfg)?;
     while !r.is_done() {
         r.step()?;
     }
@@ -56,6 +58,14 @@ pub struct SuiteOptions {
     pub lr: f64,
     /// Concurrent experiment cells (0 = one per core, 1 = sequential).
     pub workers: usize,
+    /// Which engine the cells train on; must match the backend handed to
+    /// the suite functions (native cells need `optimizer`/`lr` suited to
+    /// the native trainer — e.g. `momentum` at lr ~0.01).
+    pub engine: EngineKind,
+    /// Optimizer override (None keeps the preset default, adam).
+    pub optimizer: Option<String>,
+    /// Batch size override (None keeps the preset default, 64).
+    pub batch_size: Option<usize>,
 }
 
 impl Default for SuiteOptions {
@@ -68,6 +78,9 @@ impl Default for SuiteOptions {
             seed: 0,
             lr: 1e-3,
             workers: 1,
+            engine: EngineKind::Xla,
+            optimizer: None,
+            batch_size: None,
         }
     }
 }
@@ -85,6 +98,7 @@ fn base_config(
     alg: Algorithm,
     o: &SuiteOptions,
 ) -> ExperimentConfig {
+    let d = ExperimentConfig::default();
     ExperimentConfig {
         name: format!("{}_{}_{}", ds.name(), dist.name(), alg.name()),
         algorithm: alg,
@@ -97,7 +111,10 @@ fn base_config(
         eval_every: o.eval_every,
         seed: o.seed,
         lr: o.lr,
-        ..ExperimentConfig::default()
+        engine: o.engine,
+        optimizer: o.optimizer.clone().unwrap_or_else(|| d.optimizer.clone()),
+        batch_size: o.batch_size.unwrap_or(d.batch_size),
+        ..d
     }
 }
 
@@ -114,7 +131,11 @@ pub struct Cell {
 
 /// Table I: accuracy of FedAvg / EdgeFLowRand / EdgeFLowSeq across
 /// dataset x distribution cells (paper §IV.B).
-pub fn table1(engine: &Arc<Engine>, o: &SuiteOptions, fast: bool) -> Result<(Table, Vec<Cell>)> {
+pub fn table1(
+    backend: &Arc<dyn TrainBackend>,
+    o: &SuiteOptions,
+    fast: bool,
+) -> Result<(Table, Vec<Cell>)> {
     let cells: Vec<(DatasetKind, Distribution)> = if fast {
         vec![
             (DatasetKind::SynthFashion, Distribution::Iid),
@@ -139,7 +160,7 @@ pub fn table1(engine: &Arc<Engine>, o: &SuiteOptions, fast: bool) -> Result<(Tab
         let (ds, dist, alg) = &specs[i];
         let cfg = base_config(*ds, dist.clone(), *alg, o);
         log::info!("table1 cell: {}", cfg.name);
-        run_cell(engine, cfg)
+        run_cell(backend, cfg)
     })?;
     let results: Vec<Cell> = specs
         .into_iter()
@@ -184,7 +205,7 @@ pub fn table1(engine: &Arc<Engine>, o: &SuiteOptions, fast: bool) -> Result<(Tab
 
 /// Fig 3(a): EdgeFLowSeq under NIID B with varying cluster size N_m.
 pub fn fig3a(
-    engine: &Arc<Engine>,
+    backend: &Arc<dyn TrainBackend>,
     o: &SuiteOptions,
     cluster_sizes: &[usize],
 ) -> Result<Vec<(usize, RunReport)>> {
@@ -203,14 +224,14 @@ pub fn fig3a(
         cfg.clusters = 100 / n_m;
         cfg.name = format!("fig3a_nm{n_m}");
         log::info!("fig3a: N_m = {n_m}");
-        run_cell(engine, cfg)
+        run_cell(backend, cfg)
     })?;
     Ok(cluster_sizes.iter().copied().zip(reports).collect())
 }
 
 /// Fig 3(b): EdgeFLowSeq under NIID B with varying local epochs K.
 pub fn fig3b(
-    engine: &Arc<Engine>,
+    backend: &Arc<dyn TrainBackend>,
     o: &SuiteOptions,
     ks: &[usize],
 ) -> Result<Vec<(usize, RunReport)>> {
@@ -226,7 +247,7 @@ pub fn fig3b(
         cfg.local_steps = k;
         cfg.name = format!("fig3b_k{k}");
         log::info!("fig3b: K = {k}");
-        run_cell(engine, cfg)
+        run_cell(backend, cfg)
     })?;
     Ok(ks.iter().copied().zip(reports).collect())
 }

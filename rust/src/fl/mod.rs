@@ -30,5 +30,7 @@ pub mod theory;
 
 pub use runner::{RunReport, Runner, RunnerCheckpoint};
 pub use scheduler::ClusterSchedule;
-pub use session::{LostCause, RoundControl, RoundObserver, RoundOutcome};
+pub use session::{
+    AdaptiveDeadlineObserver, LostCause, RoundControl, RoundObserver, RoundOutcome,
+};
 pub use strategy::{RoundPlan, Strategy};

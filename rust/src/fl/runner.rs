@@ -22,8 +22,14 @@
 //!   folded, with its Eq. 3 sample weight, into the next round's
 //!   reduction instead of being discarded.
 //!
+//! The engine behind the round loop is pluggable
+//! ([`crate::runtime::backend::TrainBackend`], selected by
+//! `cfg.engine: xla|native`): the runner only ever talks to
+//! `LocalUpdateHandle`/`EvalHandle` objects, so the XLA artifact path
+//! and the pure-Rust native trainer drive identical sessions.
+//!
 //! Local updates within a round fan out across a [`WorkerPool`]: each
-//! worker owns one `LocalUpdateExe` handle and pulls `(group, client)`
+//! worker owns one local-update handle and pulls `(group, client)`
 //! jobs off a shared cursor.  Results are collected **in plan order** and
 //! reduced with the fixed-order tree in [`crate::fl::aggregate`], so a
 //! run's reports are bit-identical at any `workers` setting — the knob
@@ -44,7 +50,9 @@ use crate::fl::strategy::{AggregationSite, Strategy};
 use crate::metrics::{ExperimentMetrics, RoundRecord};
 use crate::netsim::{NetSim, NetSimState};
 use crate::rng::{Rng, RngState};
-use crate::runtime::executor::{Engine, EvalExe, LocalUpdateExe};
+use crate::runtime::backend::{
+    backend_for, EvalHandle, LocalUpdateHandle, TrainBackend,
+};
 use crate::runtime::params::ModelState;
 use crate::runtime::pool::WorkerPool;
 use crate::topology::accounting::CommAccountant;
@@ -79,17 +87,17 @@ pub struct RunReport {
 /// The experiment runner: a stepwise round session over Algorithm 1.
 pub struct Runner {
     pub cfg: ExperimentConfig,
-    engine: Arc<Engine>,
+    backend: Arc<dyn TrainBackend>,
     pub fed: Federation,
     pub topo: Topology,
     strategy: Strategy,
     loader: ClientLoader,
     state: ModelState,
-    /// One local-update executable per pool worker (all share the
-    /// engine's compiled-executable cache); index 0 is the sequential
-    /// path.
-    lus: Vec<LocalUpdateExe>,
-    ev: EvalExe,
+    /// One local-update handle per pool worker (the XLA engine shares
+    /// its compiled-executable cache behind them); index 0 is the
+    /// sequential path.
+    lus: Vec<Box<dyn LocalUpdateHandle>>,
+    ev: Box<dyn EvalHandle>,
     pool: WorkerPool,
     pub accountant: CommAccountant,
     /// Failure-injection stream (client dropout).
@@ -120,41 +128,28 @@ pub struct Runner {
 }
 
 impl Runner {
-    /// Build a runner with a fresh PJRT engine.
+    /// Build a runner with a fresh engine of the kind the config selects
+    /// (`engine: xla|native`); `artifacts_dir` is only read by the XLA
+    /// path.
     pub fn new(cfg: ExperimentConfig, artifacts_dir: &str) -> Result<Runner> {
-        let engine = Arc::new(Engine::load(artifacts_dir)?);
-        Runner::with_engine(engine, cfg)
+        // with_backend validates; `cfg.engine` needs no validation to
+        // pick the backend.
+        let backend = backend_for(&cfg, artifacts_dir)?;
+        Runner::with_backend(backend, cfg)
     }
 
-    /// Build a runner sharing an existing engine (compiled executables are
-    /// cached per (variant, optimizer, K) across runs).
-    pub fn with_engine(engine: Arc<Engine>, cfg: ExperimentConfig) -> Result<Runner> {
+    /// Build a runner sharing an existing backend (the XLA engine caches
+    /// compiled executables per (variant, optimizer, K) across runs; the
+    /// native engine is stateless).
+    pub fn with_backend(
+        backend: Arc<dyn TrainBackend>,
+        cfg: ExperimentConfig,
+    ) -> Result<Runner> {
         let cfg = cfg.validate()?;
-        let variant = engine.manifest.variant(&cfg.model)?;
-        // Cross-validate config against the artifact contract.
-        if variant.train_batch != cfg.batch_size {
-            return Err(Error::Config(format!(
-                "batch_size {} != artifact train batch {} for {}",
-                cfg.batch_size, variant.train_batch, cfg.model
-            )));
-        }
-        if !variant.k_values.contains(&cfg.local_steps) {
-            return Err(Error::Config(format!(
-                "K={} has no artifact for {} (available: {:?}) — extend \
-                 BUILD_MATRIX in python/compile/aot.py",
-                cfg.local_steps, cfg.model, variant.k_values
-            )));
-        }
-        let (h, w, c) = variant.image;
-        if (h, w, c) != cfg.dataset.image() {
-            return Err(Error::Config(format!(
-                "model {} expects {:?} images but dataset {} yields {:?}",
-                cfg.model,
-                variant.image,
-                cfg.dataset.name(),
-                cfg.dataset.image()
-            )));
-        }
+        // Cross-validate config against the engine's model contract (the
+        // XLA path checks the artifact manifest; native its variant
+        // table).
+        backend.validate(&cfg)?;
         let fed = build_federation(
             cfg.dataset,
             &cfg.distribution,
@@ -169,22 +164,32 @@ impl Runner {
             cfg.clusters,
             cfg.cluster_size(),
         ))?;
-        let state = engine.init_state(&cfg.model, &cfg.optimizer)?;
-        let strategy = Strategy::for_config(&cfg, &fed, &topo, state.param_bytes());
+        let state = backend.init_state(&cfg.model, &cfg.optimizer)?;
+        // The latency-aware schedule's probes ride the same codec wire
+        // bytes the round accounting charges.
+        let wire_bytes = cfg.codec.wire_bytes(state.layout.param_elems());
+        let strategy = Strategy::for_config(&cfg, &fed, &topo, wire_bytes);
         let loader = ClientLoader::new(cfg.seed ^ LOADER_SEED_MIX, cfg.batch_size);
         let net = NetSim::new(&topo);
         let pool = WorkerPool::new(cfg.workers);
         let lus = (0..pool.workers())
-            .map(|_| engine.local_update(&cfg.model, &cfg.optimizer, cfg.local_steps))
+            .map(|_| {
+                backend.local_update(
+                    &cfg.model,
+                    &cfg.optimizer,
+                    cfg.local_steps,
+                    cfg.batch_size,
+                )
+            })
             .collect::<Result<Vec<_>>>()?;
-        let ev = engine.eval(&cfg.model, &cfg.optimizer)?;
+        let ev = backend.eval(&cfg.model, &cfg.optimizer)?;
         let dropout_rng = Rng::new(cfg.seed ^ 0xD509_0A7);
         let observers: Vec<Box<dyn RoundObserver>> =
             vec![Box::new(ProgressObserver::new(strategy.name()))];
         let deadline_s = cfg.deadline_s;
         Ok(Runner {
             cfg,
-            engine,
+            backend,
             fed,
             topo,
             strategy,
@@ -206,6 +211,17 @@ impl Runner {
         })
     }
 
+    /// Build a runner sharing an existing backend.  Alias of
+    /// [`Runner::with_backend`], kept under the XLA-era name — an
+    /// `Arc<Engine>` coerces to `Arc<dyn TrainBackend>` at the call
+    /// site, so existing callers read unchanged.
+    pub fn with_engine(
+        engine: Arc<dyn TrainBackend>,
+        cfg: ExperimentConfig,
+    ) -> Result<Runner> {
+        Runner::with_backend(engine, cfg)
+    }
+
     /// Current simulated network clock (cumulative across rounds).
     pub fn net_clock_s(&self) -> f64 {
         self.net.now_s()
@@ -216,9 +232,9 @@ impl Runner {
         &self.state
     }
 
-    /// The shared engine.
-    pub fn engine(&self) -> &Arc<Engine> {
-        &self.engine
+    /// The shared backend.
+    pub fn backend(&self) -> &Arc<dyn TrainBackend> {
+        &self.backend
     }
 
     /// Metrics accumulated so far (every executed round's record).
@@ -289,7 +305,14 @@ impl Runner {
         }
         let t = self.cursor;
         self.timer.lap("idle");
-        let model_bytes = self.state.param_bytes();
+        // Every model transfer this round — migrations, uploads,
+        // downlinks, deferred folds — is charged the codec's wire size,
+        // and the DES sizes its transfers the same way, so compressed
+        // runs report compressed byte-hops and transfer times.  The
+        // payload itself stays lossless: the codec shrinks the
+        // accounting, never the numbers.
+        let model_bytes =
+            self.cfg.codec.wire_bytes(self.state.layout.param_elems());
 
         let mut plan = self.strategy.plan_round(t, &self.fed, Some(&self.net));
         self.notify(|o, ctl| o.on_plan(t, &plan, ctl));
@@ -730,9 +753,11 @@ impl Runner {
     }
 
     /// Build a runner from a checkpoint's embedded config and restore
-    /// the session — the one-call resume path behind `--resume`.
-    pub fn resume(engine: Arc<Engine>, ck: &RunnerCheckpoint) -> Result<Runner> {
-        let mut r = Runner::with_engine(engine, ck.cfg.clone())?;
+    /// the session — the one-call resume path behind `--resume`.  The
+    /// backend must match the checkpoint's `cfg.engine` (use
+    /// [`crate::runtime::backend::backend_for`] on the embedded config).
+    pub fn resume(backend: Arc<dyn TrainBackend>, ck: &RunnerCheckpoint) -> Result<Runner> {
+        let mut r = Runner::with_backend(backend, ck.cfg.clone())?;
         r.restore(ck)?;
         Ok(r)
     }
@@ -936,6 +961,223 @@ fn lost_round_record(
     }
 }
 
+// ------------------------------------------- checkpoint operability
+//
+// Long runs rotate checkpoints instead of overwriting one file:
+// `--checkpoint-keep N` writes round-stamped siblings of the base path
+// and prunes the oldest, and `--resume-latest <dir>` picks up wherever
+// the newest one left off — no path bookkeeping across restarts.
+
+/// Suffix every checkpoint file carries.
+const CKPT_SUFFIX: &str = ".ckpt.json";
+
+/// Round-stamped sibling of a base checkpoint path:
+/// `runs/foo.ckpt.json` at round 12 -> `runs/foo.r000012.ckpt.json`.
+/// A base without the canonical suffix still *gains* it (`run` ->
+/// `run.r000012.ckpt.json`), so rotated files are always discoverable
+/// by [`find_latest_checkpoint`] and prunable by [`prune_checkpoints`].
+/// Zero-padding keeps lexicographic and numeric order identical.
+pub fn round_stamped_path(base: &str, round: usize) -> String {
+    let stem = base.strip_suffix(CKPT_SUFFIX).unwrap_or(base);
+    format!("{stem}.r{round:06}{CKPT_SUFFIX}")
+}
+
+/// The round stamp of a checkpoint file name (`foo.r000012.ckpt.json`
+/// -> 12), or `None` for unstamped files.
+fn round_stamp(name: &str) -> Option<usize> {
+    let stem = name.strip_suffix(CKPT_SUFFIX)?;
+    let (_, tail) = stem.rsplit_once(".r")?;
+    if tail.is_empty() || !tail.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    tail.parse().ok()
+}
+
+/// Newest `*.ckpt.json` in a directory — newest by **modification
+/// time**, so a freshly-written checkpoint always beats last week's
+/// leftovers from another run family whatever their round stamps say;
+/// equal mtimes (rotation bursts on coarse-granularity filesystems)
+/// break ties by round stamp, then name.  Errors when the directory
+/// holds no checkpoint at all.
+pub fn find_latest_checkpoint(dir: &str) -> Result<String> {
+    let mut best: Option<(std::time::SystemTime, u64, String, String)> = None;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.ends_with(CKPT_SUFFIX) || !entry.file_type()?.is_file() {
+            continue;
+        }
+        // Tie-break key: stamped files rank above unstamped at equal
+        // mtime, higher rounds above lower.
+        let stamp = match round_stamp(&name) {
+            Some(r) => 1 + r as u64,
+            None => 0,
+        };
+        let mtime = entry
+            .metadata()?
+            .modified()
+            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        let path = entry.path().to_string_lossy().into_owned();
+        let candidate = (mtime, stamp, name, path);
+        let better = match &best {
+            None => true,
+            Some(b) => (candidate.0, candidate.1, &candidate.2) > (b.0, b.1, &b.2),
+        };
+        if better {
+            best = Some(candidate);
+        }
+    }
+    best.map(|(_, _, _, path)| path).ok_or_else(|| {
+        Error::Config(format!("no *{CKPT_SUFFIX} checkpoint found in {dir:?}"))
+    })
+}
+
+/// Prune round-stamped siblings of `base`, keeping the `keep` newest
+/// (by round).  Returns the deleted paths.  The unstamped base file and
+/// unrelated checkpoints are never touched; `keep == 0` is a no-op
+/// (pruning disabled), matching the CLI default.
+pub fn prune_checkpoints(base: &str, keep: usize) -> Result<Vec<String>> {
+    if keep == 0 {
+        return Ok(Vec::new());
+    }
+    let path = std::path::Path::new(base);
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let stem = match path.file_name().map(|n| n.to_string_lossy().into_owned()) {
+        // The same suffix-optional stem rule as `round_stamped_path`,
+        // so every base this module stamps, it can also prune.
+        Some(n) => n.strip_suffix(CKPT_SUFFIX).unwrap_or(&n).to_string(),
+        None => return Ok(Vec::new()),
+    };
+    let mut stamped: Vec<(usize, std::path::PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(&dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(rest) = name.strip_prefix(&stem) else { continue };
+        let Some(round) = round_stamp(&name) else { continue };
+        // The stamp must be exactly `.r<digits>` between stem and
+        // suffix, not a longer sibling name that happens to share the
+        // prefix.
+        if rest != format!(".r{round:06}{CKPT_SUFFIX}") {
+            continue;
+        }
+        stamped.push((round, entry.path()));
+    }
+    stamped.sort_by(|a, b| b.0.cmp(&a.0)); // newest first
+    let mut removed = Vec::new();
+    for (_, p) in stamped.into_iter().skip(keep) {
+        std::fs::remove_file(&p)?;
+        removed.push(p.to_string_lossy().into_owned());
+    }
+    Ok(removed)
+}
+
 /// Seed-mixing constant separating the loader's stream from the
 /// partitioner's and the strategies'.
 const LOADER_SEED_MIX: u64 = 0x10AD_E2B6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("edgeflow_ckpt_ops_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn round_stamping_and_parsing() {
+        assert_eq!(
+            round_stamped_path("runs/foo.ckpt.json", 12),
+            "runs/foo.r000012.ckpt.json"
+        );
+        // A suffix-less base still produces discoverable/prunable files.
+        assert_eq!(round_stamped_path("bare", 3), "bare.r000003.ckpt.json");
+        assert_eq!(round_stamp("foo.r000012.ckpt.json"), Some(12));
+        assert_eq!(round_stamp("foo.ckpt.json"), None);
+        assert_eq!(round_stamp("foo.rabc.ckpt.json"), None);
+        assert_eq!(round_stamp("foo.r12.csv"), None);
+    }
+
+    #[test]
+    fn latest_prefers_newest_mtime_over_stale_high_rounds() {
+        // A leftover family with a big round stamp must not shadow a
+        // freshly-written run: mtime decides, stamps only break ties.
+        let d = tmpdir("latest");
+        std::fs::write(d.join("old.r000100.ckpt.json"), "{}").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // A rotation burst (same instant on coarse filesystems): the
+        // stamp tie-break keeps the highest round of the newest batch.
+        for r in [2usize, 7, 10] {
+            std::fs::write(d.join(format!("run.r{r:06}.ckpt.json")), "{}").unwrap();
+        }
+        std::fs::write(d.join("notes.txt"), "x").unwrap();
+        let latest = find_latest_checkpoint(d.to_str().unwrap()).unwrap();
+        assert!(latest.ends_with("run.r000010.ckpt.json"), "{latest}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn latest_falls_back_to_unstamped_and_errors_when_empty() {
+        let d = tmpdir("fallback");
+        assert!(find_latest_checkpoint(d.to_str().unwrap()).is_err());
+        std::fs::write(d.join("a.ckpt.json"), "{}").unwrap();
+        std::fs::write(d.join("b.ckpt.json"), "{}").unwrap();
+        let latest = find_latest_checkpoint(d.to_str().unwrap()).unwrap();
+        assert!(latest.ends_with(".ckpt.json"), "{latest}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn prune_keeps_newest_rounds_only() {
+        let d = tmpdir("prune");
+        let base = d.join("run.ckpt.json");
+        let base_s = base.to_str().unwrap().to_string();
+        for r in 1..=5usize {
+            std::fs::write(d.join(format!("run.r{r:06}.ckpt.json")), "{}").unwrap();
+        }
+        // Unstamped base and an unrelated stamped family are untouched.
+        std::fs::write(&base, "{}").unwrap();
+        std::fs::write(d.join("other.r000001.ckpt.json"), "{}").unwrap();
+        let removed = prune_checkpoints(&base_s, 2).unwrap();
+        assert_eq!(removed.len(), 3, "{removed:?}");
+        let mut left: Vec<String> = std::fs::read_dir(&d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        left.sort();
+        assert_eq!(
+            left,
+            vec![
+                "other.r000001.ckpt.json",
+                "run.ckpt.json",
+                "run.r000004.ckpt.json",
+                "run.r000005.ckpt.json",
+            ]
+        );
+        // keep = 0 disables pruning entirely
+        assert!(prune_checkpoints(&base_s, 0).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn stamp_and_prune_work_for_suffixless_base() {
+        // A `--checkpoint run` base gains the canonical suffix on every
+        // stamped file, so rotation and --resume-latest still see them.
+        let d = tmpdir("suffixless");
+        let base = d.join("run");
+        let base_s = base.to_str().unwrap().to_string();
+        for r in 1..=3usize {
+            std::fs::write(round_stamped_path(&base_s, r), "{}").unwrap();
+        }
+        let removed = prune_checkpoints(&base_s, 1).unwrap();
+        assert_eq!(removed.len(), 2, "{removed:?}");
+        let latest = find_latest_checkpoint(d.to_str().unwrap()).unwrap();
+        assert!(latest.ends_with("run.r000003.ckpt.json"), "{latest}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

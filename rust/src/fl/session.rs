@@ -211,6 +211,79 @@ impl RoundObserver for MetricsCsvObserver {
     }
 }
 
+/// Built-in observer: **adaptive round deadlines** (the ROADMAP's
+/// "per-cluster adaptive deadlines need no runner surgery" policy).
+///
+/// Tracks an EWMA of the per-round simulated network makespan (the
+/// `net_s` each `on_comm` reports — upload deliveries plus the
+/// migration leg) and, once `warmup` rounds have been observed, sets
+/// the next round's deadline to `slack × EWMA` via
+/// [`RoundControl::set_deadline_s`].  A slack comfortably above 1
+/// tolerates normal jitter and only cuts genuine outliers; a slack
+/// below 1 deliberately starves slow uploads (useful in tests).
+/// Lost rounds report no makespan and leave the estimate untouched.
+///
+/// Observer state is process-local by design — it re-warms after a
+/// checkpoint resume rather than riding in the checkpoint.
+#[derive(Debug)]
+pub struct AdaptiveDeadlineObserver {
+    /// EWMA weight of the newest sample (0 < alpha <= 1).
+    alpha: f64,
+    /// Deadline = slack × EWMA.
+    slack: f64,
+    /// Rounds to observe before the first deadline applies.
+    warmup: usize,
+    ewma: Option<f64>,
+    seen: usize,
+}
+
+impl AdaptiveDeadlineObserver {
+    /// Default policy: EWMA alpha 0.3, 3 warmup rounds.
+    pub fn new(slack: f64) -> AdaptiveDeadlineObserver {
+        AdaptiveDeadlineObserver::with_params(slack, 0.3, 3)
+    }
+
+    pub fn with_params(slack: f64, alpha: f64, warmup: usize) -> AdaptiveDeadlineObserver {
+        assert!(slack > 0.0 && slack.is_finite(), "slack must be positive");
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        AdaptiveDeadlineObserver { alpha, slack, warmup, ewma: None, seen: 0 }
+    }
+
+    /// Current estimate of the per-round network makespan (None until
+    /// the first traffic-moving round completes).
+    pub fn estimate_s(&self) -> Option<f64> {
+        self.ewma
+    }
+}
+
+impl RoundObserver for AdaptiveDeadlineObserver {
+    fn on_plan(&mut self, _t: usize, _plan: &RoundPlan, ctl: &mut RoundControl) {
+        if self.seen >= self.warmup {
+            if let Some(e) = self.ewma {
+                ctl.set_deadline_s(self.slack * e);
+            }
+        }
+    }
+
+    fn on_comm(
+        &mut self,
+        _t: usize,
+        _comm: &RoundComm,
+        net_s: f64,
+        _stragglers: &[usize],
+        _ctl: &mut RoundControl,
+    ) {
+        if !net_s.is_finite() || net_s <= 0.0 {
+            return;
+        }
+        self.ewma = Some(match self.ewma {
+            None => net_s,
+            Some(e) => self.alpha * net_s + (1.0 - self.alpha) * e,
+        });
+        self.seen += 1;
+    }
+}
+
 /// One straggler's late local update, held for re-inclusion.
 #[derive(Debug, Clone)]
 pub struct DeferredUpdate {
@@ -337,6 +410,37 @@ mod tests {
         assert_eq!(d3.client, 3);
         assert_eq!(d3.round, 2, "the newer update wins");
         assert_eq!(d3.state.data[0], 9.0);
+    }
+
+    #[test]
+    fn adaptive_deadline_warms_up_then_tracks_ewma() {
+        let mut obs = AdaptiveDeadlineObserver::with_params(1.5, 0.5, 2);
+        let plan = RoundPlan {
+            cluster: 0,
+            groups: Vec::new(),
+            aggregation: crate::fl::strategy::AggregationSite::None,
+            migration: None,
+        };
+        let comm = RoundComm { byte_hops: 0, uploads: Vec::new() };
+        let mut ctl = RoundControl::default();
+
+        // Warmup: no deadline request while fewer than 2 rounds observed.
+        obs.on_plan(0, &plan, &mut ctl);
+        assert_eq!(ctl.deadline_override(), None);
+        obs.on_comm(0, &comm, 2.0, &[], &mut ctl);
+        obs.on_plan(1, &plan, &mut ctl);
+        assert_eq!(ctl.deadline_override(), None);
+        obs.on_comm(1, &comm, 4.0, &[], &mut ctl);
+        // EWMA after 2.0 then 4.0 at alpha 0.5: 3.0.
+        assert_eq!(obs.estimate_s(), Some(3.0));
+
+        // Warm: the planned round gets slack x EWMA.
+        obs.on_plan(2, &plan, &mut ctl);
+        assert_eq!(ctl.deadline_override(), Some(4.5));
+
+        // Lost rounds (no traffic -> net_s 0) leave the estimate alone.
+        obs.on_comm(2, &comm, 0.0, &[], &mut ctl);
+        assert_eq!(obs.estimate_s(), Some(3.0));
     }
 
     #[test]

@@ -16,18 +16,25 @@
 //! * **Layer 1** — Pallas kernels (tiled matmul, conv-as-im2col, fused
 //!   BN+ReLU, fused softmax-xent) under `python/compile/kernels/`.
 //!
-//! At run time the Rust binary loads `artifacts/*.hlo.txt` through the PJRT
-//! CPU client ([`runtime`]) and never touches Python.
+//! Training engines are pluggable ([`runtime::backend`], config
+//! `engine: xla|native`): at run time the Rust binary either loads
+//! `artifacts/*.hlo.txt` through the PJRT CPU client
+//! ([`runtime::executor`]) — Python never runs here — or trains with the
+//! pure-Rust in-process engine ([`runtime::native`]), which needs no
+//! artifacts at all.
 //!
-//! ## Quick start
+//! ## Quick start (no artifacts needed)
 //!
 //! ```no_run
-//! use edgeflow::config::{preset, Algorithm};
+//! use edgeflow::config::{preset, Algorithm, EngineKind};
 //! use edgeflow::fl::runner::Runner;
 //!
 //! let mut cfg = preset("table1_fashion_iid").unwrap();
 //! cfg.rounds = 10;
 //! cfg.algorithm = Algorithm::EdgeFlowSeq;
+//! cfg.engine = EngineKind::Native; // pure-Rust trainer
+//! cfg.optimizer = "momentum".into();
+//! cfg.lr = 0.01;
 //! let report = Runner::new(cfg, "artifacts").unwrap().run().unwrap();
 //! println!("final accuracy: {:.2}%", report.final_accuracy * 100.0);
 //! ```

@@ -10,16 +10,20 @@ use std::sync::Arc;
 
 use edgeflow::cli::{flag, flag_def, switch, workers_flag, Args, Cli, CommandSpec};
 use edgeflow::config::{
-    preset, Algorithm, DatasetKind, Distribution, ExperimentConfig, StragglerPolicy,
-    TopologyKind, PRESETS,
+    preset, Algorithm, DatasetKind, Distribution, EngineKind, ExperimentConfig,
+    StragglerPolicy, TopologyKind, PRESETS,
 };
 use edgeflow::data::partition::build_federation;
+use edgeflow::fl::compress::Codec;
 use edgeflow::fl::experiments::{fig3a, fig3b, fig4, table1, SuiteOptions};
-use edgeflow::fl::runner::{Runner, RunnerCheckpoint};
-use edgeflow::fl::session::MetricsCsvObserver;
+use edgeflow::fl::runner::{
+    find_latest_checkpoint, prune_checkpoints, round_stamped_path, Runner,
+    RunnerCheckpoint,
+};
+use edgeflow::fl::session::{AdaptiveDeadlineObserver, MetricsCsvObserver};
 use edgeflow::fl::theory::{bound, k_scan, TheoryParams};
 use edgeflow::metrics::smooth;
-use edgeflow::runtime::executor::Engine;
+use edgeflow::runtime::backend::{backend_for, backend_for_kind, TrainBackend};
 use edgeflow::runtime::manifest::Manifest;
 use edgeflow::topology::builder::{build as build_topo, TopologyParams};
 use edgeflow::topology::route::RouteTable;
@@ -33,6 +37,11 @@ fn cli() -> Cli {
             flag("preset", "named preset (see `presets`)"),
             flag("config", "JSON config file"),
             flag(
+                "engine",
+                "xla|native: AOT XLA artifacts, or the pure-Rust in-process \
+                 trainer (no artifacts; *_linear/*_mlp models, sgd|momentum)",
+            ),
+            flag(
                 "algorithm",
                 "fedavg|hierfl|seqfl|edgeflow_rand|edgeflow_seq|edgeflow_hop|edgeflow_latency",
             ),
@@ -43,9 +52,28 @@ fn cli() -> Cli {
                  late uploads are excluded from aggregation",
             ),
             flag(
+                "adaptive-deadline",
+                "adaptive round deadlines: slack factor over an EWMA of \
+                 per-round simulated network time (0 = off); overrides \
+                 --deadline-s once warm.  Observer state is process-local: \
+                 a resumed run re-warms the estimator instead of replaying \
+                 it, so --resume is bit-identical only for runs without \
+                 this flag",
+            ),
+            flag(
+                "adaptive-warmup",
+                "rounds observed before the adaptive deadline applies \
+                 (default 3)",
+            ),
+            flag(
                 "straggler-policy",
                 "drop|defer: discard a straggler's late update, or fold it \
                  into the next round's reduction (straggler re-inclusion)",
+            ),
+            flag(
+                "codec",
+                "transfer codec for wire-size accounting: none|int8|top<pct> \
+                 (compressed byte-hops/transfer-times in every RoundRecord)",
             ),
             flag(
                 "checkpoint-every",
@@ -56,9 +84,19 @@ fn cli() -> Cli {
                 "checkpoint file path (default: <name>.ckpt.json)",
             ),
             flag(
+                "checkpoint-keep",
+                "rotate round-stamped checkpoints, keeping the N newest \
+                 (0 = single file overwritten in place)",
+            ),
+            flag(
                 "resume",
                 "resume from a checkpoint file (bit-identical continuation; \
                  other config flags are ignored)",
+            ),
+            flag(
+                "resume-latest",
+                "resume from the newest *.ckpt.json in a directory \
+                 (pairs with --checkpoint-keep rotation)",
             ),
             flag("dataset", "synth_fashion|synth_cifar"),
             flag("dist", "iid|niid_a|niid_b|noniid<pct>"),
@@ -67,8 +105,9 @@ fn cli() -> Cli {
             flag("clients", "total client count N"),
             flag("clusters", "cluster count M"),
             flag("k", "local steps K"),
+            flag("batch", "training minibatch size B"),
             flag("lr", "learning rate"),
-            flag("optimizer", "sgd|adam"),
+            flag("optimizer", "sgd|momentum|adam (native engine: sgd|momentum)"),
             flag("seed", "master seed"),
             flag("samples", "samples per client"),
             flag("test-samples", "held-out test set size"),
@@ -101,6 +140,10 @@ fn cli() -> Cli {
                 about: "regenerate Table I (accuracy across methods/configs)",
                 flags: vec![
                     flag_def("artifacts", "artifact directory", "artifacts"),
+                    flag_def("engine", "xla|native training engine", "xla"),
+                    flag("optimizer", "optimizer override (native: sgd|momentum)"),
+                    flag("batch", "minibatch size override"),
+                    flag("lr", "learning-rate override"),
                     flag_def("rounds", "rounds per cell", "60"),
                     flag_def("samples", "samples per client", "120"),
                     flag("seed", "master seed"),
@@ -116,7 +159,12 @@ fn cli() -> Cli {
                 about: "regenerate Fig 3 (cluster-size and local-epoch sweeps)",
                 flags: vec![
                     flag_def("artifacts", "artifact directory", "artifacts"),
+                    flag_def("engine", "xla|native training engine", "xla"),
+                    flag("optimizer", "optimizer override (native: sgd|momentum)"),
+                    flag("batch", "minibatch size override"),
+                    flag("lr", "learning-rate override"),
                     flag_def("rounds", "rounds per run", "60"),
+                    flag_def("samples", "samples per client", "120"),
                     flag_def("part", "a|b|both", "both"),
                     flag_def("nms", "cluster sizes for part a", "5,10,20,50"),
                     flag_def("ks", "local steps for part b", "1,2,5,10"),
@@ -196,6 +244,12 @@ fn cli() -> Cli {
 }
 
 fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConfig> {
+    if let Some(s) = a.get("engine") {
+        cfg.engine = EngineKind::parse(s)?;
+    }
+    if let Some(s) = a.get("codec") {
+        cfg.codec = Codec::parse(s)?;
+    }
     if let Some(s) = a.get("algorithm") {
         cfg.algorithm = Algorithm::parse(s)?;
     }
@@ -229,6 +283,9 @@ fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConf
     }
     if let Some(v) = a.get_usize("k")? {
         cfg.local_steps = v;
+    }
+    if let Some(v) = a.get_usize("batch")? {
+        cfg.batch_size = v;
     }
     if let Some(v) = a.get_f64("lr")? {
         cfg.lr = v;
@@ -277,22 +334,65 @@ fn suite_options(a: &Args) -> Result<SuiteOptions> {
     if let Some(v) = a.get_usize("workers")? {
         o.workers = v;
     }
+    if let Some(s) = a.get("engine") {
+        o.engine = EngineKind::parse(s)?;
+    }
+    if let Some(s) = a.get("optimizer") {
+        o.optimizer = Some(s.to_string());
+    }
+    if let Some(v) = a.get_usize("batch")? {
+        o.batch_size = Some(v);
+    }
+    if let Some(v) = a.get_f64("lr")? {
+        o.lr = v;
+    }
     Ok(o)
+}
+
+/// Build the training backend a suite subcommand selects (`--engine`).
+fn suite_backend(a: &Args) -> Result<Arc<dyn TrainBackend>> {
+    let kind = EngineKind::parse(a.get("engine").unwrap_or("xla"))?;
+    backend_for_kind(kind, a.get("artifacts").unwrap())
 }
 
 fn cmd_train(a: &Args) -> Result<()> {
     let artifacts = a.get("artifacts").unwrap();
-    let mut runner = if let Some(path) = a.get("resume") {
+    // Validate the adaptive-deadline flag before the (possibly
+    // expensive) runner construction: 0 disables; anything else must be
+    // a positive finite factor (the observer constructor asserts, so
+    // reject junk as a typed usage error here).
+    let adaptive_slack = a.get_f64("adaptive-deadline")?.unwrap_or(0.0);
+    if !(adaptive_slack.is_finite() && adaptive_slack >= 0.0) {
+        return Err(Error::Usage(format!(
+            "--adaptive-deadline expects a finite slack factor >= 0, \
+             got {adaptive_slack}"
+        )));
+    }
+    // --resume takes a file; --resume-latest scans a directory for the
+    // newest checkpoint (the partner of --checkpoint-keep rotation).
+    let resume_path = match (a.get("resume"), a.get("resume-latest")) {
+        (Some(p), None) => Some(p.to_string()),
+        (None, Some(dir)) => Some(find_latest_checkpoint(dir)?),
+        (None, None) => None,
+        (Some(_), Some(_)) => {
+            return Err(Error::Usage(
+                "pass either --resume or --resume-latest, not both".into(),
+            ))
+        }
+    };
+    let mut runner = if let Some(path) = resume_path {
         // A resumed session must replay bit-identically, so the config
-        // comes from the checkpoint; overriding flags are ignored.
-        let ck = RunnerCheckpoint::load(path)?;
+        // comes from the checkpoint; overriding flags are ignored.  The
+        // checkpoint also names the engine that trained it.
+        let ck = RunnerCheckpoint::load(&path)?;
         log::info!(
-            "resuming {:?} at round {} from {path}",
+            "resuming {:?} at round {} from {path} (engine {})",
             ck.cfg.name,
-            ck.cursor
+            ck.cursor,
+            ck.cfg.engine.name()
         );
-        let engine = Arc::new(Engine::load(artifacts)?);
-        Runner::resume(engine, &ck)?
+        let backend = backend_for(&ck.cfg, artifacts)?;
+        Runner::resume(backend, &ck)?
     } else {
         let base = if let Some(p) = a.get("preset") {
             preset(p)?
@@ -308,9 +408,20 @@ fn cmd_train(a: &Args) -> Result<()> {
     if let Some(path) = a.get("live-csv") {
         runner.add_observer(Box::new(MetricsCsvObserver::new(path)));
     }
+    if adaptive_slack > 0.0 {
+        let warmup = a.get_usize("adaptive-warmup")?.unwrap_or(3);
+        runner.add_observer(Box::new(AdaptiveDeadlineObserver::with_params(
+            adaptive_slack,
+            0.3,
+            warmup,
+        )));
+    }
     // Drive the stepwise session: one step per round, with periodic
-    // checkpoints when requested.
+    // checkpoints when requested.  With --checkpoint-keep the files are
+    // round-stamped and rotated; without it one file is overwritten
+    // (atomically) in place.
     let ckpt_every = a.get_usize("checkpoint-every")?.unwrap_or(0);
+    let ckpt_keep = a.get_usize("checkpoint-keep")?.unwrap_or(0);
     let ckpt_path = a
         .get("checkpoint")
         .map(str::to_string)
@@ -318,8 +429,16 @@ fn cmd_train(a: &Args) -> Result<()> {
     while !runner.is_done() {
         runner.step()?;
         if ckpt_every > 0 && runner.round() % ckpt_every == 0 {
-            runner.checkpoint()?.save(&ckpt_path)?;
-            log::info!("checkpoint at round {} -> {ckpt_path}", runner.round());
+            let path = if ckpt_keep > 0 {
+                round_stamped_path(&ckpt_path, runner.round())
+            } else {
+                ckpt_path.clone()
+            };
+            runner.checkpoint()?.save(&path)?;
+            log::info!("checkpoint at round {} -> {path}", runner.round());
+            for gone in prune_checkpoints(&ckpt_path, ckpt_keep)? {
+                log::debug!("pruned old checkpoint {gone}");
+            }
         }
     }
     let report = runner.report();
@@ -347,9 +466,9 @@ fn cmd_train(a: &Args) -> Result<()> {
 }
 
 fn cmd_table1(a: &Args) -> Result<()> {
-    let engine = Arc::new(Engine::load(a.get("artifacts").unwrap())?);
+    let backend = suite_backend(a)?;
     let o = suite_options(a)?;
-    let (table, cells) = table1(&engine, &o, a.has("fast"))?;
+    let (table, cells) = table1(&backend, &o, a.has("fast"))?;
     println!("{}", table.render());
     if let Some(path) = a.get("out") {
         let mut csv = edgeflow::util::csv::CsvWriter::new(&[
@@ -371,7 +490,7 @@ fn cmd_table1(a: &Args) -> Result<()> {
 }
 
 fn cmd_fig3(a: &Args) -> Result<()> {
-    let engine = Arc::new(Engine::load(a.get("artifacts").unwrap())?);
+    let backend = suite_backend(a)?;
     let o = suite_options(a)?;
     let part = a.get("part").unwrap_or("both").to_string();
     let window = a.get_usize("window")?.unwrap_or(5);
@@ -404,7 +523,7 @@ fn cmd_fig3(a: &Args) -> Result<()> {
             .map(|s| s.parse().map_err(|_| Error::Usage(format!("bad N_m {s}"))))
             .collect::<Result<_>>()?;
         println!("Fig 3(a): accuracy vs rounds for cluster sizes {nms:?}");
-        for (n_m, rep) in fig3a(&engine, &o, &nms)? {
+        for (n_m, rep) in fig3a(&backend, &o, &nms)? {
             emit("a", format!("Nm={n_m}"), &rep);
         }
     }
@@ -415,7 +534,7 @@ fn cmd_fig3(a: &Args) -> Result<()> {
             .map(|s| s.parse().map_err(|_| Error::Usage(format!("bad K {s}"))))
             .collect::<Result<_>>()?;
         println!("Fig 3(b): accuracy vs rounds for local epochs {ks:?}");
-        for (k, rep) in fig3b(&engine, &o, &ks)? {
+        for (k, rep) in fig3b(&backend, &o, &ks)? {
             emit("b", format!("K={k}"), &rep);
         }
     }

@@ -1,0 +1,114 @@
+//! The pluggable training-engine abstraction.
+//!
+//! Everything the round loop needs from an execution engine fits three
+//! object-safe traits:
+//!
+//! * [`TrainBackend`] — engine construction surface: validate a config
+//!   against the engine's model contract, produce the initial
+//!   [`ModelState`], and hand out per-worker local-update / eval handles.
+//! * [`LocalUpdateHandle`] — run K local SGD steps for one client
+//!   (`state + [K, B, ...] batches + lr -> (new state, mean loss)`).
+//!   [`crate::runtime::pool::WorkerPool`] gives every worker its own
+//!   handle, so implementations must be internally synchronized
+//!   (`Send + Sync`), never mutated through `&self`.
+//! * [`EvalHandle`] — evaluate a model over a dataset
+//!   (`-> (mean loss, accuracy)`).
+//!
+//! Two engines implement the contract:
+//!
+//! * `engine: xla` — [`crate::runtime::executor::Engine`], the AOT
+//!   XLA/PJRT path (requires `make artifacts`).
+//! * `engine: native` — [`crate::runtime::native::NativeBackend`], the
+//!   pure-Rust in-process trainer (no artifacts, runs anywhere).
+//!
+//! Both are deterministic in `(seed, client, round)` and bit-identical
+//! at any worker count: a handle's `run` is a pure function of its
+//! inputs, and the fixed-order reduction in [`crate::fl::aggregate`]
+//! does the rest.
+
+use std::sync::Arc;
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::data::dataset::{Batch, Dataset};
+use crate::runtime::params::ModelState;
+use crate::util::error::Result;
+
+/// A training engine: validates configs, initializes model state, and
+/// hands out execution handles.  Object-safe; shared across the round
+/// loop's worker threads behind an `Arc`.
+pub trait TrainBackend: Send + Sync {
+    /// Engine label for logs and error messages ("xla" | "native").
+    fn name(&self) -> &'static str;
+
+    /// Validate a config against this engine's model/optimizer contract
+    /// (the XLA engine cross-checks the artifact manifest; the native
+    /// engine checks its built-in variant table).
+    fn validate(&self, cfg: &ExperimentConfig) -> Result<()>;
+
+    /// Initial model state for (variant, optimizer).  Deterministic:
+    /// every call returns bit-identical state.
+    fn init_state(&self, variant: &str, opt: &str) -> Result<ModelState>;
+
+    /// A local-update handle for K steps of batch size `b` (one per pool
+    /// worker; implementations may share compiled executables behind the
+    /// handle).
+    fn local_update(
+        &self,
+        variant: &str,
+        opt: &str,
+        k: usize,
+        b: usize,
+    ) -> Result<Box<dyn LocalUpdateHandle>>;
+
+    /// An evaluation handle for the variant.
+    fn eval(&self, variant: &str, opt: &str) -> Result<Box<dyn EvalHandle>>;
+}
+
+/// Executes one client's local update: K steps over a gathered
+/// `[K, B, ...]` super-batch.  Must be a pure function of its arguments
+/// (no interior state that affects results) — the worker-count
+/// determinism contract depends on it.
+pub trait LocalUpdateHandle: Send + Sync {
+    /// `state` + batches + learning rate -> (new state, mean train loss).
+    fn run(&self, state: &ModelState, batch: &Batch, lr: f32) -> Result<(ModelState, f32)>;
+}
+
+/// Evaluates a model over a whole dataset.
+pub trait EvalHandle: Send + Sync {
+    /// Returns `(mean loss, accuracy)` over `ds`.
+    fn run_dataset(&self, state: &ModelState, ds: &Dataset) -> Result<(f64, f64)>;
+}
+
+/// Build the backend an [`EngineKind`] names.  `artifacts_dir` is only
+/// touched by the XLA path — the native engine needs no files at all.
+pub fn backend_for_kind(
+    kind: EngineKind,
+    artifacts_dir: &str,
+) -> Result<Arc<dyn TrainBackend>> {
+    Ok(match kind {
+        EngineKind::Xla => {
+            Arc::new(crate::runtime::executor::Engine::load(artifacts_dir)?)
+        }
+        EngineKind::Native => Arc::new(crate::runtime::native::NativeBackend::new()),
+    })
+}
+
+/// Build the backend a config selects (`cfg.engine`).
+pub fn backend_for(
+    cfg: &ExperimentConfig,
+    artifacts_dir: &str,
+) -> Result<Arc<dyn TrainBackend>> {
+    backend_for_kind(cfg.engine, artifacts_dir)
+}
+
+// The pool shares backends and handles across threads; the trait bounds
+// (`Send + Sync`) make that a compile-time requirement for every
+// implementation, exactly like the concrete-type assertion in
+// `runtime::executor`.
+fn _assert_object_types_thread_safe() {
+    #[allow(clippy::extra_unused_type_parameters)]
+    fn check<T: Send + Sync + ?Sized>() {}
+    check::<dyn TrainBackend>();
+    check::<dyn LocalUpdateHandle>();
+    check::<dyn EvalHandle>();
+}

@@ -17,7 +17,9 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use crate::data::dataset::Batch;
+use crate::config::ExperimentConfig;
+use crate::data::dataset::{Batch, Dataset};
+use crate::runtime::backend::{EvalHandle, LocalUpdateHandle, TrainBackend};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::params::{ModelState, StateLayout};
 use crate::util::error::{Error, Result};
@@ -236,11 +238,7 @@ impl EvalExe {
 
     /// Evaluate a whole dataset in fixed-size batches (padding the tail
     /// with repeats that are subtracted from the counts).
-    pub fn run_dataset(
-        &self,
-        state: &ModelState,
-        ds: &crate::data::dataset::Dataset,
-    ) -> Result<(f64, f64)> {
+    pub fn run_dataset(&self, state: &ModelState, ds: &Dataset) -> Result<(f64, f64)> {
         let n = ds.len();
         let mut loss_sum = 0f64;
         let mut correct = 0f64;
@@ -274,5 +272,86 @@ impl EvalExe {
             i = hi;
         }
         Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}
+
+// ------------------------------------------------- backend trait glue
+//
+// The XLA engine is one implementation of the pluggable
+// `runtime::backend` contract; `engine: native` is the other.  The
+// inherent methods above keep their concrete return types (benches and
+// diagnostics use them directly); the trait impl boxes them for the
+// engine-agnostic round loop.
+
+impl TrainBackend for Engine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    /// Cross-validate a config against the artifact contract: the AOT
+    /// executables bake in batch size, K and image shape.
+    fn validate(&self, cfg: &ExperimentConfig) -> Result<()> {
+        let variant = self.manifest.variant(&cfg.model)?;
+        if variant.train_batch != cfg.batch_size {
+            return Err(Error::Config(format!(
+                "batch_size {} != artifact train batch {} for {}",
+                cfg.batch_size, variant.train_batch, cfg.model
+            )));
+        }
+        if !variant.k_values.contains(&cfg.local_steps) {
+            return Err(Error::Config(format!(
+                "K={} has no artifact for {} (available: {:?}) — extend \
+                 BUILD_MATRIX in python/compile/aot.py",
+                cfg.local_steps, cfg.model, variant.k_values
+            )));
+        }
+        if variant.image != cfg.dataset.image() {
+            return Err(Error::Config(format!(
+                "model {} expects {:?} images but dataset {} yields {:?}",
+                cfg.model,
+                variant.image,
+                cfg.dataset.name(),
+                cfg.dataset.image()
+            )));
+        }
+        Ok(())
+    }
+
+    fn init_state(&self, variant: &str, opt: &str) -> Result<ModelState> {
+        Engine::init_state(self, variant, opt)
+    }
+
+    fn local_update(
+        &self,
+        variant: &str,
+        opt: &str,
+        k: usize,
+        b: usize,
+    ) -> Result<Box<dyn LocalUpdateHandle>> {
+        let exe = Engine::local_update(self, variant, opt, k)?;
+        if exe.b != b {
+            return Err(Error::Config(format!(
+                "artifact for {variant} trains batch {} but the config asks \
+                 for {b}",
+                exe.b
+            )));
+        }
+        Ok(Box::new(exe))
+    }
+
+    fn eval(&self, variant: &str, opt: &str) -> Result<Box<dyn EvalHandle>> {
+        Ok(Box::new(Engine::eval(self, variant, opt)?))
+    }
+}
+
+impl LocalUpdateHandle for LocalUpdateExe {
+    fn run(&self, state: &ModelState, batch: &Batch, lr: f32) -> Result<(ModelState, f32)> {
+        LocalUpdateExe::run(self, state, batch, lr)
+    }
+}
+
+impl EvalHandle for EvalExe {
+    fn run_dataset(&self, state: &ModelState, ds: &Dataset) -> Result<(f64, f64)> {
+        EvalExe::run_dataset(self, state, ds)
     }
 }

@@ -1,20 +1,36 @@
-//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
-//! them from the coordinator hot path.  Python never runs here.
+//! Execution engines behind the pluggable [`backend`] trait layer.
 //!
+//! * [`backend`] — [`backend::TrainBackend`] / [`backend::LocalUpdateHandle`] /
+//!   [`backend::EvalHandle`]: everything the round loop needs from an
+//!   engine, object-safe and `Send + Sync`.  `backend::backend_for`
+//!   builds the engine a config selects (`engine: xla|native`).
+//! * [`executor`] — the XLA/PJRT engine: loads the AOT artifacts
+//!   (`make artifacts`), HLO text -> `HloModuleProto::from_text_file` ->
+//!   `PjRtClient::compile` -> `execute`, with compiled-executable
+//!   caching.  Python never runs here.
+//! * [`native`] — the pure-Rust in-process engine: hand-written
+//!   forward/backward for multinomial logistic regression and a
+//!   one-hidden-layer MLP with SGD/momentum.  No artifacts, no Python —
+//!   the engine CI's end-to-end jobs train with.
 //! * [`manifest`] — parses `artifacts/manifest.json` (shapes, orders,
 //!   executable table) written by `python/compile/aot.py`.
 //! * [`params`] — flat f32 model state (params ++ BN stats ++ optimizer
-//!   state) with blob I/O matching the manifest layout.
-//! * [`executor`] — the `xla` crate wrapper: HLO text ->
-//!   `HloModuleProto::from_text_file` -> `PjRtClient::compile` ->
-//!   `execute`, with compiled-executable caching.
+//!   state) with blob I/O; shared by both engines, so aggregation,
+//!   migration and checkpointing stay engine-agnostic.
+//! * [`pool`] — the scoped worker pool the round loop fans out over.
 
+pub mod backend;
 pub mod executor;
 pub mod manifest;
+pub mod native;
 pub mod params;
 pub mod pool;
 
+pub use backend::{
+    backend_for, backend_for_kind, EvalHandle, LocalUpdateHandle, TrainBackend,
+};
 pub use executor::{Engine, EvalExe, LocalUpdateExe};
 pub use manifest::{Manifest, TensorSpec, VariantSpec};
+pub use native::NativeBackend;
 pub use params::ModelState;
 pub use pool::WorkerPool;

@@ -1,0 +1,699 @@
+//! Pure-Rust in-process training engine (`engine: native`).
+//!
+//! A hand-written forward/backward trainer over the same flat
+//! [`ModelState`]/[`StateLayout`] the XLA path uses, so everything
+//! downstream — Eq. 3 aggregation, migration byte accounting,
+//! checkpointing — is engine-agnostic.  Two architectures:
+//!
+//! * `*_linear` — multinomial logistic regression (`softmax(xW + b)`).
+//! * `*_mlp` — one hidden ReLU layer (`softmax(relu(xW1 + b1)W2 + b2)`).
+//!
+//! Optimizers: plain SGD and heavy-ball momentum (`v = µv + g`,
+//! `θ -= η·v`, µ = 0.9); the velocity rides in the state's optimizer
+//! region so it migrates and checkpoints with the model, exactly like
+//! the XLA path's Adam moments.
+//!
+//! Everything here is a pure function of its inputs: weight init is
+//! seeded per variant, minibatches come from the loader's
+//! `(seed, client, round)` stream, and no interior state survives a
+//! call — so runs are deterministic in `(seed, client, round)` and
+//! bit-identical at any worker count.  No artifacts, no Python, no
+//! files: this is the engine CI trains with.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::dataset::{Batch, Dataset};
+use crate::rng::Rng;
+use crate::runtime::backend::{EvalHandle, LocalUpdateHandle, TrainBackend};
+use crate::runtime::manifest::{TensorSpec, VariantSpec};
+use crate::runtime::params::{ModelState, StateLayout};
+use crate::util::error::{Error, Result};
+
+/// Momentum coefficient for the `momentum` optimizer.
+const MOMENTUM: f32 = 0.9;
+
+/// Hidden width of the `*_mlp` variants.
+const MLP_HIDDEN: usize = 64;
+
+/// Seed for the deterministic weight init (mixed with the variant name).
+const INIT_SEED: u64 = 0x9A71_BE11;
+
+/// Architecture of a native variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Arch {
+    /// Multinomial logistic regression: `w [in, classes], b [classes]`.
+    Linear,
+    /// One hidden ReLU layer:
+    /// `w1 [in, hidden], b1 [hidden], w2 [hidden, classes], b2 [classes]`.
+    Mlp { hidden: usize },
+}
+
+/// Shape summary of one variant (everything forward/backward needs).
+#[derive(Debug, Clone, Copy)]
+struct Dims {
+    input: usize,
+    /// 0 for the linear architecture.
+    hidden: usize,
+    classes: usize,
+}
+
+impl Dims {
+    fn param_elems(&self) -> usize {
+        if self.hidden == 0 {
+            self.input * self.classes + self.classes
+        } else {
+            self.input * self.hidden
+                + self.hidden
+                + self.hidden * self.classes
+                + self.classes
+        }
+    }
+}
+
+/// One entry of the built-in variant table.
+#[derive(Debug, Clone)]
+struct NativeVariant {
+    name: &'static str,
+    arch: Arch,
+    image: (usize, usize, usize),
+    classes: usize,
+}
+
+impl NativeVariant {
+    fn dims(&self) -> Dims {
+        let (h, w, c) = self.image;
+        Dims {
+            input: h * w * c,
+            hidden: match self.arch {
+                Arch::Linear => 0,
+                Arch::Mlp { hidden } => hidden,
+            },
+            classes: self.classes,
+        }
+    }
+}
+
+/// The built-in model zoo.  `fashion_*` variants share the XLA manifest's
+/// names so configs can flip `engine` without renaming models.
+fn variant(name: &str) -> Result<NativeVariant> {
+    let v = match name {
+        "fashion_linear" => NativeVariant {
+            name: "fashion_linear",
+            arch: Arch::Linear,
+            image: (28, 28, 1),
+            classes: 10,
+        },
+        "fashion_mlp" => NativeVariant {
+            name: "fashion_mlp",
+            arch: Arch::Mlp { hidden: MLP_HIDDEN },
+            image: (28, 28, 1),
+            classes: 10,
+        },
+        "cifar_linear" => NativeVariant {
+            name: "cifar_linear",
+            arch: Arch::Linear,
+            image: (32, 32, 3),
+            classes: 10,
+        },
+        "cifar_mlp" => NativeVariant {
+            name: "cifar_mlp",
+            arch: Arch::Mlp { hidden: MLP_HIDDEN },
+            image: (32, 32, 3),
+            classes: 10,
+        },
+        other => {
+            return Err(Error::Config(format!(
+                "native engine has no model variant {other:?} (available: \
+                 fashion_linear, fashion_mlp, cifar_linear, cifar_mlp)"
+            )))
+        }
+    };
+    Ok(v)
+}
+
+/// Parameter tensor list of a variant, in layout order.
+fn param_tensors(v: &NativeVariant) -> Vec<TensorSpec> {
+    let d = v.dims();
+    match v.arch {
+        Arch::Linear => vec![
+            TensorSpec { name: "w".into(), shape: vec![d.input, d.classes] },
+            TensorSpec { name: "b".into(), shape: vec![d.classes] },
+        ],
+        Arch::Mlp { hidden } => vec![
+            TensorSpec { name: "w1".into(), shape: vec![d.input, hidden] },
+            TensorSpec { name: "b1".into(), shape: vec![hidden] },
+            TensorSpec { name: "w2".into(), shape: vec![hidden, d.classes] },
+            TensorSpec { name: "b2".into(), shape: vec![d.classes] },
+        ],
+    }
+}
+
+/// Build the flat state layout (params ++ optimizer state) for
+/// (variant, optimizer), reusing the manifest-side [`StateLayout`] so
+/// blob I/O, aggregation and wire accounting need no native-specific
+/// code.
+fn layout_for(v: &NativeVariant, opt: &str) -> Result<Arc<StateLayout>> {
+    let params = param_tensors(v);
+    let opt_tensors: Vec<TensorSpec> = match opt {
+        "sgd" => Vec::new(),
+        "momentum" => params
+            .iter()
+            .map(|t| TensorSpec { name: format!("v_{}", t.name), shape: t.shape.clone() })
+            .collect(),
+        other => {
+            return Err(Error::Config(format!(
+                "native engine supports optimizer sgd|momentum, got {other:?} \
+                 (adam is an XLA-engine artifact)"
+            )))
+        }
+    };
+    let (h, w, c) = v.image;
+    let spec = VariantSpec {
+        name: v.name.to_string(),
+        arch: match v.arch {
+            Arch::Linear => "linear".into(),
+            Arch::Mlp { .. } => "mlp".into(),
+        },
+        image: (h, w, c),
+        classes: v.classes,
+        train_batch: 0,
+        eval_batch: 0,
+        k_values: Vec::new(),
+        optimizers: vec!["sgd".into(), "momentum".into()],
+        params,
+        bn_state: Vec::new(),
+        opt_state: BTreeMap::from([(opt.to_string(), opt_tensors)]),
+        init_blob: BTreeMap::new(),
+        eval_exe: String::new(),
+        local_update: BTreeMap::new(),
+    };
+    StateLayout::new(&spec, opt)
+}
+
+/// The native engine.  Stateless — every handle it hands out is a pure
+/// function, so one instance serves any number of concurrent runners.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl TrainBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn validate(&self, cfg: &ExperimentConfig) -> Result<()> {
+        let v = variant(&cfg.model)?;
+        if v.image != cfg.dataset.image() {
+            return Err(Error::Config(format!(
+                "model {} expects {:?} images but dataset {} yields {:?}",
+                cfg.model,
+                v.image,
+                cfg.dataset.name(),
+                cfg.dataset.image()
+            )));
+        }
+        if v.classes != cfg.dataset.classes() {
+            return Err(Error::Config(format!(
+                "model {} has {} classes but dataset {} has {}",
+                cfg.model,
+                v.classes,
+                cfg.dataset.name(),
+                cfg.dataset.classes()
+            )));
+        }
+        // Surfaces the unsupported-optimizer error at construction.
+        layout_for(&v, &cfg.optimizer)?;
+        Ok(())
+    }
+
+    fn init_state(&self, variant_name: &str, opt: &str) -> Result<ModelState> {
+        let v = variant(variant_name)?;
+        let layout = layout_for(&v, opt)?;
+        let mut state = ModelState::zeros(layout.clone());
+        // Xavier-uniform weights, zero biases, zero optimizer state —
+        // seeded by the variant name only, so the same model starts from
+        // the same weights under every optimizer and config seed (the
+        // blob-init behavior of the XLA path).
+        let mut seed = INIT_SEED;
+        for b in v.name.bytes() {
+            seed = seed.wrapping_mul(0x100000001B3).wrapping_add(b as u64);
+        }
+        let mut rng = Rng::new(seed);
+        for (i, t) in layout.tensors[..layout.n_params].iter().enumerate() {
+            if t.shape.len() != 2 {
+                continue; // biases stay zero
+            }
+            let (fan_in, fan_out) = (t.shape[0], t.shape[1]);
+            let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            let off = layout.offsets[i];
+            for e in 0..t.nelems() {
+                state.data[off + e] = rng.range(-limit, limit) as f32;
+            }
+        }
+        Ok(state)
+    }
+
+    fn local_update(
+        &self,
+        variant_name: &str,
+        opt: &str,
+        k: usize,
+        b: usize,
+    ) -> Result<Box<dyn LocalUpdateHandle>> {
+        let v = variant(variant_name)?;
+        let layout = layout_for(&v, opt)?;
+        if k == 0 || b == 0 {
+            return Err(Error::Config("K and batch size must be positive".into()));
+        }
+        Ok(Box::new(NativeLocalUpdate {
+            layout,
+            dims: v.dims(),
+            momentum: opt == "momentum",
+            k,
+            b,
+        }))
+    }
+
+    fn eval(&self, variant_name: &str, opt: &str) -> Result<Box<dyn EvalHandle>> {
+        let v = variant(variant_name)?;
+        Ok(Box::new(NativeEval { layout: layout_for(&v, opt)?, dims: v.dims() }))
+    }
+}
+
+/// K local steps of SGD/momentum for one client.
+struct NativeLocalUpdate {
+    layout: Arc<StateLayout>,
+    dims: Dims,
+    momentum: bool,
+    k: usize,
+    b: usize,
+}
+
+impl LocalUpdateHandle for NativeLocalUpdate {
+    fn run(&self, state: &ModelState, batch: &Batch, lr: f32) -> Result<(ModelState, f32)> {
+        let d = &self.dims;
+        if batch.x.len() != self.k * self.b * d.input || batch.y.len() != self.k * self.b {
+            return Err(Error::Data(format!(
+                "batch shape mismatch: x={} y={} want x={} y={}",
+                batch.x.len(),
+                batch.y.len(),
+                self.k * self.b * d.input,
+                self.k * self.b
+            )));
+        }
+        if state.layout.total != self.layout.total {
+            return Err(Error::Config(format!(
+                "state has {} elements, native layout expects {}",
+                state.layout.total, self.layout.total
+            )));
+        }
+        let n_params = d.param_elems();
+        let mut new_state = state.clone();
+        let mut grads = vec![0f32; n_params];
+        let mut loss_sum = 0f32;
+        for step in 0..self.k {
+            let x = &batch.x[step * self.b * d.input..(step + 1) * self.b * d.input];
+            let y = &batch.y[step * self.b..(step + 1) * self.b];
+            grads.fill(0.0);
+            loss_sum +=
+                loss_and_grads(d, &new_state.data[..n_params], x, y, Some(&mut grads));
+            // Optimizer update.  Under momentum the velocity occupies the
+            // state's optimizer region, element-aligned with the params
+            // (same tensor list, same order).
+            if self.momentum {
+                let (params, velocity) = new_state.data.split_at_mut(n_params);
+                for ((p, v), &g) in params.iter_mut().zip(velocity.iter_mut()).zip(&grads)
+                {
+                    *v = MOMENTUM * *v + g;
+                    *p -= lr * *v;
+                }
+            } else {
+                for (p, &g) in new_state.data[..n_params].iter_mut().zip(&grads) {
+                    *p -= lr * g;
+                }
+            }
+        }
+        Ok((new_state, loss_sum / self.k as f32))
+    }
+}
+
+/// Whole-dataset evaluation (forward only).
+struct NativeEval {
+    layout: Arc<StateLayout>,
+    dims: Dims,
+}
+
+impl EvalHandle for NativeEval {
+    fn run_dataset(&self, state: &ModelState, ds: &Dataset) -> Result<(f64, f64)> {
+        let d = &self.dims;
+        if ds.sample_len() != d.input {
+            return Err(Error::Data(format!(
+                "dataset samples have {} values, model expects {}",
+                ds.sample_len(),
+                d.input
+            )));
+        }
+        if state.layout.total != self.layout.total {
+            return Err(Error::Config(format!(
+                "state has {} elements, native layout expects {}",
+                state.layout.total, self.layout.total
+            )));
+        }
+        let params = &state.data[..d.param_elems()];
+        let mut hidden = vec![0f32; d.hidden];
+        let mut logits = vec![0f32; d.classes];
+        let mut probs = vec![0f32; d.classes];
+        let n = ds.len();
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for i in 0..n {
+            let y = ds.label(i) as usize;
+            forward(d, params, ds.pixels(i), &mut hidden, &mut logits);
+            loss_sum += softmax_xent(&logits, y, &mut probs) as f64;
+            let mut best = 0;
+            for c in 1..d.classes {
+                if logits[c] > logits[best] {
+                    best = c;
+                }
+            }
+            if best == y {
+                correct += 1.0;
+            }
+        }
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}
+
+// ---------------------------------------------------------------- math
+
+/// Forward pass for one sample: fills `hidden` (MLP pre-activations get
+/// ReLU'd in place; empty for linear) and `logits`.
+fn forward(d: &Dims, params: &[f32], x: &[f32], hidden: &mut [f32], logits: &mut [f32]) {
+    if d.hidden == 0 {
+        let w = &params[..d.input * d.classes];
+        let b = &params[d.input * d.classes..];
+        logits.copy_from_slice(b);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[i * d.classes..(i + 1) * d.classes];
+            for (l, &wv) in logits.iter_mut().zip(row) {
+                *l += xi * wv;
+            }
+        }
+    } else {
+        let (w1, rest) = params.split_at(d.input * d.hidden);
+        let (b1, rest) = rest.split_at(d.hidden);
+        let (w2, b2) = rest.split_at(d.hidden * d.classes);
+        hidden.copy_from_slice(b1);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w1[i * d.hidden..(i + 1) * d.hidden];
+            for (h, &wv) in hidden.iter_mut().zip(row) {
+                *h += xi * wv;
+            }
+        }
+        for h in hidden.iter_mut() {
+            if *h < 0.0 {
+                *h = 0.0;
+            }
+        }
+        logits.copy_from_slice(b2);
+        for (j, &hj) in hidden.iter().enumerate() {
+            if hj == 0.0 {
+                continue;
+            }
+            let row = &w2[j * d.classes..(j + 1) * d.classes];
+            for (l, &wv) in logits.iter_mut().zip(row) {
+                *l += hj * wv;
+            }
+        }
+    }
+}
+
+/// Numerically-stable softmax cross-entropy for one sample: fills the
+/// caller's `probs` scratch (same length as `logits` — it doubles as
+/// the dlogits buffer in the backward pass, `p - onehot(y)`) and
+/// returns the loss.  Caller-owned scratch keeps the per-sample hot
+/// loop allocation-free.
+fn softmax_xent(logits: &[f32], y: usize, probs: &mut [f32]) -> f32 {
+    let mut m = logits[0];
+    for &l in &logits[1..] {
+        if l > m {
+            m = l;
+        }
+    }
+    let mut z = 0f32;
+    for (p, &l) in probs.iter_mut().zip(logits) {
+        let e = (l - m).exp();
+        *p = e;
+        z += e;
+    }
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    m + z.ln() - logits[y]
+}
+
+/// Mean loss over the minibatch; when `grads` is given, accumulates
+/// `d(mean loss)/d(params)` into it (caller zeroes it).  `params` and
+/// `grads` are the flat parameter region (no optimizer state).
+fn loss_and_grads(
+    d: &Dims,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    mut grads: Option<&mut [f32]>,
+) -> f32 {
+    let batch = y.len();
+    let inv_b = 1.0 / batch as f32;
+    // Scratch hoisted out of the per-sample loop — the hot path never
+    // allocates.
+    let mut hidden = vec![0f32; d.hidden];
+    let mut logits = vec![0f32; d.classes];
+    let mut dlogits = vec![0f32; d.classes];
+    let mut dh = vec![0f32; d.hidden];
+    let mut loss_sum = 0f32;
+    for s in 0..batch {
+        let xs = &x[s * d.input..(s + 1) * d.input];
+        let ys = y[s] as usize;
+        forward(d, params, xs, &mut hidden, &mut logits);
+        loss_sum += softmax_xent(&logits, ys, &mut dlogits);
+        let Some(g) = grads.as_deref_mut() else { continue };
+        dlogits[ys] -= 1.0;
+        for dl in dlogits.iter_mut() {
+            *dl *= inv_b;
+        }
+        if d.hidden == 0 {
+            let (gw, gb) = g.split_at_mut(d.input * d.classes);
+            for (i, &xi) in xs.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &mut gw[i * d.classes..(i + 1) * d.classes];
+                for (gv, &dl) in row.iter_mut().zip(&dlogits) {
+                    *gv += xi * dl;
+                }
+            }
+            for (gv, &dl) in gb.iter_mut().zip(&dlogits) {
+                *gv += dl;
+            }
+        } else {
+            let (gw1, rest) = g.split_at_mut(d.input * d.hidden);
+            let (gb1, rest) = rest.split_at_mut(d.hidden);
+            let (gw2, gb2) = rest.split_at_mut(d.hidden * d.classes);
+            let w2_off = d.input * d.hidden + d.hidden;
+            let w2 = &params[w2_off..w2_off + d.hidden * d.classes];
+            // dh = W2 · dlogits, masked by ReLU (hidden holds post-ReLU
+            // activations; zero means the unit was clamped — its
+            // pre-activation gradient is the subgradient 0).  dh is
+            // reused across samples, so every entry is written each
+            // pass, never left stale.
+            for (j, &hj) in hidden.iter().enumerate() {
+                let row = &w2[j * d.classes..(j + 1) * d.classes];
+                let grow = &mut gw2[j * d.classes..(j + 1) * d.classes];
+                let mut acc = 0f32;
+                for ((gv, &wv), &dl) in grow.iter_mut().zip(row).zip(&dlogits) {
+                    acc += wv * dl;
+                    *gv += hj * dl;
+                }
+                dh[j] = if hj > 0.0 { acc } else { 0.0 };
+            }
+            for (gv, &dl) in gb2.iter_mut().zip(&dlogits) {
+                *gv += dl;
+            }
+            for (i, &xi) in xs.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &mut gw1[i * d.hidden..(i + 1) * d.hidden];
+                for (gv, &dhj) in row.iter_mut().zip(&dh) {
+                    *gv += xi * dhj;
+                }
+            }
+            for (gv, &dhj) in gb1.iter_mut().zip(&dh) {
+                *gv += dhj;
+            }
+        }
+    }
+    loss_sum * inv_b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, ExperimentConfig};
+
+    fn tiny_dims(hidden: usize) -> Dims {
+        Dims { input: 4, hidden, classes: 3 }
+    }
+
+    fn seeded_params(d: &Dims, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..d.param_elems()).map(|_| rng.range(-0.5, 0.5) as f32).collect()
+    }
+
+    fn tiny_batch(d: &Dims, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x = (0..b * d.input).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        let y = (0..b).map(|_| rng.below(d.classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        for hidden in [0usize, 5] {
+            let d = tiny_dims(hidden);
+            let params = seeded_params(&d, 1);
+            let (x, y) = tiny_batch(&d, 3, 2);
+            let mut grads = vec![0f32; d.param_elems()];
+            loss_and_grads(&d, &params, &x, &y, Some(&mut grads));
+            let eps = 2e-3f32;
+            for i in 0..d.param_elems() {
+                let mut plus = params.clone();
+                plus[i] += eps;
+                let mut minus = params.clone();
+                minus[i] -= eps;
+                let lp = loss_and_grads(&d, &plus, &x, &y, None);
+                let lm = loss_and_grads(&d, &minus, &x, &y, None);
+                let numeric = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (numeric - grads[i]).abs() <= 1e-2 + 0.05 * grads[i].abs(),
+                    "hidden={hidden} param {i}: numeric {numeric} vs analytic {}",
+                    grads[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_steps_on_one_batch_strictly_decrease_loss() {
+        for hidden in [0usize, 8] {
+            let d = tiny_dims(hidden);
+            let mut params = seeded_params(&d, 3);
+            let (x, y) = tiny_batch(&d, 4, 4);
+            let mut grads = vec![0f32; d.param_elems()];
+            let mut last = f32::INFINITY;
+            for _ in 0..10 {
+                grads.fill(0.0);
+                let loss = loss_and_grads(&d, &params, &x, &y, Some(&mut grads));
+                assert!(loss < last, "hidden={hidden}: {loss} !< {last}");
+                last = loss;
+                for (p, g) in params.iter_mut().zip(&grads) {
+                    *p -= 0.1 * g;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_state_is_deterministic_and_shaped() {
+        let b = NativeBackend::new();
+        let a = b.init_state("fashion_mlp", "momentum").unwrap();
+        let c = b.init_state("fashion_mlp", "momentum").unwrap();
+        assert_eq!(a.data, c.data);
+        let d = Dims { input: 28 * 28, hidden: MLP_HIDDEN, classes: 10 };
+        assert_eq!(a.layout.param_elems(), d.param_elems());
+        // momentum doubles the state (velocity mirrors the params)
+        assert_eq!(a.layout.total, 2 * d.param_elems());
+        // sgd carries no optimizer state, same param init
+        let s = b.init_state("fashion_mlp", "sgd").unwrap();
+        assert_eq!(s.layout.total, d.param_elems());
+        assert_eq!(&a.data[..d.param_elems()], &s.data[..]);
+        // velocity starts at zero
+        assert!(a.data[d.param_elems()..].iter().all(|&v| v == 0.0));
+        // weights are initialized, biases zero
+        assert!(a.data[..d.param_elems()].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn momentum_first_step_matches_sgd_then_diverges() {
+        let b = NativeBackend::new();
+        let sgd = b.local_update("fashion_linear", "sgd", 1, 2).unwrap();
+        let mom = b.local_update("fashion_linear", "momentum", 1, 2).unwrap();
+        let s_sgd = b.init_state("fashion_linear", "sgd").unwrap();
+        let s_mom = b.init_state("fashion_linear", "momentum").unwrap();
+        let d = Dims { input: 28 * 28, hidden: 0, classes: 10 };
+        let (x, y) = tiny_batch(&d, 2, 9);
+        let batch = Batch { x, y };
+        let (a1, _) = sgd.run(&s_sgd, &batch, 0.1).unwrap();
+        let (b1, _) = mom.run(&s_mom, &batch, 0.1).unwrap();
+        let n = d.param_elems();
+        assert_eq!(&a1.data[..n], &b1.data[..n], "first step: v = g");
+        let (a2, _) = sgd.run(&a1, &batch, 0.1).unwrap();
+        let (b2, _) = mom.run(&b1, &batch, 0.1).unwrap();
+        assert_ne!(&a2.data[..n], &b2.data[..n], "second step: momentum kicks in");
+    }
+
+    #[test]
+    fn local_update_validates_batch_shape() {
+        let b = NativeBackend::new();
+        let lu = b.local_update("fashion_linear", "sgd", 2, 4).unwrap();
+        let s = b.init_state("fashion_linear", "sgd").unwrap();
+        let bad = Batch { x: vec![0.0; 10], y: vec![0; 8] };
+        assert!(lu.run(&s, &bad, 0.1).is_err());
+    }
+
+    #[test]
+    fn unknown_variant_and_optimizer_are_typed_errors() {
+        let b = NativeBackend::new();
+        assert!(b.init_state("fashion_cnn_slim_fast", "sgd").is_err());
+        assert!(b.init_state("fashion_mlp", "adam").is_err());
+        let mut cfg = ExperimentConfig {
+            model: "fashion_mlp".into(),
+            optimizer: "momentum".into(),
+            ..ExperimentConfig::default()
+        };
+        assert!(b.validate(&cfg).is_ok());
+        cfg.optimizer = "adam".into();
+        assert!(b.validate(&cfg).is_err());
+        cfg.optimizer = "sgd".into();
+        cfg.dataset = DatasetKind::SynthCifar; // model stays fashion_mlp
+        assert!(b.validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn eval_counts_argmax_matches() {
+        let b = NativeBackend::new();
+        let ev = b.eval("fashion_linear", "sgd").unwrap();
+        let s = b.init_state("fashion_linear", "sgd").unwrap();
+        let mut ds = Dataset::new(28, 28, 1, 10);
+        let px = vec![0.5f32; 28 * 28];
+        for cls in 0..10u32 {
+            ds.push(&px, cls);
+        }
+        let (loss, acc) = ev.run_dataset(&s, &ds).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -41,6 +41,188 @@ fn train_help_lists_new_knobs() {
     assert!(text.contains("--straggler-policy"), "{text}");
     assert!(text.contains("--checkpoint-every"), "{text}");
     assert!(text.contains("--resume"), "{text}");
+    assert!(text.contains("--engine"), "{text}");
+    assert!(text.contains("--codec"), "{text}");
+    assert!(text.contains("--checkpoint-keep"), "{text}");
+    assert!(text.contains("--resume-latest"), "{text}");
+    assert!(text.contains("--adaptive-deadline"), "{text}");
+}
+
+#[test]
+fn train_rejects_unknown_engine() {
+    let out = bin().args(["train", "--engine", "tpu"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("engine"), "{text}");
+}
+
+/// Shared flags for a CPU-cheap native training run (no artifacts
+/// anywhere — this must pass in a bare checkout).
+fn native_train_args() -> Vec<&'static str> {
+    vec![
+        "train",
+        "--engine", "native",
+        "--optimizer", "momentum",
+        "--lr", "0.01",
+        "--algorithm", "edgeflow_seq",
+        "--clients", "8",
+        "--clusters", "2",
+        "--rounds", "3",
+        "--k", "1",
+        "--batch", "16",
+        "--samples", "32",
+        "--test-samples", "80",
+        "--eval-every", "0",
+    ]
+}
+
+#[test]
+fn train_native_engine_runs_without_artifacts() {
+    let csv = std::env::temp_dir().join("edgeflow_cli_native.csv");
+    let json = std::env::temp_dir().join("edgeflow_cli_native.json");
+    let mut args: Vec<&str> = native_train_args();
+    let (csv_s, json_s) = (csv.to_str().unwrap(), json.to_str().unwrap());
+    args.extend(["--codec", "int8", "--out", csv_s, "--out-json", json_s]);
+    let out = bin().args(&args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("final acc"), "{text}");
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(csv_text.lines().count(), 4, "header + 3 rounds: {csv_text}");
+    let json_text = std::fs::read_to_string(&json).unwrap();
+    assert!(json_text.contains("train_loss"), "{json_text}");
+    let _ = std::fs::remove_file(&csv);
+    let _ = std::fs::remove_file(&json);
+}
+
+#[test]
+fn train_native_checkpoint_rotation_and_resume_latest() {
+    let dir = std::env::temp_dir().join("edgeflow_cli_ckpt_rotation");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("run.ckpt.json");
+    let mut args: Vec<&str> = native_train_args();
+    let base_s = base.to_str().unwrap();
+    args.extend([
+        "--checkpoint-every", "1",
+        "--checkpoint", base_s,
+        "--checkpoint-keep", "2",
+    ]);
+    let out = bin().args(&args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // 3 rounds checkpointed every round, rotated down to the 2 newest.
+    let mut files: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    files.sort();
+    assert_eq!(
+        files,
+        vec!["run.r000002.ckpt.json", "run.r000003.ckpt.json"],
+        "rotation keeps the 2 newest round stamps"
+    );
+
+    // --resume-latest picks run.r000003 (the finished session) and
+    // reports without retraining; no artifacts needed for the native
+    // checkpoint.
+    let out = bin()
+        .args(["train", "--resume-latest", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("final acc"), "{text}");
+
+    // Resuming the *mid-run* r000002 checkpoint replays round 2 for
+    // real and must land on the same 3-round report.
+    let mid = dir.join("run.r000002.ckpt.json");
+    let out = bin()
+        .args(["train", "--resume", mid.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let resumed = String::from_utf8_lossy(&out.stdout);
+    let summary = |s: &str| {
+        s.lines()
+            .find(|l| l.contains("final acc"))
+            .map(str::to_string)
+            .unwrap_or_default()
+    };
+    assert_eq!(
+        summary(&resumed),
+        summary(&text),
+        "mid-run replay must reach the finished session's summary"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn train_rejects_non_finite_adaptive_deadline() {
+    // "inf" parses as f64 but must surface as a usage error, not an
+    // observer-constructor panic.
+    let out = bin()
+        .args(["train", "--engine", "native", "--adaptive-deadline", "inf"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("adaptive-deadline"), "{text}");
+}
+
+#[test]
+fn train_rejects_resume_and_resume_latest_together() {
+    let out = bin()
+        .args(["train", "--resume", "a.ckpt.json", "--resume-latest", "."])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn fig3_native_engine_regenerates_a_cell_without_artifacts() {
+    let csv = std::env::temp_dir().join("edgeflow_cli_fig3_native.csv");
+    let out = bin()
+        .args([
+            "fig3",
+            "--engine", "native",
+            "--optimizer", "momentum",
+            "--lr", "0.01",
+            "--batch", "16",
+            "--samples", "40",
+            "--part", "b",
+            "--ks", "1",
+            "--rounds", "3",
+            "--out", csv.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Fig 3(b)"), "{text}");
+    assert!(text.contains("K=1"), "{text}");
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert!(csv_text.lines().count() > 1, "{csv_text}");
+    let _ = std::fs::remove_file(&csv);
 }
 
 #[test]
