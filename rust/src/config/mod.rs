@@ -13,8 +13,9 @@ pub enum EngineKind {
     /// AOT XLA/PJRT executables from `make artifacts`.
     Xla,
     /// Pure-Rust in-process trainer ([`crate::runtime::native`]) — no
-    /// artifacts, runs anywhere; supports the `*_linear`/`*_mlp`
-    /// variants with `sgd`/`momentum`.
+    /// artifacts, runs anywhere; supports the `*_linear`/`*_mlp`/
+    /// `*_cnn_slim_fast` variants with `sgd`/`momentum`/`adam` on
+    /// blocked-GEMM batch kernels.
     Native,
 }
 
@@ -318,9 +319,11 @@ pub struct ExperimentConfig {
     /// in-process trainer, no artifacts).
     pub engine: EngineKind,
     /// Model-transfer codec for the wire-size accounting: every
-    /// migration/upload/downlink is charged `codec.wire_bytes(params)`
-    /// instead of raw f32 bytes, and the DES sizes its transfers the
-    /// same way.  Accounting only — the payload itself stays lossless.
+    /// migration/upload/downlink is charged the codec's wire size of
+    /// the full migrating state (params ++ BN ++ optimizer regions —
+    /// `codec.wire_bytes(layout.total)`) instead of raw f32 bytes, and
+    /// the DES sizes its transfers the same way.  Accounting only — the
+    /// payload itself stays lossless.
     pub codec: Codec,
 }
 

@@ -8,7 +8,10 @@
 //!   (4x smaller, bounded error).
 //! * [`Codec::TopK`] — magnitude top-k *delta* sparsification: transmit the
 //!   largest-|value| fraction of the change against a reference the
-//!   receiver already has (index + value pairs).
+//!   receiver already has (index + value pairs).  Wire size is capped at
+//!   the dense encoding: once `kept >= n/2` the 8-byte pairs would cost
+//!   more than shipping all `n` values raw, so the sender falls back to a
+//!   lossless dense transfer.
 //! * [`Codec::None`] — the baseline.
 //!
 //! `roundtrip` returns both the reconstructed payload and the wire size so
@@ -76,10 +79,14 @@ impl Codec {
             Codec::None => (n * 4) as u64,
             // int8 payload + one (scale, zero) f32 pair per chunk
             Codec::QuantizeInt8 => (n + n.div_ceil(Q_CHUNK) * 8) as u64,
-            // (u32 index + f32 value) per kept entry
+            // (u32 index + f32 value) per kept entry — capped at the
+            // dense 4n encoding: above 50% keep the index+value pairs
+            // would cost *more* wire than shipping every value raw, so
+            // the sender falls back to dense (and `roundtrip` mirrors
+            // the fallback by reconstructing losslessly there).
             Codec::TopK { keep_fraction } => {
                 let kept = ((n as f64) * keep_fraction).ceil() as u64;
-                kept * 8
+                (kept * 8).min((n * 4) as u64)
             }
         }
     }
@@ -142,7 +149,11 @@ fn quantize_int8_roundtrip(values: &[f32]) -> Vec<f32> {
 fn topk_roundtrip(values: &[f32], reference: &[f32], keep: f64) -> Vec<f32> {
     let n = values.len();
     let kept = ((n as f64) * keep).ceil() as usize;
-    if kept >= n {
+    // Dense fallback, mirroring the `wire_bytes` cap: once the sparse
+    // index+value pairs cost at least the dense 4n encoding (kept >=
+    // n/2), the sender ships every value raw — lossless, at the dense
+    // wire size the accountant charges.
+    if kept * 8 >= n * 4 {
         return values.to_vec();
     }
     // Select the top-|delta| indices (nth-element style via sorting a key
@@ -247,8 +258,42 @@ mod tests {
                 .unwrap();
             v.iter().zip(&out).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
         };
-        assert!(err(0.5) < err(0.1));
-        assert!(err(0.9) < err(0.5));
+        // Fractions below the dense-fallback threshold stay sparse and
+        // lossy; at >= 50% keep the fallback makes the error exactly 0.
+        assert!(err(0.3) < err(0.1));
+        assert!(err(0.45) < err(0.3));
+        assert_eq!(err(0.5), 0.0, "dense fallback is lossless");
+    }
+
+    #[test]
+    fn topk_above_half_keep_never_exceeds_dense_wire() {
+        // Regression: `top60`..`top100` used to charge kept * 8 bytes
+        // with no cap, i.e. *more* wire than a raw dense transfer.
+        let n = 1000;
+        let dense = Codec::None.wire_bytes(n);
+        for pct in [51.0, 60.0, 75.0, 100.0] {
+            let codec = Codec::TopK { keep_fraction: pct / 100.0 };
+            assert_eq!(codec.wire_bytes(n), dense, "top{pct}");
+            assert!(codec.ratio(n) <= 1.0, "top{pct}");
+        }
+        assert!(
+            Codec::TopK { keep_fraction: 1.0 }.wire_bytes(n)
+                <= Codec::None.wire_bytes(n)
+        );
+        // Below the threshold the sparse encoding still pays off, and the
+        // boundary (kept == n/2, 8 bytes/entry == dense) sits exactly at
+        // the dense size.
+        assert_eq!(Codec::TopK { keep_fraction: 0.4 }.wire_bytes(n), 3200);
+        assert_eq!(Codec::TopK { keep_fraction: 0.5 }.wire_bytes(n), dense);
+        // The payload mirrors the accounting: at dense wire size the
+        // reconstruction is lossless.
+        let reference = randvec(64, 7);
+        let v = randvec(64, 8);
+        let (out, bytes) = Codec::TopK { keep_fraction: 0.6 }
+            .roundtrip(&v, Some(&reference))
+            .unwrap();
+        assert_eq!(out, v, "dense fallback ships the exact values");
+        assert_eq!(bytes, Codec::None.wire_bytes(64));
     }
 
     #[test]

@@ -59,8 +59,9 @@ pub struct SuiteOptions {
     /// Concurrent experiment cells (0 = one per core, 1 = sequential).
     pub workers: usize,
     /// Which engine the cells train on; must match the backend handed to
-    /// the suite functions (native cells need `optimizer`/`lr` suited to
-    /// the native trainer — e.g. `momentum` at lr ~0.01).
+    /// the suite functions (native cells support sgd|momentum|adam — pick
+    /// an `optimizer`/`lr` pair suited to the trainer, e.g. `momentum` at
+    /// lr ~0.01 or `adam` at the default 1e-3).
     pub engine: EngineKind,
     /// Optimizer override (None keeps the preset default, adam).
     pub optimizer: Option<String>,

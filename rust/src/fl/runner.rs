@@ -166,8 +166,12 @@ impl Runner {
         ))?;
         let state = backend.init_state(&cfg.model, &cfg.optimizer)?;
         // The latency-aware schedule's probes ride the same codec wire
-        // bytes the round accounting charges.
-        let wire_bytes = cfg.codec.wire_bytes(state.layout.param_elems());
+        // bytes the round accounting charges.  What moves on the wire is
+        // the *full* state (`layout.total`): optimizer state — momentum
+        // velocity, Adam moments — and BN statistics deliberately
+        // migrate/aggregate with the params, so they are paid for too
+        // (under plain SGD the two counts coincide).
+        let wire_bytes = cfg.codec.wire_bytes(state.layout.total);
         let strategy = Strategy::for_config(&cfg, &fed, &topo, wire_bytes);
         let loader = ClientLoader::new(cfg.seed ^ LOADER_SEED_MIX, cfg.batch_size);
         let net = NetSim::new(&topo);
@@ -306,13 +310,16 @@ impl Runner {
         let t = self.cursor;
         self.timer.lap("idle");
         // Every model transfer this round — migrations, uploads,
-        // downlinks, deferred folds — is charged the codec's wire size,
-        // and the DES sizes its transfers the same way, so compressed
-        // runs report compressed byte-hops and transfer times.  The
-        // payload itself stays lossless: the codec shrinks the
-        // accounting, never the numbers.
+        // downlinks, deferred folds — is charged the codec's wire size
+        // of the **full state** (`layout.total`, params *and* the
+        // optimizer/BN regions that migrate with them: momentum velocity
+        // and Adam moments ride in the state by design, so they cost
+        // wire too), and the DES sizes its transfers the same way, so
+        // compressed runs report compressed byte-hops and transfer
+        // times.  The payload itself stays lossless: the codec shrinks
+        // the accounting, never the numbers.
         let model_bytes =
-            self.cfg.codec.wire_bytes(self.state.layout.param_elems());
+            self.cfg.codec.wire_bytes(self.state.layout.total);
 
         let mut plan = self.strategy.plan_round(t, &self.fed, Some(&self.net));
         self.notify(|o, ctl| o.on_plan(t, &plan, ctl));

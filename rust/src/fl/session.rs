@@ -22,6 +22,7 @@ use crate::fl::comm::RoundComm;
 use crate::fl::strategy::RoundPlan;
 use crate::metrics::{ExperimentMetrics, RoundRecord};
 use crate::runtime::params::ModelState;
+use crate::util::csv::CsvWriter;
 
 /// Why a round trained nothing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -181,19 +182,60 @@ impl RoundObserver for ProgressObserver {
     }
 }
 
-/// Built-in observer: live per-round metrics export.  After every round
-/// the accumulated records are rewritten to `path` as the standard
-/// metrics CSV, so a long run's curves are inspectable (and survive a
-/// crash) without waiting for the final report.
+/// Built-in observer: live per-round metrics export.  The steady state
+/// **appends** one row per round — O(1) I/O instead of rewriting the
+/// whole accumulated document (O(R²) over a long run) — so the curves
+/// are inspectable (and survive a crash) without waiting for the final
+/// report.  Rows ride [`crate::metrics::RoundRecord::csv_fields`], the
+/// same serialization the batch export uses, so the live file is
+/// byte-identical to [`crate::metrics::ExperimentMetrics::to_csv`] over
+/// the same records.  Every record is also retained in memory: if an
+/// append fails (transient I/O error, file deleted out from under the
+/// run), the next export rewrites the full document and the file heals
+/// — no round's row is ever silently lost.
 #[derive(Debug)]
 pub struct MetricsCsvObserver {
     path: String,
+    /// Every record seen so far — the source of truth a failed append
+    /// is healed from.
     metrics: ExperimentMetrics,
+    /// Rows known to be in the file (behind the header); lagging
+    /// `metrics.rounds.len()` means the next export rewrites in full.
+    flushed: usize,
 }
 
 impl MetricsCsvObserver {
     pub fn new(path: &str) -> MetricsCsvObserver {
-        MetricsCsvObserver { path: path.to_string(), metrics: ExperimentMetrics::default() }
+        MetricsCsvObserver {
+            path: path.to_string(),
+            metrics: ExperimentMetrics::default(),
+            flushed: 0,
+        }
+    }
+
+    fn export(&mut self, record: &RoundRecord) -> std::io::Result<()> {
+        use std::io::Write;
+        self.metrics.push(record.clone());
+        if self.flushed > 0 && self.flushed + 1 == self.metrics.rounds.len() {
+            // Steady state: the file holds every earlier row — append
+            // this one.  Deliberately no `create(true)`: a vanished
+            // file fails the open and lands in the rewrite arm below,
+            // which restores the header and all rows.
+            let row = CsvWriter::encode_row(&record.csv_fields());
+            let appended = std::fs::OpenOptions::new()
+                .append(true)
+                .open(&self.path)
+                .and_then(|mut f| f.write_all(&row));
+            if appended.is_ok() {
+                self.flushed += 1;
+                return Ok(());
+            }
+        }
+        // First row, or recovery from a failed/missed append: write the
+        // whole accumulated document.
+        std::fs::write(&self.path, self.metrics.to_csv().as_bytes())?;
+        self.flushed = self.metrics.rounds.len();
+        Ok(())
     }
 }
 
@@ -204,8 +246,7 @@ impl RoundObserver for MetricsCsvObserver {
         outcome: &RoundOutcome,
         _ctl: &mut RoundControl,
     ) {
-        self.metrics.push(outcome.record().clone());
-        if let Err(e) = self.metrics.to_csv().save(&self.path) {
+        if let Err(e) = self.export(outcome.record()) {
             log::warn!("metrics export to {} failed: {e}", self.path);
         }
     }
@@ -452,6 +493,92 @@ mod tests {
         c.set_deadline_s(2.5);
         assert!(c.stop_requested());
         assert_eq!(c.deadline_override(), Some(2.5));
+    }
+
+    #[test]
+    fn csv_observer_appends_rows_identical_to_batch_export() {
+        // The live exporter writes the header once and appends one row
+        // per round; the result must equal the batch export byte for
+        // byte (the old implementation rewrote the whole file every
+        // round — O(R^2) I/O on long runs).
+        let path = std::env::temp_dir().join("edgeflow_live_csv_append_test.csv");
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let mut records = Vec::new();
+        for t in 0..4usize {
+            let mut r = RoundRecord {
+                round: t,
+                cluster: t % 2,
+                train_loss: 0.5 + t as f64,
+                test_accuracy: if t % 2 == 0 { 0.25 } else { f64::NAN },
+                test_loss: 1.0,
+                comm_byte_hops: 100 * t as u64,
+                train_s: 0.0,
+                aggregate_s: 0.0,
+                net_s: 0.125,
+                clock_s: t as f64,
+                stragglers: Vec::new(),
+                deferred: Vec::new(),
+            };
+            if t == 2 {
+                r.stragglers = vec![3, 7];
+                r.deferred = vec![1];
+            }
+            records.push(r);
+        }
+        let mut obs = MetricsCsvObserver::new(&path_s);
+        let mut ctl = RoundControl::default();
+        for r in &records {
+            let outcome =
+                RoundOutcome::Completed { record: r.clone(), migration: None };
+            obs.on_round_end(r.round, &outcome, &mut ctl);
+        }
+        let live = std::fs::read(&path).unwrap();
+        let batch = ExperimentMetrics { rounds: records };
+        assert_eq!(live, batch.to_csv().as_bytes(), "live file == batch export");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_observer_heals_after_external_file_loss() {
+        // An append can fail (transient I/O error, live file deleted
+        // out from under the run).  The observer retains every record,
+        // so the next export rewrites the whole document instead of
+        // silently dropping rows forever.
+        let path = std::env::temp_dir().join("edgeflow_live_csv_heal_test.csv");
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let rec = |t: usize| RoundRecord {
+            round: t,
+            cluster: t % 2,
+            train_loss: t as f64,
+            test_accuracy: f64::NAN,
+            test_loss: 1.0,
+            comm_byte_hops: 7,
+            train_s: 0.0,
+            aggregate_s: 0.0,
+            net_s: 0.0,
+            clock_s: 0.0,
+            stragglers: Vec::new(),
+            deferred: Vec::new(),
+        };
+        let mut obs = MetricsCsvObserver::new(&path_s);
+        let mut ctl = RoundControl::default();
+        let mut records = Vec::new();
+        for t in 0..4usize {
+            if t == 2 {
+                // the live file vanishes between rounds
+                std::fs::remove_file(&path).unwrap();
+            }
+            let r = rec(t);
+            records.push(r.clone());
+            let outcome = RoundOutcome::Completed { record: r, migration: None };
+            obs.on_round_end(t, &outcome, &mut ctl);
+        }
+        let live = std::fs::read(&path).unwrap();
+        let batch = ExperimentMetrics { rounds: records };
+        assert_eq!(live, batch.to_csv().as_bytes(), "healed file == batch export");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -96,6 +96,56 @@ impl RoundRecord {
     }
 }
 
+/// Column order of the standard metrics CSV, one column per
+/// [`RoundRecord::csv_fields`] entry.  The appending live exporter
+/// ([`crate::fl::session::MetricsCsvObserver`]) rides `csv_fields`
+/// too, so its file is byte-identical to the batch export
+/// ([`ExperimentMetrics::to_csv`]) over the same records.
+pub const METRICS_CSV_HEADER: [&str; 12] = [
+    "round",
+    "cluster",
+    "train_loss",
+    "test_accuracy",
+    "test_loss",
+    "comm_byte_hops",
+    "train_s",
+    "aggregate_s",
+    "net_s",
+    "clock_s",
+    "stragglers",
+    "deferred",
+];
+
+impl RoundRecord {
+    /// This record's row of the standard metrics CSV, in
+    /// [`METRICS_CSV_HEADER`] order.
+    pub fn csv_fields(&self) -> Vec<String> {
+        vec![
+            self.round.to_string(),
+            self.cluster.to_string(),
+            format!("{}", self.train_loss),
+            format!("{}", self.test_accuracy),
+            format!("{}", self.test_loss),
+            self.comm_byte_hops.to_string(),
+            format!("{}", self.train_s),
+            format!("{}", self.aggregate_s),
+            format!("{}", self.net_s),
+            format!("{}", self.clock_s),
+            // semicolon-joined ids: stays a single CSV field
+            self.stragglers
+                .iter()
+                .map(ToString::to_string)
+                .collect::<Vec<_>>()
+                .join(";"),
+            self.deferred
+                .iter()
+                .map(ToString::to_string)
+                .collect::<Vec<_>>()
+                .join(";"),
+        ]
+    }
+}
+
 /// Full experiment result.
 #[derive(Debug, Clone, Default)]
 pub struct ExperimentMetrics {
@@ -164,46 +214,11 @@ impl ExperimentMetrics {
         self.rounds.iter().map(|r| (r.round, r.train_loss)).collect()
     }
 
-    /// CSV export with one row per round.
+    /// CSV export with one row per round ([`METRICS_CSV_HEADER`] order).
     pub fn to_csv(&self) -> CsvWriter {
-        let mut w = CsvWriter::new(&[
-            "round",
-            "cluster",
-            "train_loss",
-            "test_accuracy",
-            "test_loss",
-            "comm_byte_hops",
-            "train_s",
-            "aggregate_s",
-            "net_s",
-            "clock_s",
-            "stragglers",
-            "deferred",
-        ]);
+        let mut w = CsvWriter::new(&METRICS_CSV_HEADER);
         for r in &self.rounds {
-            w.row(&[
-                r.round.to_string(),
-                r.cluster.to_string(),
-                format!("{}", r.train_loss),
-                format!("{}", r.test_accuracy),
-                format!("{}", r.test_loss),
-                r.comm_byte_hops.to_string(),
-                format!("{}", r.train_s),
-                format!("{}", r.aggregate_s),
-                format!("{}", r.net_s),
-                format!("{}", r.clock_s),
-                // semicolon-joined ids: stays a single CSV field
-                r.stragglers
-                    .iter()
-                    .map(ToString::to_string)
-                    .collect::<Vec<_>>()
-                    .join(";"),
-                r.deferred
-                    .iter()
-                    .map(ToString::to_string)
-                    .collect::<Vec<_>>()
-                    .join(";"),
-            ]);
+            w.row(&r.csv_fields());
         }
         w
     }

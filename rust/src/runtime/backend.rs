@@ -19,7 +19,9 @@
 //! * `engine: xla` — [`crate::runtime::executor::Engine`], the AOT
 //!   XLA/PJRT path (requires `make artifacts`).
 //! * `engine: native` — [`crate::runtime::native::NativeBackend`], the
-//!   pure-Rust in-process trainer (no artifacts, runs anywhere).
+//!   pure-Rust in-process trainer (no artifacts, runs anywhere):
+//!   batched forward/backward on blocked-GEMM kernels for the
+//!   linear/MLP/CNN variants with sgd, momentum, and adam.
 //!
 //! Both are deterministic in `(seed, client, round)` and bit-identical
 //! at any worker count: a handle's `run` is a pure function of its

@@ -8,9 +8,11 @@
 //!   (`make artifacts`), HLO text -> `HloModuleProto::from_text_file` ->
 //!   `PjRtClient::compile` -> `execute`, with compiled-executable
 //!   caching.  Python never runs here.
-//! * [`native`] — the pure-Rust in-process engine: hand-written
-//!   forward/backward for multinomial logistic regression and a
-//!   one-hidden-layer MLP with SGD/momentum.  No artifacts, no Python —
+//! * [`native`] — the pure-Rust in-process engine: batched
+//!   forward/backward on blocked-GEMM kernels (`native::kernels`) for
+//!   multinomial logistic regression, a one-hidden-layer MLP, and an
+//!   im2col conv/pool CNN (`native::models`), with SGD, heavy-ball
+//!   momentum, and Adam (`native::optim`).  No artifacts, no Python —
 //!   the engine CI's end-to-end jobs train with.
 //! * [`manifest`] — parses `artifacts/manifest.json` (shapes, orders,
 //!   executable table) written by `python/compile/aot.py`.

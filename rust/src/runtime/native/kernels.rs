@@ -1,0 +1,565 @@
+//! Batch-level compute kernels for the native engine.
+//!
+//! The engine's forward/backward rides these instead of per-sample
+//! scalar loops: a minibatch becomes a matrix and every hot operation
+//! is a blocked GEMM plus a handful of fused element-wise passes, so
+//! the compiler autovectorizes contiguous inner loops and the
+//! per-sample interpretation overhead disappears.  Everything is plain
+//! safe Rust over row-major `&[f32]` slices with **fixed accumulation
+//! order** — results are a pure function of the inputs, which the
+//! engine's `(seed, client, round)` determinism and the workers=1≡N
+//! bit-identity contract ride on.
+//!
+//! * [`gemm`] — `C += A·B`, register-tiled `MR`×`NR` micro-kernel with
+//!   a contiguous-axpy edge path (the blocked/tiled design of the XLA
+//!   side's Pallas matmul, shrunk to CPU register blocking).
+//! * [`gemm_nt`] — `C += A·Bᵀ` (transposed-B, row-dot-row): pushes
+//!   gradients back through a layer without materializing `Wᵀ`.
+//! * [`gemm_tn`] — `C += Aᵀ·B` (transposed-A, rank-1 updates): the
+//!   weight-gradient form `gW = Xᵀ·dY`.
+//! * [`bias_act`] — fused bias-add + optional ReLU, one pass.
+//! * [`im2col_3x3`] — 3×3 SAME patch extraction (NHWC), the conv
+//!   lowering ported from the XLA path's `*_fast` variants: the
+//!   convolution becomes `patches · W`, one big GEMM instead of a
+//!   4-deep loop nest.
+//! * [`maxpool2x2`] / [`maxpool2x2_backward`] — 2×2 stride-2 max-pool
+//!   with recorded argmax for the backward scatter.
+//! * [`softmax_xent_rows`] / [`finish_dlogits`] — row-wise stable
+//!   softmax cross-entropy whose probability buffer doubles as the
+//!   dlogits buffer.
+//! * [`col_sums`] / [`relu_mask`] — bias gradients and the ReLU
+//!   subgradient mask.
+
+/// Micro-kernel tile height: rows of A accumulated per tile.
+const MR: usize = 4;
+/// Micro-kernel tile width: columns of B/C held in the accumulators.
+const NR: usize = 16;
+
+/// `C[m,n] += A[m,k] · B[k,n]` (row-major).
+///
+/// The interior is covered by an `MR`×`NR` register tile accumulated
+/// across the whole `k` extent: per `k` step one contiguous `NR`-wide
+/// segment of B is loaded once and reused by `MR` rows of A, so the
+/// C-row load/store traffic of a naive axpy formulation drops by a
+/// factor of `MR` and the accumulators never leave registers.  Edge
+/// rows/columns fall back to the axpy form (still contiguous in B and
+/// C).  For every output element the `k` products accumulate in
+/// ascending order on both paths, so the result is a pure function of
+/// the inputs.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let m_main = m - m % MR;
+    let n_main = n - n % NR;
+    let mut i0 = 0;
+    while i0 < m_main {
+        let mut j0 = 0;
+        while j0 < n_main {
+            let mut acc = [[0f32; NR]; MR];
+            for kk in 0..k {
+                let mut brow = [0f32; NR];
+                brow.copy_from_slice(&b[kk * n + j0..kk * n + j0 + NR]);
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = a[(i0 + r) * k + kk];
+                    for (t, &bv) in accr.iter_mut().zip(brow.iter()) {
+                        *t += av * bv;
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let ci = (i0 + r) * n + j0;
+                for (cv, &t) in c[ci..ci + NR].iter_mut().zip(accr.iter()) {
+                    *cv += t;
+                }
+            }
+            j0 += NR;
+        }
+        if j0 < n {
+            gemm_axpy_block(i0, i0 + MR, j0, n, k, a, b, c);
+        }
+        i0 += MR;
+    }
+    if i0 < m {
+        gemm_axpy_block(i0, m, 0, n, k, a, b, c);
+    }
+}
+
+/// Contiguous-axpy edge path of [`gemm`]: rows `i0..i1`, columns
+/// `j0..n` of C (`n` is the full row stride of B and C).  Zero A
+/// entries — common after ReLU — skip their whole axpy row.
+fn gemm_axpy_block(
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n + j0..kk * n + n];
+            let crow = &mut c[i * n + j0..i * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `C[m,n] += A[m,k] · Bᵀ` with `B` stored `[n,k]` row-major.
+///
+/// Row-dot-row: both operands stream contiguously, so the backward
+/// pass's `dX = dY·Wᵀ` needs no transposed copy of the weights.
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (cv, brow) in crow.iter_mut().zip(b.chunks_exact(k)) {
+            let mut t = 0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                t += x * y;
+            }
+            *cv += t;
+        }
+    }
+}
+
+/// `C[m,n] += Aᵀ · B` with `A` stored `[kd,m]` row-major (`kd` is the
+/// contraction extent, typically the batch).
+///
+/// The weight-gradient form `gW = Xᵀ·dY` as `kd` rank-1 updates, each
+/// row a contiguous axpy; zero A entries (ReLU-sparse activations)
+/// skip theirs.
+pub fn gemm_tn(kd: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), kd * m);
+    debug_assert_eq!(b.len(), kd * n);
+    debug_assert_eq!(c.len(), m * n);
+    for kk in 0..kd {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Fused bias-add + optional ReLU over `y [rows, n]`, one pass.
+pub fn bias_act(y: &mut [f32], rows: usize, n: usize, bias: &[f32], relu: bool) {
+    debug_assert_eq!(y.len(), rows * n);
+    debug_assert_eq!(bias.len(), n);
+    for row in y.chunks_exact_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            let t = *v + bv;
+            *v = if relu && t < 0.0 { 0.0 } else { t };
+        }
+    }
+}
+
+/// 3×3 SAME im2col over NHWC input: `x [b,h,w,c]` →
+/// `patches [b*h*w, 9*c]`, zero padding outside the image.  Patch
+/// columns are `(ky, kx, c)`-major, matching a `[3,3,c,f]` HWIO weight
+/// tensor flattened to `[9c, f]` — convolution is then one
+/// `patches · W` GEMM (the design of the XLA path's `*_fast`
+/// variants).
+pub fn im2col_3x3(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    patches: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), bsz * h * w * c);
+    debug_assert_eq!(patches.len(), bsz * h * w * 9 * c);
+    let pw = 9 * c;
+    patches.fill(0.0);
+    for bi in 0..bsz {
+        let xb = &x[bi * h * w * c..(bi + 1) * h * w * c];
+        let pb = &mut patches[bi * h * w * pw..(bi + 1) * h * w * pw];
+        for y in 0..h {
+            for ky in 0..3usize {
+                // Source row is y + ky - 1; skip the padded rows.
+                if y + ky < 1 || y + ky > h {
+                    continue;
+                }
+                let sy = y + ky - 1;
+                for xx in 0..w {
+                    for kx in 0..3usize {
+                        if xx + kx < 1 || xx + kx > w {
+                            continue;
+                        }
+                        let sx = xx + kx - 1;
+                        let src = (sy * w + sx) * c;
+                        let dst = (y * w + xx) * pw + (ky * 3 + kx) * c;
+                        pb[dst..dst + c].copy_from_slice(&xb[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2×2 stride-2 max-pool (floor semantics) over NHWC `x [b,h,w,c]` →
+/// `out [b, h/2, w/2, c]`.  `arg` records each output's flat source
+/// index in `x` for the backward scatter; ties pick the first window
+/// element in (top-left, top-right, bottom-left, bottom-right) order,
+/// so the pooling is a pure function of its input.
+pub fn maxpool2x2(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+    arg: &mut [u32],
+) {
+    let (ph, pw) = (h / 2, w / 2);
+    debug_assert_eq!(x.len(), bsz * h * w * c);
+    debug_assert_eq!(out.len(), bsz * ph * pw * c);
+    debug_assert_eq!(arg.len(), out.len());
+    for bi in 0..bsz {
+        for oy in 0..ph {
+            for ox in 0..pw {
+                for ch in 0..c {
+                    let base = ((bi * h + 2 * oy) * w + 2 * ox) * c + ch;
+                    let mut best_idx = base;
+                    let mut best = x[base];
+                    for (dy, dx) in [(0usize, 1usize), (1, 0), (1, 1)] {
+                        let idx = ((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ch;
+                        if x[idx] > best {
+                            best = x[idx];
+                            best_idx = idx;
+                        }
+                    }
+                    let o = ((bi * ph + oy) * pw + ox) * c + ch;
+                    out[o] = best;
+                    arg[o] = best_idx as u32;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`maxpool2x2`]: scatter `dout` into the recorded argmax
+/// positions of `dx` (caller zeroes `dx`).
+pub fn maxpool2x2_backward(dout: &[f32], arg: &[u32], dx: &mut [f32]) {
+    debug_assert_eq!(dout.len(), arg.len());
+    for (&d, &i) in dout.iter().zip(arg) {
+        dx[i as usize] += d;
+    }
+}
+
+/// Row-wise numerically-stable softmax cross-entropy over
+/// `logits [rows, classes]`: writes the softmax probabilities into
+/// `dlogits` (the first half of the gradient — [`finish_dlogits`]
+/// turns them into `(p - onehot)/rows`) and returns the **summed**
+/// loss over the rows.
+pub fn softmax_xent_rows(
+    logits: &[f32],
+    y: &[i32],
+    classes: usize,
+    dlogits: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(logits.len(), y.len() * classes);
+    debug_assert_eq!(dlogits.len(), logits.len());
+    let mut loss_sum = 0f32;
+    for ((lrow, prow), &yi) in logits
+        .chunks_exact(classes)
+        .zip(dlogits.chunks_exact_mut(classes))
+        .zip(y)
+    {
+        let mut mx = lrow[0];
+        for &l in &lrow[1..] {
+            if l > mx {
+                mx = l;
+            }
+        }
+        let mut z = 0f32;
+        for (p, &l) in prow.iter_mut().zip(lrow) {
+            let e = (l - mx).exp();
+            *p = e;
+            z += e;
+        }
+        for p in prow.iter_mut() {
+            *p /= z;
+        }
+        loss_sum += mx + z.ln() - lrow[yi as usize];
+    }
+    loss_sum
+}
+
+/// Finish the loss gradient started by [`softmax_xent_rows`]:
+/// `dlogits = (softmax - onehot(y)) / rows`.
+pub fn finish_dlogits(dlogits: &mut [f32], y: &[i32], classes: usize) {
+    debug_assert_eq!(dlogits.len(), y.len() * classes);
+    let inv = 1.0 / y.len() as f32;
+    for (prow, &yi) in dlogits.chunks_exact_mut(classes).zip(y) {
+        prow[yi as usize] -= 1.0;
+        for p in prow.iter_mut() {
+            *p *= inv;
+        }
+    }
+}
+
+/// `out[j] += Σ_i d[i,j]` over `d [rows, n]` — bias gradients from a
+/// gradient matrix, rows accumulated in ascending order.
+pub fn col_sums(d: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    for row in d.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+/// Zero gradient entries whose activation was clamped by ReLU
+/// (post-activation value 0 ⇒ subgradient 0, matching the per-sample
+/// path's convention).
+pub fn relu_mask(d: &mut [f32], act: &[f32]) {
+    debug_assert_eq!(d.len(), act.len());
+    for (dv, &av) in d.iter_mut().zip(act) {
+        if av <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    /// Textbook triple loop, k innermost — the equivalence oracle.
+    fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut t = 0f32;
+                for kk in 0..k {
+                    t += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] += t;
+            }
+        }
+    }
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() <= 1e-4 + 1e-4 * b.abs()
+    }
+
+    #[test]
+    fn gemm_matches_naive_on_random_shapes() {
+        // Shapes straddling the tile boundaries: pure-tile, pure-edge,
+        // and mixed interiors all agree with the naive triple loop.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (4, 7, 16),
+            (5, 9, 17),
+            (8, 3, 8),
+            (13, 31, 29),
+            (16, 64, 32),
+            (3, 11, 10),
+        ];
+        for (si, &(m, k, n)) in shapes.iter().enumerate() {
+            let a = randvec(m * k, 100 + si as u64);
+            let b = randvec(k * n, 200 + si as u64);
+            let mut c = vec![0f32; m * n];
+            let mut c_ref = vec![0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut c);
+            gemm_ref(m, k, n, &a, &b, &mut c_ref);
+            for (i, (&x, &y)) in c.iter().zip(&c_ref).enumerate() {
+                assert!(close(x, y), "{m}x{k}x{n} elem {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_existing_c() {
+        let (m, k, n) = (6usize, 5usize, 18usize);
+        let a = randvec(m * k, 1);
+        let b = randvec(k * n, 2);
+        let base = randvec(m * n, 3);
+        let mut c = base.clone();
+        let mut c_ref = base.clone();
+        gemm(m, k, n, &a, &b, &mut c);
+        gemm_ref(m, k, n, &a, &b, &mut c_ref);
+        for (&x, &y) in c.iter().zip(&c_ref) {
+            assert!(close(x, y), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match_naive() {
+        let (m, k, n) = (7usize, 12usize, 19usize);
+        let a = randvec(m * k, 4);
+        let bt = randvec(n * k, 5); // B stored [n, k]
+        let mut c = vec![0f32; m * n];
+        gemm_nt(m, k, n, &a, &bt, &mut c);
+        for i in 0..m {
+            for j in 0..n {
+                let mut t = 0f32;
+                for kk in 0..k {
+                    t += a[i * k + kk] * bt[j * k + kk];
+                }
+                assert!(close(c[i * n + j], t), "nt {i},{j}");
+            }
+        }
+        let kd = 9usize;
+        let at = randvec(kd * m, 6); // A stored [kd, m]
+        let b2 = randvec(kd * n, 7);
+        let mut c2 = vec![0f32; m * n];
+        gemm_tn(kd, m, n, &at, &b2, &mut c2);
+        for i in 0..m {
+            for j in 0..n {
+                let mut t = 0f32;
+                for kk in 0..kd {
+                    t += at[kk * m + i] * b2[kk * n + j];
+                }
+                assert!(close(c2[i * n + j], t), "tn {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn bias_act_adds_and_clamps() {
+        let mut y = vec![-1.0f32, 2.0, -3.0, 4.0];
+        bias_act(&mut y, 2, 2, &[0.5, -0.5], true);
+        assert_eq!(y, vec![0.0, 1.5, 0.0, 3.5]);
+        let mut y = vec![-1.0f32, 2.0];
+        bias_act(&mut y, 1, 2, &[0.5, -0.5], false);
+        assert_eq!(y, vec![-0.5, 1.5]);
+    }
+
+    #[test]
+    fn im2col_center_and_corner_patches() {
+        // 1x3x3x1 image with distinct values 1..9.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut patches = vec![0f32; 9 * 9];
+        im2col_3x3(&x, 1, 3, 3, 1, &mut patches);
+        // Center pixel (1,1): the full image in (ky, kx) order.
+        assert_eq!(
+            &patches[4 * 9..5 * 9],
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]
+        );
+        // Top-left corner (0,0): the first row/column taps are padding.
+        assert_eq!(
+            &patches[0..9],
+            &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]
+        );
+        // Bottom-right corner (2,2): last row/column taps are padding.
+        assert_eq!(
+            &patches[8 * 9..9 * 9],
+            &[5.0, 6.0, 0.0, 8.0, 9.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn im2col_keeps_channels_contiguous() {
+        // 1x2x2x2 image: patch columns must be (ky, kx, c)-major.
+        let x = vec![1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let mut patches = vec![0f32; 4 * 18];
+        im2col_3x3(&x, 1, 2, 2, 2, &mut patches);
+        // Pixel (0,0): center tap (ky=1, kx=1) holds its own channels.
+        let p = &patches[0..18];
+        assert_eq!(&p[(3 + 1) * 2..(3 + 1) * 2 + 2], &[1.0, 10.0]);
+        // Right neighbor (ky=1, kx=2) holds pixel (0,1).
+        assert_eq!(&p[(3 + 2) * 2..(3 + 2) * 2 + 2], &[2.0, 20.0]);
+        // Below neighbor (ky=2, kx=1) holds pixel (1,0).
+        assert_eq!(&p[(6 + 1) * 2..(6 + 1) * 2 + 2], &[3.0, 30.0]);
+    }
+
+    #[test]
+    fn maxpool_picks_max_and_backward_scatters() {
+        // 1x4x4x1, values arranged so each 2x2 window has a distinct max.
+        #[rustfmt::skip]
+        let x = vec![
+            1.0f32, 5.0,  2.0, 1.0,
+            3.0,    4.0,  8.0, 2.0,
+            9.0,    0.0,  1.0, 1.0,
+            2.0,    6.0,  3.0, 7.0,
+        ];
+        let mut out = vec![0f32; 4];
+        let mut arg = vec![0u32; 4];
+        maxpool2x2(&x, 1, 4, 4, 1, &mut out, &mut arg);
+        assert_eq!(out, vec![5.0, 8.0, 9.0, 7.0]);
+        assert_eq!(arg, vec![1, 6, 8, 15]);
+        let mut dx = vec![0f32; 16];
+        maxpool2x2_backward(&[1.0, 2.0, 3.0, 4.0], &arg, &mut dx);
+        assert_eq!(dx[1], 1.0);
+        assert_eq!(dx[6], 2.0);
+        assert_eq!(dx[8], 3.0);
+        assert_eq!(dx[15], 4.0);
+        assert_eq!(dx.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn maxpool_ties_pick_first_window_element() {
+        let x = vec![2.0f32, 2.0, 2.0, 2.0];
+        let mut out = vec![0f32; 1];
+        let mut arg = vec![9u32; 1];
+        maxpool2x2(&x, 1, 2, 2, 1, &mut out, &mut arg);
+        assert_eq!(out[0], 2.0);
+        assert_eq!(arg[0], 0, "deterministic tie-break");
+    }
+
+    #[test]
+    fn softmax_rows_match_scalar_reference() {
+        let logits = randvec(4 * 5, 11);
+        let y = vec![0i32, 2, 4, 1];
+        let mut dl = vec![0f32; 20];
+        let sum = softmax_xent_rows(&logits, &y, 5, &mut dl);
+        // Scalar re-derivation per row.
+        let mut expect = 0f64;
+        for (r, &yi) in y.iter().enumerate() {
+            let row = &logits[r * 5..(r + 1) * 5];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let z: f32 = row.iter().map(|&l| (l - mx).exp()).sum();
+            expect += (mx + z.ln() - row[yi as usize]) as f64;
+            for (j, &l) in row.iter().enumerate() {
+                let p = (l - mx).exp() / z;
+                assert!(close(dl[r * 5 + j], p), "prob {r},{j}");
+            }
+            // Each row's probabilities sum to 1.
+            let ps: f32 = dl[r * 5..(r + 1) * 5].iter().sum();
+            assert!((ps - 1.0).abs() < 1e-5);
+        }
+        assert!(close(sum, expect as f32));
+        finish_dlogits(&mut dl, &y, 5);
+        // Each finished row sums to 0 (probabilities minus one-hot).
+        for r in 0..4 {
+            let s: f32 = dl[r * 5..(r + 1) * 5].iter().sum();
+            assert!(s.abs() < 1e-6, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn col_sums_and_relu_mask() {
+        let d = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![0f32; 2];
+        col_sums(&d, 2, &mut out);
+        assert_eq!(out, vec![9.0, 12.0]);
+        let mut g = vec![1.0f32, 1.0, 1.0];
+        relu_mask(&mut g, &[0.5, 0.0, 2.0]);
+        assert_eq!(g, vec![1.0, 0.0, 1.0]);
+    }
+}

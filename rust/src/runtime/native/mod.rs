@@ -1,0 +1,515 @@
+//! Pure-Rust in-process training engine (`engine: native`).
+//!
+//! A hand-written trainer over the same flat [`ModelState`]/
+//! [`StateLayout`] the XLA path uses, so everything downstream — Eq. 3
+//! aggregation, migration byte accounting, checkpointing — is
+//! engine-agnostic.  The module family:
+//!
+//! * [`kernels`] — batch-level compute: blocked/register-tiled GEMM
+//!   (plus transposed-A/B forms), fused bias+ReLU, the im2col conv
+//!   lowering ported from the XLA path's `*_fast` design, max-pool, and
+//!   row-wise softmax cross-entropy.  Forward/backward ride these
+//!   instead of per-sample scalar loops.
+//! * [`models`] — the architectures and their batched forward/backward:
+//!   `*_linear` (multinomial logistic regression), `*_mlp` (one hidden
+//!   ReLU layer), and `*_cnn_slim_fast` (conv 3×3 → ReLU → 2×2 max-pool
+//!   → dense ReLU → classifier).  The pre-kernel per-sample path
+//!   survives as the test oracle and `benches/bench_native.rs` baseline.
+//! * [`optim`] — SGD, heavy-ball momentum, and Adam.  All optimizer
+//!   state (velocity; Adam's two moment runs + step counter) lives in
+//!   the state's optimizer region, so it aggregates, migrates, and
+//!   checkpoints with the model unchanged.
+//!
+//! Everything here is a pure function of its inputs: weight init is
+//! seeded per variant, minibatches come from the loader's
+//! `(seed, client, round)` stream, and no interior state survives a
+//! call — so runs are deterministic in `(seed, client, round)` and
+//! bit-identical at any worker count.  No artifacts, no Python, no
+//! files: this is the engine CI trains with.
+
+pub mod kernels;
+pub mod models;
+pub mod optim;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::ExperimentConfig;
+use crate::data::dataset::{Batch, Dataset};
+use crate::rng::Rng;
+use crate::runtime::backend::{EvalHandle, LocalUpdateHandle, TrainBackend};
+use crate::runtime::manifest::VariantSpec;
+use crate::runtime::params::{ModelState, StateLayout};
+use crate::util::error::{Error, Result};
+
+use models::{Arch, Model, Workspace};
+use optim::OptKind;
+
+/// Hidden width of the `*_mlp` variants.
+const MLP_HIDDEN: usize = 64;
+
+/// Conv channels / dense hidden width of the `*_cnn_slim_fast`
+/// variants (the XLA slim-CNN family's leading conv width and
+/// `fc_hidden`).
+const CNN_CHANNELS: usize = 8;
+const CNN_HIDDEN: usize = 64;
+
+/// Seed for the deterministic weight init (mixed with the variant name).
+const INIT_SEED: u64 = 0x9A71_BE11;
+
+/// Rows per forward chunk in whole-dataset eval.  Fixed, so eval is a
+/// pure function of (state, dataset) regardless of dataset size.
+const EVAL_CHUNK: usize = 64;
+
+/// One entry of the built-in variant table.
+#[derive(Debug, Clone, Copy)]
+struct NativeVariant {
+    name: &'static str,
+    model: Model,
+}
+
+/// The built-in model zoo.  `fashion_*`/`cifar_*` variants share the
+/// XLA manifest's names so configs can flip `engine` without renaming
+/// models (`*_cnn_slim_fast` is the native port of the XLA im2col CNN
+/// design — one conv block instead of six, same lowering).
+fn variant(name: &str) -> Result<NativeVariant> {
+    const CNN: Arch = Arch::Cnn { channels: CNN_CHANNELS, hidden: CNN_HIDDEN };
+    const MLP: Arch = Arch::Mlp { hidden: MLP_HIDDEN };
+    let (name, arch, image): (&'static str, Arch, (usize, usize, usize)) = match name {
+        "fashion_linear" => ("fashion_linear", Arch::Linear, (28, 28, 1)),
+        "fashion_mlp" => ("fashion_mlp", MLP, (28, 28, 1)),
+        "cifar_linear" => ("cifar_linear", Arch::Linear, (32, 32, 3)),
+        "cifar_mlp" => ("cifar_mlp", MLP, (32, 32, 3)),
+        "fashion_cnn_slim_fast" => ("fashion_cnn_slim_fast", CNN, (28, 28, 1)),
+        "cifar_cnn_slim_fast" => ("cifar_cnn_slim_fast", CNN, (32, 32, 3)),
+        other => {
+            return Err(Error::Config(format!(
+                "native engine has no model variant {other:?} (available: \
+                 fashion_linear, fashion_mlp, cifar_linear, cifar_mlp, \
+                 fashion_cnn_slim_fast, cifar_cnn_slim_fast)"
+            )))
+        }
+    };
+    Ok(NativeVariant { name, model: Model { arch, image, classes: 10 } })
+}
+
+fn arch_name(arch: Arch) -> &'static str {
+    match arch {
+        Arch::Linear => "linear",
+        Arch::Mlp { .. } => "mlp",
+        Arch::Cnn { .. } => "cnn",
+    }
+}
+
+/// Build the flat state layout (params ++ optimizer state) for
+/// (variant, optimizer), reusing the manifest-side [`StateLayout`] so
+/// blob I/O, aggregation and wire accounting need no native-specific
+/// code.
+fn layout_for(v: &NativeVariant, opt: &str) -> Result<(Arc<StateLayout>, OptKind)> {
+    let kind = OptKind::parse(opt)?;
+    let params = v.model.param_tensors();
+    let opt_tensors = kind.state_tensors(&params);
+    let (h, w, c) = v.model.image;
+    let spec = VariantSpec {
+        name: v.name.to_string(),
+        arch: arch_name(v.model.arch).into(),
+        image: (h, w, c),
+        classes: v.model.classes,
+        train_batch: 0,
+        eval_batch: 0,
+        k_values: Vec::new(),
+        optimizers: vec!["sgd".into(), "momentum".into(), "adam".into()],
+        params,
+        bn_state: Vec::new(),
+        opt_state: BTreeMap::from([(opt.to_string(), opt_tensors)]),
+        init_blob: BTreeMap::new(),
+        eval_exe: String::new(),
+        local_update: BTreeMap::new(),
+    };
+    Ok((StateLayout::new(&spec, opt)?, kind))
+}
+
+/// The native engine.  Stateless — every handle it hands out is a pure
+/// function, so one instance serves any number of concurrent runners.
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl TrainBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn validate(&self, cfg: &ExperimentConfig) -> Result<()> {
+        let v = variant(&cfg.model)?;
+        if v.model.image != cfg.dataset.image() {
+            return Err(Error::Config(format!(
+                "model {} expects {:?} images but dataset {} yields {:?}",
+                cfg.model,
+                v.model.image,
+                cfg.dataset.name(),
+                cfg.dataset.image()
+            )));
+        }
+        if v.model.classes != cfg.dataset.classes() {
+            return Err(Error::Config(format!(
+                "model {} has {} classes but dataset {} has {}",
+                cfg.model,
+                v.model.classes,
+                cfg.dataset.name(),
+                cfg.dataset.classes()
+            )));
+        }
+        // Surfaces the unsupported-optimizer error at construction.
+        layout_for(&v, &cfg.optimizer)?;
+        Ok(())
+    }
+
+    fn init_state(&self, variant_name: &str, opt: &str) -> Result<ModelState> {
+        let v = variant(variant_name)?;
+        let (layout, _) = layout_for(&v, opt)?;
+        let mut state = ModelState::zeros(layout.clone());
+        // Xavier-uniform weights, zero biases, zero optimizer state —
+        // seeded by the variant name only, so the same model starts from
+        // the same weights under every optimizer and config seed (the
+        // blob-init behavior of the XLA path).
+        let mut seed = INIT_SEED;
+        for b in v.name.bytes() {
+            seed = seed.wrapping_mul(0x100000001B3).wrapping_add(b as u64);
+        }
+        let mut rng = Rng::new(seed);
+        for (i, t) in layout.tensors[..layout.n_params].iter().enumerate() {
+            if t.shape.len() < 2 {
+                continue; // biases stay zero
+            }
+            // Weight tensors: dense `[fan_in, fan_out]`, conv HWIO
+            // `[kh, kw, cin, cout]` — fan-in is everything but the last
+            // axis, fan-out the last, so the conv gets the receptive
+            // -field-scaled Xavier limit.
+            let fan_out = *t.shape.last().unwrap();
+            let fan_in: usize = t.shape[..t.shape.len() - 1].iter().product();
+            let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            let off = layout.offsets[i];
+            for e in 0..t.nelems() {
+                state.data[off + e] = rng.range(-limit, limit) as f32;
+            }
+        }
+        Ok(state)
+    }
+
+    fn local_update(
+        &self,
+        variant_name: &str,
+        opt: &str,
+        k: usize,
+        b: usize,
+    ) -> Result<Box<dyn LocalUpdateHandle>> {
+        let v = variant(variant_name)?;
+        let (layout, kind) = layout_for(&v, opt)?;
+        if k == 0 || b == 0 {
+            return Err(Error::Config("K and batch size must be positive".into()));
+        }
+        Ok(Box::new(NativeLocalUpdate { layout, model: v.model, opt: kind, k, b }))
+    }
+
+    fn eval(&self, variant_name: &str, opt: &str) -> Result<Box<dyn EvalHandle>> {
+        let v = variant(variant_name)?;
+        let (layout, _) = layout_for(&v, opt)?;
+        Ok(Box::new(NativeEval { layout, model: v.model }))
+    }
+}
+
+/// K local optimizer steps for one client, on the batched kernel path.
+struct NativeLocalUpdate {
+    layout: Arc<StateLayout>,
+    model: Model,
+    opt: OptKind,
+    k: usize,
+    b: usize,
+}
+
+impl LocalUpdateHandle for NativeLocalUpdate {
+    fn run(&self, state: &ModelState, batch: &Batch, lr: f32) -> Result<(ModelState, f32)> {
+        let input = self.model.input();
+        if batch.x.len() != self.k * self.b * input || batch.y.len() != self.k * self.b {
+            return Err(Error::Data(format!(
+                "batch shape mismatch: x={} y={} want x={} y={}",
+                batch.x.len(),
+                batch.y.len(),
+                self.k * self.b * input,
+                self.k * self.b
+            )));
+        }
+        if state.layout.total != self.layout.total {
+            return Err(Error::Config(format!(
+                "state has {} elements, native layout expects {}",
+                state.layout.total, self.layout.total
+            )));
+        }
+        let n_params = self.model.param_elems();
+        let mut new_state = state.clone();
+        let mut grads = vec![0f32; n_params];
+        let mut ws = Workspace::new(&self.model, self.b);
+        let mut loss_sum = 0f32;
+        for step in 0..self.k {
+            let x = &batch.x[step * self.b * input..(step + 1) * self.b * input];
+            let y = &batch.y[step * self.b..(step + 1) * self.b];
+            grads.fill(0.0);
+            loss_sum += models::loss_and_grads(
+                &self.model,
+                &new_state.data[..n_params],
+                x,
+                y,
+                Some(&mut grads),
+                &mut ws,
+            );
+            self.opt.apply(n_params, &mut new_state.data, &grads, lr);
+        }
+        Ok((new_state, loss_sum / self.k as f32))
+    }
+}
+
+/// Whole-dataset evaluation (forward only), in fixed-size batched
+/// chunks through the same kernels training uses.
+struct NativeEval {
+    layout: Arc<StateLayout>,
+    model: Model,
+}
+
+impl EvalHandle for NativeEval {
+    fn run_dataset(&self, state: &ModelState, ds: &Dataset) -> Result<(f64, f64)> {
+        let input = self.model.input();
+        let cls = self.model.classes;
+        if ds.sample_len() != input {
+            return Err(Error::Data(format!(
+                "dataset samples have {} values, model expects {}",
+                ds.sample_len(),
+                input
+            )));
+        }
+        if state.layout.total != self.layout.total {
+            return Err(Error::Config(format!(
+                "state has {} elements, native layout expects {}",
+                state.layout.total, self.layout.total
+            )));
+        }
+        let params = &state.data[..self.model.param_elems()];
+        let n = ds.len();
+        let mut ws = Workspace::new(&self.model, EVAL_CHUNK);
+        let mut xbuf = vec![0f32; EVAL_CHUNK * input];
+        let mut ybuf = vec![0i32; EVAL_CHUNK];
+        let mut probs = vec![0f32; EVAL_CHUNK * cls];
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut i = 0;
+        while i < n {
+            let bt = EVAL_CHUNK.min(n - i);
+            for r in 0..bt {
+                xbuf[r * input..(r + 1) * input].copy_from_slice(ds.pixels(i + r));
+                ybuf[r] = ds.label(i + r) as i32;
+            }
+            models::forward_into(&self.model, params, &xbuf[..bt * input], bt, &mut ws);
+            let logits = ws.logits(bt, cls);
+            loss_sum += kernels::softmax_xent_rows(
+                logits,
+                &ybuf[..bt],
+                cls,
+                &mut probs[..bt * cls],
+            ) as f64;
+            for (row, &yi) in logits.chunks_exact(cls).zip(&ybuf[..bt]) {
+                let mut best = 0;
+                for c in 1..cls {
+                    if row[c] > row[best] {
+                        best = c;
+                    }
+                }
+                if best == yi as usize {
+                    correct += 1.0;
+                }
+            }
+            i += bt;
+        }
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, ExperimentConfig};
+
+    fn tiny_batch(model: &Model, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x = (0..b * model.input()).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        let y = (0..b).map(|_| rng.below(model.classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn init_state_is_deterministic_and_shaped() {
+        let b = NativeBackend::new();
+        let a = b.init_state("fashion_mlp", "momentum").unwrap();
+        let c = b.init_state("fashion_mlp", "momentum").unwrap();
+        assert_eq!(a.data, c.data);
+        let n = variant("fashion_mlp").unwrap().model.param_elems();
+        assert_eq!(n, 28 * 28 * MLP_HIDDEN + MLP_HIDDEN + MLP_HIDDEN * 10 + 10);
+        assert_eq!(a.layout.param_elems(), n);
+        // momentum doubles the state (velocity mirrors the params)
+        assert_eq!(a.layout.total, 2 * n);
+        // sgd carries no optimizer state, same param init
+        let s = b.init_state("fashion_mlp", "sgd").unwrap();
+        assert_eq!(s.layout.total, n);
+        assert_eq!(&a.data[..n], &s.data[..]);
+        // adam appends two moment runs plus the scalar step counter,
+        // again over the identical param init
+        let ad = b.init_state("fashion_mlp", "adam").unwrap();
+        assert_eq!(ad.layout.total, 3 * n + 1);
+        assert_eq!(&ad.data[..n], &s.data[..]);
+        // optimizer regions start at zero
+        assert!(a.data[n..].iter().all(|&v| v == 0.0));
+        assert!(ad.data[n..].iter().all(|&v| v == 0.0));
+        // weights are initialized, biases zero
+        assert!(a.data[..n].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn cnn_init_covers_conv_weights() {
+        let b = NativeBackend::new();
+        let s = b.init_state("fashion_cnn_slim_fast", "adam").unwrap();
+        // conv_w is 4-D [3, 3, 1, 8]: the generalized Xavier init must
+        // reach it (a 2-D-only init would leave the conv layer dead).
+        let conv_w = s.tensor(0);
+        assert_eq!(conv_w.len(), 3 * 3 * 1 * CNN_CHANNELS);
+        assert!(conv_w.iter().any(|&v| v != 0.0), "conv weights initialized");
+        // receptive-field Xavier limit: sqrt(6 / (9·cin + cout))
+        let limit = (6.0f64 / (9.0 + CNN_CHANNELS as f64)).sqrt() as f32;
+        assert!(conv_w.iter().all(|&v| v.abs() <= limit));
+        // biases zero; layout is params + 2·params + 1 under adam
+        let n = variant("fashion_cnn_slim_fast").unwrap().model.param_elems();
+        assert_eq!(s.layout.total, 3 * n + 1);
+        assert!(s.tensor(1).iter().all(|&v| v == 0.0), "conv_b zero");
+    }
+
+    #[test]
+    fn momentum_first_step_matches_sgd_then_diverges() {
+        let b = NativeBackend::new();
+        let sgd = b.local_update("fashion_linear", "sgd", 1, 2).unwrap();
+        let mom = b.local_update("fashion_linear", "momentum", 1, 2).unwrap();
+        let s_sgd = b.init_state("fashion_linear", "sgd").unwrap();
+        let s_mom = b.init_state("fashion_linear", "momentum").unwrap();
+        let model = variant("fashion_linear").unwrap().model;
+        let (x, y) = tiny_batch(&model, 2, 9);
+        let batch = Batch { x, y };
+        let (a1, _) = sgd.run(&s_sgd, &batch, 0.1).unwrap();
+        let (b1, _) = mom.run(&s_mom, &batch, 0.1).unwrap();
+        let n = model.param_elems();
+        assert_eq!(&a1.data[..n], &b1.data[..n], "first step: v = g");
+        let (a2, _) = sgd.run(&a1, &batch, 0.1).unwrap();
+        let (b2, _) = mom.run(&b1, &batch, 0.1).unwrap();
+        assert_ne!(&a2.data[..n], &b2.data[..n], "second step: momentum kicks in");
+    }
+
+    #[test]
+    fn adam_local_update_moves_params_and_counter() {
+        let b = NativeBackend::new();
+        let lu = b.local_update("fashion_mlp", "adam", 2, 4).unwrap();
+        let s = b.init_state("fashion_mlp", "adam").unwrap();
+        let model = variant("fashion_mlp").unwrap().model;
+        let (x, y) = tiny_batch(&model, 2 * 4, 11);
+        let batch = Batch { x, y };
+        let (out, loss) = lu.run(&s, &batch, 1e-3).unwrap();
+        assert!(loss.is_finite());
+        let n = model.param_elems();
+        assert_ne!(&out.data[..n], &s.data[..n], "params moved");
+        // K = 2 steps advanced the trailing scalar step counter to 2.
+        assert_eq!(out.data[out.layout.total - 1], 2.0, "adam_t after K steps");
+        // both moment runs picked up gradient mass
+        assert!(out.data[n..2 * n].iter().any(|&v| v != 0.0), "first moments");
+        assert!(out.data[2 * n..3 * n].iter().any(|&v| v != 0.0), "second moments");
+    }
+
+    #[test]
+    fn cnn_local_update_trains_every_layer() {
+        let b = NativeBackend::new();
+        let lu = b.local_update("fashion_cnn_slim_fast", "sgd", 1, 4).unwrap();
+        let s = b.init_state("fashion_cnn_slim_fast", "sgd").unwrap();
+        let model = variant("fashion_cnn_slim_fast").unwrap().model;
+        let (x, y) = tiny_batch(&model, 4, 13);
+        let (out, loss) = lu.run(&s, &Batch { x, y }, 0.01).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        // Gradient reached the conv block, not just the dense head.
+        assert_ne!(out.tensor(0), s.tensor(0), "conv_w moved");
+        assert_ne!(out.tensor(1), s.tensor(1), "conv_b moved");
+        assert_ne!(out.tensor(4), s.tensor(4), "fc2_w moved");
+    }
+
+    #[test]
+    fn local_update_validates_batch_shape() {
+        let b = NativeBackend::new();
+        let lu = b.local_update("fashion_linear", "sgd", 2, 4).unwrap();
+        let s = b.init_state("fashion_linear", "sgd").unwrap();
+        let bad = Batch { x: vec![0.0; 10], y: vec![0; 8] };
+        assert!(lu.run(&s, &bad, 0.1).is_err());
+    }
+
+    #[test]
+    fn unknown_variant_and_optimizer_are_typed_errors() {
+        let b = NativeBackend::new();
+        // the six-conv XLA artifact name is not a native variant
+        assert!(b.init_state("fashion_cnn_slim", "sgd").is_err());
+        assert!(b.init_state("fashion_mlp", "rmsprop").is_err());
+        let mut cfg = ExperimentConfig {
+            model: "fashion_cnn_slim_fast".into(),
+            optimizer: "adam".into(),
+            ..ExperimentConfig::default()
+        };
+        assert!(b.validate(&cfg).is_ok(), "CNN + adam is native now");
+        cfg.dataset = DatasetKind::SynthCifar; // model stays fashion_*
+        assert!(b.validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn eval_matches_between_chunked_and_exact_sizes() {
+        // Accuracy/loss must not depend on how the dataset divides into
+        // eval chunks: 100 samples spans a full chunk plus a partial.
+        let b = NativeBackend::new();
+        let ev = b.eval("fashion_mlp", "sgd").unwrap();
+        let s = b.init_state("fashion_mlp", "sgd").unwrap();
+        let mut ds = Dataset::new(28, 28, 1, 10);
+        let mut rng = Rng::new(17);
+        for i in 0..100u32 {
+            let px: Vec<f32> =
+                (0..28 * 28).map(|_| rng.range(0.0, 1.0) as f32).collect();
+            ds.push(&px, i % 10);
+        }
+        let (loss, acc) = ev.run_dataset(&s, &ds).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+        let (loss2, acc2) = ev.run_dataset(&s, &ds).unwrap();
+        assert_eq!(loss.to_bits(), loss2.to_bits(), "eval is deterministic");
+        assert_eq!(acc.to_bits(), acc2.to_bits());
+    }
+
+    #[test]
+    fn cnn_eval_runs_on_its_image_shape() {
+        let b = NativeBackend::new();
+        let ev = b.eval("cifar_cnn_slim_fast", "adam").unwrap();
+        let s = b.init_state("cifar_cnn_slim_fast", "adam").unwrap();
+        let mut ds = Dataset::new(32, 32, 3, 10);
+        let px = vec![0.5f32; 32 * 32 * 3];
+        for cls in 0..10u32 {
+            ds.push(&px, cls);
+        }
+        let (loss, acc) = ev.run_dataset(&s, &ds).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+        // shape mismatch is a typed error
+        let wrong = Dataset::new(28, 28, 1, 10);
+        assert!(ev.run_dataset(&s, &wrong).is_err());
+    }
+}

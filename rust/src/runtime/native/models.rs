@@ -1,0 +1,638 @@
+//! Native model zoo: architectures, parameter layouts, and the batched
+//! forward/backward built on [`super::kernels`].
+//!
+//! Three architectures share one flat-parameter convention (tensors in
+//! [`Model::param_tensors`] order, biases zero-initialized):
+//!
+//! * [`Arch::Linear`] — multinomial logistic regression
+//!   (`softmax(xW + b)`).
+//! * [`Arch::Mlp`] — one hidden ReLU layer
+//!   (`softmax(relu(xW1 + b1)W2 + b2)`).
+//! * [`Arch::Cnn`] — conv 3×3 SAME (im2col lowering) → ReLU → 2×2
+//!   max-pool → dense ReLU layer → dense classifier: the native port of
+//!   the XLA path's `*_cnn_slim_fast` design (conv as one
+//!   `patches · W` GEMM).
+//!
+//! The batched path ([`loss_and_grads`]) runs the whole minibatch
+//! through the blocked-GEMM kernels; [`loss_and_grads_per_sample`] is
+//! the pre-kernel per-sample scalar path, kept (for the linear/MLP
+//! architectures it used to serve) as the equivalence oracle in tests
+//! and the baseline `benches/bench_native.rs` measures the batched
+//! path against.
+
+use crate::runtime::manifest::TensorSpec;
+use crate::runtime::native::kernels;
+
+/// Architecture of a native variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// `w [in, classes], b [classes]`.
+    Linear,
+    /// `w1 [in, hidden], b1, w2 [hidden, classes], b2`.
+    Mlp { hidden: usize },
+    /// `conv_w [3,3,cin,channels], conv_b, fc1_w [flat, hidden], fc1_b,
+    /// fc2_w [hidden, classes], fc2_b` where
+    /// `flat = (h/2)·(w/2)·channels` after the 2×2 pool.
+    Cnn { channels: usize, hidden: usize },
+}
+
+/// Shape summary of one variant — everything forward/backward needs.
+#[derive(Debug, Clone, Copy)]
+pub struct Model {
+    pub arch: Arch,
+    /// (H, W, C) of the input images.
+    pub image: (usize, usize, usize),
+    pub classes: usize,
+}
+
+impl Model {
+    /// Flattened input size per sample.
+    pub fn input(&self) -> usize {
+        let (h, w, c) = self.image;
+        h * w * c
+    }
+
+    /// Post-pool flattened feature size of the CNN (0 otherwise).
+    fn cnn_flat(&self) -> usize {
+        match self.arch {
+            Arch::Cnn { channels, .. } => {
+                let (h, w, _) = self.image;
+                (h / 2) * (w / 2) * channels
+            }
+            _ => 0,
+        }
+    }
+
+    /// Trainable parameter element count.
+    pub fn param_elems(&self) -> usize {
+        self.param_tensors().iter().map(TensorSpec::nelems).sum()
+    }
+
+    /// Parameter tensor list, in flat-layout order.
+    pub fn param_tensors(&self) -> Vec<TensorSpec> {
+        let (_, _, cin) = self.image;
+        let cls = self.classes;
+        match self.arch {
+            Arch::Linear => vec![
+                TensorSpec { name: "w".into(), shape: vec![self.input(), cls] },
+                TensorSpec { name: "b".into(), shape: vec![cls] },
+            ],
+            Arch::Mlp { hidden } => vec![
+                TensorSpec { name: "w1".into(), shape: vec![self.input(), hidden] },
+                TensorSpec { name: "b1".into(), shape: vec![hidden] },
+                TensorSpec { name: "w2".into(), shape: vec![hidden, cls] },
+                TensorSpec { name: "b2".into(), shape: vec![cls] },
+            ],
+            Arch::Cnn { channels, hidden } => vec![
+                TensorSpec {
+                    name: "conv_w".into(),
+                    shape: vec![3, 3, cin, channels],
+                },
+                TensorSpec { name: "conv_b".into(), shape: vec![channels] },
+                TensorSpec {
+                    name: "fc1_w".into(),
+                    shape: vec![self.cnn_flat(), hidden],
+                },
+                TensorSpec { name: "fc1_b".into(), shape: vec![hidden] },
+                TensorSpec { name: "fc2_w".into(), shape: vec![hidden, cls] },
+                TensorSpec { name: "fc2_b".into(), shape: vec![cls] },
+            ],
+        }
+    }
+}
+
+/// Reusable scratch for the batched forward/backward of one
+/// (model, max-batch) pair — allocated once per local-update or eval
+/// call and reused across its steps/chunks, so the hot loop never
+/// allocates.  Buffers a given architecture doesn't need stay empty.
+pub struct Workspace {
+    /// Row capacity the buffers are sized for.
+    batch: usize,
+    /// CNN: im2col patches `[b*h*w, 9*cin]`.
+    patches: Vec<f32>,
+    /// CNN: post-ReLU conv activations `[b*h*w, channels]`.
+    conv: Vec<f32>,
+    dconv: Vec<f32>,
+    /// CNN: pooled features `[b, flat]` + argmax indices.
+    pool: Vec<f32>,
+    arg: Vec<u32>,
+    dpool: Vec<f32>,
+    /// MLP hidden / CNN fc1 post-ReLU activations `[b, hidden]`.
+    hidden: Vec<f32>,
+    dhidden: Vec<f32>,
+    /// `[b, classes]`.
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(model: &Model, batch: usize) -> Workspace {
+        let (h, w, cin) = model.image;
+        let cls = model.classes;
+        let (patches, conv, pool, hid) = match model.arch {
+            Arch::Linear => (0, 0, 0, 0),
+            Arch::Mlp { hidden } => (0, 0, 0, batch * hidden),
+            Arch::Cnn { channels, hidden } => (
+                batch * h * w * 9 * cin,
+                batch * h * w * channels,
+                batch * model.cnn_flat(),
+                batch * hidden,
+            ),
+        };
+        Workspace {
+            batch,
+            patches: vec![0.0; patches],
+            conv: vec![0.0; conv],
+            dconv: vec![0.0; conv],
+            pool: vec![0.0; pool],
+            arg: vec![0; pool],
+            dpool: vec![0.0; pool],
+            hidden: vec![0.0; hid],
+            dhidden: vec![0.0; hid],
+            logits: vec![0.0; batch * cls],
+            dlogits: vec![0.0; batch * cls],
+        }
+    }
+
+    /// Logits of the last [`forward_into`] call (`bt` rows).
+    pub fn logits(&self, bt: usize, classes: usize) -> &[f32] {
+        &self.logits[..bt * classes]
+    }
+}
+
+/// Batched forward pass for `bt` samples (`bt <=` the workspace's
+/// capacity): fills `ws.logits[..bt*classes]` plus every intermediate
+/// activation the backward pass reads.
+pub fn forward_into(model: &Model, params: &[f32], x: &[f32], bt: usize, ws: &mut Workspace) {
+    debug_assert!(bt <= ws.batch);
+    debug_assert_eq!(x.len(), bt * model.input());
+    debug_assert_eq!(params.len(), model.param_elems());
+    let cls = model.classes;
+    match model.arch {
+        Arch::Linear => {
+            let n_in = model.input();
+            let (w, b) = params.split_at(n_in * cls);
+            let logits = &mut ws.logits[..bt * cls];
+            logits.fill(0.0);
+            kernels::gemm(bt, n_in, cls, x, w, logits);
+            kernels::bias_act(logits, bt, cls, b, false);
+        }
+        Arch::Mlp { hidden } => {
+            let n_in = model.input();
+            let (w1, rest) = params.split_at(n_in * hidden);
+            let (b1, rest) = rest.split_at(hidden);
+            let (w2, b2) = rest.split_at(hidden * cls);
+            let h = &mut ws.hidden[..bt * hidden];
+            h.fill(0.0);
+            kernels::gemm(bt, n_in, hidden, x, w1, h);
+            kernels::bias_act(h, bt, hidden, b1, true);
+            let logits = &mut ws.logits[..bt * cls];
+            logits.fill(0.0);
+            kernels::gemm(bt, hidden, cls, h, w2, logits);
+            kernels::bias_act(logits, bt, cls, b2, false);
+        }
+        Arch::Cnn { channels, hidden } => {
+            let (h_img, w_img, cin) = model.image;
+            let px = h_img * w_img;
+            let ksz = 9 * cin;
+            let flat = model.cnn_flat();
+            let (conv_w, rest) = params.split_at(ksz * channels);
+            let (conv_b, rest) = rest.split_at(channels);
+            let (w1, rest) = rest.split_at(flat * hidden);
+            let (b1, rest) = rest.split_at(hidden);
+            let (w2, b2) = rest.split_at(hidden * cls);
+            let patches = &mut ws.patches[..bt * px * ksz];
+            kernels::im2col_3x3(x, bt, h_img, w_img, cin, patches);
+            let conv = &mut ws.conv[..bt * px * channels];
+            conv.fill(0.0);
+            kernels::gemm(bt * px, ksz, channels, patches, conv_w, conv);
+            kernels::bias_act(conv, bt * px, channels, conv_b, true);
+            let pool = &mut ws.pool[..bt * flat];
+            let arg = &mut ws.arg[..bt * flat];
+            kernels::maxpool2x2(conv, bt, h_img, w_img, channels, pool, arg);
+            let fc1 = &mut ws.hidden[..bt * hidden];
+            fc1.fill(0.0);
+            kernels::gemm(bt, flat, hidden, pool, w1, fc1);
+            kernels::bias_act(fc1, bt, hidden, b1, true);
+            let logits = &mut ws.logits[..bt * cls];
+            logits.fill(0.0);
+            kernels::gemm(bt, hidden, cls, fc1, w2, logits);
+            kernels::bias_act(logits, bt, cls, b2, false);
+        }
+    }
+}
+
+/// Mean loss over one minibatch on the batched kernel path; when
+/// `grads` is given (length [`Model::param_elems`], caller zeroes it),
+/// accumulates `d(mean loss)/d(params)` into it.  `x` is `[bt, input]`
+/// flat, `y` the `bt` labels.
+pub fn loss_and_grads(
+    model: &Model,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    mut grads: Option<&mut [f32]>,
+    ws: &mut Workspace,
+) -> f32 {
+    let bt = y.len();
+    let cls = model.classes;
+    forward_into(model, params, x, bt, ws);
+    let logits = &ws.logits[..bt * cls];
+    let dlogits = &mut ws.dlogits[..bt * cls];
+    let loss = kernels::softmax_xent_rows(logits, y, cls, dlogits) / bt as f32;
+    let Some(g) = grads.as_deref_mut() else {
+        return loss;
+    };
+    debug_assert_eq!(g.len(), model.param_elems());
+    kernels::finish_dlogits(dlogits, y, cls);
+    match model.arch {
+        Arch::Linear => {
+            let n_in = model.input();
+            let (gw, gb) = g.split_at_mut(n_in * cls);
+            kernels::gemm_tn(bt, n_in, cls, x, dlogits, gw);
+            kernels::col_sums(dlogits, cls, gb);
+        }
+        Arch::Mlp { hidden } => {
+            let n_in = model.input();
+            let w2_off = n_in * hidden + hidden;
+            let w2 = &params[w2_off..w2_off + hidden * cls];
+            let (gw1, rest) = g.split_at_mut(n_in * hidden);
+            let (gb1, rest) = rest.split_at_mut(hidden);
+            let (gw2, gb2) = rest.split_at_mut(hidden * cls);
+            let h = &ws.hidden[..bt * hidden];
+            kernels::gemm_tn(bt, hidden, cls, h, dlogits, gw2);
+            kernels::col_sums(dlogits, cls, gb2);
+            let dh = &mut ws.dhidden[..bt * hidden];
+            dh.fill(0.0);
+            kernels::gemm_nt(bt, cls, hidden, dlogits, w2, dh);
+            kernels::relu_mask(dh, h);
+            kernels::gemm_tn(bt, n_in, hidden, x, dh, gw1);
+            kernels::col_sums(dh, hidden, gb1);
+        }
+        Arch::Cnn { channels, hidden } => {
+            let (h_img, w_img, cin) = model.image;
+            let px = h_img * w_img;
+            let ksz = 9 * cin;
+            let flat = model.cnn_flat();
+            let o_fc1 = ksz * channels + channels;
+            let w1 = &params[o_fc1..o_fc1 + flat * hidden];
+            let o_fc2 = o_fc1 + flat * hidden + hidden;
+            let w2 = &params[o_fc2..o_fc2 + hidden * cls];
+            let (gconv_w, rest) = g.split_at_mut(ksz * channels);
+            let (gconv_b, rest) = rest.split_at_mut(channels);
+            let (gw1, rest) = rest.split_at_mut(flat * hidden);
+            let (gb1, rest) = rest.split_at_mut(hidden);
+            let (gw2, gb2) = rest.split_at_mut(hidden * cls);
+            // Dense head, exactly like the MLP backward.
+            let fc1 = &ws.hidden[..bt * hidden];
+            kernels::gemm_tn(bt, hidden, cls, fc1, dlogits, gw2);
+            kernels::col_sums(dlogits, cls, gb2);
+            let dfc1 = &mut ws.dhidden[..bt * hidden];
+            dfc1.fill(0.0);
+            kernels::gemm_nt(bt, cls, hidden, dlogits, w2, dfc1);
+            kernels::relu_mask(dfc1, fc1);
+            let pool = &ws.pool[..bt * flat];
+            kernels::gemm_tn(bt, flat, hidden, pool, dfc1, gw1);
+            kernels::col_sums(dfc1, hidden, gb1);
+            // Back through pool (argmax scatter) and the conv ReLU.
+            let dpool = &mut ws.dpool[..bt * flat];
+            dpool.fill(0.0);
+            kernels::gemm_nt(bt, hidden, flat, dfc1, w1, dpool);
+            let conv = &ws.conv[..bt * px * channels];
+            let dconv = &mut ws.dconv[..bt * px * channels];
+            dconv.fill(0.0);
+            kernels::maxpool2x2_backward(dpool, &ws.arg[..bt * flat], dconv);
+            kernels::relu_mask(dconv, conv);
+            // Conv weight gradient: the same im2col patches, transposed.
+            let patches = &ws.patches[..bt * px * ksz];
+            kernels::gemm_tn(bt * px, ksz, channels, patches, dconv, gconv_w);
+            kernels::col_sums(dconv, channels, gconv_b);
+            // The conv is the first layer: no input gradient needed.
+        }
+    }
+    loss
+}
+
+// ------------------------------------------------------- per-sample path
+
+/// Mean loss (and gradients, like [`loss_and_grads`]) on the
+/// **pre-kernel per-sample scalar path** — one sample at a time, scalar
+/// accumulation loops, no batching.  Supports the linear/MLP
+/// architectures it used to serve; kept as the equivalence oracle for
+/// the batched path's tests and the baseline `benches/bench_native.rs`
+/// measures against.  Panics on the CNN (which never had a per-sample
+/// implementation).
+pub fn loss_and_grads_per_sample(
+    model: &Model,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    mut grads: Option<&mut [f32]>,
+) -> f32 {
+    let (input, cls) = (model.input(), model.classes);
+    let hidden = match model.arch {
+        Arch::Linear => 0,
+        Arch::Mlp { hidden } => hidden,
+        Arch::Cnn { .. } => {
+            panic!("per-sample baseline covers linear/mlp only")
+        }
+    };
+    let batch = y.len();
+    let inv_b = 1.0 / batch as f32;
+    // Scratch hoisted out of the per-sample loop.
+    let mut hid = vec![0f32; hidden];
+    let mut logits = vec![0f32; cls];
+    let mut dlogits = vec![0f32; cls];
+    let mut dh = vec![0f32; hidden];
+    let mut loss_sum = 0f32;
+    for s in 0..batch {
+        let xs = &x[s * input..(s + 1) * input];
+        let ys = y[s] as usize;
+        forward_per_sample(input, hidden, cls, params, xs, &mut hid, &mut logits);
+        loss_sum += kernels::softmax_xent_rows(&logits, &y[s..s + 1], cls, &mut dlogits);
+        let Some(g) = grads.as_deref_mut() else { continue };
+        dlogits[ys] -= 1.0;
+        for dl in dlogits.iter_mut() {
+            *dl *= inv_b;
+        }
+        if hidden == 0 {
+            let (gw, gb) = g.split_at_mut(input * cls);
+            for (i, &xi) in xs.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &mut gw[i * cls..(i + 1) * cls];
+                for (gv, &dl) in row.iter_mut().zip(&dlogits) {
+                    *gv += xi * dl;
+                }
+            }
+            for (gv, &dl) in gb.iter_mut().zip(&dlogits) {
+                *gv += dl;
+            }
+        } else {
+            let (gw1, rest) = g.split_at_mut(input * hidden);
+            let (gb1, rest) = rest.split_at_mut(hidden);
+            let (gw2, gb2) = rest.split_at_mut(hidden * cls);
+            let w2_off = input * hidden + hidden;
+            let w2 = &params[w2_off..w2_off + hidden * cls];
+            for (j, &hj) in hid.iter().enumerate() {
+                let row = &w2[j * cls..(j + 1) * cls];
+                let grow = &mut gw2[j * cls..(j + 1) * cls];
+                let mut acc = 0f32;
+                for ((gv, &wv), &dl) in grow.iter_mut().zip(row).zip(&dlogits) {
+                    acc += wv * dl;
+                    *gv += hj * dl;
+                }
+                dh[j] = if hj > 0.0 { acc } else { 0.0 };
+            }
+            for (gv, &dl) in gb2.iter_mut().zip(&dlogits) {
+                *gv += dl;
+            }
+            for (i, &xi) in xs.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &mut gw1[i * hidden..(i + 1) * hidden];
+                for (gv, &dhj) in row.iter_mut().zip(&dh) {
+                    *gv += xi * dhj;
+                }
+            }
+            for (gv, &dhj) in gb1.iter_mut().zip(&dh) {
+                *gv += dhj;
+            }
+        }
+    }
+    loss_sum * inv_b
+}
+
+/// Single-sample forward of the per-sample path (linear when
+/// `hidden == 0`).
+fn forward_per_sample(
+    input: usize,
+    hidden: usize,
+    cls: usize,
+    params: &[f32],
+    x: &[f32],
+    hid: &mut [f32],
+    logits: &mut [f32],
+) {
+    if hidden == 0 {
+        let w = &params[..input * cls];
+        let b = &params[input * cls..];
+        logits.copy_from_slice(b);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[i * cls..(i + 1) * cls];
+            for (l, &wv) in logits.iter_mut().zip(row) {
+                *l += xi * wv;
+            }
+        }
+    } else {
+        let (w1, rest) = params.split_at(input * hidden);
+        let (b1, rest) = rest.split_at(hidden);
+        let (w2, b2) = rest.split_at(hidden * cls);
+        hid.copy_from_slice(b1);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w1[i * hidden..(i + 1) * hidden];
+            for (h, &wv) in hid.iter_mut().zip(row) {
+                *h += xi * wv;
+            }
+        }
+        for h in hid.iter_mut() {
+            if *h < 0.0 {
+                *h = 0.0;
+            }
+        }
+        logits.copy_from_slice(&b2[..cls]);
+        for (j, &hj) in hid.iter().enumerate() {
+            if hj == 0.0 {
+                continue;
+            }
+            let row = &w2[j * cls..(j + 1) * cls];
+            for (l, &wv) in logits.iter_mut().zip(row) {
+                *l += hj * wv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn linear_model() -> Model {
+        Model { arch: Arch::Linear, image: (2, 2, 1), classes: 3 }
+    }
+
+    fn mlp_model() -> Model {
+        Model { arch: Arch::Mlp { hidden: 5 }, image: (2, 2, 1), classes: 3 }
+    }
+
+    fn cnn_model() -> Model {
+        Model {
+            arch: Arch::Cnn { channels: 3, hidden: 4 },
+            image: (6, 6, 1),
+            classes: 3,
+        }
+    }
+
+    fn seeded_params(model: &Model, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..model.param_elems()).map(|_| rng.range(-0.5, 0.5) as f32).collect()
+    }
+
+    fn tiny_batch(model: &Model, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x = (0..b * model.input()).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        let y = (0..b).map(|_| rng.below(model.classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn param_layouts_are_consistent() {
+        let m = cnn_model();
+        // conv 9·1·3 + 3, fc1 (3·3·3)·4 + 4, fc2 4·3 + 3
+        assert_eq!(m.cnn_flat(), 27);
+        assert_eq!(m.param_elems(), 27 + 3 + 108 + 4 + 12 + 3);
+        let names: Vec<String> =
+            m.param_tensors().into_iter().map(|t| t.name).collect();
+        assert_eq!(
+            names,
+            vec!["conv_w", "conv_b", "fc1_w", "fc1_b", "fc2_w", "fc2_b"]
+        );
+        assert_eq!(linear_model().param_elems(), 4 * 3 + 3);
+        assert_eq!(mlp_model().param_elems(), 4 * 5 + 5 + 5 * 3 + 3);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Central finite differences over every parameter, for all
+        // three architectures — the conv path (im2col + pool + two
+        // dense layers) included.  The CNN gets a looser per-element
+        // budget plus a tight relative-L2 bound: a ±eps perturbation
+        // can cross a max-pool argmax or ReLU kink, which perturbs the
+        // *numeric* estimate of a single coordinate without meaning the
+        // analytic gradient is wrong; any real layout/sign bug still
+        // blows both bounds by orders of magnitude.
+        for model in [linear_model(), mlp_model(), cnn_model()] {
+            let is_cnn = matches!(model.arch, Arch::Cnn { .. });
+            let params = seeded_params(&model, 1);
+            let (x, y) = tiny_batch(&model, 3, 2);
+            let mut ws = Workspace::new(&model, 3);
+            let mut grads = vec![0f32; model.param_elems()];
+            loss_and_grads(&model, &params, &x, &y, Some(&mut grads), &mut ws);
+            let eps = if is_cnn { 1e-3f32 } else { 2e-3f32 };
+            let (tol_abs, tol_rel) = if is_cnn { (3e-2, 0.1) } else { (1e-2, 0.05) };
+            let mut err2 = 0f64;
+            let mut ref2 = 0f64;
+            for i in 0..model.param_elems() {
+                let mut plus = params.clone();
+                plus[i] += eps;
+                let mut minus = params.clone();
+                minus[i] -= eps;
+                let lp = loss_and_grads(&model, &plus, &x, &y, None, &mut ws);
+                let lm = loss_and_grads(&model, &minus, &x, &y, None, &mut ws);
+                let numeric = (lp - lm) / (2.0 * eps);
+                err2 += ((numeric - grads[i]) as f64).powi(2);
+                ref2 += (grads[i] as f64).powi(2);
+                assert!(
+                    (numeric - grads[i]).abs() <= tol_abs + tol_rel * grads[i].abs(),
+                    "{:?} param {i}: numeric {numeric} vs analytic {}",
+                    model.arch,
+                    grads[i]
+                );
+            }
+            assert!(
+                err2.sqrt() <= 0.02 * ref2.sqrt().max(1.0),
+                "{:?}: FD/analytic relative L2 error {} too large",
+                model.arch,
+                err2.sqrt() / ref2.sqrt().max(1.0)
+            );
+        }
+    }
+
+    #[test]
+    fn batched_path_matches_per_sample_baseline() {
+        // The blocked-GEMM path must compute the same loss and
+        // gradients as the pre-kernel per-sample scalar path.
+        for model in [linear_model(), mlp_model()] {
+            let params = seeded_params(&model, 3);
+            let (x, y) = tiny_batch(&model, 7, 4);
+            let n = model.param_elems();
+            let mut ws = Workspace::new(&model, 7);
+            let mut g_batch = vec![0f32; n];
+            let lb =
+                loss_and_grads(&model, &params, &x, &y, Some(&mut g_batch), &mut ws);
+            let mut g_ref = vec![0f32; n];
+            let lr = loss_and_grads_per_sample(
+                &model,
+                &params,
+                &x,
+                &y,
+                Some(&mut g_ref),
+            );
+            assert!(
+                (lb - lr).abs() <= 1e-5 + 1e-5 * lr.abs(),
+                "{:?} loss {lb} vs {lr}",
+                model.arch
+            );
+            for (i, (&a, &b)) in g_batch.iter().zip(&g_ref).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 + 1e-4 * b.abs(),
+                    "{:?} grad {i}: {a} vs {b}",
+                    model.arch
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_steps_on_one_batch_strictly_decrease_loss() {
+        for model in [linear_model(), mlp_model(), cnn_model()] {
+            let mut params = seeded_params(&model, 5);
+            let (x, y) = tiny_batch(&model, 4, 6);
+            let mut ws = Workspace::new(&model, 4);
+            let mut grads = vec![0f32; model.param_elems()];
+            let mut last = f32::INFINITY;
+            for _ in 0..10 {
+                grads.fill(0.0);
+                let loss = loss_and_grads(
+                    &model,
+                    &params,
+                    &x,
+                    &y,
+                    Some(&mut grads),
+                    &mut ws,
+                );
+                assert!(loss < last, "{:?}: {loss} !< {last}", model.arch);
+                last = loss;
+                for (p, g) in params.iter_mut().zip(&grads) {
+                    *p -= 0.1 * g;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_supports_partial_batches() {
+        // Eval runs a trailing chunk smaller than capacity through the
+        // same workspace; logits must match a fresh exact-size one.
+        let model = cnn_model();
+        let params = seeded_params(&model, 7);
+        let (x, _y) = tiny_batch(&model, 2, 8);
+        let mut big = Workspace::new(&model, 8);
+        forward_into(&model, &params, &x, 2, &mut big);
+        let mut exact = Workspace::new(&model, 2);
+        forward_into(&model, &params, &x, 2, &mut exact);
+        assert_eq!(
+            big.logits(2, model.classes),
+            exact.logits(2, model.classes)
+        );
+    }
+}

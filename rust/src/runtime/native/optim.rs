@@ -1,0 +1,231 @@
+//! Native optimizers: SGD, heavy-ball momentum, and Adam.
+//!
+//! Every optimizer's state lives in the flat model state's **optimizer
+//! region**, element-aligned behind the params — momentum's velocity as
+//! one mirrored tensor per parameter, Adam's first and second moments
+//! as two mirrored runs plus the scalar step counter `adam_t` — so it
+//! aggregates (Eq. 3), migrates, and checkpoints with the model exactly
+//! like the XLA path's optimizer state, with no optimizer-specific code
+//! anywhere downstream.  [`OptKind::state_tensors`] is the layout
+//! contract; [`OptKind::apply`] is one optimizer step in place.
+
+use crate::runtime::manifest::TensorSpec;
+use crate::util::error::{Error, Result};
+
+/// Momentum coefficient of the heavy-ball `momentum` optimizer.
+pub const MOMENTUM_MU: f32 = 0.9;
+/// Adam hyperparameters (the paper's/XLA path's defaults).
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Which optimizer a native local update applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptKind {
+    /// `θ -= η·g`.
+    Sgd,
+    /// Heavy ball: `v = µv + g; θ -= η·v` (µ = 0.9).
+    Momentum,
+    /// Adam with bias correction (β1 = 0.9, β2 = 0.999, ε = 1e-8).
+    Adam,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Result<OptKind> {
+        match s {
+            "sgd" => Ok(OptKind::Sgd),
+            "momentum" => Ok(OptKind::Momentum),
+            "adam" => Ok(OptKind::Adam),
+            other => Err(Error::Config(format!(
+                "native engine supports optimizer sgd|momentum|adam, got {other:?}"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::Momentum => "momentum",
+            OptKind::Adam => "adam",
+        }
+    }
+
+    /// Optimizer-state tensors appended after the params in the flat
+    /// state layout.  Momentum mirrors the param tensors once
+    /// (velocity); Adam mirrors them twice (first then second moments,
+    /// the XLA artifact's `adam_m_*`/`adam_v_*` naming) and appends the
+    /// scalar step counter `adam_t`, so bias correction survives
+    /// migration and checkpoint/resume.
+    pub fn state_tensors(&self, params: &[TensorSpec]) -> Vec<TensorSpec> {
+        match self {
+            OptKind::Sgd => Vec::new(),
+            OptKind::Momentum => params
+                .iter()
+                .map(|t| TensorSpec {
+                    name: format!("v_{}", t.name),
+                    shape: t.shape.clone(),
+                })
+                .collect(),
+            OptKind::Adam => {
+                let mut v: Vec<TensorSpec> = params
+                    .iter()
+                    .map(|t| TensorSpec {
+                        name: format!("adam_m_{}", t.name),
+                        shape: t.shape.clone(),
+                    })
+                    .collect();
+                v.extend(params.iter().map(|t| TensorSpec {
+                    name: format!("adam_v_{}", t.name),
+                    shape: t.shape.clone(),
+                }));
+                v.push(TensorSpec { name: "adam_t".into(), shape: vec![] });
+                v
+            }
+        }
+    }
+
+    /// Element count of the optimizer region for `n_params` parameter
+    /// elements.
+    pub fn state_elems(&self, n_params: usize) -> usize {
+        match self {
+            OptKind::Sgd => 0,
+            OptKind::Momentum => n_params,
+            OptKind::Adam => 2 * n_params + 1,
+        }
+    }
+
+    /// One optimizer step in place: `state` is the flat model state
+    /// (params `[..n_params]` directly followed by this optimizer's
+    /// region — native models carry no BN tensors in between), `grads`
+    /// the parameter gradients.
+    pub fn apply(&self, n_params: usize, state: &mut [f32], grads: &[f32], lr: f32) {
+        debug_assert_eq!(grads.len(), n_params);
+        debug_assert_eq!(state.len(), n_params + self.state_elems(n_params));
+        let (params, opt) = state.split_at_mut(n_params);
+        match self {
+            OptKind::Sgd => {
+                for (p, &g) in params.iter_mut().zip(grads) {
+                    *p -= lr * g;
+                }
+            }
+            OptKind::Momentum => {
+                for ((p, v), &g) in params.iter_mut().zip(opt.iter_mut()).zip(grads) {
+                    *v = MOMENTUM_MU * *v + g;
+                    *p -= lr * *v;
+                }
+            }
+            OptKind::Adam => {
+                let (m, rest) = opt.split_at_mut(n_params);
+                let (v, t) = rest.split_at_mut(n_params);
+                // The step counter is fractional-valued on purpose: Eq. 3
+                // averages it like any other state element, and clients
+                // folded late (straggler re-inclusion) can leave it
+                // between integers.
+                t[0] += 1.0;
+                let bc1 = 1.0 - ADAM_B1.powf(t[0]);
+                let bc2 = 1.0 - ADAM_B2.powf(t[0]);
+                for (((p, mi), vi), &g) in params
+                    .iter_mut()
+                    .zip(m.iter_mut())
+                    .zip(v.iter_mut())
+                    .zip(grads)
+                {
+                    *mi = ADAM_B1 * *mi + (1.0 - ADAM_B1) * g;
+                    *vi = ADAM_B2 * *vi + (1.0 - ADAM_B2) * g * g;
+                    let mhat = *mi / bc1;
+                    let vhat = *vi / bc2;
+                    *p -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params2() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec { name: "w".into(), shape: vec![2, 3] },
+            TensorSpec { name: "b".into(), shape: vec![3] },
+        ]
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for k in [OptKind::Sgd, OptKind::Momentum, OptKind::Adam] {
+            assert_eq!(OptKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(OptKind::parse("rmsprop").is_err());
+    }
+
+    #[test]
+    fn state_tensor_layouts() {
+        let p = params2();
+        assert!(OptKind::Sgd.state_tensors(&p).is_empty());
+        let mom = OptKind::Momentum.state_tensors(&p);
+        assert_eq!(mom.len(), 2);
+        assert_eq!(mom[0].name, "v_w");
+        assert_eq!(mom[0].shape, vec![2, 3]);
+        let adam = OptKind::Adam.state_tensors(&p);
+        assert_eq!(adam.len(), 5);
+        assert_eq!(adam[0].name, "adam_m_w");
+        assert_eq!(adam[2].name, "adam_v_w");
+        assert_eq!(adam[4].name, "adam_t");
+        assert!(adam[4].shape.is_empty());
+        assert_eq!(adam[4].nelems(), 1, "scalar step counter");
+        assert_eq!(OptKind::Sgd.state_elems(9), 0);
+        assert_eq!(OptKind::Momentum.state_elems(9), 9);
+        assert_eq!(OptKind::Adam.state_elems(9), 19);
+    }
+
+    #[test]
+    fn sgd_and_momentum_steps() {
+        let g = [1.0f32, -2.0];
+        let mut s = vec![0.5f32, 0.5];
+        OptKind::Sgd.apply(2, &mut s, &g, 0.1);
+        assert_eq!(s, vec![0.4, 0.7]);
+        // Momentum: first step equals SGD (v = g), second compounds.
+        let mut s = vec![0.5f32, 0.5, 0.0, 0.0];
+        OptKind::Momentum.apply(2, &mut s, &g, 0.1);
+        assert_eq!(&s[..2], &[0.4, 0.7]);
+        assert_eq!(&s[2..], &[1.0, -2.0], "velocity = g after step one");
+        OptKind::Momentum.apply(2, &mut s, &g, 0.1);
+        // v = 0.9*g + g = 1.9*g; p -= 0.1 * 1.9 * g
+        assert!((s[0] - (0.4 - 0.19)).abs() < 1e-6);
+        assert!((s[1] - (0.7 + 0.38)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_matches_closed_form() {
+        // From zero moments, step one: m̂ = g, v̂ = g², so
+        // θ -= lr·g/(|g| + ε) ≈ lr·sign(g).
+        let g = [0.5f32, -0.25];
+        let mut s = vec![1.0f32, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        OptKind::Adam.apply(2, &mut s, &g, 0.01);
+        assert!((s[0] - (1.0 - 0.01)).abs() < 1e-5, "{}", s[0]);
+        assert!((s[1] - (1.0 + 0.01)).abs() < 1e-5, "{}", s[1]);
+        // Moments and the step counter moved into the state.
+        assert!((s[2] - 0.05).abs() < 1e-6, "m = (1-β1)g");
+        assert!((s[4] - 0.5 * 0.5 * 0.001).abs() < 1e-7, "v = (1-β2)g²");
+        assert_eq!(s[6], 1.0, "adam_t advanced");
+        OptKind::Adam.apply(2, &mut s, &g, 0.01);
+        assert_eq!(s[6], 2.0);
+        // Constant gradient: bias-corrected step stays ≈ lr·sign(g).
+        assert!((s[0] - (1.0 - 0.02)).abs() < 1e-4, "{}", s[0]);
+    }
+
+    #[test]
+    fn adam_step_size_bounded_by_lr_for_constant_gradient() {
+        // The signature Adam property: per-coordinate steps are ≈ lr
+        // regardless of gradient magnitude.
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let g = [scale, -scale];
+            let mut s = vec![0.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+            OptKind::Adam.apply(2, &mut s, &g, 0.01);
+            assert!((s[0] + 0.01).abs() < 1e-4, "scale {scale}: {}", s[0]);
+            assert!((s[1] - 0.01).abs() < 1e-4, "scale {scale}: {}", s[1]);
+        }
+    }
+}

@@ -119,6 +119,18 @@ impl ModelState {
         (self.layout.param_elems() * 4) as u64
     }
 
+    /// Raw bytes of the **full state** that migrates — params plus the
+    /// BN and optimizer regions that travel with them (momentum
+    /// velocity, Adam moments).  Documents the wire contract: the
+    /// runner feeds this element count to the codec
+    /// (`codec.wire_bytes(layout.total)`), so this equals the actual
+    /// wire charge only under [`crate::fl::compress::Codec::None`];
+    /// equal to [`Self::param_bytes`] under plain SGD on a BN-free
+    /// model.
+    pub fn state_bytes(&self) -> u64 {
+        (self.layout.total * 4) as u64
+    }
+
     /// All NaN/Inf checks for failure injection tests.
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|v| v.is_finite())
@@ -189,6 +201,8 @@ mod tests {
         assert_eq!(s.tensor(1), &[7.0, 0.0]);
         assert_eq!(s.params_flat().len(), 10);
         assert_eq!(s.param_bytes(), 40);
+        // the BN tensor rides the wire too
+        assert_eq!(s.state_bytes(), 48);
     }
 
     #[test]

@@ -20,16 +20,9 @@ impl CsvWriter {
     }
 
     fn push_row<I: IntoIterator<Item = String>>(&mut self, row: I) {
-        let mut n = 0;
-        for (i, field) in row.into_iter().enumerate() {
-            if i > 0 {
-                self.out.push(b',');
-            }
-            self.out.extend_from_slice(escape(&field).as_bytes());
-            n += 1;
-        }
-        debug_assert_eq!(n, self.cols, "csv row width mismatch");
-        self.out.extend_from_slice(b"\r\n");
+        let fields: Vec<String> = row.into_iter().collect();
+        debug_assert_eq!(fields.len(), self.cols, "csv row width mismatch");
+        self.out.extend_from_slice(&Self::encode_row(&fields));
     }
 
     /// Append one row of stringified fields.
@@ -45,6 +38,22 @@ impl CsvWriter {
     /// Serialized document.
     pub fn as_bytes(&self) -> &[u8] {
         &self.out
+    }
+
+    /// Serialize a single row (no header) — the one implementation of
+    /// field quoting and line ending, behind both the document form
+    /// ([`CsvWriter::row`]) and incremental appends to a file whose
+    /// header an earlier [`CsvWriter::save`] wrote.
+    pub fn encode_row(fields: &[String]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for (i, field) in fields.iter().enumerate() {
+            if i > 0 {
+                out.push(b',');
+            }
+            out.extend_from_slice(escape(field).as_bytes());
+        }
+        out.extend_from_slice(b"\r\n");
+        out
     }
 
     /// Write to a file.
@@ -73,6 +82,18 @@ mod tests {
         w.row(&["1".into(), "2.5".into()]);
         let text = String::from_utf8(w.as_bytes().to_vec()).unwrap();
         assert_eq!(text, "round,loss\r\n1,2.5\r\n");
+    }
+
+    #[test]
+    fn encode_row_matches_document_form() {
+        // Header + encode_row appends must equal the batch document.
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "x,y".into()]);
+        w.row(&["2".into(), "plain".into()]);
+        let mut appended = CsvWriter::new(&["a", "b"]).as_bytes().to_vec();
+        appended.extend(CsvWriter::encode_row(&["1".into(), "x,y".into()]));
+        appended.extend(CsvWriter::encode_row(&["2".into(), "plain".into()]));
+        assert_eq!(appended, w.as_bytes());
     }
 
     #[test]

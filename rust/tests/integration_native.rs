@@ -2,8 +2,10 @@
 //! multi-round training — data -> pure-Rust local updates -> Eq. 3
 //! aggregation -> migration -> eval — with **zero artifacts**, so the
 //! headline regression suites (loss decreases, unbalanced Eq. 3
-//! weighting, workers=1≡N determinism, checkpoint/resume bit-identity)
-//! run in CI instead of skipping.
+//! weighting, workers=1≡N determinism, checkpoint/resume bit-identity,
+//! full-state wire accounting) run in CI instead of skipping.  The
+//! determinism suites sweep all three native optimizers
+//! (sgd/momentum/adam) across both the MLP and the im2col CNN.
 
 use std::sync::Arc;
 
@@ -310,13 +312,169 @@ fn native_defer_policy_folds_late_updates() {
 }
 
 #[test]
-fn native_rejects_xla_only_configs() {
-    // adam is an XLA artifact; the native engine fails fast with a
-    // config error rather than producing silently-wrong numbers.
+fn native_rejects_unknown_configs() {
+    // Unsupported names fail fast with a config error rather than
+    // producing silently-wrong numbers: the six-conv XLA artifact
+    // variant has no native port, and rmsprop is nobody's optimizer.
     let mut cfg = native_cfg(Algorithm::EdgeFlowSeq);
+    cfg.model = "fashion_cnn_slim".into();
+    assert!(Runner::with_backend(backend(), cfg).is_err());
+    let mut cfg = native_cfg(Algorithm::EdgeFlowSeq);
+    cfg.optimizer = "rmsprop".into();
+    assert!(Runner::with_backend(backend(), cfg).is_err());
+}
+
+/// The (model, optimizer, lr) grid the determinism suites sweep: every
+/// native optimizer on both architectures.  Momentum-family rates stay
+/// at the smoothness-safe 0.01 (see [`native_cfg`]); adam gets the
+/// paper's 1e-3.
+const GRID: [(&str, &str, f64); 6] = [
+    ("fashion_mlp", "sgd", 0.01),
+    ("fashion_mlp", "momentum", 0.01),
+    ("fashion_mlp", "adam", 1e-3),
+    ("fashion_cnn_slim_fast", "sgd", 0.01),
+    ("fashion_cnn_slim_fast", "momentum", 0.01),
+    ("fashion_cnn_slim_fast", "adam", 1e-3),
+];
+
+/// A CPU-cheap grid cell: 3 rounds over one 3-client cluster per round,
+/// sized so the CNN cells stay fast in debug builds.
+fn grid_cfg(model: &str, opt: &str, lr: f64) -> ExperimentConfig {
+    let mut cfg = native_cfg(Algorithm::EdgeFlowSeq);
+    cfg.name = format!("grid_{model}_{opt}");
+    cfg.model = model.into();
+    cfg.optimizer = opt.into();
+    cfg.lr = lr;
+    cfg.rounds = 3;
+    cfg.local_steps = 1;
+    cfg.batch_size = 8;
+    cfg.samples_per_client = 16;
+    cfg.test_samples = 60;
+    cfg.eval_every = 3;
+    cfg
+}
+
+#[test]
+fn native_bit_identity_at_any_worker_count_all_optimizers_and_archs() {
+    // The acceptance criterion: workers 1≡2≡4≡0 for sgd, momentum, and
+    // adam on both the MLP and the CNN.  Batched kernels with fixed
+    // accumulation order plus the fixed-order reduction make every
+    // report a pure function of the config.
+    for (model, opt, lr) in GRID {
+        let run_with = |workers: usize| {
+            let mut cfg = grid_cfg(model, opt, lr);
+            cfg.workers = workers;
+            let mut r = Runner::with_backend(backend(), cfg).unwrap();
+            let report = r.run().unwrap();
+            (r.state().data.clone(), report)
+        };
+        let (state1, rep1) = run_with(1);
+        for workers in [2usize, 4, 0] {
+            let (state_n, rep_n) = run_with(workers);
+            assert_eq!(
+                state_n, state1,
+                "{model}/{opt}: state diverged at workers={workers}"
+            );
+            assert_reports_bit_identical(&rep1, &rep_n);
+        }
+    }
+}
+
+#[test]
+fn native_checkpoint_resume_bit_identical_all_optimizers_and_archs() {
+    // Checkpoint at round 1, resume, finish: bit-identical to the
+    // uninterrupted run for every optimizer × architecture — i.e. the
+    // momentum velocity and both Adam moment runs (plus the adam_t step
+    // counter) genuinely ride the serialized state blob.
+    for (model, opt, lr) in GRID {
+        let mut whole =
+            Runner::with_backend(backend(), grid_cfg(model, opt, lr)).unwrap();
+        let ref_report = whole.run().unwrap();
+
+        let mut first =
+            Runner::with_backend(backend(), grid_cfg(model, opt, lr)).unwrap();
+        first.step().unwrap();
+        let ck = first.checkpoint().unwrap();
+        let text = ck.to_json().pretty();
+        let ck2 = RunnerCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let be = backend_for(&ck2.cfg, "artifacts_that_do_not_exist").unwrap();
+        let mut resumed = Runner::resume(be, &ck2).unwrap();
+        assert_eq!(resumed.round(), 1, "{model}/{opt}");
+        let report = resumed.run().unwrap();
+        assert_reports_bit_identical(&ref_report, &report);
+        assert_eq!(
+            whole.state().data,
+            resumed.state().data,
+            "{model}/{opt}: final model state"
+        );
+    }
+}
+
+#[test]
+fn native_cnn_preset_trains_artifact_free_with_decreasing_loss() {
+    // The previously XLA-artifact-gated `e2e_cnn` preset now runs on
+    // the native engine: conv -> ReLU -> pool -> dense over the im2col
+    // kernels, trained with native Adam — scaled down to test size but
+    // with the preset's dataset/distribution/model intact.
+    let mut cfg = edgeflow::config::preset("e2e_cnn").unwrap();
+    assert_eq!(cfg.model, "fashion_cnn_slim_fast");
+    cfg.engine = EngineKind::Native;
     cfg.optimizer = "adam".into();
-    assert!(Runner::with_backend(backend(), cfg).is_err());
-    let mut cfg = native_cfg(Algorithm::EdgeFlowSeq);
-    cfg.model = "fashion_cnn_slim_fast".into();
-    assert!(Runner::with_backend(backend(), cfg).is_err());
+    cfg.clients = 12;
+    cfg.clusters = 4;
+    cfg.rounds = 8;
+    cfg.local_steps = 2;
+    cfg.batch_size = 16;
+    cfg.samples_per_client = 32;
+    cfg.test_samples = 120;
+    cfg.eval_every = 4;
+    cfg.workers = env_workers();
+    let mut r = Runner::with_backend(backend(), cfg).unwrap();
+    let report = r.run().unwrap();
+    assert_eq!(report.rounds, 8);
+    let losses: Vec<f64> =
+        report.metrics.rounds.iter().map(|r| r.train_loss).collect();
+    assert!(losses.iter().all(|l| l.is_finite()));
+    // Each half covers every cluster once (4 clusters, 8 rounds), so the
+    // halves are comparable under the non-IID split.
+    let head: f64 = losses[..4].iter().sum::<f64>() / 4.0;
+    let tail: f64 = losses[4..].iter().sum::<f64>() / 4.0;
+    assert!(tail < head, "CNN must learn: {head:.4} -> {tail:.4}");
+    assert!((0.0..=1.0).contains(&report.final_accuracy));
+}
+
+#[test]
+fn native_wire_accounting_charges_full_state_per_optimizer() {
+    // Regression for the params-only wire bug: the migrating payload is
+    // the whole state, so byte-hops must scale with `layout.total` —
+    // momentum (params + velocity) costs exactly 2x sgd's wire, adam
+    // (params + two moment runs + step counter) (3n+1)/n x.  Routing
+    // and round plans are optimizer-independent, so the ratios are
+    // exact.
+    let run_with = |opt: &str, lr: f64| {
+        let mut cfg = native_cfg(Algorithm::EdgeFlowSeq);
+        cfg.name = format!("wire_{opt}");
+        cfg.optimizer = opt.into();
+        cfg.lr = lr;
+        cfg.rounds = 2;
+        let mut r = Runner::with_backend(backend(), cfg).unwrap();
+        let rep = r.run().unwrap();
+        (r.state().layout.total as u64, rep.total_byte_hops)
+    };
+    let (total_sgd, hops_sgd) = run_with("sgd", 0.01);
+    let (total_mom, hops_mom) = run_with("momentum", 0.01);
+    let (total_adam, hops_adam) = run_with("adam", 1e-3);
+    assert!(hops_sgd > 0);
+    assert_eq!(total_mom, 2 * total_sgd, "velocity mirrors the params");
+    assert_eq!(total_adam, 3 * total_sgd + 1, "two moment runs + adam_t");
+    assert_eq!(
+        hops_mom, 2 * hops_sgd,
+        "momentum's velocity must be paid for on the wire"
+    );
+    // Cross-multiplied exact ratio: hops scale linearly in state size.
+    assert_eq!(
+        hops_adam * total_sgd,
+        hops_sgd * total_adam,
+        "adam's moments must be paid for on the wire"
+    );
 }
