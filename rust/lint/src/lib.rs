@@ -1,0 +1,228 @@
+//! `edgeflow-lint`: std-only static analysis that enforces EdgeFLow's
+//! determinism & robustness contracts.
+//!
+//! The repo's headline guarantee — bit-identical reports at any worker
+//! count, bit-identical checkpoint/resume — is a *social* contract
+//! unless something machine-checks it.  This crate is that check.  It
+//! scans `rust/src`, `rust/tests`, `rust/benches`, `examples` and its
+//! own sources with a comment/string-stripping tokenizer
+//! ([`tokenize`]), applies a per-module scope table ([`scope`]), and
+//! enforces five rules ([`rules`]):
+//!
+//! | rule | guards |
+//! |------|--------|
+//! | `float-ordering`      | NaN-sound orderings (PR 1 bit-identity) |
+//! | `wall-clock-in-sim`   | the simulated clock (PR 2 NetSim DES)   |
+//! | `unordered-iteration` | stable reduce/serialize order (PR 1/3)  |
+//! | `unwrap-in-library`   | the typed-error surface (PR 3/4)        |
+//! | `unsafe-audit`        | future SIMD/intrinsics kernels          |
+//!
+//! Diagnostics print as `file:line:rule: message`.  The binary exits
+//! 0 when clean, 1 on violations, 2 on usage or I/O errors.
+//!
+//! Deliberately dependency-free: the build image is offline and a
+//! lint gate must never be the thing that breaks the build.
+
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub mod rules;
+pub mod scope;
+pub mod tokenize;
+
+pub use rules::{lint_source, LintOutcome};
+
+/// The rule set.  `Pragma` is a meta-rule: it fires on malformed
+/// `lint:allow` pragmas and cannot itself be allowed away.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    FloatOrdering,
+    WallClockInSim,
+    UnorderedIteration,
+    UnwrapInLibrary,
+    UnsafeAudit,
+    Pragma,
+}
+
+impl Rule {
+    /// The five rules a `lint:allow` pragma may name.
+    pub const ENFORCED: [Rule; 5] = [
+        Rule::FloatOrdering,
+        Rule::WallClockInSim,
+        Rule::UnorderedIteration,
+        Rule::UnwrapInLibrary,
+        Rule::UnsafeAudit,
+    ];
+
+    /// Stable diagnostic / pragma identifier.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::FloatOrdering => "float-ordering",
+            Rule::WallClockInSim => "wall-clock-in-sim",
+            Rule::UnorderedIteration => "unordered-iteration",
+            Rule::UnwrapInLibrary => "unwrap-in-library",
+            Rule::UnsafeAudit => "unsafe-audit",
+            Rule::Pragma => "pragma",
+        }
+    }
+
+    /// Resolve a pragma rule name.  Only the enforced rules resolve —
+    /// `pragma` itself is not allowable.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        Rule::ENFORCED.into_iter().find(|r| r.id() == id)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One violation, formatted as `file:line:rule: message`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message
+        )
+    }
+}
+
+/// Aggregate result of linting a set of files.
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Violations silenced by a justified `lint:allow` pragma.
+    pub suppressed: usize,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Repo-relative directories the `--check` sweep covers.  The lint
+/// lints itself; fixture directories are skipped by [`collect_rs`].
+pub const SCAN_ROOTS: [&str; 5] = [
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+    "examples",
+    "rust/lint/src",
+];
+
+/// Lint the whole tree under `repo_root` ([`SCAN_ROOTS`]).
+pub fn lint_tree(repo_root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for root in SCAN_ROOTS {
+        let dir = repo_root.join(root);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    lint_files(repo_root, &files)
+}
+
+/// Lint explicit files or directories (still rooted at `repo_root`
+/// for scope-table purposes).
+pub fn lint_paths(repo_root: &Path, paths: &[PathBuf]) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(p, &mut files)?;
+        } else {
+            files.push(p.clone());
+        }
+    }
+    files.sort();
+    lint_files(repo_root, &files)
+}
+
+fn lint_files(repo_root: &Path, files: &[PathBuf]) -> io::Result<Report> {
+    let mut diagnostics = Vec::new();
+    let mut suppressed = 0;
+    for file in files {
+        let rel = file
+            .strip_prefix(repo_root)
+            .unwrap_or(file.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = std::fs::read_to_string(file)?;
+        let outcome = rules::lint_source(&rel, &source);
+        diagnostics.extend(outcome.diagnostics);
+        suppressed += outcome.suppressed;
+    }
+    Ok(Report {
+        diagnostics,
+        suppressed,
+        files_scanned: files.len(),
+    })
+}
+
+/// Recursively collect `.rs` files in sorted order (so diagnostics
+/// are stable run-to-run).  `fixtures` directories hold deliberately
+/// violating lint-test inputs and are never part of the tree sweep;
+/// `target` is build output.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<std::fs::DirEntry> =
+        std::fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let file_type = entry.file_type()?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if file_type.is_dir() {
+            if name == "fixtures" || name == "target" {
+                continue;
+            }
+            collect_rs(&entry.path(), out)?;
+        } else if name.ends_with(".rs") {
+            out.push(entry.path());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_round_trip() {
+        for rule in Rule::ENFORCED {
+            assert_eq!(Rule::from_id(rule.id()), Some(rule));
+        }
+        assert_eq!(Rule::from_id("pragma"), None);
+        assert_eq!(Rule::from_id("no-such-rule"), None);
+    }
+
+    #[test]
+    fn diagnostic_format() {
+        let d = Diagnostic {
+            file: "rust/src/fl/compress.rs".into(),
+            line: 165,
+            rule: Rule::FloatOrdering,
+            message: "msg".into(),
+        };
+        assert_eq!(
+            d.to_string(),
+            "rust/src/fl/compress.rs:165:float-ordering: msg"
+        );
+    }
+}

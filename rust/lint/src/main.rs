@@ -1,0 +1,143 @@
+//! CLI for `edgeflow-lint`.
+//!
+//! ```text
+//! cargo run -p edgeflow-lint -- --check
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = violations found, 2 = usage/I-O error.
+
+use std::env;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use edgeflow_lint::{lint_paths, lint_tree, scope, Report, Rule};
+
+const USAGE: &str = "\
+edgeflow-lint: static analysis for EdgeFLow's determinism & robustness contracts
+
+USAGE:
+    edgeflow-lint [--check] [--root <dir>] [PATH ...]
+    edgeflow-lint --list-rules
+    edgeflow-lint --help
+
+With no PATHs (or with --check), lints the whole repo tree:
+rust/src, rust/tests, rust/benches, examples, rust/lint/src.
+Explicit PATHs (files or directories) restrict the scan.
+
+OPTIONS:
+    --check         Lint the full tree (the default when no PATHs given)
+    --root <dir>    Repo root to resolve scopes against (default: auto-detect)
+    --list-rules    Print each rule id and its scope, then exit 0
+    --help          Print this help, then exit 0
+
+Suppress a finding with a justified inline pragma on (or in the
+comment block directly above) the offending line; the reason is
+mandatory and unexplained suppressions are themselves violations.
+
+EXIT CODES:
+    0    no violations
+    1    violations found (each printed as file:line:rule: message)
+    2    usage or I/O error";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(msg) => {
+            eprintln!("edgeflow-lint: error: {msg}");
+            eprintln!("run with --help for usage");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<bool, String> {
+    let mut root: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--check" => {}
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return Ok(true);
+            }
+            "--list-rules" => {
+                for rule in Rule::ENFORCED {
+                    println!("{:<20} {}", rule.id(), scope::describe(rule));
+                }
+                println!("{:<20} {}", Rule::Pragma.id(), scope::describe(Rule::Pragma));
+                return Ok(true);
+            }
+            "--root" => {
+                let dir = args
+                    .next()
+                    .ok_or_else(|| "--root requires a directory argument".to_string())?;
+                root = Some(PathBuf::from(dir));
+            }
+            other if other.starts_with('-') => {
+                return Err(format!("unknown flag {other:?}"));
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => find_repo_root()?,
+    };
+    if !root.join("rust").join("src").is_dir() {
+        return Err(format!(
+            "{} does not look like the repo root (no rust/src); pass --root",
+            root.display()
+        ));
+    }
+
+    let report = if paths.is_empty() {
+        lint_tree(&root)
+    } else {
+        lint_paths(&root, &paths)
+    }
+    .map_err(|e| format!("scan failed: {e}"))?;
+
+    print_report(&report);
+    Ok(report.clean())
+}
+
+fn print_report(report: &Report) {
+    for diag in &report.diagnostics {
+        println!("{diag}");
+    }
+    println!(
+        "edgeflow-lint: {} violation(s), {} suppressed by pragmas, {} file(s) scanned",
+        report.diagnostics.len(),
+        report.suppressed,
+        report.files_scanned
+    );
+}
+
+/// Locate the repo root: the nearest ancestor (of this crate's
+/// manifest dir under `cargo run`, else the cwd) containing
+/// `rust/src`.
+fn find_repo_root() -> Result<PathBuf, String> {
+    let mut starts: Vec<PathBuf> = Vec::new();
+    if let Ok(manifest) = env::var("CARGO_MANIFEST_DIR") {
+        starts.push(PathBuf::from(manifest));
+    }
+    if let Ok(cwd) = env::current_dir() {
+        starts.push(cwd);
+    }
+    for start in &starts {
+        let mut dir: &Path = start;
+        loop {
+            if dir.join("rust").join("src").is_dir() {
+                return Ok(dir.to_path_buf());
+            }
+            match dir.parent() {
+                Some(parent) => dir = parent,
+                None => break,
+            }
+        }
+    }
+    Err("could not locate the repo root (no ancestor with rust/src); pass --root".into())
+}

@@ -1,0 +1,516 @@
+//! The rule engine: scans the masked code view line by line, applies
+//! the per-module scope table, and honors `lint:allow` pragmas.
+//!
+//! Pragma syntax (the reason is mandatory — an allow without a reason
+//! is itself a violation and suppresses nothing):
+//!
+//! ```text
+//!   // lint:allow(unwrap-in-library): the invariant that makes this
+//!   // infallible, in one or two lines.
+//! ```
+//!
+//! A pragma applies to the code on its own line, or — when it sits on
+//! a comment-only line — to the first code line after the contiguous
+//! comment block it belongs to.  A blank line breaks the attachment.
+
+use std::collections::BTreeSet;
+
+use crate::scope;
+use crate::tokenize::mask;
+use crate::{Diagnostic, Rule};
+
+/// What linting one file produced.
+pub struct LintOutcome {
+    /// Violations (and pragma errors), in line order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Violations matched by a justified `lint:allow` pragma.
+    pub suppressed: usize,
+}
+
+/// Lint one file's source text.  `rel_path` is the repo-relative path
+/// (`rust/src/fl/runner.rs`) the scope table keys on.
+pub fn lint_source(rel_path: &str, source: &str) -> LintOutcome {
+    let rel = rel_path.replace('\\', "/");
+    let m = mask(source);
+    let n = m.code.len();
+    let file_is_test = scope::is_test_path(&rel);
+    let regions = test_regions(&m.code);
+    let line_is_test = |idx: usize| {
+        file_is_test || regions.iter().any(|&(s, e)| s <= idx && idx <= e)
+    };
+
+    // Pragma and SAFETY-comment attachment: comment-only lines carry
+    // forward to the next code line; blank lines break the chain.
+    let mut allows: Vec<BTreeSet<&'static str>> = vec![BTreeSet::new(); n];
+    let mut safety_ok: Vec<bool> = vec![false; n];
+    let mut diagnostics: Vec<Diagnostic> = Vec::new();
+    let mut pending: BTreeSet<&'static str> = BTreeSet::new();
+    let mut pending_safety = false;
+    for i in 0..n {
+        let has_code = !m.code[i].trim().is_empty();
+        let comment = m.comment[i].as_str();
+        let mut own: BTreeSet<&'static str> = BTreeSet::new();
+        parse_pragmas(&rel, i + 1, comment, &mut own, &mut diagnostics);
+        let own_safety = comment.contains("SAFETY:");
+        if has_code {
+            allows[i] = &pending | &own;
+            safety_ok[i] = pending_safety || own_safety;
+            pending.clear();
+            pending_safety = false;
+        } else if !comment.trim().is_empty() {
+            pending.extend(own.iter().copied());
+            pending_safety = pending_safety || own_safety;
+        } else {
+            pending.clear();
+            pending_safety = false;
+        }
+    }
+
+    let mut suppressed = 0;
+    let push = |line_idx: usize,
+                    rule: Rule,
+                    message: String,
+                    allows: &[BTreeSet<&'static str>],
+                    out: &mut Vec<Diagnostic>,
+                    suppressed: &mut usize| {
+        if allows[line_idx].contains(rule.id()) {
+            *suppressed += 1;
+        } else {
+            out.push(Diagnostic {
+                file: rel.clone(),
+                line: line_idx + 1,
+                rule,
+                message,
+            });
+        }
+    };
+
+    for i in 0..n {
+        let code = m.code[i].as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+
+        if scope::rule_applies(Rule::FloatOrdering, &rel) {
+            for _ in 0..count_word(code, ".partial_cmp") {
+                push(
+                    i,
+                    Rule::FloatOrdering,
+                    "partial_cmp is NaN-unsound in an ordering; use \
+                     total_cmp (or an Ord key)"
+                        .into(),
+                    &allows,
+                    &mut diagnostics,
+                    &mut suppressed,
+                );
+            }
+            if !line_is_test(i) {
+                for _ in 0..float_eq_count(code) {
+                    push(
+                        i,
+                        Rule::FloatOrdering,
+                        "exact float ==/!= outside a test oracle; compare \
+                         with a tolerance, or justify the exact-bit check \
+                         with lint:allow"
+                            .into(),
+                        &allows,
+                        &mut diagnostics,
+                        &mut suppressed,
+                    );
+                }
+            }
+        }
+
+        if scope::rule_applies(Rule::WallClockInSim, &rel) {
+            let hits = count_word(code, "Instant") + count_word(code, "SystemTime");
+            for _ in 0..hits {
+                push(
+                    i,
+                    Rule::WallClockInSim,
+                    "wall-clock time in a simulated-time module; ride \
+                     NetSim's clock (allowlist: util/logging, util/timer, \
+                     bench/, runtime/executor)"
+                        .into(),
+                    &allows,
+                    &mut diagnostics,
+                    &mut suppressed,
+                );
+            }
+        }
+
+        if scope::rule_applies(Rule::UnorderedIteration, &rel) {
+            let hits = count_word(code, "HashMap") + count_word(code, "HashSet");
+            for _ in 0..hits {
+                push(
+                    i,
+                    Rule::UnorderedIteration,
+                    "unordered container in a determinism-critical module; \
+                     iteration order is unspecified — use BTreeMap/BTreeSet \
+                     or a sorted Vec"
+                        .into(),
+                    &allows,
+                    &mut diagnostics,
+                    &mut suppressed,
+                );
+            }
+        }
+
+        if scope::rule_applies(Rule::UnwrapInLibrary, &rel) && !line_is_test(i) {
+            let hits = count_word(code, ".unwrap()")
+                + count_word(code, ".expect(")
+                + count_word(code, "panic!");
+            for _ in 0..hits {
+                push(
+                    i,
+                    Rule::UnwrapInLibrary,
+                    "unwrap/expect/panic in library code; return a typed \
+                     util::error Result, or state the invariant with \
+                     lint:allow"
+                        .into(),
+                    &allows,
+                    &mut diagnostics,
+                    &mut suppressed,
+                );
+            }
+        }
+
+        if scope::rule_applies(Rule::UnsafeAudit, &rel)
+            && count_word(code, "unsafe") > 0
+            && !safety_ok[i]
+        {
+            push(
+                i,
+                Rule::UnsafeAudit,
+                "unsafe without a SAFETY: comment on the line or the \
+                 comment block directly above it"
+                    .into(),
+                &allows,
+                &mut diagnostics,
+                &mut suppressed,
+            );
+        }
+    }
+
+    diagnostics.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    LintOutcome { diagnostics, suppressed }
+}
+
+/// Lines covered by `#[cfg(test)]` items, as inclusive 0-based ranges.
+/// Brace-matching starts at the attribute, so the region ends at the
+/// gated item's closing brace (or its `;` for body-less items).
+fn test_regions(code: &[String]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        let pos = match code[i].find("#[cfg(test)") {
+            Some(p) => p,
+            None => {
+                i += 1;
+                continue;
+            }
+        };
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut line = i;
+        let mut col = pos;
+        'scan: while line < code.len() {
+            for ch in code[line][col..].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if started && depth == 0 {
+                            break 'scan;
+                        }
+                    }
+                    ';' if !started => break 'scan,
+                    _ => {}
+                }
+            }
+            line += 1;
+            col = 0;
+        }
+        let end = line.min(code.len().saturating_sub(1));
+        regions.push((i, end));
+        i = end + 1;
+    }
+    regions
+}
+
+/// Parse every `lint:allow` pragma in one line's comment text: the
+/// marker, a parenthesized rule list, then `: reason`.  Valid allows
+/// land in `out`; malformed pragmas emit `pragma` diagnostics and
+/// allow nothing.  Only the parenthesized form is treated as a
+/// pragma — prose that merely *mentions* the marker stays inert.
+fn parse_pragmas(
+    rel: &str,
+    line_no: usize,
+    comment: &str,
+    out: &mut BTreeSet<&'static str>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut rest = comment;
+    while let Some(pos) = rest.find("lint:allow(") {
+        let after_paren = &rest[pos + "lint:allow(".len()..];
+        let close = match after_paren.find(')') {
+            Some(c) => c,
+            None => {
+                diags.push(pragma_diag(
+                    rel,
+                    line_no,
+                    "malformed pragma: unclosed rule list",
+                ));
+                return;
+            }
+        };
+        let list = &after_paren[..close];
+        let tail = &after_paren[close + 1..];
+        let mut named: Vec<&'static str> = Vec::new();
+        for name in list.split(',') {
+            let name = name.trim();
+            match Rule::from_id(name) {
+                Some(r) => named.push(r.id()),
+                None => diags.push(pragma_diag(
+                    rel,
+                    line_no,
+                    &format!("unknown rule {name:?} in lint:allow"),
+                )),
+            }
+        }
+        // The justification is mandatory: `): reason` with non-empty
+        // reason text on the pragma line itself.
+        let t = tail.trim_start();
+        let reason_ok = t.starts_with(':') && !t[1..].trim().is_empty();
+        if reason_ok {
+            out.extend(named);
+        } else {
+            diags.push(pragma_diag(
+                rel,
+                line_no,
+                "lint:allow pragma is missing its `: reason` justification \
+                 — suppressions must explain the invariant",
+            ));
+        }
+        rest = tail;
+    }
+}
+
+fn pragma_diag(rel: &str, line: usize, message: &str) -> Diagnostic {
+    Diagnostic {
+        file: rel.to_string(),
+        line,
+        rule: Rule::Pragma,
+        message: message.to_string(),
+    }
+}
+
+fn is_tok_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'.' || b == b'_'
+}
+
+/// Count occurrences of `needle` in `hay` with identifier boundaries
+/// on whichever ends of the needle are identifier characters.
+fn count_word(hay: &str, needle: &str) -> usize {
+    let hb = hay.as_bytes();
+    let nb = needle.as_bytes();
+    if nb.is_empty() {
+        return 0;
+    }
+    let mut count = 0;
+    let mut start = 0;
+    while let Some(p) = hay[start..].find(needle) {
+        let p = start + p;
+        let first = nb[0];
+        let before_ok = if first.is_ascii_alphanumeric() || first == b'_' {
+            p == 0 || !(hb[p - 1].is_ascii_alphanumeric() || hb[p - 1] == b'_')
+        } else {
+            true
+        };
+        let last = nb[nb.len() - 1];
+        let end = p + nb.len();
+        let after_ok = if last.is_ascii_alphanumeric() || last == b'_' {
+            end >= hb.len() || !(hb[end].is_ascii_alphanumeric() || hb[end] == b'_')
+        } else {
+            true
+        };
+        if before_ok && after_ok {
+            count += 1;
+        }
+        start = p + nb.len();
+    }
+    count
+}
+
+/// Count `==`/`!=` comparisons where either operand is a float
+/// literal.  Comparing two float *variables* needs type information a
+/// tokenizer does not have; literal comparisons are the ones this
+/// codebase actually writes (sparsity skips, integer-representability
+/// checks) and the ones a reviewer cannot tell apart from bugs.
+fn float_eq_count(code: &str) -> usize {
+    let b = code.as_bytes();
+    let mut count = 0;
+    let mut i = 0;
+    while i + 1 < b.len() {
+        let op = (b[i] == b'=' || b[i] == b'!') && b[i + 1] == b'=';
+        let not_triple = i + 2 >= b.len() || b[i + 2] != b'=';
+        let not_tail = i == 0
+            || !(b[i - 1] == b'=' || b[i - 1] == b'!' || b[i - 1] == b'<' || b[i - 1] == b'>');
+        if !(op && not_triple && not_tail) {
+            i += 1;
+            continue;
+        }
+        // Left operand token.
+        let mut j = i;
+        while j > 0 && b[j - 1] == b' ' {
+            j -= 1;
+        }
+        let mut lo = j;
+        while lo > 0 && is_tok_byte(b[lo - 1]) {
+            lo -= 1;
+        }
+        let left = &code[lo..j];
+        // Right operand token (allow a leading unary minus).
+        let mut k = i + 2;
+        while k < b.len() && b[k] == b' ' {
+            k += 1;
+        }
+        if k < b.len() && b[k] == b'-' {
+            k += 1;
+        }
+        let mut hi = k;
+        while hi < b.len() && is_tok_byte(b[hi]) {
+            hi += 1;
+        }
+        let right = &code[k..hi];
+        if is_float_literal(left) || is_float_literal(right) {
+            count += 1;
+        }
+        i += 2;
+    }
+    count
+}
+
+/// Whether a scanned token is a float literal (`0.0`, `1.`, `1e9`,
+/// `2.5e3`, `5f32`, `0.0_f64`).
+fn is_float_literal(tok: &str) -> bool {
+    if tok.is_empty() || !tok.as_bytes()[0].is_ascii_digit() {
+        return false;
+    }
+    let core = tok
+        .strip_suffix("f32")
+        .or_else(|| tok.strip_suffix("f64"))
+        .map(|s| s.trim_end_matches('_'))
+        .unwrap_or(tok);
+    let suffixed = core.len() != tok.len();
+    if core.starts_with("0x") || core.starts_with("0b") || core.starts_with("0o") {
+        return false;
+    }
+    let mut has_dot = false;
+    let mut has_exp = false;
+    for c in core.chars() {
+        match c {
+            '0'..='9' | '_' => {}
+            '.' => has_dot = true,
+            'e' | 'E' => has_exp = true,
+            _ => return false,
+        }
+    }
+    suffixed || has_dot || has_exp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_literals() {
+        for yes in ["0.0", "1.", "1e9", "2.5e3", "5f32", "0.0_f64", "1e"] {
+            assert!(is_float_literal(yes), "{yes}");
+        }
+        for no in ["0", "42", "x", "self.0", "0xFF", "a.b", "", "1.0.max"] {
+            assert!(!is_float_literal(no), "{no}");
+        }
+    }
+
+    #[test]
+    fn float_eq_detection() {
+        assert_eq!(float_eq_count("if xi == 0.0 {"), 1);
+        assert_eq!(float_eq_count("if xi != 0.0 {"), 1);
+        assert_eq!(float_eq_count("if 0.5 == x {"), 1);
+        assert_eq!(float_eq_count("if x == -1.0 {"), 1);
+        assert_eq!(float_eq_count("if x == 5f32 {"), 1);
+        assert_eq!(float_eq_count("if n == 0 {"), 0);
+        assert_eq!(float_eq_count("if x >= 0.0 {"), 0);
+        assert_eq!(float_eq_count("if x <= 1.0 {"), 0);
+        assert_eq!(float_eq_count("let y = x == 1e-6;"), 1);
+        assert_eq!(float_eq_count("a == 0.0 && b != 2.5"), 2);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert_eq!(count_word("let t = Instant::now();", "Instant"), 1);
+        assert_eq!(count_word("let t = Instants::now();", "Instant"), 0);
+        assert_eq!(count_word("x.partial_cmp(&y)", ".partial_cmp"), 1);
+        assert_eq!(count_word("fn partial_cmp(&self)", ".partial_cmp"), 0);
+        assert_eq!(count_word("v.unwrap_or(0)", ".unwrap()"), 0);
+        assert_eq!(count_word("v.unwrap()", ".unwrap()"), 1);
+        assert_eq!(count_word("v.expect_err(\"e\")", ".expect("), 0);
+        assert_eq!(count_word("panic!(\"boom\")", "panic!"), 1);
+        assert_eq!(count_word("not_a_panic!(1)", "panic!"), 0);
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_the_mod() {
+        let src = "\
+pub fn lib() {}\n\
+\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    #[test]\n\
+    fn t() {\n\
+        assert!(super::lib() == ());\n\
+    }\n\
+}\n\
+pub fn after() {}\n";
+        let m = mask(src);
+        let r = test_regions(&m.code);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, 2);
+        assert_eq!(r[0].1, 8);
+    }
+
+    #[test]
+    fn pragma_requires_reason() {
+        let mut out = BTreeSet::new();
+        let mut diags = Vec::new();
+        parse_pragmas(
+            "f.rs",
+            1,
+            " lint:allow(unwrap-in-library): proven non-empty above",
+            &mut out,
+            &mut diags,
+        );
+        assert!(out.contains("unwrap-in-library"));
+        assert!(diags.is_empty());
+
+        let mut out = BTreeSet::new();
+        let mut diags = Vec::new();
+        parse_pragmas("f.rs", 1, " lint:allow(unwrap-in-library)", &mut out, &mut diags);
+        assert!(out.is_empty());
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, Rule::Pragma);
+    }
+
+    #[test]
+    fn pragma_rejects_unknown_rules() {
+        let mut out = BTreeSet::new();
+        let mut diags = Vec::new();
+        parse_pragmas("f.rs", 3, " lint:allow(no-such-rule): why", &mut out, &mut diags);
+        assert!(out.is_empty());
+        assert_eq!(diags.len(), 1);
+        assert!(diags[0].message.contains("no-such-rule"));
+    }
+}

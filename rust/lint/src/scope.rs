@@ -1,0 +1,143 @@
+//! Per-module rule-scope table.
+//!
+//! Paths are repo-relative with `/` separators (`rust/src/fl/runner.rs`).
+//! Each rule carries its own scope, grounded in the contracts the
+//! ROADMAP records per PR: the bit-identity contract (PR 1), the
+//! simulated-clock contract (PR 2), checkpoint/resume bit-identity
+//! (PR 3) and the typed-error surface of the engine layer (PR 4/5).
+
+use crate::Rule;
+
+/// Modules allowed to read the wall clock: logging timestamps, the
+/// phase timer, the bench harness, and the executor's compile/phase
+/// timing.  Everything else under `rust/src/` — in particular the
+/// simulated-time modules `netsim/` and `fl/` — must ride `NetSim`'s
+/// clock.
+pub const WALL_CLOCK_ALLOW: [&str; 4] = [
+    "rust/src/bench/",
+    "rust/src/util/logging.rs",
+    "rust/src/util/timer.rs",
+    "rust/src/runtime/executor.rs",
+];
+
+/// Determinism-critical modules where unordered containers are banned
+/// outright: aggregation order decides report bits, the runner and
+/// session own checkpoint serialization, metrics and the JSON/CSV
+/// writers are the export surface, and `runtime/params.rs` serializes
+/// model state.
+pub const UNORDERED_SCOPE: [&str; 7] = [
+    "rust/src/fl/aggregate.rs",
+    "rust/src/fl/runner.rs",
+    "rust/src/fl/session.rs",
+    "rust/src/metrics/",
+    "rust/src/util/json.rs",
+    "rust/src/util/csv.rs",
+    "rust/src/runtime/params.rs",
+];
+
+/// Library layers that must surface typed `util::error` results
+/// instead of panicking.
+pub const UNWRAP_SCOPE: [&str; 2] = ["rust/src/fl/", "rust/src/runtime/"];
+
+/// Whether `rule` is enforced for the file at `rel_path`.
+pub fn rule_applies(rule: Rule, rel_path: &str) -> bool {
+    let rel = rel_path.replace('\\', "/");
+    match rule {
+        Rule::FloatOrdering | Rule::UnsafeAudit | Rule::Pragma => true,
+        Rule::WallClockInSim => {
+            rel.starts_with("rust/src/")
+                && !WALL_CLOCK_ALLOW.iter().any(|p| rel.starts_with(p))
+        }
+        Rule::UnorderedIteration => {
+            UNORDERED_SCOPE.iter().any(|p| rel.starts_with(p))
+        }
+        Rule::UnwrapInLibrary => UNWRAP_SCOPE.iter().any(|p| rel.starts_with(p)),
+    }
+}
+
+/// Whether the whole file is test code (integration-test trees).
+/// `#[cfg(test)]` regions inside library files are detected separately
+/// by the rule engine.
+pub fn is_test_path(rel_path: &str) -> bool {
+    let rel = rel_path.replace('\\', "/");
+    rel.starts_with("rust/tests/") || rel.contains("/tests/")
+}
+
+/// One-line scope description per rule, for `--list-rules`.
+pub fn describe(rule: Rule) -> &'static str {
+    match rule {
+        Rule::FloatOrdering => {
+            "everywhere (float `==`/`!=` is exempt inside test oracles)"
+        }
+        Rule::WallClockInSim => {
+            "rust/src/** except bench/, util/logging.rs, util/timer.rs, \
+             runtime/executor.rs"
+        }
+        Rule::UnorderedIteration => {
+            "fl/aggregate, fl/runner, fl/session, metrics/, util/json, \
+             util/csv, runtime/params"
+        }
+        Rule::UnwrapInLibrary => "rust/src/fl/** and rust/src/runtime/** (non-test code)",
+        Rule::UnsafeAudit => "everywhere",
+        Rule::Pragma => "wherever a lint:allow pragma appears",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_allowlist() {
+        assert!(rule_applies(Rule::WallClockInSim, "rust/src/fl/runner.rs"));
+        assert!(rule_applies(Rule::WallClockInSim, "rust/src/netsim/sim.rs"));
+        assert!(!rule_applies(Rule::WallClockInSim, "rust/src/bench/mod.rs"));
+        assert!(!rule_applies(Rule::WallClockInSim, "rust/src/util/timer.rs"));
+        assert!(!rule_applies(
+            Rule::WallClockInSim,
+            "rust/src/runtime/executor.rs"
+        ));
+        // Outside rust/src the rule does not apply at all (benches and
+        // examples measure the process, not the simulation).
+        assert!(!rule_applies(
+            Rule::WallClockInSim,
+            "rust/benches/bench_parallel.rs"
+        ));
+    }
+
+    #[test]
+    fn unwrap_scope_is_library_layers() {
+        assert!(rule_applies(Rule::UnwrapInLibrary, "rust/src/fl/comm.rs"));
+        assert!(rule_applies(
+            Rule::UnwrapInLibrary,
+            "rust/src/runtime/pool.rs"
+        ));
+        assert!(!rule_applies(Rule::UnwrapInLibrary, "rust/src/main.rs"));
+        assert!(!rule_applies(Rule::UnwrapInLibrary, "rust/src/cli/mod.rs"));
+        assert!(!rule_applies(
+            Rule::UnwrapInLibrary,
+            "rust/tests/integration_fl.rs"
+        ));
+    }
+
+    #[test]
+    fn unordered_scope_names_serialization_paths() {
+        assert!(rule_applies(
+            Rule::UnorderedIteration,
+            "rust/src/fl/aggregate.rs"
+        ));
+        assert!(rule_applies(Rule::UnorderedIteration, "rust/src/metrics/mod.rs"));
+        assert!(rule_applies(Rule::UnorderedIteration, "rust/src/util/json.rs"));
+        assert!(!rule_applies(
+            Rule::UnorderedIteration,
+            "rust/src/topology/graph.rs"
+        ));
+    }
+
+    #[test]
+    fn test_paths() {
+        assert!(is_test_path("rust/tests/integration_native.rs"));
+        assert!(!is_test_path("rust/src/fl/runner.rs"));
+        assert!(!is_test_path("rust/benches/bench_native.rs"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Comment/string-stripping tokenizer.
+//!
+//! Rules must never fire on the *text* of a string literal or a
+//! comment, so the engine scans a masked view of each source file:
+//! every character that belongs to a string/char literal or a comment
+//! is replaced by a space in the `code` view (line and column layout
+//! is preserved, so token adjacency still works), while comment text
+//! is routed to the parallel `comment` view where the pragma and
+//! `SAFETY:` scanners look for it.
+//!
+//! The tokenizer understands: `//`-style line comments (incl. `///`
+//! and `//!` doc comments), nested `/* */` block comments, plain and
+//! byte string literals with `\"`/`\\` escapes, raw (byte) strings
+//! `r"…"` / `r#"…"#` / `br"…"`, char and byte-char literals, and
+//! tells lifetimes (`'a`) apart from char literals (`'a'`).
+
+/// A source file split into a per-line masked code view and a per-line
+/// comment-text view.  Both vectors have one entry per source line.
+pub struct Masked {
+    /// Source lines with strings, char literals and comments blanked.
+    pub code: Vec<String>,
+    /// Comment text per line (`//` bodies and `/* */` interiors).
+    pub comment: Vec<String>,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    /// Nesting depth of `/* */` comments (Rust block comments nest).
+    BlockComment(usize),
+    Str,
+    /// Raw string terminated by `"` followed by this many `#`s.
+    RawStr(usize),
+    /// Inside an escape-form char literal (`'\…'`).
+    CharLit,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Mask `source` into parallel code/comment line views.
+pub fn mask(source: &str) -> Masked {
+    let chars: Vec<char> = source.chars().collect();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut code_line = String::new();
+    let mut comment_line = String::new();
+    let mut st = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, State::LineComment) {
+                st = State::Code;
+            }
+            code.push(std::mem::take(&mut code_line));
+            comment.push(std::mem::take(&mut comment_line));
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = State::LineComment;
+                    code_line.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(1);
+                    code_line.push_str("  ");
+                    i += 2;
+                } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(chars[i - 1])) {
+                    // Possible raw/byte string opener: r" r#" br" b"
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let has_r = c == 'r' || j > i + 1;
+                    let mut hashes = 0;
+                    while has_r && chars.get(j + hashes) == Some(&'#') {
+                        hashes += 1;
+                    }
+                    if has_r && chars.get(j + hashes) == Some(&'"') {
+                        for _ in i..=(j + hashes) {
+                            code_line.push(' ');
+                        }
+                        st = State::RawStr(hashes);
+                        i = j + hashes + 1;
+                    } else if c == 'b' && next == Some('"') {
+                        code_line.push_str("  ");
+                        st = State::Str;
+                        i += 2;
+                    } else {
+                        code_line.push(c);
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    st = State::Str;
+                    code_line.push(' ');
+                    i += 1;
+                } else if c == '\'' {
+                    let n1 = chars.get(i + 1).copied();
+                    if n1 == Some('\\') {
+                        // Escape-form char literal: '\n' '\'' '\u{..}'
+                        st = State::CharLit;
+                        code_line.push(' ');
+                        i += 1;
+                    } else if n1.is_some()
+                        && n1 != Some('\'')
+                        && chars.get(i + 2) == Some(&'\'')
+                    {
+                        // Simple one-char literal like 'a' or '"'.
+                        code_line.push_str("   ");
+                        i += 3;
+                    } else {
+                        // A lifetime ('a, 'static): plain code.
+                        code_line.push(c);
+                        i += 1;
+                    }
+                } else {
+                    code_line.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                code_line.push(' ');
+                comment_line.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    code_line.push_str("  ");
+                    st = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    code_line.push_str("  ");
+                    st = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    code_line.push(' ');
+                    comment_line.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && matches!(chars.get(i + 1), Some('"') | Some('\\')) {
+                    code_line.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    code_line.push(' ');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    code_line.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut k = 0;
+                    while k < hashes && chars.get(i + 1 + k) == Some(&'#') {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        for _ in 0..=hashes {
+                            code_line.push(' ');
+                        }
+                        st = State::Code;
+                        i += hashes + 1;
+                    } else {
+                        code_line.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code_line.push(' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' && chars.get(i + 1).is_some() && chars[i + 1] != '\n' {
+                    code_line.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    code_line.push(' ');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    code_line.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(code_line);
+    comment.push(comment_line);
+    Masked { code, comment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_are_blanked() {
+        let m = mask("let s = \"a.partial_cmp(&b).unwrap()\";");
+        assert!(!m.code[0].contains("partial_cmp"), "{:?}", m.code[0]);
+        assert!(m.code[0].contains("let s ="));
+    }
+
+    #[test]
+    fn line_comments_go_to_comment_view() {
+        let m = mask("let x = 1; // Instant::now() here is prose\n");
+        assert!(!m.code[0].contains("Instant"));
+        assert!(m.comment[0].contains("Instant::now()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner unsafe */ still SystemTime */ b";
+        let m = mask(src);
+        assert!(!m.code[0].contains("unsafe"));
+        assert!(!m.code[0].contains("SystemTime"));
+        assert!(m.code[0].contains('a') && m.code[0].contains('b'));
+        assert!(m.comment[0].contains("SystemTime"));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let m = mask("let r = r#\"HashMap \"quoted\" panic!\"#; let y = 2;");
+        assert!(!m.code[0].contains("HashMap"));
+        assert!(!m.code[0].contains("panic"));
+        assert!(m.code[0].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        // A '"' char literal must not open a string.
+        let m = mask("let q = '\"'; let z = 3; // tail");
+        assert!(m.code[0].contains("let z = 3;"));
+        // Lifetimes survive as code.
+        let m = mask("fn f<'a>(x: &'a f64) -> &'a f64 { x }");
+        assert!(m.code[0].contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_strings() {
+        let m = mask(r#"let s = "esc \" unsafe { } \\"; let k = 4;"#);
+        assert!(!m.code[0].contains("unsafe"));
+        assert!(m.code[0].contains("let k = 4;"));
+    }
+
+    #[test]
+    fn multiline_strings_stay_masked() {
+        let m = mask("let s = \"line one\n  partial_cmp line two\";\nlet t = 5;");
+        assert!(!m.code[1].contains("partial_cmp"));
+        assert!(m.code[2].contains("let t = 5;"));
+    }
+
+    #[test]
+    fn byte_strings_are_blanked() {
+        let m = mask("let b = b\"unsafe bytes\"; let w = 6;");
+        assert!(!m.code[0].contains("unsafe"));
+        assert!(m.code[0].contains("let w = 6;"));
+    }
+
+    #[test]
+    fn division_is_not_a_comment() {
+        let m = mask("let x = a / b / c;");
+        assert_eq!(m.code[0], "let x = a / b / c;");
+    }
+}

@@ -1,0 +1,173 @@
+//! End-to-end tests for the rule engine over the fixture corpus.
+//!
+//! Fixtures live in `tests/fixtures/` (never compiled, never swept by
+//! the tree gate) and are linted under *synthetic* repo-relative
+//! paths so each test exercises the scope table on purpose.
+
+use edgeflow_lint::{lint_source, Rule};
+
+fn rules_of(rel: &str, src: &str) -> Vec<Rule> {
+    lint_source(rel, src).diagnostics.iter().map(|d| d.rule).collect()
+}
+
+#[test]
+fn float_ordering_fires_on_partial_cmp_and_float_eq() {
+    let src = include_str!("fixtures/float_ordering_fire.rs");
+    // data/ is outside the unwrap scope, so only float-ordering fires.
+    let out = lint_source("rust/src/data/fixture.rs", src);
+    assert_eq!(out.diagnostics.len(), 2, "{:#?}", out.diagnostics);
+    assert!(out.diagnostics.iter().all(|d| d.rule == Rule::FloatOrdering));
+    let lines: Vec<usize> = out.diagnostics.iter().map(|d| d.line).collect();
+    assert_eq!(lines, vec![5, 9]);
+    assert!(out
+        .diagnostics
+        .iter()
+        .any(|d| d.to_string().starts_with("rust/src/data/fixture.rs:5:float-ordering:")));
+}
+
+#[test]
+fn float_ordering_clean_on_total_cmp_and_test_oracles() {
+    let src = include_str!("fixtures/float_ordering_clean.rs");
+    let out = lint_source("rust/src/data/fixture.rs", src);
+    assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
+    // The same float == in a non-test position would fire: strip the
+    // cfg(test) attribute and the oracle is no longer exempt.
+    let stripped = src.replace("#[cfg(test)]", "");
+    let out = lint_source("rust/src/data/fixture.rs", &stripped);
+    assert!(!out.diagnostics.is_empty());
+}
+
+#[test]
+fn wall_clock_fires_in_sim_modules_only() {
+    let src = include_str!("fixtures/wall_clock_fire.rs");
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    // Two tokens per line on the use, the signature and the body.
+    assert_eq!(out.diagnostics.len(), 6, "{:#?}", out.diagnostics);
+    assert!(out.diagnostics.iter().all(|d| d.rule == Rule::WallClockInSim));
+
+    // Scope table: allowlisted modules stay silent on identical code.
+    for quiet in [
+        "rust/src/bench/fixture.rs",
+        "rust/src/util/timer.rs",
+        "rust/src/runtime/executor.rs",
+        "rust/benches/bench_parallel.rs",
+    ] {
+        let out = lint_source(quiet, src);
+        assert!(out.diagnostics.is_empty(), "{quiet}: {:#?}", out.diagnostics);
+    }
+}
+
+#[test]
+fn unordered_fires_in_determinism_critical_modules_only() {
+    let fire = include_str!("fixtures/unordered_fire.rs");
+    let out = lint_source("rust/src/fl/aggregate.rs", fire);
+    assert_eq!(out.diagnostics.len(), 3, "{:#?}", out.diagnostics);
+    assert!(out
+        .diagnostics
+        .iter()
+        .all(|d| d.rule == Rule::UnorderedIteration));
+    // Outside the scoped modules the same code is fine.
+    assert!(rules_of("rust/src/topology/graph.rs", fire).is_empty());
+
+    let clean = include_str!("fixtures/unordered_clean.rs");
+    assert!(rules_of("rust/src/fl/aggregate.rs", clean).is_empty());
+}
+
+#[test]
+fn unwrap_fires_in_library_code_not_tests() {
+    let src = include_str!("fixtures/unwrap_fire.rs");
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    assert_eq!(out.diagnostics.len(), 3, "{:#?}", out.diagnostics);
+    assert!(out
+        .diagnostics
+        .iter()
+        .all(|d| d.rule == Rule::UnwrapInLibrary));
+    // Whole-file test trees are exempt.
+    assert!(rules_of("rust/tests/integration.rs", src).is_empty());
+    // Outside fl/ and runtime/ the rule does not apply.
+    assert!(rules_of("rust/src/cli/mod.rs", src).is_empty());
+}
+
+#[test]
+fn justified_pragma_suppresses_and_counts() {
+    let src = include_str!("fixtures/unwrap_pragma.rs");
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
+    assert_eq!(out.suppressed, 1);
+}
+
+#[test]
+fn pragma_without_reason_is_rejected_and_does_not_suppress() {
+    let src = include_str!("fixtures/unwrap_pragma_bad.rs");
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    let rules = rules_of("rust/src/fl/fixture.rs", src);
+    assert_eq!(rules, vec![Rule::Pragma, Rule::UnwrapInLibrary]);
+    assert_eq!(out.suppressed, 0);
+}
+
+#[test]
+fn pragma_attachment_breaks_at_blank_lines() {
+    let src = "\
+pub fn f(v: &[f32]) -> f32 {\n\
+    // lint:allow(unwrap-in-library): blank line below detaches this.\n\
+\n\
+    *v.first().unwrap()\n\
+}\n";
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    assert_eq!(out.diagnostics.len(), 1, "{:#?}", out.diagnostics);
+    assert_eq!(out.diagnostics[0].rule, Rule::UnwrapInLibrary);
+    assert_eq!(out.suppressed, 0);
+}
+
+#[test]
+fn pragma_with_unknown_rule_is_flagged() {
+    let src = "// lint:allow(no-such-rule): reasons\npub fn f() {}\n";
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    assert_eq!(out.diagnostics.len(), 1);
+    assert_eq!(out.diagnostics[0].rule, Rule::Pragma);
+    assert!(out.diagnostics[0].message.contains("no-such-rule"));
+}
+
+#[test]
+fn unsafe_requires_safety_comment() {
+    let fire = include_str!("fixtures/unsafe_fire.rs");
+    let out = lint_source("rust/src/data/fixture.rs", fire);
+    assert_eq!(out.diagnostics.len(), 1, "{:#?}", out.diagnostics);
+    assert_eq!(out.diagnostics[0].rule, Rule::UnsafeAudit);
+
+    let ok = include_str!("fixtures/unsafe_safety_ok.rs");
+    let out = lint_source("rust/src/data/fixture.rs", ok);
+    assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
+}
+
+#[test]
+fn tokenizer_tricky_file_is_silent() {
+    let src = include_str!("fixtures/tokenizer_tricky.rs");
+    // Lint under the most aggressive scope combination: fl/ paths get
+    // float-ordering, wall-clock, unwrap and unsafe all enabled.
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
+    let out = lint_source("rust/src/fl/aggregate.rs", src);
+    assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
+}
+
+#[test]
+fn diagnostics_are_line_sorted_and_formatted() {
+    let src = include_str!("fixtures/unwrap_fire.rs");
+    let out = lint_source("rust/src/fl/fixture.rs", src);
+    let mut lines: Vec<usize> = out.diagnostics.iter().map(|d| d.line).collect();
+    let sorted = {
+        let mut s = lines.clone();
+        s.sort_unstable();
+        s
+    };
+    assert_eq!(lines, sorted);
+    lines.dedup();
+    for d in &out.diagnostics {
+        let rendered = d.to_string();
+        assert!(
+            rendered.starts_with(&format!("rust/src/fl/fixture.rs:{}:unwrap-in-library: ", d.line)),
+            "{rendered}"
+        );
+    }
+}

@@ -1,0 +1,16 @@
+// Fixture: total_cmp orderings and float equality confined to a test
+// oracle must not fire.
+
+pub fn sort_desc(v: &mut Vec<f32>) {
+    v.sort_by(|a, b| b.total_cmp(a));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn oracle() {
+        let x = 1.0f64;
+        assert!(x == 1.0);
+        assert!(x != 2.0);
+    }
+}

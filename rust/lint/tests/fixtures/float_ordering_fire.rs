@@ -1,0 +1,10 @@
+// Fixture: float-ordering must fire on partial_cmp and on exact
+// float equality outside test code.
+
+pub fn sort_desc(v: &mut Vec<f32>) {
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}
+
+pub fn is_zero(x: f64) -> bool {
+    x == 0.0
+}

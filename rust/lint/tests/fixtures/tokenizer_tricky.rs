@@ -1,0 +1,19 @@
+// Fixture: every needle appears only inside strings, char literals or
+// comments — the lint must stay silent on this file.
+//
+// prose mentions: Instant::now(), SystemTime, HashMap, HashSet,
+// a.partial_cmp(&b).unwrap(), panic!("x"), x == 0.0
+/* block comment: unsafe { SystemTime::now() }.expect("never") */
+
+pub const PLAIN: &str = "Instant SystemTime HashMap .partial_cmp .unwrap() panic! == 0.0";
+pub const RAW: &str = r#"unsafe { x.expect("msg") } and "quoted" HashSet"#;
+pub const BYTES: &[u8] = b"SystemTime .unwrap() panic!";
+pub const ESCAPED: &str = "esc \" unsafe .partial_cmp \\";
+pub const MULTI: &str = "line one
+  .partial_cmp line two == 0.0";
+
+pub fn lifetime_not_char<'a>(x: &'a f64) -> &'a f64 {
+    let _q = '"';
+    let _division = 4 / 2 / 1;
+    x
+}

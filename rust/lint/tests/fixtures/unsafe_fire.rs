@@ -1,0 +1,5 @@
+// Fixture: unsafe without a SAFETY: comment.
+
+pub fn read_first(v: &[f32]) -> f32 {
+    unsafe { *v.as_ptr() }
+}

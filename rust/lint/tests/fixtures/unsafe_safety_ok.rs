@@ -1,0 +1,13 @@
+// Fixture: unsafe with a SAFETY: comment, same-line and block-above.
+
+pub fn read_first(v: &[f32]) -> f32 {
+    assert!(!v.is_empty());
+    // SAFETY: the assert above guarantees the pointer reads in-bounds
+    // element zero of a live slice.
+    unsafe { *v.as_ptr() }
+}
+
+pub fn read_second(v: &[f32]) -> f32 {
+    assert!(v.len() > 1);
+    unsafe { *v.as_ptr().add(1) } // SAFETY: length checked above.
+}

@@ -1,0 +1,23 @@
+// Fixture: unwrap/expect/panic in library code, no pragma.
+
+pub fn first(v: &[f32]) -> f32 {
+    *v.first().unwrap()
+}
+
+pub fn last(v: &[f32]) -> f32 {
+    *v.last().expect("non-empty")
+}
+
+pub fn boom() {
+    panic!("unconditional");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::first(&[1.0]).to_bits(), 1.0f32.to_bits());
+        let x: Option<u32> = Some(3);
+        assert_eq!(x.unwrap(), 3);
+    }
+}

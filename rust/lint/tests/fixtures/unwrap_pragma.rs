@@ -1,0 +1,13 @@
+// Fixture: justified pragmas suppress, both same-line and from the
+// comment block directly above.
+
+pub fn first(v: &[f32]) -> f32 {
+    assert!(!v.is_empty());
+    // lint:allow(unwrap-in-library): asserted non-empty on the line above.
+    *v.first().unwrap()
+}
+
+pub fn mean(v: &[f32]) -> f32 {
+    let n = v.len().max(1) as f32;
+    v.iter().sum::<f32>() / n // lint:allow(unwrap-in-library): no unwrap here, pragma is inert but valid.
+}

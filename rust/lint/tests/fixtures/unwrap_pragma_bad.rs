@@ -1,0 +1,7 @@
+// Fixture: a pragma without a reason is rejected — it emits a pragma
+// diagnostic AND fails to suppress the underlying violation.
+
+pub fn first(v: &[f32]) -> f32 {
+    // lint:allow(unwrap-in-library)
+    *v.first().unwrap()
+}

@@ -1,0 +1,9 @@
+// Fixture: wall-clock types in a simulated-time module.  Linted under
+// a rust/src/fl/ path this fires twice; under rust/src/bench/ the
+// scope table keeps it silent.
+
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> (Instant, SystemTime) {
+    (Instant::now(), SystemTime::now())
+}

@@ -97,7 +97,7 @@ impl Bencher {
             samples.push(t.elapsed().as_secs_f64());
         }
         let mut sorted = samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let m = Measurement {
             name: name.to_string(),
             iters: samples.len(),

@@ -224,7 +224,7 @@ mod tests {
                                 .zip(&buf)
                                 .map(|(m, &v)| (m - v as f64).powi(2))
                                 .sum();
-                            da.partial_cmp(&db).unwrap()
+                            da.total_cmp(&db)
                         })
                         .unwrap();
                     if best == class {

@@ -143,6 +143,8 @@ fn reduce_prepared(mut level: Vec<(f64, ModelState)>) -> (f64, ModelState) {
         }
         level = next;
     }
+    // lint:allow(unwrap-in-library): check_reduce_input rejects empty
+    // inputs, and every halving level keeps at least one item.
     level.pop().expect("non-empty reduction")
 }
 
@@ -174,14 +176,19 @@ pub fn par_reduce_states_weighted(
             }
         }
         let mut next = pool.run(pairs.len(), |i, _w| {
-            let ((wa, mut a), (wb, b)) =
-                pairs[i].lock().unwrap().take().expect("pair taken once");
+            // lint:allow(unwrap-in-library): the pool hands each job
+            // index to exactly one worker, so slot i is locked and
+            // taken exactly once.
+            let pair = pairs[i].lock().unwrap().take().expect("pair taken once");
+            let ((wa, mut a), (wb, b)) = pair;
             merge_weighted_into(&mut a.data, wa, &b.data, wb);
             (wa + wb, a)
         });
         next.extend(tail);
         level = next;
     }
+    // lint:allow(unwrap-in-library): same non-empty invariant as the
+    // sequential tree above.
     Ok(level.pop().expect("non-empty reduction"))
 }
 

@@ -157,12 +157,17 @@ fn topk_roundtrip(values: &[f32], reference: &[f32], keep: f64) -> Vec<f32> {
         return values.to_vec();
     }
     // Select the top-|delta| indices (nth-element style via sorting a key
-    // vector; n is ~1e5-1e6, this is off the round hot path).
+    // vector; n is ~1e5-1e6, this is off the round hot path).  total_cmp
+    // keeps the comparator a total order even under NaN deltas: NaN
+    // |delta| ranks above every finite magnitude (|x| clears the sign
+    // bit), so a poisoned coordinate is always *kept* — transmitted
+    // as-is — instead of the old `Equal` fallback letting the sort
+    // implementation decide which coordinates survive.
     let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_unstable_by(|&a, &b| {
         let da = (values[a] - reference[a]).abs();
         let db = (values[b] - reference[b]).abs();
-        db.partial_cmp(&da).unwrap_or(std::cmp::Ordering::Equal)
+        db.total_cmp(&da).then(a.cmp(&b))
     });
     let mut out = reference.to_vec();
     for &i in &idx[..kept] {
@@ -294,6 +299,45 @@ mod tests {
             .unwrap();
         assert_eq!(out, v, "dense fallback ships the exact values");
         assert_eq!(bytes, Codec::None.wire_bytes(64));
+    }
+
+    #[test]
+    fn topk_with_nan_delta_is_deterministic_and_keeps_nan() {
+        // Regression for the NaN-unsound comparator: the old
+        // `partial_cmp(..).unwrap_or(Equal)` fallback made every
+        // NaN-vs-x comparison "equal", handing the sort implementation
+        // the choice of which coordinates survive.  With total_cmp a
+        // NaN |delta| ranks above every finite magnitude, so the
+        // poisoned coordinate is deterministically part of the kept
+        // set and the other kept indices are stable across runs.
+        let n = 100;
+        let reference = vec![0f32; n];
+        let mut v: Vec<f32> = (0..n).map(|i| i as f32 * 1e-3).collect();
+        let large = [3usize, 11, 19, 42, 55, 60, 71, 83, 96];
+        for &j in &large {
+            v[j] = 5.0 + j as f32;
+        }
+        v[37] = f32::NAN;
+
+        let codec = Codec::TopK { keep_fraction: 0.1 }; // kept = 10 < n/2
+        let kept_set = |out: &[f32]| -> Vec<usize> {
+            (0..n)
+                .filter(|&i| out[i].is_nan() || out[i].to_bits() != reference[i].to_bits())
+                .collect()
+        };
+
+        let (out1, _) = codec.roundtrip(&v, Some(&reference)).unwrap();
+        let (out2, _) = codec.roundtrip(&v, Some(&reference)).unwrap();
+
+        let mut expected: Vec<usize> = large.to_vec();
+        expected.push(37);
+        expected.sort_unstable();
+        assert_eq!(kept_set(&out1), expected, "NaN + 9 largest deltas kept");
+        assert_eq!(kept_set(&out1), kept_set(&out2), "same index set across runs");
+        assert!(out1[37].is_nan(), "poisoned coordinate transmitted as-is");
+        for (a, b) in out1.iter().zip(&out2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-identical reconstruction");
+        }
     }
 
     #[test]

@@ -546,6 +546,8 @@ impl Runner {
                 );
                 continue;
             }
+            // lint:allow(unwrap-in-library): site_node is None only
+            // when `folded` is empty, and this loop iterates `folded`.
             let site = site_node.expect("folded non-empty implies a site");
             let from = self.topo.edge_bs(self.fed.clients[d.client].cluster)?;
             if from != site {
@@ -1000,41 +1002,34 @@ fn round_stamp(name: &str) -> Option<usize> {
     tail.parse().ok()
 }
 
-/// Newest `*.ckpt.json` in a directory — newest by **modification
-/// time**, so a freshly-written checkpoint always beats last week's
-/// leftovers from another run family whatever their round stamps say;
-/// equal mtimes (rotation bursts on coarse-granularity filesystems)
-/// break ties by round stamp, then name.  Errors when the directory
-/// holds no checkpoint at all.
+/// Newest `*.ckpt.json` in a directory — newest by **parsed round
+/// stamp**, the deterministic key the rotation itself writes: stamped
+/// files rank above unstamped, higher rounds above lower.  Filesystem
+/// mtime is only the tie-break between equal stamps (distinct run
+/// families sharing a directory), then name — two checkpoints written
+/// within one mtime granule used to race on which resumed.  Errors
+/// when the directory holds no checkpoint at all.
 pub fn find_latest_checkpoint(dir: &str) -> Result<String> {
-    let mut best: Option<(std::time::SystemTime, u64, String, String)> = None;
+    let mut candidates = Vec::new();
     for entry in std::fs::read_dir(dir)? {
         let entry = entry?;
         let name = entry.file_name().to_string_lossy().into_owned();
         if !name.ends_with(CKPT_SUFFIX) || !entry.file_type()?.is_file() {
             continue;
         }
-        // Tie-break key: stamped files rank above unstamped at equal
-        // mtime, higher rounds above lower.
+        // Primary key: the round stamp parsed from the file name.
         let stamp = match round_stamp(&name) {
             Some(r) => 1 + r as u64,
             None => 0,
         };
-        let mtime = entry
-            .metadata()?
-            .modified()
-            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        // lint:allow(wall-clock-in-sim): the filesystem clock only
+        // breaks ties between *equal* round stamps; resume order is
+        // decided by the deterministic stamp above.
+        let mtime = entry.metadata()?.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
         let path = entry.path().to_string_lossy().into_owned();
-        let candidate = (mtime, stamp, name, path);
-        let better = match &best {
-            None => true,
-            Some(b) => (candidate.0, candidate.1, &candidate.2) > (b.0, b.1, &b.2),
-        };
-        if better {
-            best = Some(candidate);
-        }
+        candidates.push((stamp, mtime, name, path));
     }
-    best.map(|(_, _, _, path)| path).ok_or_else(|| {
+    candidates.into_iter().max().map(|(_, _, _, path)| path).ok_or_else(|| {
         Error::Config(format!("no *{CKPT_SUFFIX} checkpoint found in {dir:?}"))
     })
 }
@@ -1111,20 +1106,37 @@ mod tests {
     }
 
     #[test]
-    fn latest_prefers_newest_mtime_over_stale_high_rounds() {
-        // A leftover family with a big round stamp must not shadow a
-        // freshly-written run: mtime decides, stamps only break ties.
+    fn latest_prefers_round_stamp_over_mtime() {
+        // Regression: resume order must be decided by the parsed round
+        // stamp, not by filesystem mtime — two checkpoints written
+        // within one mtime granule used to race on which resumed.  The
+        // highest stamp wins even when lower-stamped files are written
+        // measurably *later*.
         let d = tmpdir("latest");
         std::fs::write(d.join("old.r000100.ckpt.json"), "{}").unwrap();
         std::thread::sleep(std::time::Duration::from_millis(20));
-        // A rotation burst (same instant on coarse filesystems): the
-        // stamp tie-break keeps the highest round of the newest batch.
         for r in [2usize, 7, 10] {
             std::fs::write(d.join(format!("run.r{r:06}.ckpt.json")), "{}").unwrap();
         }
         std::fs::write(d.join("notes.txt"), "x").unwrap();
         let latest = find_latest_checkpoint(d.to_str().unwrap()).unwrap();
-        assert!(latest.ends_with("run.r000010.ckpt.json"), "{latest}");
+        assert!(latest.ends_with("old.r000100.ckpt.json"), "{latest}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn equal_stamps_tie_break_by_mtime_then_name() {
+        // mtime still matters, but only *between* equal round stamps
+        // (distinct run families sharing a directory) — and a stamped
+        // file beats a fresher unstamped one.
+        let d = tmpdir("tiebreak");
+        std::fs::write(d.join("a.r000005.ckpt.json"), "{}").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        std::fs::write(d.join("b.r000005.ckpt.json"), "{}").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        std::fs::write(d.join("z.ckpt.json"), "{}").unwrap();
+        let latest = find_latest_checkpoint(d.to_str().unwrap()).unwrap();
+        assert!(latest.ends_with("b.r000005.ckpt.json"), "{latest}");
         let _ = std::fs::remove_dir_all(&d);
     }
 

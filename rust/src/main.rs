@@ -687,7 +687,7 @@ fn cmd_theory(a: &Args) -> Result<()> {
     let scan = k_scan(&p, kmax);
     let best = scan
         .iter()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .copied();
     for (k, total) in &scan {
         let marker = if Some((*k, *total)) == best { "  <-- min" } else { "" };

@@ -105,6 +105,9 @@ impl Engine {
     }
 
     fn compile_file(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        // lint:allow(unwrap-in-library): lock poisoning means a panic
+        // already unwound another worker — propagating the panic here
+        // is the correct response, not a typed error.
         if let Some(hit) = self.cache.lock().unwrap().get(file) {
             return Ok(hit.clone());
         }
@@ -114,6 +117,8 @@ impl Engine {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Arc::new(self.client.compile(&comp)?);
         log::debug!("compiled {} in {:.2?}", file, t.elapsed());
+        // lint:allow(unwrap-in-library): same poisoned-lock policy as
+        // the cache probe above.
         self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
         Ok(exe)
     }
@@ -193,7 +198,10 @@ impl LocalUpdateExe {
             )));
         }
         let mut new_state = ModelState::zeros(state.layout.clone());
-        for (i, out) in outputs[..outputs.len() - 1].iter().enumerate() {
+        let (loss_out, param_outs) = outputs.split_last().ok_or_else(|| {
+            Error::Artifact("local_update executable returned no outputs".into())
+        })?;
+        for (i, out) in param_outs.iter().enumerate() {
             let off = layout.offsets[i];
             let n = layout.tensors[i].nelems();
             let vals = out.to_vec::<f32>()?;
@@ -205,7 +213,7 @@ impl LocalUpdateExe {
             }
             new_state.data[off..off + n].copy_from_slice(&vals);
         }
-        let loss = outputs.last().unwrap().get_first_element::<f32>()?;
+        let loss = loss_out.get_first_element::<f32>()?;
         Ok((new_state, loss))
     }
 }

@@ -101,6 +101,9 @@ fn gemm_axpy_block(
     for i in i0..i1 {
         let arow = &a[i * k..(i + 1) * k];
         for (kk, &av) in arow.iter().enumerate() {
+            // lint:allow(float-ordering): exact-zero sparsity skip —
+            // a zero multiplier contributes nothing to the axpy, and
+            // a tolerance would change the result bits.
             if av == 0.0 {
                 continue;
             }
@@ -148,6 +151,8 @@ pub fn gemm_tn(kd: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
         let arow = &a[kk * m..(kk + 1) * m];
         let brow = &b[kk * n..(kk + 1) * n];
         for (i, &av) in arow.iter().enumerate() {
+            // lint:allow(float-ordering): exact-zero sparsity skip,
+            // same as gemm_axpy_block above.
             if av == 0.0 {
                 continue;
             }

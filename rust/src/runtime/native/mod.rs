@@ -191,6 +191,8 @@ impl TrainBackend for NativeBackend {
             // `[kh, kw, cin, cout]` — fan-in is everything but the last
             // axis, fan-out the last, so the conv gets the receptive
             // -field-scaled Xavier limit.
+            // lint:allow(unwrap-in-library): the `shape.len() < 2`
+            // guard above means the shape has a last axis.
             let fan_out = *t.shape.last().unwrap();
             let fan_in: usize = t.shape[..t.shape.len() - 1].iter().product();
             let limit = (6.0 / (fan_in + fan_out) as f64).sqrt();

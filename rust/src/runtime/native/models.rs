@@ -334,6 +334,10 @@ pub fn loss_and_grads_per_sample(
         Arch::Linear => 0,
         Arch::Mlp { hidden } => hidden,
         Arch::Cnn { .. } => {
+            // lint:allow(unwrap-in-library): documented contract of
+            // this test/bench oracle — the CNN never had a per-sample
+            // implementation, and a typed error would let the
+            // equivalence tests silently skip it.
             panic!("per-sample baseline covers linear/mlp only")
         }
     };
@@ -358,6 +362,9 @@ pub fn loss_and_grads_per_sample(
         if hidden == 0 {
             let (gw, gb) = g.split_at_mut(input * cls);
             for (i, &xi) in xs.iter().enumerate() {
+                // lint:allow(float-ordering): exact-zero sparsity skip
+                // — only bit-zero inputs contribute nothing, a
+                // tolerance would change the math.
                 if xi == 0.0 {
                     continue;
                 }
@@ -389,6 +396,8 @@ pub fn loss_and_grads_per_sample(
                 *gv += dl;
             }
             for (i, &xi) in xs.iter().enumerate() {
+                // lint:allow(float-ordering): exact-zero sparsity skip,
+                // same as the linear arm above.
                 if xi == 0.0 {
                     continue;
                 }
@@ -421,6 +430,8 @@ fn forward_per_sample(
         let b = &params[input * cls..];
         logits.copy_from_slice(b);
         for (i, &xi) in x.iter().enumerate() {
+            // lint:allow(float-ordering): exact-zero sparsity skip —
+            // only bit-zero inputs contribute nothing to the matmul.
             if xi == 0.0 {
                 continue;
             }
@@ -435,6 +446,8 @@ fn forward_per_sample(
         let (w2, b2) = rest.split_at(hidden * cls);
         hid.copy_from_slice(b1);
         for (i, &xi) in x.iter().enumerate() {
+            // lint:allow(float-ordering): exact-zero sparsity skip,
+            // same as the linear arm above.
             if xi == 0.0 {
                 continue;
             }
@@ -450,6 +463,8 @@ fn forward_per_sample(
         }
         logits.copy_from_slice(&b2[..cls]);
         for (j, &hj) in hid.iter().enumerate() {
+            // lint:allow(float-ordering): ReLU writes exact 0.0 for
+            // clipped units, so the bit-equality skip is lossless.
             if hj == 0.0 {
                 continue;
             }

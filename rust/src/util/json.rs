@@ -60,6 +60,9 @@ impl Json {
 
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
+            // lint:allow(float-ordering): exact integer-representability
+            // check — fract() is 0.0 precisely when f is an integer, no
+            // tolerance wanted.
             if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
                 Some(f as u64)
             } else {
@@ -142,6 +145,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
+                // lint:allow(float-ordering): exact integer-
+                // representability check mirroring as_u64 — decides
+                // integer vs decimal rendering, no tolerance wanted.
                 if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {

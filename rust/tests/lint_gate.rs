@@ -1,0 +1,72 @@
+//! Tier-1 gate for the determinism lint: plain `cargo test -q` runs
+//! the full-tree `edgeflow-lint` sweep, so a contract violation fails
+//! the build even without the dedicated CI job.
+//!
+//! Exit-code contract of the `edgeflow-lint` binary (the library API
+//! used here returns the same diagnostics): 0 = clean, 1 = violations
+//! (printed as `file:line:rule: message`), 2 = usage/I-O error.
+
+use std::path::Path;
+
+use edgeflow_lint::{lint_source, lint_tree, Rule};
+
+fn repo_root() -> &'static Path {
+    // CARGO_MANIFEST_DIR is rust/; the repo root is its parent.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ sits inside the repo root")
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let report = lint_tree(repo_root()).expect("tree scan failed");
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        report.clean(),
+        "determinism-lint violations (fix or add a justified \
+         lint:allow pragma):\n{}",
+        rendered.join("\n")
+    );
+    // Sanity: the sweep actually visited the tree (src + tests +
+    // benches + examples + the lint's own sources).
+    assert!(
+        report.files_scanned >= 30,
+        "scan looks truncated: only {} files visited",
+        report.files_scanned
+    );
+}
+
+#[test]
+fn every_suppression_in_tree_carries_a_reason() {
+    // Unjustified pragmas surface as `pragma` diagnostics, so a clean
+    // tree implies every suppression is explained.  Check the count
+    // is nonzero: the fl/runtime unwrap sweep is expected to rely on
+    // justified pragmas, and this guards against the engine silently
+    // ignoring them.
+    let report = lint_tree(repo_root()).expect("tree scan failed");
+    assert!(
+        report.suppressed > 0,
+        "expected at least one justified suppression in the tree"
+    );
+}
+
+#[test]
+fn seeded_violation_is_caught() {
+    // A NaN-unsound ordering smuggled into an aggregation module must
+    // produce a diagnostic — this is the regression test that the
+    // gate actually gates.
+    let bad = "pub fn sel(v: &mut Vec<f32>) {\n    \
+               v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    let out = lint_source("rust/src/fl/aggregate.rs", bad);
+    assert!(
+        out.diagnostics.iter().any(|d| d.rule == Rule::FloatOrdering),
+        "seeded partial_cmp went undetected"
+    );
+
+    let clock = "pub fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    let out = lint_source("rust/src/netsim/sim.rs", clock);
+    assert!(
+        out.diagnostics.iter().any(|d| d.rule == Rule::WallClockInSim),
+        "seeded wall-clock read went undetected"
+    );
+}
