@@ -1,0 +1,854 @@
+//! Layer-2 cross-file contract rules.
+//!
+//! EdgeFLow's resume-bit-identity and export-schema guarantees are
+//! *cross-file* invariants: a struct defined here must round-trip
+//! through an encoder/decoder pair defined there.  The local rules
+//! cannot see that, so these passes consume the item index
+//! ([`crate::items`]) across every analyzed file:
+//!
+//! * **checkpoint-parity** — every field of the checkpointed session
+//!   types (and every named field of the strategy/schedule cursor
+//!   enums) must appear in both its encode and its decode fn body.  A
+//!   field added but not serialized is exactly the bug that breaks
+//!   resume bit-identity.
+//! * **csv-schema-parity** — `METRICS_CSV_HEADER`'s columns must
+//!   match `RoundRecord`'s fields in count, membership and order, and
+//!   every field must be referenced by `csv_fields` in header order.
+//! * **config-surface-parity** — every `ExperimentConfig` field needs
+//!   a JSON emit, a JSON parse arm and a CLI override arm (or a
+//!   `lint:allow(config-surface-parity): reason` pragma on the field).
+//!
+//! Field matching is by word-boundary token over the masked code view
+//! *and* the string-literal view, so both `self.deadline_s` and the
+//! serialized key `"deadline_s"` count.  Same-named fields of sibling
+//! enum variants alias under this scheme — the check errs lenient
+//! there, never noisy.
+//!
+//! Contract anchors are data ([`DEFAULT_PARITY`] etc.); a missing
+//! anchor *type/fn* in a present file is a violation (renames must
+//! update the table), while a missing anchor *file* skips the
+//! contract (explicit-PATH scans never reach these passes at all —
+//! see [`crate::lint_paths`]).
+
+use crate::rules::{count_word, FileAnalysis};
+use crate::Rule;
+
+/// Whether a parity target is a struct or an enum (whose struct-like
+/// variants' named fields are all checked).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TargetKind {
+    Struct,
+    Enum,
+}
+
+/// A function anchor: `name` in `file`, optionally constrained to an
+/// `impl owner` block.
+#[derive(Clone, Copy, Debug)]
+pub struct FnRef {
+    pub file: &'static str,
+    pub name: &'static str,
+    pub owner: Option<&'static str>,
+}
+
+impl FnRef {
+    fn describe(&self) -> String {
+        match self.owner {
+            Some(o) => format!("{}::{} ({})", o, self.name, self.file),
+            None => format!("{} ({})", self.name, self.file),
+        }
+    }
+}
+
+/// One checkpoint-parity contract: `type_name` defined in `def_file`
+/// must have every (variant) field appear in both `encode` and
+/// `decode` bodies.
+#[derive(Clone, Copy, Debug)]
+pub struct ParityContract {
+    pub type_name: &'static str,
+    pub kind: TargetKind,
+    pub def_file: &'static str,
+    pub encode: FnRef,
+    pub decode: FnRef,
+}
+
+/// The csv-schema-parity contract: `header_const` and `record` (with
+/// its `row_fn` encoder) all live in `file`.
+#[derive(Clone, Copy, Debug)]
+pub struct CsvContract {
+    pub record: &'static str,
+    pub file: &'static str,
+    pub header_const: &'static str,
+    pub row_fn: FnRef,
+}
+
+/// The config-surface-parity contract: every field of `type_name`
+/// (defined in `def_file`) must appear in each surface fn.
+#[derive(Clone, Debug)]
+pub struct ConfigContract {
+    pub type_name: &'static str,
+    pub def_file: &'static str,
+    pub surfaces: &'static [(FnRef, &'static str)],
+}
+
+const RUNNER: &str = "rust/src/fl/runner.rs";
+const METRICS: &str = "rust/src/metrics/mod.rs";
+
+/// The checkpointed session state: everything [`Runner::checkpoint`]
+/// persists, straight from PR 3's resume-bit-identity contract.
+pub const DEFAULT_PARITY: [ParityContract; 7] = [
+    ParityContract {
+        type_name: "RunnerCheckpoint",
+        kind: TargetKind::Struct,
+        def_file: RUNNER,
+        encode: FnRef { file: RUNNER, name: "to_json", owner: Some("RunnerCheckpoint") },
+        decode: FnRef { file: RUNNER, name: "from_json", owner: Some("RunnerCheckpoint") },
+    },
+    ParityContract {
+        type_name: "DeferredBlob",
+        kind: TargetKind::Struct,
+        def_file: RUNNER,
+        encode: FnRef { file: RUNNER, name: "to_json", owner: Some("RunnerCheckpoint") },
+        decode: FnRef { file: RUNNER, name: "from_json", owner: Some("RunnerCheckpoint") },
+    },
+    // NetSimState serializes inside the runner checkpoint's "net"
+    // object, not next to its own definition — exactly the cross-file
+    // drift surface this rule exists for.
+    ParityContract {
+        type_name: "NetSimState",
+        kind: TargetKind::Struct,
+        def_file: "rust/src/netsim/sim.rs",
+        encode: FnRef { file: RUNNER, name: "to_json", owner: Some("RunnerCheckpoint") },
+        decode: FnRef { file: RUNNER, name: "from_json", owner: Some("RunnerCheckpoint") },
+    },
+    ParityContract {
+        type_name: "RngState",
+        kind: TargetKind::Struct,
+        def_file: "rust/src/rng/mod.rs",
+        encode: FnRef { file: "rust/src/rng/mod.rs", name: "to_json", owner: Some("RngState") },
+        decode: FnRef { file: "rust/src/rng/mod.rs", name: "from_json", owner: Some("RngState") },
+    },
+    ParityContract {
+        type_name: "RoundRecord",
+        kind: TargetKind::Struct,
+        def_file: METRICS,
+        encode: FnRef { file: METRICS, name: "to_ckpt_json", owner: Some("RoundRecord") },
+        decode: FnRef { file: METRICS, name: "from_ckpt_json", owner: Some("RoundRecord") },
+    },
+    ParityContract {
+        type_name: "Strategy",
+        kind: TargetKind::Enum,
+        def_file: "rust/src/fl/strategy.rs",
+        encode: FnRef {
+            file: "rust/src/fl/strategy.rs",
+            name: "checkpoint",
+            owner: Some("Strategy"),
+        },
+        decode: FnRef {
+            file: "rust/src/fl/strategy.rs",
+            name: "restore",
+            owner: Some("Strategy"),
+        },
+    },
+    ParityContract {
+        type_name: "ClusterSchedule",
+        kind: TargetKind::Enum,
+        def_file: "rust/src/fl/scheduler.rs",
+        encode: FnRef {
+            file: "rust/src/fl/scheduler.rs",
+            name: "checkpoint",
+            owner: Some("ClusterSchedule"),
+        },
+        decode: FnRef {
+            file: "rust/src/fl/scheduler.rs",
+            name: "restore",
+            owner: Some("ClusterSchedule"),
+        },
+    },
+];
+
+/// The metrics CSV schema contract (header const vs row encoder).
+pub const DEFAULT_CSV: [CsvContract; 1] = [CsvContract {
+    record: "RoundRecord",
+    file: METRICS,
+    header_const: "METRICS_CSV_HEADER",
+    row_fn: FnRef { file: METRICS, name: "csv_fields", owner: Some("RoundRecord") },
+}];
+
+/// The config surface contract: JSON emit + JSON parse + CLI override.
+pub const DEFAULT_CONFIG: [ConfigContract; 1] = [ConfigContract {
+    type_name: "ExperimentConfig",
+    def_file: "rust/src/config/mod.rs",
+    surfaces: &[
+        (
+            FnRef {
+                file: "rust/src/config/mod.rs",
+                name: "to_json",
+                owner: Some("ExperimentConfig"),
+            },
+            "JSON emit",
+        ),
+        (
+            FnRef {
+                file: "rust/src/config/mod.rs",
+                name: "from_json",
+                owner: Some("ExperimentConfig"),
+            },
+            "JSON parse arm",
+        ),
+        (
+            FnRef { file: "rust/src/cli/mod.rs", name: "apply_overrides", owner: None },
+            "CLI override arm",
+        ),
+    ],
+}];
+
+/// Run every default contract over the analyzed tree.
+pub fn apply(analyses: &mut [FileAnalysis]) {
+    apply_with(analyses, &DEFAULT_PARITY, &DEFAULT_CSV, &DEFAULT_CONFIG);
+}
+
+/// Run explicit contract tables (the fixture tests drive this with
+/// synthetic tables; [`apply`] is the production entry point).
+pub fn apply_with(
+    analyses: &mut [FileAnalysis],
+    parity: &[ParityContract],
+    csv: &[CsvContract],
+    config: &[ConfigContract],
+) {
+    let mut findings: Vec<(usize, usize, Rule, String)> = Vec::new();
+    for c in parity {
+        check_parity(analyses, c, &mut findings);
+    }
+    for c in csv {
+        check_csv(analyses, c, &mut findings);
+    }
+    for c in config {
+        check_config(analyses, c, &mut findings);
+    }
+    for (file_idx, line_idx, rule, message) in findings {
+        analyses[file_idx].report(line_idx, rule, message);
+    }
+}
+
+fn idx_of(analyses: &[FileAnalysis], rel: &str) -> Option<usize> {
+    analyses.iter().position(|fa| fa.rel == rel)
+}
+
+/// Whether `word` appears (word-bounded) in the fn-body span of the
+/// file — in the masked code view or the string-literal view.
+fn span_contains(fa: &FileAnalysis, span: (usize, usize), word: &str) -> bool {
+    let lo = span.0.saturating_sub(1);
+    let hi = span.1.min(fa.code.len());
+    for i in lo..hi {
+        if count_word(&fa.code[i], word) > 0 || count_word(&fa.strings[i], word) > 0 {
+            return true;
+        }
+    }
+    false
+}
+
+/// Resolve a fn anchor to (analysis index, body span).  On failure,
+/// push a violation at `anchor_line` of `anchor_idx` and return None.
+fn resolve_fn(
+    analyses: &[FileAnalysis],
+    fr: &FnRef,
+    rule: Rule,
+    anchor_idx: usize,
+    anchor_line: usize,
+    findings: &mut Vec<(usize, usize, Rule, String)>,
+) -> Option<(usize, (usize, usize))> {
+    let i = match idx_of(analyses, fr.file) {
+        Some(i) => i,
+        None => return None, // anchor file outside the scanned set
+    };
+    match analyses[i].items.fn_named(fr.name, fr.owner) {
+        Some(f) => match f.body {
+            Some(span) => Some((i, span)),
+            None => {
+                findings.push((
+                    anchor_idx,
+                    anchor_line,
+                    rule,
+                    format!("contract fn {} has no body to check", fr.describe()),
+                ));
+                None
+            }
+        },
+        None => {
+            findings.push((
+                anchor_idx,
+                anchor_line,
+                rule,
+                format!(
+                    "contract fn {} not found — if it moved or was renamed, \
+                     update the contract table in lint/src/contracts.rs",
+                    fr.describe()
+                ),
+            ));
+            None
+        }
+    }
+}
+
+/// The fields a parity target contributes: a struct's named fields,
+/// or every named field of every variant of an enum.
+fn target_fields(
+    fa: &FileAnalysis,
+    type_name: &str,
+    kind: TargetKind,
+) -> Option<(usize, Vec<(String, usize)>)> {
+    match kind {
+        TargetKind::Struct => fa.items.struct_named(type_name).map(|s| {
+            (
+                s.line,
+                s.fields.iter().map(|f| (f.name.clone(), f.line)).collect(),
+            )
+        }),
+        TargetKind::Enum => fa.items.enum_named(type_name).map(|e| {
+            (
+                e.line,
+                e.variants
+                    .iter()
+                    .flat_map(|v| v.fields.iter().map(|f| (f.name.clone(), f.line)))
+                    .collect(),
+            )
+        }),
+    }
+}
+
+fn check_parity(
+    analyses: &[FileAnalysis],
+    c: &ParityContract,
+    findings: &mut Vec<(usize, usize, Rule, String)>,
+) {
+    let def_i = match idx_of(analyses, c.def_file) {
+        Some(i) => i,
+        None => return,
+    };
+    let (type_line, fields) =
+        match target_fields(&analyses[def_i], c.type_name, c.kind) {
+            Some(x) => x,
+            None => {
+                findings.push((
+                    def_i,
+                    0,
+                    Rule::CheckpointParity,
+                    format!(
+                        "contract type `{}` not found in {} — if it moved or \
+                         was renamed, update the contract table in \
+                         lint/src/contracts.rs",
+                        c.type_name, c.def_file
+                    ),
+                ));
+                return;
+            }
+        };
+    let anchor = type_line - 1;
+    let enc = resolve_fn(
+        analyses,
+        &c.encode,
+        Rule::CheckpointParity,
+        def_i,
+        anchor,
+        findings,
+    );
+    let dec = resolve_fn(
+        analyses,
+        &c.decode,
+        Rule::CheckpointParity,
+        def_i,
+        anchor,
+        findings,
+    );
+    for (name, line) in &fields {
+        for (side, resolved, fr) in
+            [("encode", enc, &c.encode), ("decode", dec, &c.decode)]
+        {
+            let (fn_i, span) = match resolved {
+                Some(x) => x,
+                None => continue,
+            };
+            if !span_contains(&analyses[fn_i], span, name) {
+                findings.push((
+                    def_i,
+                    line - 1,
+                    Rule::CheckpointParity,
+                    format!(
+                        "field `{}` of {} never appears in its {} fn {} — a \
+                         field that skips serialization breaks resume \
+                         bit-identity (serialize it, or justify with \
+                         lint:allow(checkpoint-parity))",
+                        name,
+                        c.type_name,
+                        side,
+                        fr.describe()
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Ordered `self.<field>` references in a fn body (first occurrence
+/// per field), from the masked code view.
+fn self_field_refs(fa: &FileAnalysis, span: (usize, usize)) -> Vec<String> {
+    let mut refs: Vec<String> = Vec::new();
+    let lo = span.0.saturating_sub(1);
+    let hi = span.1.min(fa.code.len());
+    for line in &fa.code[lo..hi] {
+        let bytes = line.as_bytes();
+        let mut start = 0;
+        while let Some(p) = line[start..].find("self.") {
+            let p = start + p;
+            let before_ok = p == 0
+                || !(bytes[p - 1].is_ascii_alphanumeric() || bytes[p - 1] == b'_');
+            let mut end = p + "self.".len();
+            while end < bytes.len()
+                && (bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_')
+            {
+                end += 1;
+            }
+            let name = &line[p + "self.".len()..end];
+            if before_ok && !name.is_empty() && !refs.iter().any(|r| r == name) {
+                refs.push(name.to_string());
+            }
+            start = p + "self.".len();
+        }
+    }
+    refs
+}
+
+/// Header columns in declaration order: whitespace-separated tokens
+/// of the string-literal view over the const's span.
+fn header_columns(fa: &FileAnalysis, span: (usize, usize)) -> Vec<(String, usize)> {
+    let mut cols = Vec::new();
+    let lo = span.0.saturating_sub(1);
+    let hi = span.1.min(fa.strings.len());
+    for i in lo..hi {
+        for tok in fa.strings[i].split_whitespace() {
+            cols.push((tok.to_string(), i));
+        }
+    }
+    cols
+}
+
+fn check_csv(
+    analyses: &[FileAnalysis],
+    c: &CsvContract,
+    findings: &mut Vec<(usize, usize, Rule, String)>,
+) {
+    let i = match idx_of(analyses, c.file) {
+        Some(i) => i,
+        None => return,
+    };
+    let fa = &analyses[i];
+    let rec = match fa.items.struct_named(c.record) {
+        Some(r) => r,
+        None => {
+            findings.push((
+                i,
+                0,
+                Rule::CsvSchemaParity,
+                format!("contract type `{}` not found in {}", c.record, c.file),
+            ));
+            return;
+        }
+    };
+    let hc = match fa.items.const_named(c.header_const) {
+        Some(h) => h,
+        None => {
+            findings.push((
+                i,
+                rec.line - 1,
+                Rule::CsvSchemaParity,
+                format!("header const `{}` not found in {}", c.header_const, c.file),
+            ));
+            return;
+        }
+    };
+    let row = match resolve_fn(analyses, &c.row_fn, Rule::CsvSchemaParity, i, rec.line - 1, findings)
+    {
+        Some((ri, span)) => {
+            debug_assert_eq!(ri, i);
+            Some(span)
+        }
+        None => None,
+    };
+
+    let cols = header_columns(fa, hc.span);
+    let fields: Vec<(&str, usize)> = rec
+        .fields
+        .iter()
+        .map(|f| (f.name.as_str(), f.line))
+        .collect();
+
+    if cols.len() != fields.len() {
+        findings.push((
+            i,
+            hc.line - 1,
+            Rule::CsvSchemaParity,
+            format!(
+                "{} has {} columns but {} has {} fields — header and record \
+                 must stay in lockstep",
+                c.header_const,
+                cols.len(),
+                c.record,
+                fields.len()
+            ),
+        ));
+    }
+    for (name, line) in &fields {
+        if !cols.iter().any(|(col, _)| col == name) {
+            findings.push((
+                i,
+                line - 1,
+                Rule::CsvSchemaParity,
+                format!(
+                    "field `{}` of {} has no {} column — exports would \
+                     silently drop it",
+                    name, c.record, c.header_const
+                ),
+            ));
+        }
+    }
+    for (col, col_line) in &cols {
+        if !fields.iter().any(|(name, _)| name == col) {
+            findings.push((
+                i,
+                *col_line,
+                Rule::CsvSchemaParity,
+                format!(
+                    "{} column \"{}\" matches no {} field",
+                    c.header_const, col, c.record
+                ),
+            ));
+        }
+    }
+    if let Some(span) = row {
+        let refs = self_field_refs(fa, span);
+        for (name, line) in &fields {
+            if !refs.iter().any(|r| r == name) {
+                findings.push((
+                    i,
+                    line - 1,
+                    Rule::CsvSchemaParity,
+                    format!(
+                        "field `{}` of {} is never referenced by {} — the \
+                         row encoder would emit a short or stale row",
+                        name,
+                        c.record,
+                        c.row_fn.describe()
+                    ),
+                ));
+            }
+        }
+        // Column order must match the encoder's reference order.
+        for (k, (col, _)) in cols.iter().enumerate() {
+            match refs.get(k) {
+                Some(r) if r == col => {}
+                Some(r) => {
+                    findings.push((
+                        i,
+                        hc.line - 1,
+                        Rule::CsvSchemaParity,
+                        format!(
+                            "column order diverges at position {k}: header \
+                             says \"{col}\" but {} emits `self.{r}` there",
+                            c.row_fn.describe()
+                        ),
+                    ));
+                    break;
+                }
+                None => break, // count mismatch already reported
+            }
+        }
+    }
+}
+
+fn check_config(
+    analyses: &[FileAnalysis],
+    c: &ConfigContract,
+    findings: &mut Vec<(usize, usize, Rule, String)>,
+) {
+    let def_i = match idx_of(analyses, c.def_file) {
+        Some(i) => i,
+        None => return,
+    };
+    let (type_line, fields) =
+        match target_fields(&analyses[def_i], c.type_name, TargetKind::Struct) {
+            Some(x) => x,
+            None => {
+                findings.push((
+                    def_i,
+                    0,
+                    Rule::ConfigSurfaceParity,
+                    format!(
+                        "contract type `{}` not found in {}",
+                        c.type_name, c.def_file
+                    ),
+                ));
+                return;
+            }
+        };
+    for (fr, what) in c.surfaces {
+        let (fn_i, span) = match resolve_fn(
+            analyses,
+            fr,
+            Rule::ConfigSurfaceParity,
+            def_i,
+            type_line - 1,
+            findings,
+        ) {
+            Some(x) => x,
+            None => continue,
+        };
+        for (name, line) in &fields {
+            if !span_contains(&analyses[fn_i], span, name) {
+                findings.push((
+                    def_i,
+                    line - 1,
+                    Rule::ConfigSurfaceParity,
+                    format!(
+                        "field `{}` of {} has no {} in {} — wire the field \
+                         through, or justify the gap with \
+                         lint:allow(config-surface-parity)",
+                        name,
+                        c.type_name,
+                        what,
+                        fr.describe()
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::analyze;
+
+    const PARITY: [ParityContract; 1] = [ParityContract {
+        type_name: "Snap",
+        kind: TargetKind::Struct,
+        def_file: "rust/src/fl/snap.rs",
+        encode: FnRef { file: "rust/src/fl/snap.rs", name: "enc", owner: Some("Snap") },
+        decode: FnRef { file: "rust/src/fl/snap.rs", name: "dec", owner: Some("Snap") },
+    }];
+
+    fn run_parity(src: &str) -> Vec<crate::Diagnostic> {
+        let mut analyses = vec![analyze("rust/src/fl/snap.rs", src)];
+        apply_with(&mut analyses, &PARITY, &[], &[]);
+        let mut fa = analyses.pop().expect("one analysis");
+        fa.finish();
+        fa.diagnostics
+    }
+
+    #[test]
+    fn parity_flags_field_missing_from_decode() {
+        let src = "\
+pub struct Snap {
+    pub cursor: usize,
+    pub clock: f64,
+}
+impl Snap {
+    pub fn enc(&self) -> String {
+        format_pair(self.cursor, self.clock)
+    }
+    pub fn dec(s: &str) -> Snap {
+        Snap { cursor: parse(s), clock: 0.0 }
+    }
+}
+";
+        assert!(run_parity(src).is_empty());
+
+        // Drop the decode-side mention of `clock` (clock_default does
+        // not word-match the field name).
+        let drifted = src.replace("clock: 0.0", "clock_default()");
+        let diags = run_parity(&drifted);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, crate::Rule::CheckpointParity);
+        assert_eq!(diags[0].line, 3); // the `clock` field line
+        assert!(diags[0].message.contains("decode"));
+    }
+
+    #[test]
+    fn parity_sees_string_keys() {
+        // The field only appears as a serialized key "clock" in enc —
+        // the string view must make that count.
+        let src = "\
+pub struct Snap {
+    pub clock: f64,
+}
+impl Snap {
+    pub fn enc(&self) -> String {
+        emit(\"clock\", hex(self.clock_value()))
+    }
+    pub fn dec(s: &str) -> Snap {
+        Snap { clock: parse(s) }
+    }
+}
+";
+        assert!(run_parity(src).is_empty());
+    }
+
+    #[test]
+    fn parity_enum_checks_variant_fields() {
+        let contracts = [ParityContract {
+            type_name: "Cur",
+            kind: TargetKind::Enum,
+            def_file: "rust/src/fl/snap.rs",
+            encode: FnRef { file: "rust/src/fl/snap.rs", name: "enc", owner: Some("Cur") },
+            decode: FnRef { file: "rust/src/fl/snap.rs", name: "dec", owner: Some("Cur") },
+        }];
+        let src = "\
+pub enum Cur {
+    Seq { cursor: usize, skipped: usize },
+    Plain,
+}
+impl Cur {
+    pub fn enc(&self) -> String {
+        emit(\"cursor\")
+    }
+    pub fn dec(s: &str) -> Cur {
+        read(\"cursor\", s)
+    }
+}
+";
+        let mut analyses = vec![analyze("rust/src/fl/snap.rs", src)];
+        apply_with(&mut analyses, &contracts, &[], &[]);
+        let diags = &analyses[0].diagnostics;
+        // `skipped` missing from both enc and dec.
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().all(|d| d.line == 2));
+    }
+
+    #[test]
+    fn parity_flags_renamed_anchor_fn() {
+        let src = "\
+pub struct Snap {
+    pub cursor: usize,
+}
+impl Snap {
+    pub fn encode_v2(&self) -> String {
+        hex(self.cursor)
+    }
+    pub fn dec(s: &str) -> Snap {
+        Snap { cursor: parse(s) }
+    }
+}
+";
+        let diags = run_parity(src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].message.contains("not found"));
+    }
+
+    const CSV: [CsvContract; 1] = [CsvContract {
+        record: "Row",
+        file: "rust/src/metrics/mod.rs",
+        header_const: "HDR",
+        row_fn: FnRef { file: "rust/src/metrics/mod.rs", name: "csv_fields", owner: Some("Row") },
+    }];
+
+    fn run_csv(src: &str) -> Vec<crate::Diagnostic> {
+        let mut analyses = vec![analyze("rust/src/metrics/mod.rs", src)];
+        apply_with(&mut analyses, &[], &CSV, &[]);
+        let mut fa = analyses.pop().expect("one analysis");
+        fa.finish();
+        fa.diagnostics
+    }
+
+    #[test]
+    fn csv_clean_when_header_matches() {
+        let src = "\
+pub struct Row {
+    pub round: usize,
+    pub loss: f64,
+}
+pub const HDR: [&str; 2] = [\"round\", \"loss\"];
+impl Row {
+    pub fn csv_fields(&self) -> Vec<String> {
+        vec![self.round.to_string(), self.loss.to_string()]
+    }
+}
+";
+        assert!(run_csv(src).is_empty());
+    }
+
+    #[test]
+    fn csv_flags_count_membership_and_order() {
+        // Header misses `loss`, carries a phantom `lost`, and the
+        // encoder emits loss where the header says lost.
+        let src = "\
+pub struct Row {
+    pub round: usize,
+    pub loss: f64,
+}
+pub const HDR: [&str; 2] = [\"round\", \"lost\"];
+impl Row {
+    pub fn csv_fields(&self) -> Vec<String> {
+        vec![self.round.to_string(), self.loss.to_string()]
+    }
+}
+";
+        let diags = run_csv(src);
+        let msgs: Vec<&str> = diags.iter().map(|d| d.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("no HDR column")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("matches no Row field")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("order diverges")), "{msgs:?}");
+    }
+
+    #[test]
+    fn config_surface_checks_each_surface() {
+        let config_src = "\
+pub struct Cfg {
+    pub rounds: usize,
+    pub fresh: f64,
+}
+impl Cfg {
+    pub fn to_json(&self) -> String {
+        emit(\"rounds\", self.rounds, \"fresh\", self.fresh)
+    }
+    pub fn from_json(s: &str) -> Cfg {
+        Cfg { rounds: get(s, \"rounds\"), fresh: get(s, \"fresh\") }
+    }
+}
+";
+        let cli_src = "\
+pub fn apply_overrides(mut cfg: Cfg) -> Cfg {
+    cfg.rounds = flag(\"rounds\");
+    cfg
+}
+";
+        const SURFACES: &[(FnRef, &'static str)] = &[
+            (
+                FnRef { file: "rust/src/config/mod.rs", name: "to_json", owner: Some("Cfg") },
+                "JSON emit",
+            ),
+            (
+                FnRef { file: "rust/src/config/mod.rs", name: "from_json", owner: Some("Cfg") },
+                "JSON parse arm",
+            ),
+            (
+                FnRef { file: "rust/src/cli/mod.rs", name: "apply_overrides", owner: None },
+                "CLI override arm",
+            ),
+        ];
+        let contracts = [ConfigContract {
+            type_name: "Cfg",
+            def_file: "rust/src/config/mod.rs",
+            surfaces: SURFACES,
+        }];
+        let mut analyses = vec![
+            analyze("rust/src/config/mod.rs", config_src),
+            analyze("rust/src/cli/mod.rs", cli_src),
+        ];
+        apply_with(&mut analyses, &[], &[], &contracts);
+        let diags = &analyses[0].diagnostics;
+        // `fresh` has JSON emit + parse but no CLI arm.
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, crate::Rule::ConfigSurfaceParity);
+        assert_eq!(diags[0].line, 3);
+        assert!(diags[0].message.contains("CLI override arm"));
+    }
+}

@@ -1,0 +1,980 @@
+//! Layer-1 item-level parser: structs with named fields, enum
+//! variants (including struct-like variant fields), fn signatures
+//! with impl owners and body spans, consts with value spans, and
+//! `match` arm heads — extracted from the masked code view with
+//! brace/bracket tracking.  Deliberately *not* a full AST: the
+//! contract rules in [`crate::contracts`] only need names, lines and
+//! spans, and a token-level scan stays robust on an offline,
+//! dependency-free build.
+//!
+//! Known (accepted) limits, chosen for simplicity over generality:
+//! nested `match` arms inside another arm's body are not extracted,
+//! and shift operators inside type-position const expressions
+//! (`[u64; 1 << 4]`) would confuse the angle-bracket counter — the
+//! codebase writes neither.
+
+/// A named field of a struct or struct-like enum variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    /// 1-based source line of the field declaration.
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct StructItem {
+    pub name: String,
+    pub line: usize,
+    /// Named fields; empty for tuple and unit structs.
+    pub fields: Vec<Field>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub line: usize,
+    /// Named fields of a struct-like variant; empty otherwise.
+    pub fields: Vec<Field>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EnumItem {
+    pub name: String,
+    pub line: usize,
+    pub variants: Vec<Variant>,
+}
+
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// The implementing type when the fn sits in an `impl` block
+    /// (`impl Foo` and `impl Trait for Foo` both yield `Foo`).
+    pub owner: Option<String>,
+    pub line: usize,
+    /// Body span as inclusive 1-based lines (opening `{` line to the
+    /// matching `}` line); `None` for body-less trait signatures.
+    pub body: Option<(usize, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConstItem {
+    pub name: String,
+    pub line: usize,
+    /// Inclusive 1-based lines from `const` to its terminating `;`.
+    pub span: (usize, usize),
+}
+
+#[derive(Clone, Debug)]
+pub struct MatchArm {
+    /// 1-based line of the arm's first pattern token.
+    pub line: usize,
+    /// The pattern-and-guard text before `=>`, tokens joined by one
+    /// space (`Some ( x ) if x > 0`).
+    pub head: String,
+}
+
+/// Everything the item parser extracts from one file.
+#[derive(Default)]
+pub struct FileItems {
+    pub structs: Vec<StructItem>,
+    pub enums: Vec<EnumItem>,
+    pub fns: Vec<FnItem>,
+    pub consts: Vec<ConstItem>,
+    pub match_arms: Vec<MatchArm>,
+}
+
+impl FileItems {
+    /// Look up a struct by name.
+    pub fn struct_named(&self, name: &str) -> Option<&StructItem> {
+        self.structs.iter().find(|s| s.name == name)
+    }
+
+    /// Look up an enum by name.
+    pub fn enum_named(&self, name: &str) -> Option<&EnumItem> {
+        self.enums.iter().find(|e| e.name == name)
+    }
+
+    /// Look up a fn by name, optionally constrained to an impl owner.
+    /// With `owner: None` any fn of that name matches (first wins —
+    /// the lexical order is deterministic).
+    pub fn fn_named(&self, name: &str, owner: Option<&str>) -> Option<&FnItem> {
+        self.fns.iter().find(|f| {
+            f.name == name
+                && match owner {
+                    Some(o) => f.owner.as_deref() == Some(o),
+                    None => true,
+                }
+        })
+    }
+
+    /// Look up a const by name.
+    pub fn const_named(&self, name: &str) -> Option<&ConstItem> {
+        self.consts.iter().find(|c| c.name == name)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+}
+
+struct Token {
+    tok: Tok,
+    /// 1-based source line.
+    line: usize,
+}
+
+fn lex(code: &[String]) -> Vec<Token> {
+    let mut toks = Vec::new();
+    for (idx, line) in code.iter().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if c.is_ascii_alphanumeric() || c == '_' {
+                let start = i;
+                while i < chars.len()
+                    && (chars[i].is_ascii_alphanumeric() || chars[i] == '_')
+                {
+                    i += 1;
+                }
+                toks.push(Token {
+                    tok: Tok::Ident(chars[start..i].iter().collect()),
+                    line: idx + 1,
+                });
+            } else {
+                toks.push(Token {
+                    tok: Tok::Punct(c),
+                    line: idx + 1,
+                });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self, k: usize) -> Option<&'a Token> {
+        self.toks.get(self.i + k)
+    }
+
+    fn is_punct(&self, k: usize, c: char) -> bool {
+        matches!(self.peek(k), Some(t) if t.tok == Tok::Punct(c))
+    }
+
+    fn is_kw(&self, k: usize, w: &str) -> bool {
+        matches!(self.peek(k), Some(t) if matches!(&t.tok, Tok::Ident(s) if s == w))
+    }
+
+    fn bump(&mut self) -> Option<&'a Token> {
+        let t = self.toks.get(self.i);
+        if t.is_some() {
+            self.i += 1;
+        }
+        t
+    }
+
+    /// Consume an identifier token, returning it.
+    fn ident(&mut self) -> Option<(&'a str, usize)> {
+        match self.peek(0) {
+            Some(t) => match &t.tok {
+                Tok::Ident(s) => {
+                    self.i += 1;
+                    Some((s.as_str(), t.line))
+                }
+                Tok::Punct(_) => None,
+            },
+            None => None,
+        }
+    }
+
+    /// Skip `#[…]` attributes (any number).
+    fn skip_attrs(&mut self) {
+        while self.is_punct(0, '#') && self.is_punct(1, '[') {
+            self.bump();
+            self.skip_balanced('[', ']');
+        }
+    }
+
+    /// Starting at an `open` token, consume through its matching
+    /// `close`.  Returns the line of the close (or the last token's
+    /// line on malformed input).
+    fn skip_balanced(&mut self, open: char, close: char) -> usize {
+        let mut depth = 0i64;
+        let mut last = self.peek(0).map(|t| t.line).unwrap_or(0);
+        while let Some(t) = self.bump() {
+            last = t.line;
+            match t.tok {
+                Tok::Punct(c) if c == open => depth += 1,
+                Tok::Punct(c) if c == close => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return last;
+                    }
+                }
+                _ => {}
+            }
+        }
+        last
+    }
+
+    /// Skip a generic parameter/argument list starting at `<`.  `->`
+    /// inside `Fn() -> T` bounds must not close the list, so a `>`
+    /// directly preceded by `-` is not counted.
+    fn skip_generics(&mut self) {
+        let mut depth = 0i64;
+        let mut prev_minus = false;
+        while let Some(t) = self.bump() {
+            match t.tok {
+                Tok::Punct('<') => {
+                    depth += 1;
+                    prev_minus = false;
+                }
+                Tok::Punct('>') => {
+                    if prev_minus {
+                        prev_minus = false;
+                        continue;
+                    }
+                    depth -= 1;
+                    if depth == 0 {
+                        return;
+                    }
+                }
+                Tok::Punct('-') => prev_minus = true,
+                _ => prev_minus = false,
+            }
+        }
+    }
+
+    /// Skip a field's type up to (and through) the `,` that ends it,
+    /// or up to — but not through — the `}` that closes the body.
+    /// Parens, brackets, braces and generics are tracked so commas
+    /// inside `BTreeMap<usize, f64>` or `(f64, f64)` don't end the
+    /// field early.
+    fn skip_field_type(&mut self) {
+        let mut paren = 0i64;
+        let mut bracket = 0i64;
+        let mut brace = 0i64;
+        let mut angle = 0i64;
+        let mut prev_minus = false;
+        while let Some(t) = self.peek(0) {
+            match t.tok {
+                Tok::Punct(',')
+                    if paren == 0 && bracket == 0 && brace == 0 && angle == 0 =>
+                {
+                    self.bump();
+                    return;
+                }
+                Tok::Punct('}') if paren == 0 && bracket == 0 && angle == 0 => {
+                    if brace == 0 {
+                        return;
+                    }
+                    brace -= 1;
+                    self.bump();
+                    prev_minus = false;
+                    continue;
+                }
+                _ => {}
+            }
+            let t = match self.bump() {
+                Some(t) => t,
+                None => return,
+            };
+            match t.tok {
+                Tok::Punct('(') => paren += 1,
+                Tok::Punct(')') => paren -= 1,
+                Tok::Punct('[') => bracket += 1,
+                Tok::Punct(']') => bracket -= 1,
+                Tok::Punct('{') => brace += 1,
+                Tok::Punct('<') => angle += 1,
+                Tok::Punct('>') => {
+                    if prev_minus {
+                        prev_minus = false;
+                        continue;
+                    }
+                    angle -= 1;
+                }
+                _ => {}
+            }
+            prev_minus = matches!(t.tok, Tok::Punct('-'));
+        }
+    }
+}
+
+/// Parse one file's masked code view into its item index.
+pub fn parse_items(code: &[String]) -> FileItems {
+    let toks = lex(code);
+    let mut p = Parser { toks: &toks, i: 0 };
+    let mut items = FileItems::default();
+    // (owner of the enclosing impl, brace depth just outside it)
+    let mut impl_stack: Vec<(Option<String>, i64)> = Vec::new();
+    let mut depth = 0i64;
+
+    while let Some(t) = p.peek(0) {
+        match &t.tok {
+            Tok::Punct('{') => {
+                depth += 1;
+                p.bump();
+            }
+            Tok::Punct('}') => {
+                depth -= 1;
+                if let Some(&(_, d)) = impl_stack.last() {
+                    if depth == d {
+                        impl_stack.pop();
+                    }
+                }
+                p.bump();
+            }
+            Tok::Punct('#') if p.is_punct(1, '[') => {
+                p.bump();
+                p.skip_balanced('[', ']');
+            }
+            Tok::Ident(w) if w == "struct" => parse_struct(&mut p, &mut items),
+            Tok::Ident(w) if w == "enum" => parse_enum(&mut p, &mut items),
+            Tok::Ident(w) if w == "fn" => {
+                let owner = impl_stack
+                    .last()
+                    .and_then(|(o, _)| o.clone());
+                parse_fn(&mut p, &mut items, owner);
+            }
+            Tok::Ident(w) if w == "impl" => {
+                let owner = parse_impl_header(&mut p);
+                impl_stack.push((owner, depth));
+            }
+            Tok::Ident(w) if w == "const" => parse_const(&mut p, &mut items),
+            Tok::Ident(w) if w == "match" => parse_match(&mut p, &mut items),
+            _ => {
+                p.bump();
+            }
+        }
+    }
+    items
+}
+
+/// Parse the named fields of a `{ … }` body, cursor on the `{`.
+/// Consumes through the closing `}`.
+fn parse_named_fields(p: &mut Parser<'_>, out: &mut Vec<Field>) {
+    p.bump(); // `{`
+    loop {
+        p.skip_attrs();
+        if p.is_punct(0, '}') {
+            p.bump();
+            return;
+        }
+        if p.is_kw(0, "pub") {
+            p.bump();
+            if p.is_punct(0, '(') {
+                p.skip_balanced('(', ')');
+            }
+        }
+        // A named field is `ident :` with a single colon (`::` would
+        // be a path, which cannot start a field).
+        let is_field = matches!(p.peek(0), Some(t) if matches!(t.tok, Tok::Ident(_)))
+            && p.is_punct(1, ':')
+            && !p.is_punct(2, ':');
+        if is_field {
+            if let Some((name, line)) = p.ident() {
+                out.push(Field {
+                    name: name.to_string(),
+                    line,
+                });
+            }
+            p.bump(); // `:`
+            p.skip_field_type();
+        } else if p.bump().is_none() {
+            return;
+        }
+    }
+}
+
+fn parse_struct(p: &mut Parser<'_>, items: &mut FileItems) {
+    p.bump(); // `struct`
+    let (name, line) = match p.ident() {
+        Some(x) => x,
+        None => return,
+    };
+    if p.is_punct(0, '<') {
+        p.skip_generics();
+    }
+    let mut fields = Vec::new();
+    if p.is_punct(0, '(') {
+        // Tuple struct: skip the tuple, then everything up to `;`.
+        p.skip_balanced('(', ')');
+        while let Some(t) = p.peek(0) {
+            if t.tok == Tok::Punct(';') {
+                p.bump();
+                break;
+            }
+            p.bump();
+        }
+    } else {
+        // Optional where clause before the body.
+        while let Some(t) = p.peek(0) {
+            match &t.tok {
+                Tok::Punct('{') | Tok::Punct(';') => break,
+                Tok::Punct('<') => {
+                    p.skip_generics();
+                }
+                _ => {
+                    p.bump();
+                }
+            }
+        }
+        if p.is_punct(0, '{') {
+            parse_named_fields(p, &mut fields);
+        } else {
+            p.bump(); // unit struct `;`
+        }
+    }
+    items.structs.push(StructItem {
+        name: name.to_string(),
+        line,
+        fields,
+    });
+}
+
+fn parse_enum(p: &mut Parser<'_>, items: &mut FileItems) {
+    p.bump(); // `enum`
+    let (name, line) = match p.ident() {
+        Some(x) => x,
+        None => return,
+    };
+    if p.is_punct(0, '<') {
+        p.skip_generics();
+    }
+    while let Some(t) = p.peek(0) {
+        match &t.tok {
+            Tok::Punct('{') => break,
+            Tok::Punct('<') => {
+                p.skip_generics();
+            }
+            _ => {
+                p.bump();
+            }
+        }
+    }
+    if !p.is_punct(0, '{') {
+        return;
+    }
+    p.bump(); // `{`
+    let mut variants = Vec::new();
+    loop {
+        p.skip_attrs();
+        if p.is_punct(0, '}') {
+            p.bump();
+            break;
+        }
+        let (vname, vline) = match p.ident() {
+            Some(x) => x,
+            None => {
+                if p.bump().is_none() {
+                    break;
+                }
+                continue;
+            }
+        };
+        let mut fields = Vec::new();
+        if p.is_punct(0, '(') {
+            p.skip_balanced('(', ')');
+        } else if p.is_punct(0, '{') {
+            parse_named_fields(p, &mut fields);
+        }
+        if p.is_punct(0, '=') {
+            // Explicit discriminant: skip to the variant separator.
+            while let Some(t) = p.peek(0) {
+                match t.tok {
+                    Tok::Punct(',') | Tok::Punct('}') => break,
+                    _ => {
+                        p.bump();
+                    }
+                }
+            }
+        }
+        if p.is_punct(0, ',') {
+            p.bump();
+        }
+        variants.push(Variant {
+            name: vname.to_string(),
+            line: vline,
+            fields,
+        });
+    }
+    items.enums.push(EnumItem {
+        name: name.to_string(),
+        line,
+        variants,
+    });
+}
+
+fn parse_fn(p: &mut Parser<'_>, items: &mut FileItems, owner: Option<String>) {
+    p.bump(); // `fn`
+    let (name, line) = match p.ident() {
+        Some(x) => x,
+        None => return, // `fn`-pointer type in expression position
+    };
+    if p.is_punct(0, '<') {
+        p.skip_generics();
+    }
+    if !p.is_punct(0, '(') {
+        return;
+    }
+    p.skip_balanced('(', ')');
+    // Return type / where clause: scan to the body `{` or a trait
+    // signature's `;`.
+    let mut body = None;
+    loop {
+        match p.peek(0) {
+            None => break,
+            Some(t) => match &t.tok {
+                Tok::Punct(';') => {
+                    p.bump();
+                    break;
+                }
+                Tok::Punct('{') => {
+                    // Find the matching close by lookahead without
+                    // consuming — the main loop walks *into* fn
+                    // bodies so nested items and match arms are
+                    // still extracted.
+                    let start = t.line;
+                    let mut d = 0i64;
+                    let mut end = start;
+                    for tt in &p.toks[p.i..] {
+                        match tt.tok {
+                            Tok::Punct('{') => d += 1,
+                            Tok::Punct('}') => {
+                                d -= 1;
+                                if d == 0 {
+                                    end = tt.line;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    body = Some((start, end));
+                    break;
+                }
+                Tok::Punct('<') => {
+                    p.skip_generics();
+                }
+                Tok::Punct('(') => {
+                    p.skip_balanced('(', ')');
+                }
+                Tok::Punct('[') => {
+                    p.skip_balanced('[', ']');
+                }
+                _ => {
+                    p.bump();
+                }
+            },
+        }
+    }
+    items.fns.push(FnItem {
+        name: name.to_string(),
+        owner,
+        line,
+        body,
+    });
+}
+
+/// Parse an `impl` header up to — but not through — its `{`, and
+/// return the implementing type's last path segment (`impl Foo` and
+/// `impl fmt::Display for Foo` both yield `Foo`).
+fn parse_impl_header(p: &mut Parser<'_>) -> Option<String> {
+    p.bump(); // `impl`
+    if p.is_punct(0, '<') {
+        p.skip_generics();
+    }
+    let mut owner: Option<String> = None;
+    let mut done = false;
+    while let Some(t) = p.peek(0) {
+        match &t.tok {
+            Tok::Punct('{') => break,
+            Tok::Punct(';') => break, // `impl Trait for Type;` (never written, be safe)
+            Tok::Punct('<') => {
+                p.skip_generics();
+            }
+            Tok::Punct('(') => {
+                p.skip_balanced('(', ')');
+            }
+            Tok::Ident(w) if w == "for" => {
+                owner = None;
+                p.bump();
+            }
+            Tok::Ident(w) if w == "where" => {
+                done = true;
+                p.bump();
+            }
+            Tok::Ident(w) => {
+                if !done {
+                    owner = Some(w.clone());
+                }
+                p.bump();
+            }
+            _ => {
+                p.bump();
+            }
+        }
+    }
+    owner
+}
+
+fn parse_const(p: &mut Parser<'_>, items: &mut FileItems) {
+    // `const fn` is a fn; leave the `fn` for the main loop.
+    if p.is_kw(1, "fn") {
+        p.bump();
+        return;
+    }
+    let start = p.peek(0).map(|t| t.line).unwrap_or(1);
+    p.bump(); // `const`
+    let (name, line) = match p.ident() {
+        Some(x) => x,
+        None => return,
+    };
+    let name = name.to_string();
+    // Consume to the terminating `;` at depth 0; a `;` inside the
+    // value's braces/brackets (const blocks, `[u8; 4]` types) is
+    // nested and doesn't terminate.
+    let mut paren = 0i64;
+    let mut bracket = 0i64;
+    let mut brace = 0i64;
+    let mut end = line;
+    while let Some(t) = p.bump() {
+        end = t.line;
+        match t.tok {
+            Tok::Punct('(') => paren += 1,
+            Tok::Punct(')') => paren -= 1,
+            Tok::Punct('[') => bracket += 1,
+            Tok::Punct(']') => bracket -= 1,
+            Tok::Punct('{') => brace += 1,
+            Tok::Punct('}') => brace -= 1,
+            Tok::Punct(';') if paren == 0 && bracket == 0 && brace == 0 => break,
+            _ => {}
+        }
+    }
+    items.consts.push(ConstItem {
+        name,
+        line,
+        span: (start, end),
+    });
+}
+
+fn parse_match(p: &mut Parser<'_>, items: &mut FileItems) {
+    p.bump(); // `match`
+    // Scrutinee: Rust forbids bare struct literals here, so the first
+    // `{` outside parens/brackets opens the arm body.
+    let mut paren = 0i64;
+    let mut bracket = 0i64;
+    loop {
+        match p.peek(0) {
+            None => return,
+            Some(t) => match t.tok {
+                Tok::Punct('{') if paren == 0 && bracket == 0 => break,
+                Tok::Punct('(') => {
+                    paren += 1;
+                    p.bump();
+                }
+                Tok::Punct(')') => {
+                    paren -= 1;
+                    p.bump();
+                }
+                Tok::Punct('[') => {
+                    bracket += 1;
+                    p.bump();
+                }
+                Tok::Punct(']') => {
+                    bracket -= 1;
+                    p.bump();
+                }
+                _ => {
+                    p.bump();
+                }
+            },
+        }
+    }
+    p.bump(); // `{`
+    loop {
+        p.skip_attrs();
+        if p.is_punct(0, '}') {
+            p.bump();
+            return;
+        }
+        // Head: tokens up to `=>` at depth 0 (struct patterns may
+        // nest braces; tuple/slice patterns nest parens/brackets).
+        let mut head = String::new();
+        let mut head_line = 0usize;
+        let mut paren = 0i64;
+        let mut bracket = 0i64;
+        let mut brace = 0i64;
+        loop {
+            match p.peek(0) {
+                None => return,
+                Some(t) => {
+                    if paren == 0 && bracket == 0 && brace == 0 {
+                        if t.tok == Tok::Punct('=') && p.is_punct(1, '>') {
+                            p.bump();
+                            p.bump();
+                            break;
+                        }
+                        if t.tok == Tok::Punct('}') {
+                            // Malformed arm; let the outer loop close.
+                            break;
+                        }
+                    }
+                    if head_line == 0 {
+                        head_line = t.line;
+                    }
+                    match t.tok {
+                        Tok::Punct('(') => paren += 1,
+                        Tok::Punct(')') => paren -= 1,
+                        Tok::Punct('[') => bracket += 1,
+                        Tok::Punct(']') => bracket -= 1,
+                        Tok::Punct('{') => brace += 1,
+                        Tok::Punct('}') => brace -= 1,
+                        _ => {}
+                    }
+                    if !head.is_empty() {
+                        head.push(' ');
+                    }
+                    match &t.tok {
+                        Tok::Ident(s) => head.push_str(s),
+                        Tok::Punct(c) => head.push(*c),
+                    }
+                    p.bump();
+                }
+            }
+        }
+        if head_line != 0 {
+            items.match_arms.push(MatchArm {
+                line: head_line,
+                head,
+            });
+        }
+        // Arm body: a braced block, else an expression up to the `,`
+        // (or the match's closing `}`).
+        if p.is_punct(0, '{') {
+            p.skip_balanced('{', '}');
+            if p.is_punct(0, ',') {
+                p.bump();
+            }
+        } else {
+            let mut paren = 0i64;
+            let mut bracket = 0i64;
+            let mut brace = 0i64;
+            loop {
+                match p.peek(0) {
+                    None => return,
+                    Some(t) => {
+                        if paren == 0 && bracket == 0 && brace == 0 {
+                            if t.tok == Tok::Punct(',') {
+                                p.bump();
+                                break;
+                            }
+                            if t.tok == Tok::Punct('}') {
+                                break;
+                            }
+                        }
+                        match t.tok {
+                            Tok::Punct('(') => paren += 1,
+                            Tok::Punct(')') => paren -= 1,
+                            Tok::Punct('[') => bracket += 1,
+                            Tok::Punct(']') => bracket -= 1,
+                            Tok::Punct('{') => brace += 1,
+                            Tok::Punct('}') => brace -= 1,
+                            _ => {}
+                        }
+                        p.bump();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenize::mask;
+
+    fn parse(src: &str) -> FileItems {
+        parse_items(&mask(src).code)
+    }
+
+    #[test]
+    fn struct_fields_with_lines() {
+        let src = "\
+pub struct RunnerCheckpoint {
+    pub cfg: ExperimentConfig,
+    pub cursor: usize,
+    net: BTreeMap<usize, f64>,
+    pub(crate) blob: Vec<u8>,
+}
+";
+        let items = parse(src);
+        let s = items.struct_named("RunnerCheckpoint").unwrap();
+        assert_eq!(s.line, 1);
+        let names: Vec<&str> = s.fields.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["cfg", "cursor", "net", "blob"]);
+        assert_eq!(s.fields[2].line, 4);
+    }
+
+    #[test]
+    fn tuple_and_unit_structs_have_no_named_fields() {
+        let items = parse("struct Wrap(f64, usize);\nstruct Marker;\nstruct G<T>(T);\n");
+        assert!(items.struct_named("Wrap").unwrap().fields.is_empty());
+        assert!(items.struct_named("Marker").unwrap().fields.is_empty());
+        assert!(items.struct_named("G").unwrap().fields.is_empty());
+    }
+
+    #[test]
+    fn enum_variants_and_variant_fields() {
+        let src = "\
+pub enum Strategy {
+    FedAvg { rng: Rng, n_sample: usize },
+    HierFl,
+    SeqFl { order: Vec<usize>, cursor: usize },
+    Tagged(u32),
+}
+";
+        let items = parse(src);
+        let e = items.enum_named("Strategy").unwrap();
+        let names: Vec<&str> = e.variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, ["FedAvg", "HierFl", "SeqFl", "Tagged"]);
+        assert_eq!(e.variants[0].fields.len(), 2);
+        assert_eq!(e.variants[0].fields[1].name, "n_sample");
+        assert!(e.variants[1].fields.is_empty());
+        assert_eq!(e.variants[2].fields[1].name, "cursor");
+        assert!(e.variants[3].fields.is_empty());
+    }
+
+    #[test]
+    fn fns_carry_impl_owner_and_body_span() {
+        let src = "\
+impl RunnerCheckpoint {
+    pub fn to_json(&self) -> String {
+        let a = 1;
+        format(a)
+    }
+    fn helper() {}
+}
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write(f)
+    }
+}
+fn free() -> usize {
+    3
+}
+";
+        let items = parse(src);
+        let to_json = items.fn_named("to_json", Some("RunnerCheckpoint")).unwrap();
+        assert_eq!(to_json.line, 2);
+        assert_eq!(to_json.body, Some((2, 5)));
+        let fmt = items.fn_named("fmt", Some("Diagnostic")).unwrap();
+        assert_eq!(fmt.body, Some((9, 11)));
+        let free = items.fn_named("free", None).unwrap();
+        assert_eq!(free.owner, None);
+        assert_eq!(free.body, Some((13, 15)));
+    }
+
+    #[test]
+    fn trait_signatures_have_no_body() {
+        let src = "\
+trait Backend {
+    fn validate(&self, cfg: &Config) -> Result<()>;
+    fn run(&self) -> usize {
+        0
+    }
+}
+";
+        let items = parse(src);
+        assert_eq!(items.fn_named("validate", None).unwrap().body, None);
+        assert_eq!(items.fn_named("run", None).unwrap().body, Some((3, 5)));
+    }
+
+    #[test]
+    fn consts_span_multiline_values() {
+        let src = "\
+pub const METRICS_CSV_HEADER: [&str; 3] = [
+    \"round\",
+    \"cluster\",
+    \"loss\",
+];
+const K: usize = 4;
+";
+        let items = parse(src);
+        let h = items.const_named("METRICS_CSV_HEADER").unwrap();
+        assert_eq!(h.span, (1, 5));
+        assert_eq!(items.const_named("K").unwrap().span, (6, 6));
+    }
+
+    #[test]
+    fn match_arm_heads() {
+        let src = "\
+fn pick(x: Option<usize>) -> usize {
+    match x {
+        Some(v) if v > 2 => v,
+        Some(v) => {
+            v + 1
+        }
+        None => 0,
+    }
+}
+";
+        let items = parse(src);
+        let heads: Vec<&str> =
+            items.match_arms.iter().map(|a| a.head.as_str()).collect();
+        assert_eq!(heads, ["Some ( v ) if v > 2", "Some ( v )", "None"]);
+        assert_eq!(items.match_arms[0].line, 3);
+    }
+
+    #[test]
+    fn items_inside_fn_bodies_are_still_seen() {
+        let src = "\
+fn outer() {
+    struct Local { x: usize }
+    const INNER: usize = 1;
+    let v = Local { x: INNER };
+    drop(v);
+}
+";
+        let items = parse(src);
+        assert!(items.struct_named("Local").is_some());
+        assert!(items.const_named("INNER").is_some());
+        // `Local { x: INNER }` is an expression, not a second struct.
+        assert_eq!(items.structs.len(), 1);
+    }
+
+    #[test]
+    fn const_fn_is_a_fn_not_a_const() {
+        let items = parse("const fn gcd(a: usize, b: usize) -> usize {\n    a + b\n}\n");
+        assert!(items.consts.is_empty());
+        assert!(items.fn_named("gcd", None).is_some());
+    }
+
+    #[test]
+    fn generic_fields_keep_commas_inside() {
+        let src = "\
+struct S {
+    map: BTreeMap<usize, (f64, f64)>,
+    arr: [u8; 4],
+    last: f64,
+}
+";
+        let items = parse(src);
+        let names: Vec<&str> = items.struct_named("S").unwrap().fields
+            .iter()
+            .map(|f| f.name.as_str())
+            .collect();
+        assert_eq!(names, ["map", "arr", "last"]);
+    }
+}

@@ -7,7 +7,9 @@
 //! scans `rust/src`, `rust/tests`, `rust/benches`, `examples` and its
 //! own sources with a comment/string-stripping tokenizer
 //! ([`tokenize`]), applies a per-module scope table ([`scope`]), and
-//! enforces five rules ([`rules`]):
+//! enforces two tiers of rules.
+//!
+//! Local (single-file, [`rules`]):
 //!
 //! | rule | guards |
 //! |------|--------|
@@ -17,8 +19,20 @@
 //! | `unwrap-in-library`   | the typed-error surface (PR 3/4)        |
 //! | `unsafe-audit`        | future SIMD/intrinsics kernels          |
 //!
-//! Diagnostics print as `file:line:rule: message`.  The binary exits
-//! 0 when clean, 1 on violations, 2 on usage or I/O errors.
+//! Cross-file (whole-tree only, [`items`] + [`contracts`]):
+//!
+//! | rule | guards |
+//! |------|--------|
+//! | `checkpoint-parity`     | every checkpointed field round-trips  |
+//! | `csv-schema-parity`     | CSV header ↔ `RoundRecord` lockstep   |
+//! | `config-surface-parity` | config JSON/CLI surface completeness  |
+//! | `stale-pragma`          | `lint:allow` grants that died of churn|
+//!
+//! Diagnostics print as `file:line:rule: message`; `--format json`
+//! emits the stable machine-readable schema ([`report`]), and
+//! `--baseline` diffs against a previous JSON report so migrations
+//! fail only on *new* findings.  The binary exits 0 when clean, 1 on
+//! violations, 2 on usage or I/O errors.
 //!
 //! Deliberately dependency-free: the build image is offline and a
 //! lint gate must never be the thing that breaks the build.
@@ -27,6 +41,9 @@ use std::fmt;
 use std::io;
 use std::path::{Path, PathBuf};
 
+pub mod contracts;
+pub mod items;
+pub mod report;
 pub mod rules;
 pub mod scope;
 pub mod tokenize;
@@ -42,17 +59,25 @@ pub enum Rule {
     UnorderedIteration,
     UnwrapInLibrary,
     UnsafeAudit,
+    CheckpointParity,
+    CsvSchemaParity,
+    ConfigSurfaceParity,
+    StalePragma,
     Pragma,
 }
 
 impl Rule {
-    /// The five rules a `lint:allow` pragma may name.
-    pub const ENFORCED: [Rule; 5] = [
+    /// The rules a `lint:allow` pragma may name.
+    pub const ENFORCED: [Rule; 9] = [
         Rule::FloatOrdering,
         Rule::WallClockInSim,
         Rule::UnorderedIteration,
         Rule::UnwrapInLibrary,
         Rule::UnsafeAudit,
+        Rule::CheckpointParity,
+        Rule::CsvSchemaParity,
+        Rule::ConfigSurfaceParity,
+        Rule::StalePragma,
     ];
 
     /// Stable diagnostic / pragma identifier.
@@ -63,6 +88,10 @@ impl Rule {
             Rule::UnorderedIteration => "unordered-iteration",
             Rule::UnwrapInLibrary => "unwrap-in-library",
             Rule::UnsafeAudit => "unsafe-audit",
+            Rule::CheckpointParity => "checkpoint-parity",
+            Rule::CsvSchemaParity => "csv-schema-parity",
+            Rule::ConfigSurfaceParity => "config-surface-parity",
+            Rule::StalePragma => "stale-pragma",
             Rule::Pragma => "pragma",
         }
     }
@@ -88,6 +117,9 @@ pub struct Diagnostic {
     pub line: usize,
     pub rule: Rule,
     pub message: String,
+    /// The trimmed raw source line the finding points at (baseline
+    /// diffing keys on it, so findings survive pure line shifts).
+    pub snippet: String,
 }
 
 impl fmt::Display for Diagnostic {
@@ -106,8 +138,9 @@ impl fmt::Display for Diagnostic {
 /// Aggregate result of linting a set of files.
 pub struct Report {
     pub diagnostics: Vec<Diagnostic>,
-    /// Violations silenced by a justified `lint:allow` pragma.
-    pub suppressed: usize,
+    /// Violations silenced by a justified `lint:allow` pragma (kept
+    /// whole so the JSON report can show them with `pragma:allowed`).
+    pub suppressed: Vec<Diagnostic>,
     pub files_scanned: usize,
 }
 
@@ -127,7 +160,8 @@ pub const SCAN_ROOTS: [&str; 5] = [
     "rust/lint/src",
 ];
 
-/// Lint the whole tree under `repo_root` ([`SCAN_ROOTS`]).
+/// Lint the whole tree under `repo_root` ([`SCAN_ROOTS`]): local
+/// rules, cross-file contracts, and the stale-pragma pass.
 pub fn lint_tree(repo_root: &Path) -> io::Result<Report> {
     let mut files = Vec::new();
     for root in SCAN_ROOTS {
@@ -137,11 +171,49 @@ pub fn lint_tree(repo_root: &Path) -> io::Result<Report> {
         }
     }
     files.sort();
-    lint_files(repo_root, &files)
+    let mut sources = Vec::with_capacity(files.len());
+    for file in &files {
+        let rel = file
+            .strip_prefix(repo_root)
+            .unwrap_or(file.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        sources.push((rel, std::fs::read_to_string(file)?));
+    }
+    let pairs: Vec<(&str, &str)> = sources
+        .iter()
+        .map(|(r, s)| (r.as_str(), s.as_str()))
+        .collect();
+    Ok(lint_sources(&pairs))
+}
+
+/// Lint a set of in-memory `(rel_path, source)` files with the full
+/// pipeline — local rules, default contract tables, stale-pragma.
+/// [`lint_tree`] is this over the real tree; the fixture tests drive
+/// it with synthetic files under the contract anchor paths.
+pub fn lint_sources(files: &[(&str, &str)]) -> Report {
+    let mut analyses: Vec<rules::FileAnalysis> = files
+        .iter()
+        .map(|(rel, source)| rules::analyze(rel, source))
+        .collect();
+    contracts::apply(&mut analyses);
+    let mut diagnostics = Vec::new();
+    let mut suppressed = Vec::new();
+    for fa in &mut analyses {
+        rules::stale_pragma_pass(fa);
+        diagnostics.append(&mut fa.diagnostics);
+        suppressed.append(&mut fa.suppressed);
+    }
+    Report {
+        diagnostics,
+        suppressed,
+        files_scanned: files.len(),
+    }
 }
 
 /// Lint explicit files or directories (still rooted at `repo_root`
-/// for scope-table purposes).
+/// for scope-table purposes).  Local rules only: contract and
+/// stale-pragma verdicts are meaningless on a partial tree.
 pub fn lint_paths(repo_root: &Path, paths: &[PathBuf]) -> io::Result<Report> {
     let mut files = Vec::new();
     for p in paths {
@@ -152,22 +224,19 @@ pub fn lint_paths(repo_root: &Path, paths: &[PathBuf]) -> io::Result<Report> {
         }
     }
     files.sort();
-    lint_files(repo_root, &files)
-}
-
-fn lint_files(repo_root: &Path, files: &[PathBuf]) -> io::Result<Report> {
     let mut diagnostics = Vec::new();
-    let mut suppressed = 0;
-    for file in files {
+    let mut suppressed = Vec::new();
+    for file in &files {
         let rel = file
             .strip_prefix(repo_root)
             .unwrap_or(file.as_path())
             .to_string_lossy()
             .replace('\\', "/");
         let source = std::fs::read_to_string(file)?;
-        let outcome = rules::lint_source(&rel, &source);
-        diagnostics.extend(outcome.diagnostics);
-        suppressed += outcome.suppressed;
+        let mut fa = rules::analyze(&rel, &source);
+        fa.finish();
+        diagnostics.append(&mut fa.diagnostics);
+        suppressed.append(&mut fa.suppressed);
     }
     Ok(Report {
         diagnostics,
@@ -219,10 +288,27 @@ mod tests {
             line: 165,
             rule: Rule::FloatOrdering,
             message: "msg".into(),
+            snippet: "let x = a.partial_cmp(&b);".into(),
         };
         assert_eq!(
             d.to_string(),
             "rust/src/fl/compress.rs:165:float-ordering: msg"
         );
+    }
+
+    #[test]
+    fn lint_sources_runs_the_full_pipeline() {
+        // A dead pragma in a file with no other findings: only the
+        // full pipeline (stale-pragma pass) can see it.
+        let src = "\
+// lint:allow(unwrap-in-library): guarded an unwrap that is gone
+pub fn f() -> usize {
+    2
+}
+";
+        let report = lint_sources(&[("rust/src/fl/x.rs", src)]);
+        assert_eq!(report.files_scanned, 1);
+        assert_eq!(report.diagnostics.len(), 1, "{:?}", report.diagnostics);
+        assert_eq!(report.diagnostics[0].rule, Rule::StalePragma);
     }
 }

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! cargo run -p edgeflow-lint -- --check
+//! cargo run -p edgeflow-lint -- --check --format json --out lint-report.json
+//! cargo run -p edgeflow-lint -- --check --baseline lint-baseline.json
 //! ```
 //!
 //! Exit codes: 0 = clean, 1 = violations found, 2 = usage/I-O error.
@@ -10,34 +12,51 @@ use std::env;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use edgeflow_lint::{lint_paths, lint_tree, scope, Report, Rule};
+use edgeflow_lint::{lint_paths, lint_tree, report, scope, Report, Rule};
 
 const USAGE: &str = "\
 edgeflow-lint: static analysis for EdgeFLow's determinism & robustness contracts
 
 USAGE:
-    edgeflow-lint [--check] [--root <dir>] [PATH ...]
+    edgeflow-lint [--check] [--root <dir>] [OPTIONS] [PATH ...]
     edgeflow-lint --list-rules
     edgeflow-lint --help
 
 With no PATHs (or with --check), lints the whole repo tree:
-rust/src, rust/tests, rust/benches, examples, rust/lint/src.
-Explicit PATHs (files or directories) restrict the scan.
+rust/src, rust/tests, rust/benches, examples, rust/lint/src —
+including the cross-file contract rules and the stale-pragma pass.
+Explicit PATHs (files or directories) restrict the scan to the local
+single-file rules (contract verdicts need the whole tree).
 
 OPTIONS:
-    --check         Lint the full tree (the default when no PATHs given)
-    --root <dir>    Repo root to resolve scopes against (default: auto-detect)
-    --list-rules    Print each rule id and its scope, then exit 0
-    --help          Print this help, then exit 0
+    --check             Lint the full tree (the default when no PATHs given)
+    --root <dir>        Repo root to resolve scopes against (default: auto-detect)
+    --format <fmt>      Output format: text (default) or json (stable schema,
+                        version 1: rule, file, line, pragma state, message,
+                        snippet, plus a summary block)
+    --out <file>        Also write the report to <file> in the chosen format
+                        (CI uploads the json form as a build artifact)
+    --baseline <file>   Diff against a previous --format json report: exit 1
+                        only on findings NOT present in the baseline, keyed by
+                        (rule, file, snippet) so pure line shifts don't fail
+    --list-rules        Print each rule id and its scope, then exit 0
+    --help              Print this help, then exit 0
 
 Suppress a finding with a justified inline pragma on (or in the
 comment block directly above) the offending line; the reason is
 mandatory and unexplained suppressions are themselves violations.
+A pragma that stops suppressing anything is flagged by stale-pragma.
 
 EXIT CODES:
-    0    no violations
+    0    no violations (or none beyond the baseline)
     1    violations found (each printed as file:line:rule: message)
     2    usage or I/O error";
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Format {
+    Text,
+    Json,
+}
 
 fn main() -> ExitCode {
     match run() {
@@ -54,6 +73,9 @@ fn main() -> ExitCode {
 fn run() -> Result<bool, String> {
     let mut root: Option<PathBuf> = None;
     let mut paths: Vec<PathBuf> = Vec::new();
+    let mut format = Format::Text;
+    let mut out_file: Option<PathBuf> = None;
+    let mut baseline_file: Option<PathBuf> = None;
     let mut args = env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -64,9 +86,9 @@ fn run() -> Result<bool, String> {
             }
             "--list-rules" => {
                 for rule in Rule::ENFORCED {
-                    println!("{:<20} {}", rule.id(), scope::describe(rule));
+                    println!("{:<22} {}", rule.id(), scope::describe(rule));
                 }
-                println!("{:<20} {}", Rule::Pragma.id(), scope::describe(Rule::Pragma));
+                println!("{:<22} {}", Rule::Pragma.id(), scope::describe(Rule::Pragma));
                 return Ok(true);
             }
             "--root" => {
@@ -74,6 +96,28 @@ fn run() -> Result<bool, String> {
                     .next()
                     .ok_or_else(|| "--root requires a directory argument".to_string())?;
                 root = Some(PathBuf::from(dir));
+            }
+            "--format" => {
+                let fmt = args
+                    .next()
+                    .ok_or_else(|| "--format requires an argument (text|json)".to_string())?;
+                format = match fmt.as_str() {
+                    "text" => Format::Text,
+                    "json" => Format::Json,
+                    other => return Err(format!("unknown format {other:?} (text|json)")),
+                };
+            }
+            "--out" => {
+                let f = args
+                    .next()
+                    .ok_or_else(|| "--out requires a file argument".to_string())?;
+                out_file = Some(PathBuf::from(f));
+            }
+            "--baseline" => {
+                let f = args
+                    .next()
+                    .ok_or_else(|| "--baseline requires a file argument".to_string())?;
+                baseline_file = Some(PathBuf::from(f));
             }
             other if other.starts_with('-') => {
                 return Err(format!("unknown flag {other:?}"));
@@ -93,27 +137,75 @@ fn run() -> Result<bool, String> {
         ));
     }
 
-    let report = if paths.is_empty() {
+    let lint_report = if paths.is_empty() {
         lint_tree(&root)
     } else {
         lint_paths(&root, &paths)
     }
     .map_err(|e| format!("scan failed: {e}"))?;
 
-    print_report(&report);
-    Ok(report.clean())
+    let rendered_json = report::render_json(&lint_report);
+    match format {
+        Format::Text => print_report(&lint_report),
+        Format::Json => print!("{rendered_json}"),
+    }
+    if let Some(path) = &out_file {
+        let body = match format {
+            Format::Text => text_report(&lint_report),
+            Format::Json => rendered_json,
+        };
+        std::fs::write(path, body)
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    }
+
+    match baseline_file {
+        None => Ok(lint_report.clean()),
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("cannot read baseline {}: {e}", path.display()))?;
+            let baseline = report::parse_baseline(&text)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            let fresh = report::new_findings(&lint_report, &baseline);
+            let tolerated = lint_report.diagnostics.len() - fresh.len();
+            if fresh.is_empty() {
+                eprintln!(
+                    "edgeflow-lint: baseline ok ({} pre-existing finding(s) tolerated)",
+                    tolerated
+                );
+                Ok(true)
+            } else {
+                eprintln!(
+                    "edgeflow-lint: {} NEW finding(s) beyond the baseline \
+                     ({} tolerated):",
+                    fresh.len(),
+                    tolerated
+                );
+                for diag in fresh {
+                    eprintln!("  NEW {diag}");
+                }
+                Ok(false)
+            }
+        }
+    }
+}
+
+fn text_report(report: &Report) -> String {
+    let mut out = String::new();
+    for diag in &report.diagnostics {
+        out.push_str(&diag.to_string());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "edgeflow-lint: {} violation(s), {} suppressed by pragmas, {} file(s) scanned\n",
+        report.diagnostics.len(),
+        report.suppressed.len(),
+        report.files_scanned
+    ));
+    out
 }
 
 fn print_report(report: &Report) {
-    for diag in &report.diagnostics {
-        println!("{diag}");
-    }
-    println!(
-        "edgeflow-lint: {} violation(s), {} suppressed by pragmas, {} file(s) scanned",
-        report.diagnostics.len(),
-        report.suppressed,
-        report.files_scanned
-    );
+    print!("{}", text_report(report));
 }
 
 /// Locate the repo root: the nearest ancestor (of this crate's

@@ -1,0 +1,505 @@
+//! Machine-readable lint output and baseline diffing.
+//!
+//! `--format json` renders a [`crate::Report`] in a stable schema
+//! (golden-tested; bump `VERSION` on any shape change):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "files_scanned": 42,
+//!   "findings": [
+//!     { "rule": "…", "file": "…", "line": 7,
+//!       "pragma": "none" | "allowed",
+//!       "message": "…", "snippet": "…" }
+//!   ],
+//!   "summary": { "violations": 2, "suppressed": 5 }
+//! }
+//! ```
+//!
+//! `--baseline <file>` takes a previous JSON report and fails only on
+//! findings that are *new* relative to it.  Identity is the multiset
+//! of `(rule, file, snippet)` — deliberately not the line number, so
+//! a pre-existing finding survives pure line shifts, but a second
+//! occurrence of the same pattern in the same file still counts as
+//! new.  Only `"pragma": "none"` entries participate: a suppression
+//! that later loses its pragma is a new finding, as it should be.
+//!
+//! The crate is dependency-free, so this module carries its own
+//! minimal recursive-descent JSON parser — it only ever reads the
+//! tool's own output.
+
+use std::collections::BTreeMap;
+
+use crate::{Diagnostic, Report};
+
+/// Schema version stamped into every JSON report.
+pub const VERSION: u64 = 1;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the stable JSON schema.  Findings are sorted by
+/// (file, line, rule, pragma) so output is bit-stable run to run.
+pub fn render_json(report: &Report) -> String {
+    let mut findings: Vec<(&Diagnostic, &'static str)> = report
+        .diagnostics
+        .iter()
+        .map(|d| (d, "none"))
+        .chain(report.suppressed.iter().map(|d| (d, "allowed")))
+        .collect();
+    findings.sort_by(|(a, ap), (b, bp)| {
+        (&a.file, a.line, a.rule, *ap).cmp(&(&b.file, b.line, b.rule, *bp))
+    });
+
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"version\": {VERSION},\n"));
+    out.push_str(&format!(
+        "  \"files_scanned\": {},\n",
+        report.files_scanned
+    ));
+    out.push_str("  \"findings\": [");
+    for (k, (d, pragma)) in findings.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    {\n");
+        out.push_str(&format!("      \"rule\": \"{}\",\n", esc(d.rule.id())));
+        out.push_str(&format!("      \"file\": \"{}\",\n", esc(&d.file)));
+        out.push_str(&format!("      \"line\": {},\n", d.line));
+        out.push_str(&format!("      \"pragma\": \"{pragma}\",\n"));
+        out.push_str(&format!("      \"message\": \"{}\",\n", esc(&d.message)));
+        out.push_str(&format!("      \"snippet\": \"{}\"\n", esc(&d.snippet)));
+        out.push_str("    }");
+    }
+    if findings.is_empty() {
+        out.push_str("],\n");
+    } else {
+        out.push_str("\n  ],\n");
+    }
+    out.push_str("  \"summary\": {\n");
+    out.push_str(&format!(
+        "    \"violations\": {},\n",
+        report.diagnostics.len()
+    ));
+    out.push_str(&format!(
+        "    \"suppressed\": {}\n",
+        report.suppressed.len()
+    ));
+    out.push_str("  }\n}\n");
+    out
+}
+
+/// One baseline entry: the identity triple of a previous finding.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub snippet: String,
+}
+
+/// Parse a previous `--format json` report into its baseline entries
+/// (unsuppressed findings only).
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>, String> {
+    let v = parse_json(text)?;
+    let version = v
+        .get("version")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "baseline: missing \"version\"".to_string())?;
+    if version != VERSION {
+        return Err(format!(
+            "baseline: schema version {version} (this tool writes {VERSION})"
+        ));
+    }
+    let findings = match v.get("findings") {
+        Some(Json::Arr(items)) => items,
+        _ => return Err("baseline: missing \"findings\" array".to_string()),
+    };
+    let mut out = Vec::new();
+    for f in findings {
+        let pragma = f
+            .get("pragma")
+            .and_then(Json::as_str)
+            .unwrap_or("none");
+        if pragma != "none" {
+            continue;
+        }
+        let field = |k: &str| -> Result<String, String> {
+            f.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("baseline: finding missing \"{k}\""))
+        };
+        out.push(BaselineEntry {
+            rule: field("rule")?,
+            file: field("file")?,
+            snippet: field("snippet")?,
+        });
+    }
+    Ok(out)
+}
+
+/// The report's violations that are NOT covered by the baseline,
+/// multiset-style: a baseline entry absorbs at most one occurrence.
+pub fn new_findings<'a>(
+    report: &'a Report,
+    baseline: &[BaselineEntry],
+) -> Vec<&'a Diagnostic> {
+    let mut budget: BTreeMap<(&str, &str, &str), usize> = BTreeMap::new();
+    for b in baseline {
+        *budget
+            .entry((b.rule.as_str(), b.file.as_str(), b.snippet.as_str()))
+            .or_insert(0) += 1;
+    }
+    let mut fresh = Vec::new();
+    for d in &report.diagnostics {
+        let key = (d.rule.id(), d.file.as_str(), d.snippet.as_str());
+        match budget.get_mut(&key) {
+            Some(n) if *n > 0 => *n -= 1,
+            _ => fresh.push(d),
+        }
+    }
+    fresh
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON parser (reads only this tool's own output).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            // lint:allow(float-ordering): exact integer-representability
+            // check — a whole-valued f64 has fract() bit-equal to 0.0.
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let mut p = P {
+        b: text.as_bytes(),
+        i: 0,
+    };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("json: trailing data at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl P<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "json: expected {:?} at byte {}",
+                c as char, self.i
+            ))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("json: bad literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => self.number(),
+            _ => Err(format!("json: unexpected byte at {}", self.i)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut pairs = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("json: expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("json: expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err("json: unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.b.get(self.i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .b
+                                .get(self.i + 1..self.i + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or_else(|| "json: bad \\u escape".to_string())?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "json: bad \\u escape".to_string())?;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(format!("json: bad escape at byte {}", self.i)),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Strings are valid UTF-8 by construction (&str input);
+                    // copy the whole code point.
+                    let s = &self.b[self.i..];
+                    let text = std::str::from_utf8(s)
+                        .map_err(|_| "json: invalid utf-8".to_string())?;
+                    let c = text.chars().next().ok_or("json: truncated")?;
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.b.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| "json: invalid utf-8".to_string())?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("json: bad number at byte {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Rule;
+
+    fn diag(rule: Rule, file: &str, line: usize, snippet: &str) -> Diagnostic {
+        Diagnostic {
+            file: file.to_string(),
+            line,
+            rule,
+            message: format!("{} message", rule.id()),
+            snippet: snippet.to_string(),
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_own_parser() {
+        let report = Report {
+            diagnostics: vec![diag(
+                Rule::FloatOrdering,
+                "rust/src/a.rs",
+                3,
+                "x.partial_cmp(&y) // \"quoted\"",
+            )],
+            suppressed: vec![diag(Rule::UnwrapInLibrary, "rust/src/b.rs", 9, "v.unwrap()")],
+            files_scanned: 2,
+        };
+        let text = render_json(&report);
+        let v = parse_json(&text).expect("own output parses");
+        assert_eq!(v.get("version").and_then(Json::as_u64), Some(VERSION));
+        assert_eq!(v.get("files_scanned").and_then(Json::as_u64), Some(2));
+        let findings = match v.get("findings") {
+            Some(Json::Arr(items)) => items,
+            other => panic!("findings: {other:?}"),
+        };
+        assert_eq!(findings.len(), 2);
+        assert_eq!(
+            findings[0].get("snippet").and_then(Json::as_str),
+            Some("x.partial_cmp(&y) // \"quoted\"")
+        );
+        assert_eq!(
+            findings[1].get("pragma").and_then(Json::as_str),
+            Some("allowed")
+        );
+        // Only the unsuppressed finding enters the baseline.
+        let base = parse_baseline(&text).expect("baseline parses");
+        assert_eq!(base.len(), 1);
+        assert_eq!(base[0].rule, "float-ordering");
+    }
+
+    #[test]
+    fn baseline_absorbs_old_but_not_new() {
+        let old = Report {
+            diagnostics: vec![diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 5, "v.unwrap()")],
+            suppressed: Vec::new(),
+            files_scanned: 1,
+        };
+        let base = parse_baseline(&render_json(&old)).expect("baseline");
+
+        // Same finding moved to another line: covered.
+        let moved = Report {
+            diagnostics: vec![diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 12, "v.unwrap()")],
+            suppressed: Vec::new(),
+            files_scanned: 1,
+        };
+        assert!(new_findings(&moved, &base).is_empty());
+
+        // A second occurrence of the same snippet: multiset says new.
+        let doubled = Report {
+            diagnostics: vec![
+                diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 5, "v.unwrap()"),
+                diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 30, "v.unwrap()"),
+            ],
+            suppressed: Vec::new(),
+            files_scanned: 1,
+        };
+        assert_eq!(new_findings(&doubled, &base).len(), 1);
+
+        // A different rule on the same snippet: new.
+        let other_rule = Report {
+            diagnostics: vec![diag(Rule::FloatOrdering, "rust/src/fl/a.rs", 5, "v.unwrap()")],
+            suppressed: Vec::new(),
+            files_scanned: 1,
+        };
+        assert_eq!(new_findings(&other_rule, &base).len(), 1);
+    }
+
+    #[test]
+    fn baseline_rejects_other_versions() {
+        let text = "{\"version\": 2, \"findings\": []}";
+        assert!(parse_baseline(text).is_err());
+    }
+
+    #[test]
+    fn empty_report_renders_empty_findings() {
+        let report = Report {
+            diagnostics: Vec::new(),
+            suppressed: Vec::new(),
+            files_scanned: 7,
+        };
+        let text = render_json(&report);
+        assert!(text.contains("\"findings\": [],"), "{text}");
+        let base = parse_baseline(&text).expect("parses");
+        assert!(base.is_empty());
+    }
+}

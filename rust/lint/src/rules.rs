@@ -12,9 +12,24 @@
 //! A pragma applies to the code on its own line, or — when it sits on
 //! a comment-only line — to the first code line after the contiguous
 //! comment block it belongs to.  A blank line breaks the attachment.
+//! Doc comments (`///`, `//!`) never carry pragmas: they are rendered
+//! documentation, so pragma syntax *mentioned* there (like the example
+//! above) stays inert — write directives in plain `//` comments.
+//!
+//! Since PR 7 the engine runs in two tiers.  [`analyze`] produces a
+//! [`FileAnalysis`] per file: the masked views, the item index
+//! ([`crate::items`]), every pragma as an *allow atom* (which pragma
+//! line allows which rule on which code line), and the local
+//! (single-file) rule findings.  The cross-file passes —
+//! [`crate::contracts`] and [`stale_pragma_pass`] — then consume and
+//! extend those analyses.  [`lint_source`] remains the local-only
+//! entry point: explicit-PATH scans use it, because contract and
+//! stale-pragma verdicts are only meaningful when the whole tree was
+//! read.
 
 use std::collections::BTreeSet;
 
+use crate::items::{self, FileItems};
 use crate::scope;
 use crate::tokenize::mask;
 use crate::{Diagnostic, Rule};
@@ -27,172 +42,345 @@ pub struct LintOutcome {
     pub suppressed: usize,
 }
 
-/// Lint one file's source text.  `rel_path` is the repo-relative path
-/// (`rust/src/fl/runner.rs`) the scope table keys on.
-pub fn lint_source(rel_path: &str, source: &str) -> LintOutcome {
+/// One parsed `lint:allow` grant: `rule` may be suppressed on the
+/// code line `attach` by the pragma written on `pragma_line`.
+struct AllowAtom {
+    rule: &'static str,
+    /// 1-based line the pragma text sits on.
+    pragma_line: usize,
+    /// 0-based code line the grant applies to; `None` when the pragma
+    /// dangled (blank line or EOF before any code followed it).
+    attach: Option<usize>,
+}
+
+/// Everything the engine knows about one file after the local pass.
+pub struct FileAnalysis {
+    /// Repo-relative path with `/` separators.
+    pub rel: String,
+    /// Raw source lines (diagnostic snippets come from here).
+    pub raw: Vec<String>,
+    /// Masked code view (strings/comments blanked).
+    pub code: Vec<String>,
+    /// String-literal view (literal text at its columns).
+    pub strings: Vec<String>,
+    /// Item index: structs, enums, fns, consts, match arms.
+    pub items: FileItems,
+    /// Violations, in (line, rule) order after [`finish`].
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings a justified pragma suppressed (kept whole — the JSON
+    /// report shows them with `"pragma": "allowed"`).
+    pub suppressed: Vec<Diagnostic>,
+    allows: Vec<AllowAtom>,
+    /// Indices into `allows` that suppressed at least one finding.
+    used: BTreeSet<usize>,
+    safety_ok: Vec<bool>,
+}
+
+impl FileAnalysis {
+    /// File a finding of `rule` at 0-based line `line_idx`: suppressed
+    /// if an allow atom for the rule attaches to that line (all such
+    /// atoms are marked used), a violation otherwise.
+    pub fn report(&mut self, line_idx: usize, rule: Rule, message: String) {
+        let diag = Diagnostic {
+            file: self.rel.clone(),
+            line: line_idx + 1,
+            rule,
+            message,
+            snippet: snippet(&self.raw, line_idx),
+        };
+        let mut hit = false;
+        for (k, atom) in self.allows.iter().enumerate() {
+            if atom.attach == Some(line_idx) && atom.rule == rule.id() {
+                self.used.insert(k);
+                hit = true;
+            }
+        }
+        if hit {
+            self.suppressed.push(diag);
+        } else {
+            self.diagnostics.push(diag);
+        }
+    }
+
+    /// Sort both finding lists into (line, rule) order.
+    pub fn finish(&mut self) {
+        self.diagnostics
+            .sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+        self.suppressed
+            .sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    }
+}
+
+fn snippet(raw: &[String], line_idx: usize) -> String {
+    raw.get(line_idx).map(|l| l.trim().to_string()).unwrap_or_default()
+}
+
+/// Run the local (single-file) analysis: mask, parse items, resolve
+/// pragma attachment, and apply the five per-line rules.
+pub fn analyze(rel_path: &str, source: &str) -> FileAnalysis {
     let rel = rel_path.replace('\\', "/");
     let m = mask(source);
     let n = m.code.len();
+    let raw: Vec<String> = source.lines().map(|l| l.to_string()).collect();
     let file_is_test = scope::is_test_path(&rel);
     let regions = test_regions(&m.code);
-    let line_is_test = |idx: usize| {
-        file_is_test || regions.iter().any(|&(s, e)| s <= idx && idx <= e)
-    };
 
     // Pragma and SAFETY-comment attachment: comment-only lines carry
     // forward to the next code line; blank lines break the chain.
-    let mut allows: Vec<BTreeSet<&'static str>> = vec![BTreeSet::new(); n];
+    let mut allows: Vec<AllowAtom> = Vec::new();
     let mut safety_ok: Vec<bool> = vec![false; n];
     let mut diagnostics: Vec<Diagnostic> = Vec::new();
-    let mut pending: BTreeSet<&'static str> = BTreeSet::new();
+    let mut pending: Vec<(usize, &'static str)> = Vec::new();
     let mut pending_safety = false;
     for i in 0..n {
         let has_code = !m.code[i].trim().is_empty();
         let comment = m.comment[i].as_str();
-        let mut own: BTreeSet<&'static str> = BTreeSet::new();
-        parse_pragmas(&rel, i + 1, comment, &mut own, &mut diagnostics);
+        let mut own: Vec<&'static str> = Vec::new();
+        // Doc comments are documentation, not directives: pragma syntax
+        // quoted in them must not create allow grants (which the
+        // stale-pragma pass would then flag as unused).
+        let doc = {
+            let t = raw.get(i).map(|l| l.trim_start()).unwrap_or("");
+            t.starts_with("///") || t.starts_with("//!")
+        };
+        if !doc {
+            parse_pragmas(&rel, i + 1, comment, &raw, &mut own, &mut diagnostics);
+        }
         let own_safety = comment.contains("SAFETY:");
         if has_code {
-            allows[i] = &pending | &own;
+            for (pragma_line, rule) in pending.drain(..) {
+                allows.push(AllowAtom {
+                    rule,
+                    pragma_line,
+                    attach: Some(i),
+                });
+            }
+            for rule in own.drain(..) {
+                allows.push(AllowAtom {
+                    rule,
+                    pragma_line: i + 1,
+                    attach: Some(i),
+                });
+            }
             safety_ok[i] = pending_safety || own_safety;
-            pending.clear();
             pending_safety = false;
         } else if !comment.trim().is_empty() {
-            pending.extend(own.iter().copied());
+            for rule in own.drain(..) {
+                pending.push((i + 1, rule));
+            }
             pending_safety = pending_safety || own_safety;
         } else {
-            pending.clear();
+            // A blank line detaches the pending block: those pragmas
+            // guard nothing and surface in the stale-pragma pass.
+            for (pragma_line, rule) in pending.drain(..) {
+                allows.push(AllowAtom {
+                    rule,
+                    pragma_line,
+                    attach: None,
+                });
+            }
             pending_safety = false;
         }
     }
+    for (pragma_line, rule) in pending.drain(..) {
+        allows.push(AllowAtom {
+            rule,
+            pragma_line,
+            attach: None,
+        });
+    }
 
-    let mut suppressed = 0;
-    let push = |line_idx: usize,
-                    rule: Rule,
-                    message: String,
-                    allows: &[BTreeSet<&'static str>],
-                    out: &mut Vec<Diagnostic>,
-                    suppressed: &mut usize| {
-        if allows[line_idx].contains(rule.id()) {
-            *suppressed += 1;
-        } else {
-            out.push(Diagnostic {
-                file: rel.clone(),
-                line: line_idx + 1,
-                rule,
-                message,
-            });
-        }
+    let mut fa = FileAnalysis {
+        rel,
+        items: items::parse_items(&m.code),
+        raw,
+        code: m.code,
+        strings: m.strings,
+        diagnostics,
+        suppressed: Vec::new(),
+        allows,
+        used: BTreeSet::new(),
+        safety_ok,
     };
+    local_rules(&mut fa, file_is_test, &regions);
+    fa
+}
+
+/// The five single-file rules of PR 6, applied line by line.
+fn local_rules(fa: &mut FileAnalysis, file_is_test: bool, regions: &[(usize, usize)]) {
+    let n = fa.code.len();
+    let line_is_test =
+        |idx: usize| file_is_test || regions.iter().any(|&(s, e)| s <= idx && idx <= e);
 
     for i in 0..n {
-        let code = m.code[i].as_str();
+        let code = std::mem::take(&mut fa.code[i]);
         if code.trim().is_empty() {
+            fa.code[i] = code;
             continue;
         }
 
-        if scope::rule_applies(Rule::FloatOrdering, &rel) {
-            for _ in 0..count_word(code, ".partial_cmp") {
-                push(
+        if scope::rule_applies(Rule::FloatOrdering, &fa.rel) {
+            for _ in 0..count_word(&code, ".partial_cmp") {
+                fa.report(
                     i,
                     Rule::FloatOrdering,
                     "partial_cmp is NaN-unsound in an ordering; use \
                      total_cmp (or an Ord key)"
                         .into(),
-                    &allows,
-                    &mut diagnostics,
-                    &mut suppressed,
                 );
             }
             if !line_is_test(i) {
-                for _ in 0..float_eq_count(code) {
-                    push(
+                for _ in 0..float_eq_count(&code) {
+                    fa.report(
                         i,
                         Rule::FloatOrdering,
                         "exact float ==/!= outside a test oracle; compare \
                          with a tolerance, or justify the exact-bit check \
                          with lint:allow"
                             .into(),
-                        &allows,
-                        &mut diagnostics,
-                        &mut suppressed,
                     );
                 }
             }
         }
 
-        if scope::rule_applies(Rule::WallClockInSim, &rel) {
-            let hits = count_word(code, "Instant") + count_word(code, "SystemTime");
+        if scope::rule_applies(Rule::WallClockInSim, &fa.rel) {
+            let hits = count_word(&code, "Instant") + count_word(&code, "SystemTime");
             for _ in 0..hits {
-                push(
+                fa.report(
                     i,
                     Rule::WallClockInSim,
                     "wall-clock time in a simulated-time module; ride \
                      NetSim's clock (allowlist: util/logging, util/timer, \
                      bench/, runtime/executor)"
                         .into(),
-                    &allows,
-                    &mut diagnostics,
-                    &mut suppressed,
                 );
             }
         }
 
-        if scope::rule_applies(Rule::UnorderedIteration, &rel) {
-            let hits = count_word(code, "HashMap") + count_word(code, "HashSet");
+        if scope::rule_applies(Rule::UnorderedIteration, &fa.rel) {
+            let hits = count_word(&code, "HashMap") + count_word(&code, "HashSet");
             for _ in 0..hits {
-                push(
+                fa.report(
                     i,
                     Rule::UnorderedIteration,
                     "unordered container in a determinism-critical module; \
                      iteration order is unspecified — use BTreeMap/BTreeSet \
                      or a sorted Vec"
                         .into(),
-                    &allows,
-                    &mut diagnostics,
-                    &mut suppressed,
                 );
             }
         }
 
-        if scope::rule_applies(Rule::UnwrapInLibrary, &rel) && !line_is_test(i) {
-            let hits = count_word(code, ".unwrap()")
-                + count_word(code, ".expect(")
-                + count_word(code, "panic!");
+        if scope::rule_applies(Rule::UnwrapInLibrary, &fa.rel) && !line_is_test(i) {
+            let hits = count_word(&code, ".unwrap()")
+                + count_word(&code, ".expect(")
+                + count_word(&code, "panic!");
             for _ in 0..hits {
-                push(
+                fa.report(
                     i,
                     Rule::UnwrapInLibrary,
                     "unwrap/expect/panic in library code; return a typed \
                      util::error Result, or state the invariant with \
                      lint:allow"
                         .into(),
-                    &allows,
-                    &mut diagnostics,
-                    &mut suppressed,
                 );
             }
         }
 
-        if scope::rule_applies(Rule::UnsafeAudit, &rel)
-            && count_word(code, "unsafe") > 0
-            && !safety_ok[i]
+        if scope::rule_applies(Rule::UnsafeAudit, &fa.rel)
+            && count_word(&code, "unsafe") > 0
+            && !fa.safety_ok[i]
         {
-            push(
+            fa.report(
                 i,
                 Rule::UnsafeAudit,
                 "unsafe without a SAFETY: comment on the line or the \
                  comment block directly above it"
                     .into(),
-                &allows,
-                &mut diagnostics,
-                &mut suppressed,
             );
         }
-    }
 
-    diagnostics.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
-    LintOutcome { diagnostics, suppressed }
+        fa.code[i] = code;
+    }
+}
+
+/// The stale-pragma pass, run after every other rule (local *and*
+/// contract) has had its chance to consume allow atoms.  An atom no
+/// finding used is dead weight that silently rots as code churns —
+/// flag it at its own line.  A stale finding may itself be kept alive
+/// by a `lint:allow(stale-pragma): reason` on the same code line
+/// (one level only: an unused stale-pragma allow is flagged with no
+/// further meta-suppression).
+pub fn stale_pragma_pass(fa: &mut FileAnalysis) {
+    // Two rounds: plain rules first (their stale findings may consume
+    // stale-pragma atoms), then any still-unused stale-pragma atoms.
+    for meta_round in [false, true] {
+        let unused: Vec<(usize, Option<usize>, &'static str)> = fa
+            .allows
+            .iter()
+            .enumerate()
+            .filter(|(k, a)| {
+                !fa.used.contains(k) && (a.rule == Rule::StalePragma.id()) == meta_round
+            })
+            .map(|(_, a)| (a.pragma_line, a.attach, a.rule))
+            .collect();
+        for (pragma_line, attach, rule) in unused {
+            let line_idx = pragma_line - 1;
+            let message = match attach {
+                Some(_) => format!(
+                    "lint:allow({rule}) no longer suppresses anything on \
+                     its attached code line — the guarded pattern is gone; \
+                     delete the stale pragma"
+                ),
+                None => format!(
+                    "lint:allow({rule}) is detached (no code line follows \
+                     its comment block) and suppresses nothing — delete it"
+                ),
+            };
+            let diag = Diagnostic {
+                file: fa.rel.clone(),
+                line: pragma_line,
+                rule: Rule::StalePragma,
+                message,
+                snippet: snippet(&fa.raw, line_idx),
+            };
+            // Suppression: a stale-pragma atom attached to the same
+            // code line as the stale atom.  Meta-round findings and
+            // dangling pragmas are not suppressible.
+            let mut hit = false;
+            if !meta_round {
+                if let Some(code_line) = attach {
+                    for k in 0..fa.allows.len() {
+                        if fa.allows[k].attach == Some(code_line)
+                            && fa.allows[k].rule == Rule::StalePragma.id()
+                        {
+                            fa.used.insert(k);
+                            hit = true;
+                        }
+                    }
+                }
+            }
+            if hit {
+                fa.suppressed.push(diag);
+            } else {
+                fa.diagnostics.push(diag);
+            }
+        }
+    }
+    fa.finish();
+}
+
+/// Lint one file's source text with the local rules only.  `rel_path`
+/// is the repo-relative path (`rust/src/fl/runner.rs`) the scope
+/// table keys on.  Cross-file contract rules and the stale-pragma
+/// pass need the whole tree and run via [`crate::lint_tree`].
+pub fn lint_source(rel_path: &str, source: &str) -> LintOutcome {
+    let mut fa = analyze(rel_path, source);
+    fa.finish();
+    LintOutcome {
+        suppressed: fa.suppressed.len(),
+        diagnostics: fa.diagnostics,
+    }
 }
 
 /// Lines covered by `#[cfg(test)]` items, as inclusive 0-based ranges.
@@ -249,7 +437,8 @@ fn parse_pragmas(
     rel: &str,
     line_no: usize,
     comment: &str,
-    out: &mut BTreeSet<&'static str>,
+    raw: &[String],
+    out: &mut Vec<&'static str>,
     diags: &mut Vec<Diagnostic>,
 ) {
     let mut rest = comment;
@@ -261,6 +450,7 @@ fn parse_pragmas(
                 diags.push(pragma_diag(
                     rel,
                     line_no,
+                    raw,
                     "malformed pragma: unclosed rule list",
                 ));
                 return;
@@ -276,6 +466,7 @@ fn parse_pragmas(
                 None => diags.push(pragma_diag(
                     rel,
                     line_no,
+                    raw,
                     &format!("unknown rule {name:?} in lint:allow"),
                 )),
             }
@@ -290,6 +481,7 @@ fn parse_pragmas(
             diags.push(pragma_diag(
                 rel,
                 line_no,
+                raw,
                 "lint:allow pragma is missing its `: reason` justification \
                  — suppressions must explain the invariant",
             ));
@@ -298,12 +490,13 @@ fn parse_pragmas(
     }
 }
 
-fn pragma_diag(rel: &str, line: usize, message: &str) -> Diagnostic {
+fn pragma_diag(rel: &str, line: usize, raw: &[String], message: &str) -> Diagnostic {
     Diagnostic {
         file: rel.to_string(),
         line,
         rule: Rule::Pragma,
         message: message.to_string(),
+        snippet: snippet(raw, line.saturating_sub(1)),
     }
 }
 
@@ -313,7 +506,7 @@ fn is_tok_byte(b: u8) -> bool {
 
 /// Count occurrences of `needle` in `hay` with identifier boundaries
 /// on whichever ends of the needle are identifier characters.
-fn count_word(hay: &str, needle: &str) -> usize {
+pub(crate) fn count_word(hay: &str, needle: &str) -> usize {
     let hb = hay.as_bytes();
     let nb = needle.as_bytes();
     if nb.is_empty() {
@@ -484,21 +677,30 @@ pub fn after() {}\n";
 
     #[test]
     fn pragma_requires_reason() {
-        let mut out = BTreeSet::new();
+        let raw: Vec<String> = Vec::new();
+        let mut out = Vec::new();
         let mut diags = Vec::new();
         parse_pragmas(
             "f.rs",
             1,
             " lint:allow(unwrap-in-library): proven non-empty above",
+            &raw,
             &mut out,
             &mut diags,
         );
-        assert!(out.contains("unwrap-in-library"));
+        assert!(out.contains(&"unwrap-in-library"));
         assert!(diags.is_empty());
 
-        let mut out = BTreeSet::new();
+        let mut out = Vec::new();
         let mut diags = Vec::new();
-        parse_pragmas("f.rs", 1, " lint:allow(unwrap-in-library)", &mut out, &mut diags);
+        parse_pragmas(
+            "f.rs",
+            1,
+            " lint:allow(unwrap-in-library)",
+            &raw,
+            &mut out,
+            &mut diags,
+        );
         assert!(out.is_empty());
         assert_eq!(diags.len(), 1);
         assert_eq!(diags[0].rule, Rule::Pragma);
@@ -506,11 +708,115 @@ pub fn after() {}\n";
 
     #[test]
     fn pragma_rejects_unknown_rules() {
-        let mut out = BTreeSet::new();
+        let raw: Vec<String> = Vec::new();
+        let mut out = Vec::new();
         let mut diags = Vec::new();
-        parse_pragmas("f.rs", 3, " lint:allow(no-such-rule): why", &mut out, &mut diags);
+        parse_pragmas(
+            "f.rs",
+            3,
+            " lint:allow(no-such-rule): why",
+            &raw,
+            &mut out,
+            &mut diags,
+        );
         assert!(out.is_empty());
         assert_eq!(diags.len(), 1);
         assert!(diags[0].message.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn stale_pragma_fires_on_unused_allow() {
+        let src = "\
+// lint:allow(unwrap-in-library): this used to guard an unwrap
+pub fn tidy() -> usize {
+    0
+}
+";
+        let mut fa = analyze("rust/src/fl/x.rs", src);
+        stale_pragma_pass(&mut fa);
+        assert_eq!(fa.diagnostics.len(), 1, "{:?}", fa.diagnostics);
+        assert_eq!(fa.diagnostics[0].rule, Rule::StalePragma);
+        assert_eq!(fa.diagnostics[0].line, 1);
+    }
+
+    #[test]
+    fn used_pragma_is_not_stale() {
+        let src = "\
+pub fn take(v: Option<usize>) -> usize {
+    // lint:allow(unwrap-in-library): caller checked is_some above
+    v.unwrap()
+}
+";
+        let mut fa = analyze("rust/src/fl/x.rs", src);
+        stale_pragma_pass(&mut fa);
+        assert!(fa.diagnostics.is_empty(), "{:?}", fa.diagnostics);
+        assert_eq!(fa.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn dangling_pragma_is_stale() {
+        let src = "\
+// lint:allow(unwrap-in-library): detached by the blank line below
+
+pub fn f() -> usize {
+    1
+}
+";
+        let mut fa = analyze("rust/src/fl/x.rs", src);
+        stale_pragma_pass(&mut fa);
+        assert_eq!(fa.diagnostics.len(), 1);
+        assert_eq!(fa.diagnostics[0].rule, Rule::StalePragma);
+        assert!(fa.diagnostics[0].message.contains("detached"));
+    }
+
+    #[test]
+    fn stale_finding_is_itself_suppressible_once() {
+        let src = "\
+// lint:allow(unwrap-in-library): kept for the next refactor step
+// lint:allow(stale-pragma): the unwrap returns in PR 8; keep the grant
+pub fn f() -> usize {
+    1
+}
+";
+        let mut fa = analyze("rust/src/fl/x.rs", src);
+        stale_pragma_pass(&mut fa);
+        assert!(fa.diagnostics.is_empty(), "{:?}", fa.diagnostics);
+        // The stale finding was suppressed, and the stale-pragma atom
+        // that did the suppressing counts as used (no meta-cascade).
+        assert_eq!(fa.suppressed.len(), 1);
+        assert_eq!(fa.suppressed[0].rule, Rule::StalePragma);
+    }
+
+    #[test]
+    fn doc_comments_never_carry_pragmas() {
+        // Pragma syntax quoted in rendered documentation must neither
+        // grant a suppression nor count as a stale pragma.
+        let src = "\
+/// Suppress with `lint:allow(unwrap-in-library): reason` on the line.
+pub fn documented(v: Option<usize>) -> usize {
+    v.unwrap()
+}
+";
+        let mut fa = analyze("rust/src/fl/x.rs", src);
+        stale_pragma_pass(&mut fa);
+        // The unwrap still fires (the doc text suppressed nothing) and
+        // no stale-pragma finding appears.
+        assert_eq!(fa.diagnostics.len(), 1, "{:?}", fa.diagnostics);
+        assert_eq!(fa.diagnostics[0].rule, Rule::UnwrapInLibrary);
+        assert!(fa.suppressed.is_empty());
+    }
+
+    #[test]
+    fn unused_stale_pragma_allow_is_flagged() {
+        let src = "\
+// lint:allow(stale-pragma): nothing here is stale
+pub fn f() -> usize {
+    1
+}
+";
+        let mut fa = analyze("rust/src/fl/x.rs", src);
+        stale_pragma_pass(&mut fa);
+        assert_eq!(fa.diagnostics.len(), 1);
+        assert_eq!(fa.diagnostics[0].rule, Rule::StalePragma);
     }
 }

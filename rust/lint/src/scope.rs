@@ -44,6 +44,13 @@ pub fn rule_applies(rule: Rule, rel_path: &str) -> bool {
     let rel = rel_path.replace('\\', "/");
     match rule {
         Rule::FloatOrdering | Rule::UnsafeAudit | Rule::Pragma => true,
+        // The contract rules are anchored by the tables in
+        // `contracts.rs`, not by path; stale-pragma follows the
+        // pragmas themselves.  Scope-wise they apply everywhere.
+        Rule::CheckpointParity
+        | Rule::CsvSchemaParity
+        | Rule::ConfigSurfaceParity
+        | Rule::StalePragma => true,
         Rule::WallClockInSim => {
             rel.starts_with("rust/src/")
                 && !WALL_CLOCK_ALLOW.iter().any(|p| rel.starts_with(p))
@@ -79,6 +86,22 @@ pub fn describe(rule: Rule) -> &'static str {
         }
         Rule::UnwrapInLibrary => "rust/src/fl/** and rust/src/runtime/** (non-test code)",
         Rule::UnsafeAudit => "everywhere",
+        Rule::CheckpointParity => {
+            "the checkpointed session types (contract table in \
+             lint/src/contracts.rs); whole-tree scans only"
+        }
+        Rule::CsvSchemaParity => {
+            "METRICS_CSV_HEADER vs RoundRecord and its row encoder; \
+             whole-tree scans only"
+        }
+        Rule::ConfigSurfaceParity => {
+            "ExperimentConfig JSON emit/parse and CLI override arms; \
+             whole-tree scans only"
+        }
+        Rule::StalePragma => {
+            "every lint:allow pragma (an unused grant is a violation); \
+             whole-tree scans only"
+        }
         Rule::Pragma => "wherever a lint:allow pragma appears",
     }
 }

@@ -14,13 +14,20 @@
 //! `r"…"` / `r#"…"#` / `br"…"`, char and byte-char literals, and
 //! tells lifetimes (`'a`) apart from char literals (`'a'`).
 
-/// A source file split into a per-line masked code view and a per-line
-/// comment-text view.  Both vectors have one entry per source line.
+/// A source file split into a per-line masked code view, a per-line
+/// comment-text view, and a per-line string-literal view.  All three
+/// vectors have one entry per source line.
 pub struct Masked {
     /// Source lines with strings, char literals and comments blanked.
     pub code: Vec<String>,
     /// Comment text per line (`//` bodies and `/* */` interiors).
     pub comment: Vec<String>,
+    /// String-literal contents per line, at their source columns, with
+    /// everything else blanked.  The delimiting quotes themselves are
+    /// blanked too, so adjacent literals never fuse into one token.
+    /// Contract rules search this view for serialized key names
+    /// (`"deadline_s"`, CSV column headers) that the code view hides.
+    pub strings: Vec<String>,
 }
 
 #[derive(Clone, Copy)]
@@ -40,13 +47,15 @@ fn is_ident(c: char) -> bool {
     c.is_ascii_alphanumeric() || c == '_'
 }
 
-/// Mask `source` into parallel code/comment line views.
+/// Mask `source` into parallel code/comment/string line views.
 pub fn mask(source: &str) -> Masked {
     let chars: Vec<char> = source.chars().collect();
     let mut code = Vec::new();
     let mut comment = Vec::new();
+    let mut strings = Vec::new();
     let mut code_line = String::new();
     let mut comment_line = String::new();
+    let mut string_line = String::new();
     let mut st = State::Code;
     let mut i = 0;
     while i < chars.len() {
@@ -57,6 +66,7 @@ pub fn mask(source: &str) -> Masked {
             }
             code.push(std::mem::take(&mut code_line));
             comment.push(std::mem::take(&mut comment_line));
+            strings.push(std::mem::take(&mut string_line));
             i += 1;
             continue;
         }
@@ -66,10 +76,12 @@ pub fn mask(source: &str) -> Masked {
                 if c == '/' && next == Some('/') {
                     st = State::LineComment;
                     code_line.push_str("  ");
+                    string_line.push_str("  ");
                     i += 2;
                 } else if c == '/' && next == Some('*') {
                     st = State::BlockComment(1);
                     code_line.push_str("  ");
+                    string_line.push_str("  ");
                     i += 2;
                 } else if (c == 'r' || c == 'b') && (i == 0 || !is_ident(chars[i - 1])) {
                     // Possible raw/byte string opener: r" r#" br" b"
@@ -85,20 +97,24 @@ pub fn mask(source: &str) -> Masked {
                     if has_r && chars.get(j + hashes) == Some(&'"') {
                         for _ in i..=(j + hashes) {
                             code_line.push(' ');
+                            string_line.push(' ');
                         }
                         st = State::RawStr(hashes);
                         i = j + hashes + 1;
                     } else if c == 'b' && next == Some('"') {
                         code_line.push_str("  ");
+                        string_line.push_str("  ");
                         st = State::Str;
                         i += 2;
                     } else {
                         code_line.push(c);
+                        string_line.push(' ');
                         i += 1;
                     }
                 } else if c == '"' {
                     st = State::Str;
                     code_line.push(' ');
+                    string_line.push(' ');
                     i += 1;
                 } else if c == '\'' {
                     let n1 = chars.get(i + 1).copied();
@@ -106,6 +122,7 @@ pub fn mask(source: &str) -> Masked {
                         // Escape-form char literal: '\n' '\'' '\u{..}'
                         st = State::CharLit;
                         code_line.push(' ');
+                        string_line.push(' ');
                         i += 1;
                     } else if n1.is_some()
                         && n1 != Some('\'')
@@ -113,25 +130,30 @@ pub fn mask(source: &str) -> Masked {
                     {
                         // Simple one-char literal like 'a' or '"'.
                         code_line.push_str("   ");
+                        string_line.push_str("   ");
                         i += 3;
                     } else {
                         // A lifetime ('a, 'static): plain code.
                         code_line.push(c);
+                        string_line.push(' ');
                         i += 1;
                     }
                 } else {
                     code_line.push(c);
+                    string_line.push(' ');
                     i += 1;
                 }
             }
             State::LineComment => {
                 code_line.push(' ');
+                string_line.push(' ');
                 comment_line.push(c);
                 i += 1;
             }
             State::BlockComment(depth) => {
                 if c == '*' && chars.get(i + 1) == Some(&'/') {
                     code_line.push_str("  ");
+                    string_line.push_str("  ");
                     st = if depth == 1 {
                         State::Code
                     } else {
@@ -140,24 +162,33 @@ pub fn mask(source: &str) -> Masked {
                     i += 2;
                 } else if c == '/' && chars.get(i + 1) == Some(&'*') {
                     code_line.push_str("  ");
+                    string_line.push_str("  ");
                     st = State::BlockComment(depth + 1);
                     i += 2;
                 } else {
                     code_line.push(' ');
+                    string_line.push(' ');
                     comment_line.push(c);
                     i += 1;
                 }
             }
             State::Str => {
-                if c == '\\' && matches!(chars.get(i + 1), Some('"') | Some('\\')) {
+                if c == '\\' && chars.get(i + 1).is_some() && chars[i + 1] != '\n' {
+                    // Escape sequences are blanked in the string view:
+                    // serialized key names never contain escapes, and a
+                    // bare escaped char could fuse with neighbours into
+                    // a phantom token.
                     code_line.push_str("  ");
+                    string_line.push_str("  ");
                     i += 2;
                 } else if c == '"' {
                     code_line.push(' ');
+                    string_line.push(' ');
                     st = State::Code;
                     i += 1;
                 } else {
                     code_line.push(' ');
+                    string_line.push(c);
                     i += 1;
                 }
             }
@@ -170,28 +201,34 @@ pub fn mask(source: &str) -> Masked {
                     if k == hashes {
                         for _ in 0..=hashes {
                             code_line.push(' ');
+                            string_line.push(' ');
                         }
                         st = State::Code;
                         i += hashes + 1;
                     } else {
                         code_line.push(' ');
+                        string_line.push(c);
                         i += 1;
                     }
                 } else {
                     code_line.push(' ');
+                    string_line.push(c);
                     i += 1;
                 }
             }
             State::CharLit => {
                 if c == '\\' && chars.get(i + 1).is_some() && chars[i + 1] != '\n' {
                     code_line.push_str("  ");
+                    string_line.push_str("  ");
                     i += 2;
                 } else if c == '\'' {
                     code_line.push(' ');
+                    string_line.push(' ');
                     st = State::Code;
                     i += 1;
                 } else {
                     code_line.push(' ');
+                    string_line.push(' ');
                     i += 1;
                 }
             }
@@ -199,7 +236,12 @@ pub fn mask(source: &str) -> Masked {
     }
     code.push(code_line);
     comment.push(comment_line);
-    Masked { code, comment }
+    strings.push(string_line);
+    Masked {
+        code,
+        comment,
+        strings,
+    }
 }
 
 #[cfg(test)]
@@ -273,5 +315,51 @@ mod tests {
     fn division_is_not_a_comment() {
         let m = mask("let x = a / b / c;");
         assert_eq!(m.code[0], "let x = a / b / c;");
+    }
+
+    #[test]
+    fn string_view_preserves_literal_text() {
+        let m = mask("let k = json_get(\"deadline_s\"); let x = 1;");
+        assert!(m.strings[0].contains("deadline_s"), "{:?}", m.strings[0]);
+        assert!(!m.strings[0].contains("json_get"));
+        assert!(!m.strings[0].contains("let x"));
+    }
+
+    #[test]
+    fn string_view_keeps_adjacent_literals_apart() {
+        // The blanked quotes must separate back-to-back literals.
+        let m = mask("[\"round\",\"cluster\"]");
+        let toks: Vec<&str> = m.strings[0].split_whitespace().collect();
+        assert_eq!(toks, ["round", "cluster"]);
+    }
+
+    #[test]
+    fn string_view_blanks_comments_and_chars() {
+        let m = mask("let c = 'x'; // \"not a literal\"");
+        assert!(m.strings[0].trim().is_empty(), "{:?}", m.strings[0]);
+    }
+
+    #[test]
+    fn string_view_covers_raw_strings() {
+        let m = mask("let r = r#\"raw_key\"#;");
+        assert!(m.strings[0].contains("raw_key"));
+    }
+
+    #[test]
+    fn string_view_blanks_escapes() {
+        let m = mask(r#"let s = "a\nb";"#);
+        let toks: Vec<&str> = m.strings[0].split_whitespace().collect();
+        assert_eq!(toks, ["a", "b"]);
+    }
+
+    #[test]
+    fn views_stay_column_aligned() {
+        let src = "let s = \"key\"; foo(s); // note\nbar();";
+        let m = mask(src);
+        for (line, src_line) in src.lines().enumerate() {
+            let n = src_line.chars().count();
+            assert_eq!(m.code[line].chars().count(), n);
+            assert_eq!(m.strings[line].chars().count(), n);
+        }
     }
 }

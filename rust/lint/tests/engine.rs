@@ -4,7 +4,8 @@
 //! the tree gate) and are linted under *synthetic* repo-relative
 //! paths so each test exercises the scope table on purpose.
 
-use edgeflow_lint::{lint_source, Rule};
+use edgeflow_lint::report::{new_findings, parse_baseline, render_json};
+use edgeflow_lint::{lint_source, lint_sources, Rule};
 
 fn rules_of(rel: &str, src: &str) -> Vec<Rule> {
     lint_source(rel, src).diagnostics.iter().map(|d| d.rule).collect()
@@ -149,6 +150,164 @@ fn tokenizer_tricky_file_is_silent() {
     assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
     let out = lint_source("rust/src/fl/aggregate.rs", src);
     assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
+}
+
+// ------------------------------------------------------- contract rules
+//
+// The cross-file rules only run in the whole-set pipeline, so these
+// triples drive `lint_sources` with fixtures under the *real* anchor
+// paths (absent anchor files skip a contract, which is why e.g. the
+// metrics fixture also carries the checkpoint round-trip fns).
+
+#[test]
+fn checkpoint_parity_fixture_triple() {
+    let fire = include_str!("fixtures/ckpt_parity_fire.rs");
+    let out = lint_sources(&[("rust/src/rng/mod.rs", fire)]);
+    // `stream` is missing from the encode AND the decode side.
+    assert_eq!(out.diagnostics.len(), 2, "{:#?}", out.diagnostics);
+    assert!(out.diagnostics.iter().all(|d| d.rule == Rule::CheckpointParity));
+    assert!(out.diagnostics.iter().all(|d| d.message.contains("`stream`")));
+
+    let clean = include_str!("fixtures/ckpt_parity_clean.rs");
+    let out = lint_sources(&[("rust/src/rng/mod.rs", clean)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+
+    let pragma = include_str!("fixtures/ckpt_parity_pragma.rs");
+    let out = lint_sources(&[("rust/src/rng/mod.rs", pragma)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+    // One pragma atom on the field line absorbs both findings, and is
+    // therefore not stale.
+    assert_eq!(out.suppressed.len(), 2, "{:#?}", out.suppressed);
+}
+
+#[test]
+fn csv_schema_parity_fixture_triple() {
+    let fire = include_str!("fixtures/csv_parity_fire.rs");
+    let out = lint_sources(&[("rust/src/metrics/mod.rs", fire)]);
+    // Membership (`loss` has no column), phantom column (`lost`) and
+    // order divergence.
+    assert_eq!(out.diagnostics.len(), 3, "{:#?}", out.diagnostics);
+    assert!(out.diagnostics.iter().all(|d| d.rule == Rule::CsvSchemaParity));
+
+    let clean = include_str!("fixtures/csv_parity_clean.rs");
+    let out = lint_sources(&[("rust/src/metrics/mod.rs", clean)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+
+    let pragma = include_str!("fixtures/csv_parity_pragma.rs");
+    let out = lint_sources(&[("rust/src/metrics/mod.rs", pragma)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+    assert_eq!(out.suppressed.len(), 3, "{:#?}", out.suppressed);
+}
+
+#[test]
+fn config_surface_parity_fixture_triple() {
+    let cfg = include_str!("fixtures/config_parity_cfg.rs");
+    let cli_fire = include_str!("fixtures/config_parity_cli_fire.rs");
+    let cli_clean = include_str!("fixtures/config_parity_cli_clean.rs");
+    let cfg_pragma = include_str!("fixtures/config_parity_cfg_pragma.rs");
+
+    let out = lint_sources(&[
+        ("rust/src/config/mod.rs", cfg),
+        ("rust/src/cli/mod.rs", cli_fire),
+    ]);
+    // `fresh` round-trips through JSON but has no CLI override arm;
+    // the finding lands on the field in the config file.
+    assert_eq!(out.diagnostics.len(), 1, "{:#?}", out.diagnostics);
+    assert_eq!(out.diagnostics[0].rule, Rule::ConfigSurfaceParity);
+    assert_eq!(out.diagnostics[0].file, "rust/src/config/mod.rs");
+    assert!(out.diagnostics[0].message.contains("CLI override arm"));
+
+    let out = lint_sources(&[
+        ("rust/src/config/mod.rs", cfg),
+        ("rust/src/cli/mod.rs", cli_clean),
+    ]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+
+    let out = lint_sources(&[
+        ("rust/src/config/mod.rs", cfg_pragma),
+        ("rust/src/cli/mod.rs", cli_fire),
+    ]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+    assert_eq!(out.suppressed.len(), 1, "{:#?}", out.suppressed);
+}
+
+#[test]
+fn stale_pragma_fixture_triple() {
+    let fire = include_str!("fixtures/stale_pragma_fire.rs");
+    let out = lint_sources(&[("rust/src/fl/fixture.rs", fire)]);
+    assert_eq!(out.diagnostics.len(), 1, "{:#?}", out.diagnostics);
+    assert_eq!(out.diagnostics[0].rule, Rule::StalePragma);
+    assert_eq!(out.diagnostics[0].line, 5, "finding lands on the pragma line");
+
+    let clean = include_str!("fixtures/stale_pragma_clean.rs");
+    let out = lint_sources(&[("rust/src/fl/fixture.rs", clean)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+    assert_eq!(out.suppressed.len(), 1, "the pragma still earns its keep");
+
+    let pragma = include_str!("fixtures/stale_pragma_pragma.rs");
+    let out = lint_sources(&[("rust/src/fl/fixture.rs", pragma)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+    // The dead unwrap pragma's stale finding is itself suppressed.
+    assert_eq!(out.suppressed.len(), 1, "{:#?}", out.suppressed);
+    assert_eq!(out.suppressed[0].rule, Rule::StalePragma);
+}
+
+// --------------------------------------------------- machine output
+
+#[test]
+fn json_output_schema_is_stable() {
+    // Golden test: byte-exact schema v1 output.  If this fails because
+    // the schema deliberately changed, bump report::VERSION and update
+    // the golden (downstream --baseline files key on the version).
+    let fire = include_str!("fixtures/stale_pragma_fire.rs");
+    let report = lint_sources(&[("rust/src/fl/fixture.rs", fire)]);
+    let expected = r#"{
+  "version": 1,
+  "files_scanned": 1,
+  "findings": [
+    {
+      "rule": "stale-pragma",
+      "file": "rust/src/fl/fixture.rs",
+      "line": 5,
+      "pragma": "none",
+      "message": "lint:allow(unwrap-in-library) no longer suppresses anything on its attached code line — the guarded pattern is gone; delete the stale pragma",
+      "snippet": "// lint:allow(unwrap-in-library): slice checked non-empty upstream."
+    }
+  ],
+  "summary": {
+    "violations": 1,
+    "suppressed": 0
+  }
+}
+"#;
+    assert_eq!(render_json(&report), expected);
+}
+
+#[test]
+fn baseline_tolerates_old_findings_but_fails_new_ones() {
+    let fire = include_str!("fixtures/stale_pragma_fire.rs");
+    let old = lint_sources(&[("rust/src/fl/fixture.rs", fire)]);
+    let baseline = parse_baseline(&render_json(&old)).expect("own output parses");
+    assert_eq!(baseline.len(), 1);
+
+    // The identical tree is fully absorbed by its own baseline.
+    assert!(new_findings(&old, &baseline).is_empty());
+
+    // A pure line shift (new doc line up top) is still absorbed: the
+    // baseline keys on (rule, file, snippet), not line numbers.
+    let shifted = format!("//! moved\n{fire}");
+    let out = lint_sources(&[("rust/src/fl/fixture.rs", shifted.as_str())]);
+    assert_eq!(out.diagnostics.len(), 1);
+    assert!(new_findings(&out, &baseline).is_empty(), "line shifts are not new");
+
+    // A genuinely new violation is not absorbed.
+    let extra = "\npub fn second(v: &[f32]) -> f32 {\n    *v.first().unwrap()\n}\n";
+    let grown = format!("{fire}{extra}");
+    let out = lint_sources(&[("rust/src/fl/fixture.rs", grown.as_str())]);
+    assert_eq!(out.diagnostics.len(), 2, "{:#?}", out.diagnostics);
+    let fresh = new_findings(&out, &baseline);
+    assert_eq!(fresh.len(), 1, "only the unwrap is new");
+    assert_eq!(fresh[0].rule, Rule::UnwrapInLibrary);
 }
 
 #[test]

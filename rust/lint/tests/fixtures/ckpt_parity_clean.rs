@@ -1,0 +1,18 @@
+//! checkpoint-parity clean fixture (linted as rust/src/rng/mod.rs):
+//! every field round-trips.  On the encode side `stream` only appears
+//! as a serialized string key — the string-literal view must count.
+
+pub struct RngState {
+    pub seed: u64,
+    pub stream: u64,
+}
+
+impl RngState {
+    pub fn to_json(&self) -> String {
+        join(emit_u64("seed", self.seed), emit_u64("stream", self.stream_id()))
+    }
+
+    pub fn from_json(s: &str) -> RngState {
+        RngState { seed: read_u64(s, "seed"), stream: read_u64(s, "stream") }
+    }
+}

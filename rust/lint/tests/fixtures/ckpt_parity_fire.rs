@@ -1,0 +1,18 @@
+//! checkpoint-parity fire fixture (linted as rust/src/rng/mod.rs):
+//! `stream` never reaches the encoder or the decoder, so a resumed
+//! run would silently reset it.
+
+pub struct RngState {
+    pub seed: u64,
+    pub stream: u64,
+}
+
+impl RngState {
+    pub fn to_json(&self) -> String {
+        emit_u64("seed", self.seed)
+    }
+
+    pub fn from_json(s: &str) -> RngState {
+        with_defaults(read_u64(s, "seed"))
+    }
+}

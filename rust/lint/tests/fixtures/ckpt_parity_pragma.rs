@@ -1,0 +1,20 @@
+//! checkpoint-parity pragma fixture (linted as rust/src/rng/mod.rs):
+//! the same drift as the fire fixture, but justified — one pragma on
+//! the field line covers both the encode and the decode finding.
+
+pub struct RngState {
+    pub seed: u64,
+    // lint:allow(checkpoint-parity): `stream` is re-derived from the
+    // seed on restore and deliberately skips serialization.
+    pub stream: u64,
+}
+
+impl RngState {
+    pub fn to_json(&self) -> String {
+        emit_u64("seed", self.seed)
+    }
+
+    pub fn from_json(s: &str) -> RngState {
+        with_defaults(read_u64(s, "seed"))
+    }
+}

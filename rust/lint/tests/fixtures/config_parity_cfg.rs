@@ -1,0 +1,19 @@
+//! config-surface-parity config-side fixture (linted as
+//! rust/src/config/mod.rs): both fields round-trip through the JSON
+//! surfaces; whether the CLI arm exists is the companion fixture's
+//! business.
+
+pub struct ExperimentConfig {
+    pub rounds: usize,
+    pub fresh: f64,
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> String {
+        emit(pair("rounds", self.rounds), pair("fresh", self.fresh))
+    }
+
+    pub fn from_json(s: &str) -> ExperimentConfig {
+        ExperimentConfig { rounds: read(s, "rounds"), fresh: read(s, "fresh") }
+    }
+}

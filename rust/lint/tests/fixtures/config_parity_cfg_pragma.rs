@@ -1,0 +1,19 @@
+//! config-surface-parity pragma fixture (linted as
+//! rust/src/config/mod.rs): `fresh` has no CLI arm on purpose.
+
+pub struct ExperimentConfig {
+    pub rounds: usize,
+    // lint:allow(config-surface-parity): `fresh` is an internal tuning
+    // knob set by presets only — no CLI flag by design.
+    pub fresh: f64,
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> String {
+        emit(pair("rounds", self.rounds), pair("fresh", self.fresh))
+    }
+
+    pub fn from_json(s: &str) -> ExperimentConfig {
+        ExperimentConfig { rounds: read(s, "rounds"), fresh: read(s, "fresh") }
+    }
+}

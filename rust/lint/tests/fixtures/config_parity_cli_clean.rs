@@ -1,0 +1,12 @@
+//! config-surface-parity CLI-side clean fixture (linted as
+//! rust/src/cli/mod.rs): every config field has an override arm.
+
+pub fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> ExperimentConfig {
+    if let Some(v) = a.get("rounds") {
+        cfg.rounds = v;
+    }
+    if let Some(v) = a.get("fresh") {
+        cfg.fresh = v;
+    }
+    cfg
+}

@@ -1,0 +1,9 @@
+//! config-surface-parity CLI-side fire fixture (linted as
+//! rust/src/cli/mod.rs): `rounds` is wired through, `fresh` is not.
+
+pub fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> ExperimentConfig {
+    if let Some(v) = a.get("rounds") {
+        cfg.rounds = v;
+    }
+    cfg
+}

@@ -1,0 +1,23 @@
+//! csv-schema-parity clean fixture (linted as rust/src/metrics/mod.rs):
+//! header, record fields and row-encoder order all agree.
+
+pub struct RoundRecord {
+    pub round: usize,
+    pub loss: f64,
+}
+
+pub const METRICS_CSV_HEADER: &str = "round loss";
+
+impl RoundRecord {
+    pub fn to_ckpt_json(&self) -> String {
+        pair(self.round, self.loss)
+    }
+
+    pub fn from_ckpt_json(s: &str) -> RoundRecord {
+        RoundRecord { round: read(s, "round"), loss: read(s, "loss") }
+    }
+
+    pub fn csv_fields(&self) -> Vec<String> {
+        vec![num(self.round), num(self.loss)]
+    }
+}

@@ -1,0 +1,24 @@
+//! csv-schema-parity fire fixture (linted as rust/src/metrics/mod.rs):
+//! the header spells the column `lost` while the record and the row
+//! encoder say `loss` — membership and order both diverge.
+
+pub struct RoundRecord {
+    pub round: usize,
+    pub loss: f64,
+}
+
+pub const METRICS_CSV_HEADER: &str = "round lost";
+
+impl RoundRecord {
+    pub fn to_ckpt_json(&self) -> String {
+        pair(self.round, self.loss)
+    }
+
+    pub fn from_ckpt_json(s: &str) -> RoundRecord {
+        RoundRecord { round: read(s, "round"), loss: read(s, "loss") }
+    }
+
+    pub fn csv_fields(&self) -> Vec<String> {
+        vec![num(self.round), num(self.loss)]
+    }
+}

@@ -1,0 +1,7 @@
+//! stale-pragma clean fixture (linted as rust/src/fl/fixture.rs): the
+//! pragma still suppresses a live finding, so it is not stale.
+
+pub fn first(v: &[f32]) -> f32 {
+    // lint:allow(unwrap-in-library): slice checked non-empty upstream.
+    *v.first().unwrap()
+}

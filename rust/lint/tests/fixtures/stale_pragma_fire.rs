@@ -1,0 +1,7 @@
+//! stale-pragma fire fixture (linted as rust/src/fl/fixture.rs): the
+//! unwrap this pragma once guarded is long gone.
+
+pub fn first(v: &[f32]) -> f32 {
+    // lint:allow(unwrap-in-library): slice checked non-empty upstream.
+    v[0]
+}

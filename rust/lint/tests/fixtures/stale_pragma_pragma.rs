@@ -1,0 +1,10 @@
+//! stale-pragma pragma fixture (linted as rust/src/fl/fixture.rs): a
+//! dead pragma deliberately kept, itself excused by a stale-pragma
+//! allow attached to the same code line.
+
+pub fn first(v: &[f32]) -> f32 {
+    // lint:allow(unwrap-in-library): slice checked non-empty upstream.
+    // lint:allow(stale-pragma): kept while the compat branch still
+    // backports unwrap-based code onto this line.
+    v[0]
+}

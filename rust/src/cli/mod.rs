@@ -5,6 +5,11 @@
 
 use std::collections::BTreeMap;
 
+use crate::config::{
+    Algorithm, DatasetKind, Distribution, EngineKind, ExperimentConfig,
+    StragglerPolicy, TopologyKind,
+};
+use crate::fl::compress::Codec;
 use crate::util::error::{Error, Result};
 
 /// Declarative flag spec for help rendering + validation.
@@ -229,6 +234,95 @@ pub fn workers_flag() -> FlagSpec {
     )
 }
 
+/// Apply the experiment-shaping CLI flags onto a base config (preset,
+/// file, or default) and validate the result.  This is the CLI arm of
+/// the config surface: every [`ExperimentConfig`] field is expected to
+/// have an override here (the `config-surface-parity` lint rule checks
+/// exactly that), and flag absence must stay distinguishable from an
+/// explicit value so file/preset settings are never silently clobbered.
+pub fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConfig> {
+    if let Some(s) = a.get("engine") {
+        cfg.engine = EngineKind::parse(s)?;
+    }
+    if let Some(s) = a.get("codec") {
+        cfg.codec = Codec::parse(s)?;
+    }
+    if let Some(s) = a.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(s)?;
+    }
+    if let Some(s) = a.get("dataset") {
+        cfg.dataset = DatasetKind::parse(s)?;
+        // keep the model consistent unless explicitly overridden
+        if a.get("model").is_none() {
+            cfg.model = match cfg.dataset {
+                DatasetKind::SynthFashion => "fashion_mlp".into(),
+                DatasetKind::SynthCifar => "cifar_mlp".into(),
+            };
+        }
+    }
+    if let Some(s) = a.get("dist") {
+        cfg.distribution = Distribution::parse(s)?;
+    }
+    if let Some(s) = a.get("model") {
+        cfg.model = s.to_string();
+    }
+    if let Some(s) = a.get("topology") {
+        cfg.topology = TopologyKind::parse(s)?;
+    }
+    if let Some(v) = a.get_usize("rounds")? {
+        cfg.rounds = v;
+    }
+    if let Some(v) = a.get_usize("clients")? {
+        cfg.clients = v;
+    }
+    if let Some(v) = a.get_usize("clusters")? {
+        cfg.clusters = v;
+    }
+    if let Some(v) = a.get_usize("k")? {
+        cfg.local_steps = v;
+    }
+    if let Some(v) = a.get_usize("batch")? {
+        cfg.batch_size = v;
+    }
+    if let Some(v) = a.get_f64("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(s) = a.get("optimizer") {
+        cfg.optimizer = s.to_string();
+    }
+    if let Some(v) = a.get_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = a.get_usize("samples")? {
+        cfg.samples_per_client = v;
+    }
+    if let Some(v) = a.get_usize("test-samples")? {
+        cfg.test_samples = v;
+    }
+    if let Some(v) = a.get_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = a.get_f64("dropout")? {
+        cfg.dropout = v;
+    }
+    if let Some(v) = a.get_f64("deadline-s")? {
+        cfg.deadline_s = v;
+    }
+    if let Some(s) = a.get("straggler-policy") {
+        cfg.straggler_policy = StragglerPolicy::parse(s)?;
+    }
+    if let Some(v) = a.get_usize("plateau-rounds")? {
+        cfg.plateau_rounds = v;
+    }
+    if let Some(v) = a.get_f64("plateau-min-delta")? {
+        cfg.plateau_min_delta = v;
+    }
+    if let Some(v) = a.get_usize("workers")? {
+        cfg.workers = v;
+    }
+    cfg.validate()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,6 +391,43 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("--rounds"));
         assert!(msg.contains("default: 0.001"));
+    }
+
+    #[test]
+    fn overrides_map_flags_onto_config() {
+        let c = Cli {
+            bin: "x",
+            about: "t",
+            commands: vec![CommandSpec {
+                name: "train",
+                about: "t",
+                flags: vec![
+                    flag("rounds", "rounds"),
+                    flag("k", "local steps"),
+                    flag("plateau-rounds", "early-stop patience"),
+                    flag("plateau-min-delta", "early-stop tolerance"),
+                ],
+                positional: vec![],
+            }],
+        };
+        let a = c
+            .parse(&argv(&[
+                "train",
+                "--rounds",
+                "7",
+                "--k",
+                "3",
+                "--plateau-rounds",
+                "4",
+                "--plateau-min-delta",
+                "0.5",
+            ]))
+            .unwrap();
+        let cfg = apply_overrides(ExperimentConfig::default(), &a).unwrap();
+        assert_eq!(cfg.rounds, 7);
+        assert_eq!(cfg.local_steps, 3);
+        assert_eq!(cfg.plateau_rounds, 4);
+        assert!((cfg.plateau_min_delta - 0.5).abs() < 1e-12);
     }
 
     #[test]

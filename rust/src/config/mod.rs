@@ -266,6 +266,9 @@ impl TopologyKind {
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     /// Experiment label used in output paths.
+    // lint:allow(config-surface-parity): the run label comes from the preset
+    // name or the config file itself; a CLI flag would let two otherwise
+    // identical runs collide in the output directory, so none is offered.
     pub name: String,
     pub algorithm: Algorithm,
     pub dataset: DatasetKind,
@@ -325,6 +328,14 @@ pub struct ExperimentConfig {
     /// the DES sizes its transfers the same way.  Accounting only — the
     /// payload itself stays lossless.
     pub codec: Codec,
+    /// Early stopping: end the run after this many consecutive *evaluated*
+    /// rounds without test-loss improvement (0 = never stop early).  The
+    /// stop lands through `RoundControl::request_stop`, so the checkpoint
+    /// cursor still resumes bit-identically.
+    pub plateau_rounds: usize,
+    /// A loss improvement smaller than this counts as "no improvement"
+    /// for `plateau_rounds` (default 0 = any decrease resets the counter).
+    pub plateau_min_delta: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -353,6 +364,8 @@ impl Default for ExperimentConfig {
             straggler_policy: StragglerPolicy::Drop,
             engine: EngineKind::Xla,
             codec: Codec::None,
+            plateau_rounds: 0,
+            plateau_min_delta: 0.0,
         }
     }
 }
@@ -404,6 +417,12 @@ impl ExperimentConfig {
                 self.deadline_s
             )));
         }
+        if !self.plateau_min_delta.is_finite() || self.plateau_min_delta < 0.0 {
+            return Err(Error::Config(format!(
+                "plateau_min_delta must be finite and >= 0, got {}",
+                self.plateau_min_delta
+            )));
+        }
         if self.samples_per_client < self.batch_size {
             return Err(Error::Config(format!(
                 "samples_per_client ({}) < batch_size ({}) — a client cannot \
@@ -441,6 +460,8 @@ impl ExperimentConfig {
             ("straggler_policy", self.straggler_policy.name().into()),
             ("engine", self.engine.name().into()),
             ("codec", self.codec.name().as_str().into()),
+            ("plateau_rounds", self.plateau_rounds.into()),
+            ("plateau_min_delta", self.plateau_min_delta.into()),
         ];
         // The decimal percent inside "codec" is the human-readable form;
         // a top-k fraction also travels as exact bits so a checkpoint's
@@ -538,6 +559,11 @@ impl ExperimentConfig {
                     (c, _) => c,
                 }
             },
+            plateau_rounds: get_usize("plateau_rounds", d.plateau_rounds)?,
+            plateau_min_delta: v
+                .get("plateau_min_delta")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.plateau_min_delta),
         };
         cfg.validate()
     }

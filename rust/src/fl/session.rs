@@ -23,6 +23,7 @@ use crate::fl::strategy::RoundPlan;
 use crate::metrics::{ExperimentMetrics, RoundRecord};
 use crate::runtime::params::ModelState;
 use crate::util::csv::CsvWriter;
+use std::collections::BTreeMap;
 
 /// Why a round trained nothing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -266,6 +267,13 @@ impl RoundObserver for MetricsCsvObserver {
 ///
 /// Observer state is process-local by design — it re-warms after a
 /// checkpoint resume rather than riding in the checkpoint.
+///
+/// [`per_cluster`](AdaptiveDeadlineObserver::per_cluster) upgrades the
+/// single global estimate to one EWMA per *planned* cluster: clusters
+/// whose base stations sit behind different backhauls settle on
+/// different makespans, and a shared estimate either starves the slow
+/// cluster or over-waits the fast one.  A cluster falls back to the
+/// global EWMA until its own estimate has `warmup` samples.
 #[derive(Debug)]
 pub struct AdaptiveDeadlineObserver {
     /// EWMA weight of the newest sample (0 < alpha <= 1).
@@ -276,6 +284,13 @@ pub struct AdaptiveDeadlineObserver {
     warmup: usize,
     ewma: Option<f64>,
     seen: usize,
+    /// Per-planned-cluster `(ewma, samples)`; `None` = single global
+    /// estimate.  BTreeMap: iteration order never feeds back into
+    /// results, but this module stays ordered-containers-only anyway.
+    clusters: Option<BTreeMap<usize, (f64, usize)>>,
+    /// Cluster the in-flight round planned — attributes the makespan
+    /// `on_comm` reports to the right per-cluster estimate.
+    pending: Option<usize>,
 }
 
 impl AdaptiveDeadlineObserver {
@@ -287,7 +302,24 @@ impl AdaptiveDeadlineObserver {
     pub fn with_params(slack: f64, alpha: f64, warmup: usize) -> AdaptiveDeadlineObserver {
         assert!(slack > 0.0 && slack.is_finite(), "slack must be positive");
         assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
-        AdaptiveDeadlineObserver { alpha, slack, warmup, ewma: None, seen: 0 }
+        AdaptiveDeadlineObserver {
+            alpha,
+            slack,
+            warmup,
+            ewma: None,
+            seen: 0,
+            clusters: None,
+            pending: None,
+        }
+    }
+
+    /// Track one deadline EWMA per planned cluster instead of a single
+    /// global estimate.  Rounds planned without a distinguished cluster
+    /// (FedAvg-style, `cluster == usize::MAX`) only feed the global
+    /// estimate.
+    pub fn per_cluster(mut self) -> AdaptiveDeadlineObserver {
+        self.clusters = Some(BTreeMap::new());
+        self
     }
 
     /// Current estimate of the per-round network makespan (None until
@@ -295,10 +327,27 @@ impl AdaptiveDeadlineObserver {
     pub fn estimate_s(&self) -> Option<f64> {
         self.ewma
     }
+
+    /// Per-cluster makespan estimate (None while that cluster has no
+    /// samples, or when per-cluster tracking is off).
+    pub fn cluster_estimate_s(&self, cluster: usize) -> Option<f64> {
+        self.clusters.as_ref().and_then(|m| m.get(&cluster)).map(|&(e, _)| e)
+    }
 }
 
 impl RoundObserver for AdaptiveDeadlineObserver {
-    fn on_plan(&mut self, _t: usize, _plan: &RoundPlan, ctl: &mut RoundControl) {
+    fn on_plan(&mut self, _t: usize, plan: &RoundPlan, ctl: &mut RoundControl) {
+        self.pending = Some(plan.cluster);
+        if plan.cluster != usize::MAX {
+            if let Some(map) = &self.clusters {
+                if let Some(&(e, samples)) = map.get(&plan.cluster) {
+                    if samples >= self.warmup {
+                        ctl.set_deadline_s(self.slack * e);
+                        return;
+                    }
+                }
+            }
+        }
         if self.seen >= self.warmup {
             if let Some(e) = self.ewma {
                 ctl.set_deadline_s(self.slack * e);
@@ -314,6 +363,7 @@ impl RoundObserver for AdaptiveDeadlineObserver {
         _stragglers: &[usize],
         _ctl: &mut RoundControl,
     ) {
+        let cluster = self.pending.take();
         if !net_s.is_finite() || net_s <= 0.0 {
             return;
         }
@@ -322,6 +372,76 @@ impl RoundObserver for AdaptiveDeadlineObserver {
             Some(e) => self.alpha * net_s + (1.0 - self.alpha) * e,
         });
         self.seen += 1;
+        if let (Some(map), Some(c)) = (&mut self.clusters, cluster) {
+            if c != usize::MAX {
+                let entry = map.entry(c).or_insert((net_s, 0));
+                if entry.1 > 0 {
+                    entry.0 = self.alpha * net_s + (1.0 - self.alpha) * entry.0;
+                }
+                entry.1 += 1;
+            }
+        }
+    }
+}
+
+/// Built-in observer: **early stopping on a test-loss plateau**.
+///
+/// Watches every *evaluated* round (`test_loss` is NaN on rounds the
+/// eval cadence skipped, and those don't count either way).  A round
+/// whose loss fails to undercut the best seen so far by more than
+/// `min_delta` extends the plateau; once `patience` consecutive
+/// evaluated rounds have failed, the observer calls
+/// [`RoundControl::request_stop`] and the session ends after that
+/// round.  The stop rides the normal control channel, so the
+/// checkpointed round cursor still resumes bit-identically — a resumed
+/// run re-warms the observer and may stop later, never corrupt state.
+#[derive(Debug)]
+pub struct PlateauStopObserver {
+    /// Consecutive non-improving evaluated rounds before stopping.
+    patience: usize,
+    /// An improvement must beat the best loss by more than this.
+    min_delta: f64,
+    best: Option<f64>,
+    streak: usize,
+}
+
+impl PlateauStopObserver {
+    pub fn new(patience: usize, min_delta: f64) -> PlateauStopObserver {
+        assert!(patience > 0, "patience must be positive (0 means: don't build one)");
+        assert!(min_delta.is_finite() && min_delta >= 0.0, "min_delta must be finite and >= 0");
+        PlateauStopObserver { patience, min_delta, best: None, streak: 0 }
+    }
+
+    /// Evaluated rounds since the last improvement.
+    pub fn plateau_len(&self) -> usize {
+        self.streak
+    }
+}
+
+impl RoundObserver for PlateauStopObserver {
+    fn on_round_end(
+        &mut self,
+        _t: usize,
+        outcome: &RoundOutcome,
+        ctl: &mut RoundControl,
+    ) {
+        let loss = outcome.record().test_loss;
+        if !loss.is_finite() {
+            return; // not an evaluated round
+        }
+        let improved = match self.best {
+            None => true,
+            Some(best) => loss < best - self.min_delta,
+        };
+        if improved {
+            self.best = Some(loss);
+            self.streak = 0;
+        } else {
+            self.streak += 1;
+            if self.streak >= self.patience {
+                ctl.request_stop();
+            }
+        }
     }
 }
 
@@ -482,6 +602,131 @@ mod tests {
         // Lost rounds (no traffic -> net_s 0) leave the estimate alone.
         obs.on_comm(2, &comm, 0.0, &[], &mut ctl);
         assert_eq!(obs.estimate_s(), Some(3.0));
+    }
+
+    fn plan_for(cluster: usize) -> RoundPlan {
+        RoundPlan {
+            cluster,
+            groups: Vec::new(),
+            aggregation: crate::fl::strategy::AggregationSite::None,
+            migration: None,
+        }
+    }
+
+    fn evaluated(t: usize, test_loss: f64) -> RoundOutcome {
+        let record = RoundRecord {
+            round: t,
+            cluster: 0,
+            train_loss: 1.0,
+            test_accuracy: 0.5,
+            test_loss,
+            comm_byte_hops: 0,
+            train_s: 0.0,
+            aggregate_s: 0.0,
+            net_s: 0.0,
+            clock_s: 0.0,
+            stragglers: Vec::new(),
+            deferred: Vec::new(),
+        };
+        RoundOutcome::Completed { record, migration: None }
+    }
+
+    #[test]
+    fn per_cluster_deadlines_diverge_and_fall_back_to_global() {
+        // alpha 1.0 -> EWMA == last sample, so expectations are exact.
+        let comm = RoundComm { byte_hops: 0, uploads: Vec::new() };
+        let mut obs = AdaptiveDeadlineObserver::with_params(2.0, 1.0, 1).per_cluster();
+        let mut ctl = RoundControl::default();
+
+        // Cluster 0 is fast (2 s), cluster 1 is slow (10 s).
+        obs.on_plan(0, &plan_for(0), &mut ctl);
+        obs.on_comm(0, &comm, 2.0, &[], &mut ctl);
+        obs.on_plan(1, &plan_for(1), &mut ctl);
+        obs.on_comm(1, &comm, 10.0, &[], &mut ctl);
+        assert_eq!(obs.cluster_estimate_s(0), Some(2.0));
+        assert_eq!(obs.cluster_estimate_s(1), Some(10.0));
+
+        // Each cluster gets a deadline from its own estimate — the
+        // global path would hand both the blended 10.0 (last sample).
+        let mut ctl = RoundControl::default();
+        obs.on_plan(2, &plan_for(0), &mut ctl);
+        assert_eq!(ctl.deadline_override(), Some(4.0), "fast cluster: 2 x 2.0");
+        let mut ctl = RoundControl::default();
+        obs.on_plan(3, &plan_for(1), &mut ctl);
+        assert_eq!(ctl.deadline_override(), Some(20.0), "slow cluster: 2 x 10.0");
+
+        // A cluster with no samples of its own rides the global EWMA —
+        // exactly what the global-only observer would have set.
+        let mut global = AdaptiveDeadlineObserver::with_params(2.0, 1.0, 1);
+        global.on_plan(0, &plan_for(0), &mut ctl);
+        global.on_comm(0, &comm, 2.0, &[], &mut ctl);
+        global.on_plan(1, &plan_for(1), &mut ctl);
+        global.on_comm(1, &comm, 10.0, &[], &mut ctl);
+        let mut ctl_new = RoundControl::default();
+        let mut ctl_old = RoundControl::default();
+        obs.on_plan(4, &plan_for(7), &mut ctl_new);
+        global.on_plan(4, &plan_for(7), &mut ctl_old);
+        assert_eq!(ctl_new.deadline_override(), Some(20.0), "global fallback");
+        assert_eq!(
+            ctl_new.deadline_override(),
+            ctl_old.deadline_override(),
+            "cold cluster matches the global-only path"
+        );
+        assert_eq!(obs.cluster_estimate_s(7), None);
+    }
+
+    #[test]
+    fn per_cluster_ignores_clusterless_rounds() {
+        // FedAvg-style rounds plan with cluster == usize::MAX; they feed
+        // the global estimate but never mint a per-cluster entry.
+        let comm = RoundComm { byte_hops: 0, uploads: Vec::new() };
+        let mut obs = AdaptiveDeadlineObserver::with_params(1.0, 1.0, 1).per_cluster();
+        let mut ctl = RoundControl::default();
+        obs.on_plan(0, &plan_for(usize::MAX), &mut ctl);
+        obs.on_comm(0, &comm, 3.0, &[], &mut ctl);
+        assert_eq!(obs.estimate_s(), Some(3.0));
+        assert_eq!(obs.cluster_estimate_s(usize::MAX), None);
+        let mut ctl = RoundControl::default();
+        obs.on_plan(1, &plan_for(usize::MAX), &mut ctl);
+        assert_eq!(ctl.deadline_override(), Some(3.0), "global path still works");
+    }
+
+    #[test]
+    fn plateau_stop_fires_after_patience_without_improvement() {
+        let mut obs = PlateauStopObserver::new(2, 0.25);
+        let mut ctl = RoundControl::default();
+
+        obs.on_round_end(0, &evaluated(0, 1.0), &mut ctl); // first eval = best
+        assert!(!ctl.stop_requested());
+        assert_eq!(obs.plateau_len(), 0);
+
+        // 0.1 better, but under min_delta: counts as no improvement.
+        obs.on_round_end(1, &evaluated(1, 0.9), &mut ctl);
+        assert!(!ctl.stop_requested());
+        assert_eq!(obs.plateau_len(), 1);
+
+        // Skipped-eval rounds (NaN loss) neither extend nor reset.
+        obs.on_round_end(2, &evaluated(2, f64::NAN), &mut ctl);
+        assert_eq!(obs.plateau_len(), 1);
+        assert!(!ctl.stop_requested());
+
+        obs.on_round_end(3, &evaluated(3, 0.95), &mut ctl);
+        assert!(ctl.stop_requested(), "second miss exhausts patience 2");
+    }
+
+    #[test]
+    fn plateau_resets_on_genuine_improvement() {
+        let mut obs = PlateauStopObserver::new(2, 0.0);
+        let mut ctl = RoundControl::default();
+        obs.on_round_end(0, &evaluated(0, 1.0), &mut ctl);
+        obs.on_round_end(1, &evaluated(1, 1.0), &mut ctl); // equal != better
+        assert_eq!(obs.plateau_len(), 1);
+        obs.on_round_end(2, &evaluated(2, 0.5), &mut ctl); // strict decrease
+        assert_eq!(obs.plateau_len(), 0);
+        assert!(!ctl.stop_requested());
+        obs.on_round_end(3, &evaluated(3, 0.6), &mut ctl);
+        obs.on_round_end(4, &evaluated(4, 0.55), &mut ctl);
+        assert!(ctl.stop_requested(), "plateau of 2 after the reset");
     }
 
     #[test]

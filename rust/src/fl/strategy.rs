@@ -55,6 +55,9 @@ pub enum Strategy {
     /// All clusters train; edge pre-aggregation then cloud aggregation.
     HierFl,
     /// One client per round; model hops client -> client.
+    // lint:allow(checkpoint-parity): `order` is a pure function of the
+    // config seed (Rng::new(seed).shuffle) and is rebuilt on restore;
+    // only the cursor/last_cluster travel in the checkpoint.
     SeqFl { order: Vec<usize>, cursor: usize, last_cluster: Option<usize> },
     /// EdgeFLow: one active cluster per round, model migrates BS -> BS.
     EdgeFlow { schedule: ClusterSchedule, current: usize },

@@ -8,19 +8,20 @@
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use edgeflow::cli::{flag, flag_def, switch, workers_flag, Args, Cli, CommandSpec};
+use edgeflow::cli::{
+    apply_overrides, flag, flag_def, switch, workers_flag, Args, Cli, CommandSpec,
+};
 use edgeflow::config::{
     preset, Algorithm, DatasetKind, Distribution, EngineKind, ExperimentConfig,
-    StragglerPolicy, TopologyKind, PRESETS,
+    TopologyKind, PRESETS,
 };
 use edgeflow::data::partition::build_federation;
-use edgeflow::fl::compress::Codec;
 use edgeflow::fl::experiments::{fig3a, fig3b, fig4, table1, SuiteOptions};
 use edgeflow::fl::runner::{
     find_latest_checkpoint, prune_checkpoints, round_stamped_path, Runner,
     RunnerCheckpoint,
 };
-use edgeflow::fl::session::{AdaptiveDeadlineObserver, MetricsCsvObserver};
+use edgeflow::fl::session::{AdaptiveDeadlineObserver, MetricsCsvObserver, PlateauStopObserver};
 use edgeflow::fl::theory::{bound, k_scan, TheoryParams};
 use edgeflow::metrics::smooth;
 use edgeflow::runtime::backend::{backend_for, backend_for_kind, TrainBackend};
@@ -65,6 +66,24 @@ fn cli() -> Cli {
                 "adaptive-warmup",
                 "rounds observed before the adaptive deadline applies \
                  (default 3)",
+            ),
+            switch(
+                "adaptive-per-cluster",
+                "track one deadline EWMA per planned cluster instead of a \
+                 single global estimate (pairs with --adaptive-deadline; \
+                 clusters fall back to the global EWMA until their own \
+                 estimate is warm)",
+            ),
+            flag(
+                "plateau-rounds",
+                "stop early after N consecutive evaluated rounds without \
+                 test-loss improvement (0 = off); the checkpointed round \
+                 cursor still resumes bit-identically",
+            ),
+            flag(
+                "plateau-min-delta",
+                "loss improvement below this counts as no improvement for \
+                 --plateau-rounds (default 0)",
             ),
             flag(
                 "straggler-policy",
@@ -250,83 +269,6 @@ fn cli() -> Cli {
     }
 }
 
-fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<ExperimentConfig> {
-    if let Some(s) = a.get("engine") {
-        cfg.engine = EngineKind::parse(s)?;
-    }
-    if let Some(s) = a.get("codec") {
-        cfg.codec = Codec::parse(s)?;
-    }
-    if let Some(s) = a.get("algorithm") {
-        cfg.algorithm = Algorithm::parse(s)?;
-    }
-    if let Some(s) = a.get("dataset") {
-        cfg.dataset = DatasetKind::parse(s)?;
-        // keep the model consistent unless explicitly overridden
-        if a.get("model").is_none() {
-            cfg.model = match cfg.dataset {
-                DatasetKind::SynthFashion => "fashion_mlp".into(),
-                DatasetKind::SynthCifar => "cifar_mlp".into(),
-            };
-        }
-    }
-    if let Some(s) = a.get("dist") {
-        cfg.distribution = Distribution::parse(s)?;
-    }
-    if let Some(s) = a.get("model") {
-        cfg.model = s.to_string();
-    }
-    if let Some(s) = a.get("topology") {
-        cfg.topology = TopologyKind::parse(s)?;
-    }
-    if let Some(v) = a.get_usize("rounds")? {
-        cfg.rounds = v;
-    }
-    if let Some(v) = a.get_usize("clients")? {
-        cfg.clients = v;
-    }
-    if let Some(v) = a.get_usize("clusters")? {
-        cfg.clusters = v;
-    }
-    if let Some(v) = a.get_usize("k")? {
-        cfg.local_steps = v;
-    }
-    if let Some(v) = a.get_usize("batch")? {
-        cfg.batch_size = v;
-    }
-    if let Some(v) = a.get_f64("lr")? {
-        cfg.lr = v;
-    }
-    if let Some(s) = a.get("optimizer") {
-        cfg.optimizer = s.to_string();
-    }
-    if let Some(v) = a.get_u64("seed")? {
-        cfg.seed = v;
-    }
-    if let Some(v) = a.get_usize("samples")? {
-        cfg.samples_per_client = v;
-    }
-    if let Some(v) = a.get_usize("test-samples")? {
-        cfg.test_samples = v;
-    }
-    if let Some(v) = a.get_usize("eval-every")? {
-        cfg.eval_every = v;
-    }
-    if let Some(v) = a.get_f64("dropout")? {
-        cfg.dropout = v;
-    }
-    if let Some(v) = a.get_f64("deadline-s")? {
-        cfg.deadline_s = v;
-    }
-    if let Some(s) = a.get("straggler-policy") {
-        cfg.straggler_policy = StragglerPolicy::parse(s)?;
-    }
-    if let Some(v) = a.get_usize("workers")? {
-        cfg.workers = v;
-    }
-    cfg.validate()
-}
-
 fn suite_options(a: &Args) -> Result<SuiteOptions> {
     let mut o = SuiteOptions::default();
     if let Some(v) = a.get_usize("rounds")? {
@@ -417,10 +359,16 @@ fn cmd_train(a: &Args) -> Result<()> {
     }
     if adaptive_slack > 0.0 {
         let warmup = a.get_usize("adaptive-warmup")?.unwrap_or(3);
-        runner.add_observer(Box::new(AdaptiveDeadlineObserver::with_params(
-            adaptive_slack,
-            0.3,
-            warmup,
+        let mut obs = AdaptiveDeadlineObserver::with_params(adaptive_slack, 0.3, warmup);
+        if a.has("adaptive-per-cluster") {
+            obs = obs.per_cluster();
+        }
+        runner.add_observer(Box::new(obs));
+    }
+    if runner.cfg.plateau_rounds > 0 {
+        runner.add_observer(Box::new(PlateauStopObserver::new(
+            runner.cfg.plateau_rounds,
+            runner.cfg.plateau_min_delta,
         )));
     }
     // Drive the stepwise session: one step per round, with periodic
