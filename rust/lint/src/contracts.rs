@@ -16,7 +16,8 @@
 //!   every field must be referenced by `csv_fields` in header order.
 //! * **config-surface-parity** — every `ExperimentConfig` field needs
 //!   a JSON emit, a JSON parse arm and a CLI override arm (or a
-//!   `lint:allow(config-surface-parity): reason` pragma on the field).
+//!   `lint:allow(config-surface-parity): reason` pragma on the field);
+//!   every `CampaignSpec` field needs the JSON emit + parse pair.
 //!
 //! Field matching is by word-boundary token over the masked code view
 //! *and* the string-literal view, so both `self.deadline_s` and the
@@ -174,33 +175,62 @@ pub const DEFAULT_CSV: [CsvContract; 1] = [CsvContract {
     row_fn: FnRef { file: METRICS, name: "csv_fields", owner: Some("RoundRecord") },
 }];
 
-/// The config surface contract: JSON emit + JSON parse + CLI override.
-pub const DEFAULT_CONFIG: [ConfigContract; 1] = [ConfigContract {
-    type_name: "ExperimentConfig",
-    def_file: "rust/src/config/mod.rs",
-    surfaces: &[
-        (
-            FnRef {
-                file: "rust/src/config/mod.rs",
-                name: "to_json",
-                owner: Some("ExperimentConfig"),
-            },
-            "JSON emit",
-        ),
-        (
-            FnRef {
-                file: "rust/src/config/mod.rs",
-                name: "from_json",
-                owner: Some("ExperimentConfig"),
-            },
-            "JSON parse arm",
-        ),
-        (
-            FnRef { file: "rust/src/cli/mod.rs", name: "apply_overrides", owner: None },
-            "CLI override arm",
-        ),
-    ],
-}];
+/// The config surface contracts: every field of a declarative-surface
+/// struct must appear in each of its parse/emit fns.  `ExperimentConfig`
+/// additionally requires a CLI override arm; `CampaignSpec` (the
+/// campaign file format) has no per-field CLI surface by design — only
+/// its execution knobs are flag-overridable — so its contract covers
+/// the JSON round-trip pair.
+pub const DEFAULT_CONFIG: [ConfigContract; 2] = [
+    ConfigContract {
+        type_name: "ExperimentConfig",
+        def_file: "rust/src/config/mod.rs",
+        surfaces: &[
+            (
+                FnRef {
+                    file: "rust/src/config/mod.rs",
+                    name: "to_json",
+                    owner: Some("ExperimentConfig"),
+                },
+                "JSON emit",
+            ),
+            (
+                FnRef {
+                    file: "rust/src/config/mod.rs",
+                    name: "from_json",
+                    owner: Some("ExperimentConfig"),
+                },
+                "JSON parse arm",
+            ),
+            (
+                FnRef { file: "rust/src/cli/mod.rs", name: "apply_overrides", owner: None },
+                "CLI override arm",
+            ),
+        ],
+    },
+    ConfigContract {
+        type_name: "CampaignSpec",
+        def_file: "rust/src/fl/campaign/spec.rs",
+        surfaces: &[
+            (
+                FnRef {
+                    file: "rust/src/fl/campaign/spec.rs",
+                    name: "to_json",
+                    owner: Some("CampaignSpec"),
+                },
+                "JSON emit",
+            ),
+            (
+                FnRef {
+                    file: "rust/src/fl/campaign/spec.rs",
+                    name: "from_json",
+                    owner: Some("CampaignSpec"),
+                },
+                "JSON parse arm",
+            ),
+        ],
+    },
+];
 
 /// Run every default contract over the analyzed tree.
 pub fn apply(analyses: &mut [FileAnalysis]) {

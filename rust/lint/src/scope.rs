@@ -95,8 +95,8 @@ pub fn describe(rule: Rule) -> &'static str {
              whole-tree scans only"
         }
         Rule::ConfigSurfaceParity => {
-            "ExperimentConfig JSON emit/parse and CLI override arms; \
-             whole-tree scans only"
+            "ExperimentConfig JSON emit/parse and CLI override arms, \
+             CampaignSpec JSON emit/parse; whole-tree scans only"
         }
         Rule::StalePragma => {
             "every lint:allow pragma (an unused grant is a violation); \

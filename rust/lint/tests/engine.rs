@@ -232,6 +232,26 @@ fn config_surface_parity_fixture_triple() {
 }
 
 #[test]
+fn campaign_spec_parity_fixture_triple() {
+    let fire = include_str!("fixtures/campaign_parity_fire.rs");
+    let out = lint_sources(&[("rust/src/fl/campaign/spec.rs", fire)]);
+    // `tolerance` is emitted but has no JSON parse arm.
+    assert_eq!(out.diagnostics.len(), 1, "{:#?}", out.diagnostics);
+    assert_eq!(out.diagnostics[0].rule, Rule::ConfigSurfaceParity);
+    assert!(out.diagnostics[0].message.contains("`tolerance`"));
+    assert!(out.diagnostics[0].message.contains("JSON parse arm"));
+
+    let clean = include_str!("fixtures/campaign_parity_clean.rs");
+    let out = lint_sources(&[("rust/src/fl/campaign/spec.rs", clean)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+
+    let pragma = include_str!("fixtures/campaign_parity_pragma.rs");
+    let out = lint_sources(&[("rust/src/fl/campaign/spec.rs", pragma)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+    assert_eq!(out.suppressed.len(), 1, "{:#?}", out.suppressed);
+}
+
+#[test]
 fn stale_pragma_fixture_triple() {
     let fire = include_str!("fixtures/stale_pragma_fire.rs");
     let out = lint_sources(&[("rust/src/fl/fixture.rs", fire)]);

@@ -1,0 +1,27 @@
+//! config-surface-parity campaign fixture (linted as
+//! rust/src/fl/campaign/spec.rs): every spec field appears in both the
+//! JSON emit and the JSON parse fn — the contract's happy path.
+
+pub struct CampaignSpec {
+    pub name: String,
+    pub seed: u64,
+    pub tolerance: f64,
+}
+
+impl CampaignSpec {
+    pub fn to_json(&self) -> String {
+        emit(
+            pair("name", &self.name),
+            pair("seed", self.seed),
+            pair("tolerance", self.tolerance),
+        )
+    }
+
+    pub fn from_json(s: &str) -> CampaignSpec {
+        CampaignSpec {
+            name: read(s, "name"),
+            seed: read(s, "seed"),
+            tolerance: read(s, "tolerance"),
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! config-surface-parity campaign fixture (linted as
+//! rust/src/fl/campaign/spec.rs): `tolerance` is emitted but never
+//! parsed back — a spec field a round-trip would silently drop.
+
+pub struct CampaignSpec {
+    pub name: String,
+    pub seed: u64,
+    pub tolerance: f64,
+}
+
+impl CampaignSpec {
+    pub fn to_json(&self) -> String {
+        emit(
+            pair("name", &self.name),
+            pair("seed", self.seed),
+            pair("tolerance", self.tolerance),
+        )
+    }
+
+    pub fn from_json(s: &str) -> CampaignSpec {
+        with_defaults(read(s, "name"), read(s, "seed"))
+    }
+}

@@ -1,0 +1,25 @@
+//! config-surface-parity campaign fixture (linted as
+//! rust/src/fl/campaign/spec.rs): the same parse-side gap as the fire
+//! fixture, but justified on the field line.
+
+pub struct CampaignSpec {
+    pub name: String,
+    pub seed: u64,
+    // lint:allow(config-surface-parity): `tolerance` is derived from
+    // the CLI flag on load in this hypothetical and never read back.
+    pub tolerance: f64,
+}
+
+impl CampaignSpec {
+    pub fn to_json(&self) -> String {
+        emit(
+            pair("name", &self.name),
+            pair("seed", self.seed),
+            pair("tolerance", self.tolerance),
+        )
+    }
+
+    pub fn from_json(s: &str) -> CampaignSpec {
+        with_defaults(read(s, "name"), read(s, "seed"))
+    }
+}

@@ -234,6 +234,21 @@ pub fn workers_flag() -> FlagSpec {
     )
 }
 
+/// The shared `--cell-workers` flag: threads *inside* each experiment
+/// cell (the per-cell round loop).  Together with `--workers` this forms
+/// the nested-parallelism core budget: the cell pool gets
+/// `workers / cell-workers` slots (see `fl::experiments::split_budget`).
+/// Reports stay bit-identical across any split; the knobs only trade
+/// cell-level against round-level parallelism.  No declared default for
+/// the same reason as [`workers_flag`]: a campaign spec's own
+/// `cell_workers` must not be silently clobbered.
+pub fn cell_workers_flag() -> FlagSpec {
+    flag(
+        "cell-workers",
+        "worker threads inside each experiment cell (cell pool gets workers/cell-workers, default 1)",
+    )
+}
+
 /// Apply the experiment-shaping CLI flags onto a base config (preset,
 /// file, or default) and validate the result.  This is the CLI arm of
 /// the config surface: every [`ExperimentConfig`] field is expected to

@@ -575,6 +575,83 @@ impl ExperimentConfig {
     }
 }
 
+/// Every JSON key [`ExperimentConfig::from_json`] accepts: the 25 field
+/// keys plus the `codec_keep_hex` bit-exact side channel and the legacy
+/// `parallel_clients` alias.  `from_json` itself ignores unknown keys
+/// (old checkpoints may carry retired fields); surfaces that take a
+/// config *delta* — where a typo would silently no-op — validate against
+/// this list instead (see [`apply_json_delta`]).
+pub const CONFIG_JSON_KEYS: [&str; 27] = [
+    "name",
+    "algorithm",
+    "dataset",
+    "distribution",
+    "topology",
+    "clients",
+    "clusters",
+    "local_steps",
+    "rounds",
+    "batch_size",
+    "lr",
+    "optimizer",
+    "model",
+    "samples_per_client",
+    "test_samples",
+    "eval_every",
+    "seed",
+    "workers",
+    "dropout",
+    "deadline_s",
+    "straggler_policy",
+    "engine",
+    "codec",
+    "codec_keep_hex",
+    "plateau_rounds",
+    "plateau_min_delta",
+    "parallel_clients",
+];
+
+/// Apply a JSON config *delta* onto a base config: the delta's entries
+/// overwrite the base's serialized form and the merged object re-parses
+/// through [`ExperimentConfig::from_json`], so a delta accepts exactly
+/// the file parser's vocabulary and runs the same validation.  Unlike
+/// whole-file parsing, unknown delta keys are typed errors — a sweep
+/// axis that misspells a knob must not silently test the base config.
+pub fn apply_json_delta(
+    base: &ExperimentConfig,
+    delta: &Json,
+) -> Result<ExperimentConfig> {
+    let entries = match delta {
+        Json::Obj(m) => m,
+        other => {
+            return Err(Error::Config(format!(
+                "config delta must be a JSON object, got {}",
+                other.dump()
+            )))
+        }
+    };
+    let mut merged = match base.to_json() {
+        Json::Obj(m) => m,
+        _ => return Err(Error::Config("config did not serialize to an object".into())),
+    };
+    // A delta that re-picks the codec by name must not inherit the base's
+    // bit-exact keep-fraction side channel (stale hex would override the
+    // freshly named fraction in from_json).
+    if entries.contains_key("codec") && !entries.contains_key("codec_keep_hex") {
+        merged.remove("codec_keep_hex");
+    }
+    for (k, v) in entries {
+        if !CONFIG_JSON_KEYS.contains(&k.as_str()) {
+            return Err(Error::Config(format!(
+                "unknown config field {k:?} in delta (known fields: {})",
+                CONFIG_JSON_KEYS.join(", ")
+            )));
+        }
+        merged.insert(k.clone(), v.clone());
+    }
+    ExperimentConfig::from_json(&Json::Obj(merged))
+}
+
 /// Named presets matching the paper's experiments (CPU-scaled rounds).
 pub fn preset(name: &str) -> Result<ExperimentConfig> {
     let base = ExperimentConfig::default();
@@ -809,6 +886,70 @@ mod tests {
         assert!(EngineKind::parse("tpu").is_err());
         assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
         assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
+    }
+
+    #[test]
+    fn delta_merge_overrides_and_rejects_unknown_keys() {
+        let base = ExperimentConfig::default();
+        let delta =
+            Json::parse(r#"{"algorithm": "hierfl", "rounds": 3}"#).unwrap();
+        let cfg = apply_json_delta(&base, &delta).unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::HierFl);
+        assert_eq!(cfg.rounds, 3);
+        // untouched fields keep the base's values
+        assert_eq!(cfg.clients, base.clients);
+        assert_eq!(cfg.lr, base.lr);
+        // unknown keys are typed errors, not silent no-ops
+        let typo = Json::parse(r#"{"algorithrm": "hierfl"}"#).unwrap();
+        let err = apply_json_delta(&base, &typo).unwrap_err();
+        assert!(err.to_string().contains("algorithrm"), "{err}");
+        // a non-object delta is rejected too
+        assert!(apply_json_delta(&base, &Json::parse("[1]").unwrap()).is_err());
+        // merged config still runs full validation
+        let bad = Json::parse(r#"{"clusters": 7}"#).unwrap();
+        assert!(apply_json_delta(&base, &bad).is_err(), "100 % 7 != 0");
+    }
+
+    #[test]
+    fn delta_codec_rename_drops_stale_keep_hex() {
+        // Base serializes a TopK keep-fraction side channel; a delta that
+        // re-picks the codec by name must not inherit those stale bits.
+        let base = ExperimentConfig {
+            codec: Codec::TopK { keep_fraction: 1.0 / 3.0 },
+            ..ExperimentConfig::default()
+        };
+        let delta = Json::parse(r#"{"codec": "top10"}"#).unwrap();
+        let cfg = apply_json_delta(&base, &delta).unwrap();
+        assert_eq!(cfg.codec, Codec::TopK { keep_fraction: 0.1 });
+        // ... while an untouched codec still round-trips bit-exactly
+        let same = apply_json_delta(&base, &Json::parse("{}").unwrap()).unwrap();
+        match same.codec {
+            Codec::TopK { keep_fraction } => {
+                assert_eq!(keep_fraction.to_bits(), (1.0f64 / 3.0).to_bits())
+            }
+            other => panic!("expected TopK, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn config_json_keys_cover_the_roundtrip_surface() {
+        // Every key to_json emits must be in the whitelist — otherwise a
+        // delta could not override a field the file format round-trips.
+        let cfg = ExperimentConfig {
+            codec: Codec::TopK { keep_fraction: 0.1 },
+            ..ExperimentConfig::default()
+        };
+        match cfg.to_json() {
+            Json::Obj(m) => {
+                for k in m.keys() {
+                    assert!(
+                        CONFIG_JSON_KEYS.contains(&k.as_str()),
+                        "to_json key {k:?} missing from CONFIG_JSON_KEYS"
+                    );
+                }
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
     }
 
     #[test]

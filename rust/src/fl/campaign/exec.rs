@@ -1,0 +1,261 @@
+//! Campaign execution: fan the expanded cell grid over a [`WorkerPool`]
+//! (the `fl::experiments` cell-pool pattern) with an append-only journal
+//! so an interrupted campaign resumes where it stopped.
+//!
+//! The journal is JSONL: a header line binding the file to the spec's
+//! semantic digest, then one checkpoint-grade [`CellResult`] record per
+//! completed cell, appended (and flushed) the moment the cell finishes —
+//! a kill loses at most the cells still in flight.  On the next run,
+//! journaled cells are skipped and their results reused bit-exactly, so
+//! the final report is byte-identical to an uninterrupted run's.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::sync::Mutex;
+
+use crate::fl::experiments::{run_cell, split_budget};
+use crate::runtime::backend::backend_for;
+use crate::runtime::pool::WorkerPool;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::report::CellResult;
+use super::spec::{CampaignCell, CampaignSpec};
+
+/// Journal file schema version (header line `"version"`).
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// Execution knobs for [`run_campaign`].
+#[derive(Debug, Clone, Default)]
+pub struct CampaignOptions {
+    /// Artifact directory for the XLA engine (native cells ignore it).
+    pub artifacts: String,
+    /// Journal path; `None` runs without resumability.
+    pub journal: Option<String>,
+    /// Stop after this many *fresh* cells this invocation (0 = run all).
+    /// The journal keeps the partial progress — the interruption story
+    /// without needing an actual kill, used by tests and CI.
+    pub max_cells: usize,
+}
+
+/// What a [`run_campaign`] invocation accomplished.
+#[derive(Debug)]
+pub struct CampaignOutcome {
+    /// Per-cell results in grid order; `None` where `max_cells` stopped
+    /// short.
+    pub results: Vec<Option<CellResult>>,
+    /// Cells reused from the journal.
+    pub skipped: usize,
+    /// Cells trained by this invocation.
+    pub executed: usize,
+}
+
+impl CampaignOutcome {
+    pub fn is_complete(&self) -> bool {
+        self.results.iter().all(Option::is_some)
+    }
+
+    /// All results in grid order, or `None` while the campaign is
+    /// partial.
+    pub fn complete_results(&self) -> Option<Vec<CellResult>> {
+        if !self.is_complete() {
+            return None;
+        }
+        Some(self.results.iter().flatten().cloned().collect())
+    }
+}
+
+fn journal_header(spec: &CampaignSpec) -> Json {
+    Json::obj(vec![
+        ("version", JOURNAL_VERSION.into()),
+        ("campaign", spec.name.as_str().into()),
+        ("spec_digest", spec.digest().as_str().into()),
+    ])
+}
+
+/// Load completed cells from a journal, validating the header against
+/// the spec.  A truncated *final* line (the record a kill interrupted
+/// mid-write) is dropped; corruption anywhere else is a typed error.
+/// The `bool` is true when a torn tail was dropped — the caller must
+/// then rewrite the file before appending, or the next record would
+/// merge onto the partial line.
+fn load_journal(
+    path: &str,
+    spec: &CampaignSpec,
+    cells: &[CampaignCell],
+) -> Result<(BTreeMap<usize, CellResult>, bool)> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok((BTreeMap::new(), false))
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let mut lines = text.lines().enumerate();
+    let Some((_, header)) = lines.next() else {
+        return Ok((BTreeMap::new(), false)); // empty file: nothing journaled yet
+    };
+    let h = Json::parse(header)
+        .map_err(|e| Error::Config(format!("journal {path:?} header: {e}")))?;
+    match h.get("version").and_then(Json::as_u64) {
+        Some(JOURNAL_VERSION) => {}
+        other => {
+            return Err(Error::Config(format!(
+                "journal {path:?} version {other:?} unsupported (this build \
+                 writes {JOURNAL_VERSION})"
+            )))
+        }
+    }
+    let digest = spec.digest();
+    let found = h.get("spec_digest").and_then(Json::as_str).unwrap_or("");
+    if found != digest {
+        return Err(Error::Config(format!(
+            "journal {path:?} belongs to a different campaign (spec digest \
+             {found} != {digest}) — delete it or restore the original spec"
+        )));
+    }
+    let total_lines = text.lines().count();
+    let mut done = BTreeMap::new();
+    let mut torn = false;
+    for (lineno, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(line).and_then(|j| CellResult::from_journal_json(&j));
+        let rec = match parsed {
+            Ok(r) => r,
+            // The record a kill cut short: only tolerable on the last line.
+            Err(e) if lineno + 1 == total_lines => {
+                log::warn!(
+                    "journal {path}: dropping truncated final record ({e})"
+                );
+                torn = true;
+                continue;
+            }
+            Err(e) => {
+                return Err(Error::Config(format!(
+                    "journal {path:?} line {}: {e}",
+                    lineno + 1
+                )))
+            }
+        };
+        match cells.get(rec.index) {
+            Some(cell) if cell.id == rec.id => {}
+            _ => {
+                return Err(Error::Config(format!(
+                    "journal {path:?} line {}: cell {} {:?} does not match the \
+                     spec's grid",
+                    lineno + 1,
+                    rec.index,
+                    rec.id
+                )))
+            }
+        }
+        done.insert(rec.index, rec);
+    }
+    Ok((done, torn))
+}
+
+/// Rewrite a journal to header + the given records (atomic tmp+rename).
+/// Used after a torn tail was dropped: appending to a file whose last
+/// line is partial would merge the next record onto the junk.
+fn rewrite_journal(
+    path: &str,
+    spec: &CampaignSpec,
+    done: &BTreeMap<usize, CellResult>,
+) -> Result<()> {
+    let mut out = format!("{}\n", journal_header(spec).dump());
+    for rec in done.values() {
+        out.push_str(&rec.to_journal_json().dump());
+        out.push('\n');
+    }
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, out)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Run a campaign's pending cells on the cell pool, journaling each
+/// completion.  Already-journaled cells are skipped; their results are
+/// returned alongside the fresh ones in grid order.
+pub fn run_campaign(
+    spec: &CampaignSpec,
+    cells: &[CampaignCell],
+    opts: &CampaignOptions,
+) -> Result<CampaignOutcome> {
+    let (pool_workers, cell_workers) = split_budget(spec.workers, spec.cell_workers);
+    let done = match &opts.journal {
+        Some(path) => {
+            let (done, torn) = load_journal(path, spec, cells)?;
+            if torn {
+                rewrite_journal(path, spec, &done)?;
+            }
+            done
+        }
+        None => BTreeMap::new(),
+    };
+    let mut pending: Vec<&CampaignCell> =
+        cells.iter().filter(|c| !done.contains_key(&c.index)).collect();
+    if opts.max_cells > 0 && pending.len() > opts.max_cells {
+        pending.truncate(opts.max_cells);
+    }
+    let journal = match &opts.journal {
+        None => None,
+        Some(path) => {
+            let file = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)?;
+            if file.metadata()?.len() == 0 {
+                let mut f = file;
+                writeln!(f, "{}", journal_header(spec).dump())?;
+                f.flush()?;
+                Some(Mutex::new(f))
+            } else {
+                Some(Mutex::new(file))
+            }
+        }
+    };
+    let pool = WorkerPool::new(pool_workers);
+    log::info!(
+        "campaign {}: {} cells ({} journaled, {} to run) on {} x {} workers",
+        spec.name,
+        cells.len(),
+        done.len(),
+        pending.len(),
+        pool.workers(),
+        cell_workers,
+    );
+    let artifacts = opts.artifacts.as_str();
+    let fresh = pool.try_run(pending.len(), |i, _w| {
+        let cell = pending[i];
+        let mut cfg = cell.cfg.clone();
+        cfg.workers = cell_workers;
+        // Per-cell backends let an `engine` axis mix native and XLA cells
+        // in one grid (the native backend is free to build; XLA reuses
+        // its artifact cache per cell).
+        let backend = backend_for(&cfg, artifacts)?;
+        log::info!("campaign cell {}: {}", cell.index, cell.id);
+        let report = run_cell(&backend, cfg)?;
+        let result = CellResult::from_report(cell, &report);
+        if let Some(j) = &journal {
+            let line = result.to_journal_json().dump();
+            let mut f = j
+                .lock()
+                .map_err(|_| Error::Config("campaign journal lock poisoned".into()))?;
+            writeln!(f, "{line}")?;
+            f.flush()?;
+        }
+        Ok(result)
+    })?;
+    let mut results: Vec<Option<CellResult>> = vec![None; cells.len()];
+    let executed = fresh.len();
+    let skipped = done.len();
+    for (index, r) in done {
+        results[index] = Some(r);
+    }
+    for r in fresh {
+        results[r.index] = Some(r);
+    }
+    Ok(CampaignOutcome { results, skipped, executed })
+}

@@ -1,0 +1,34 @@
+//! Declarative experiment campaigns — the measurement layer over
+//! [`crate::fl::experiments`].
+//!
+//! A campaign is a JSON spec: a `base` [`crate::config::ExperimentConfig`]
+//! plus named sweep axes (algorithm × topology × codec × optimizer ×
+//! engine × straggler policy × deadline/plateau knobs — any config field),
+//! expanded into a cell grid with deterministic per-cell seeds and run on
+//! the experiments cell pool via the stepwise `Runner::step()` path.
+//!
+//! * [`spec`] — the spec vocabulary: [`CampaignSpec`] / [`Axis`] /
+//!   [`AxisCell`], grid expansion, per-cell seed derivation, the
+//!   semantic digest that binds journals and reports to a spec.
+//! * [`exec`] — pool execution with an append-only JSONL journal:
+//!   completed cells are checkpointed per record, so a killed campaign
+//!   resumes by skipping them, and the resumed report is byte-identical
+//!   to an uninterrupted run's.
+//! * [`report`] — the schema-versioned comparison report (per-cell
+//!   metrics + cross-cell winner tables), the `--baseline` regression
+//!   check (fails only on metric regressions beyond a tolerance,
+//!   mirroring the lint's baseline workflow), and the
+//!   `BENCH_campaign.json` trajectory emitter.
+//!
+//! The CLI front end is `edgeflow campaign run|validate|report`.
+
+pub mod exec;
+pub mod report;
+pub mod spec;
+
+pub use exec::{run_campaign, CampaignOptions, CampaignOutcome};
+pub use report::{
+    append_bench, parse_baseline, regressions, render_report, winners,
+    BaselineCell, CellResult,
+};
+pub use spec::{cell_seed, Axis, AxisCell, CampaignCell, CampaignSpec};

@@ -1,0 +1,553 @@
+//! Campaign comparison reports, baseline regression checks, and the
+//! `BENCH_campaign.json` trajectory emitter.
+//!
+//! A report is schema-versioned JSON: per-cell headline metrics (decimal
+//! for humans, hex bit patterns for bit-exact comparison) plus the
+//! deterministic per-round records, and cross-cell winner tables.
+//! Wall-clock fields (`train_s`, `aggregate_s`, phase timings) are
+//! excluded on purpose — they measure the host process, not the run, and
+//! the report contract is *byte-identical output for the same spec* at
+//! any worker split, resumed or not.
+//!
+//! `--baseline` mirrors the lint's workflow: parse an older report,
+//! match cells **by id** (immune to grid reordering), and fail only on
+//! metric regressions beyond a relative tolerance.
+
+use std::collections::BTreeMap;
+
+use crate::fl::runner::RunReport;
+use crate::metrics::RoundRecord;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::{f64_from_hex, f64_to_hex, u64_from_hex, u64_to_hex};
+
+use super::spec::{CampaignCell, CampaignSpec};
+
+/// Report schema version (`"version"` in the JSON).
+pub const REPORT_VERSION: u64 = 1;
+/// Trajectory file schema version.
+pub const BENCH_VERSION: u64 = 1;
+
+/// One completed cell's results — the unit the journal persists and the
+/// report renders.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub index: usize,
+    pub id: String,
+    pub seed: u64,
+    /// The resolved cell config, execution knobs stripped (a report must
+    /// not change when only the worker split does).
+    pub config: Json,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_loss: f64,
+    /// Cumulative wire bytes (codec-accounted byte-hops).
+    pub wire_bytes: u64,
+    /// Simulated makespan: the DES clock at the end of the last round.
+    pub clock_s: f64,
+    /// Rounds actually executed (early stop included).
+    pub rounds: usize,
+    pub records: Vec<RoundRecord>,
+}
+
+/// `cfg.to_json()` with the execution knobs removed.
+fn strip_exec_knobs(config: Json) -> Json {
+    match config {
+        Json::Obj(mut m) => {
+            m.remove("workers");
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+impl CellResult {
+    pub fn from_report(cell: &CampaignCell, report: &RunReport) -> CellResult {
+        CellResult {
+            index: cell.index,
+            id: cell.id.clone(),
+            seed: cell.seed,
+            config: strip_exec_knobs(cell.cfg.to_json()),
+            final_accuracy: report.final_accuracy,
+            best_accuracy: report.best_accuracy,
+            final_loss: report.final_loss,
+            wire_bytes: report.total_byte_hops,
+            clock_s: report
+                .metrics
+                .rounds
+                .last()
+                .map(|r| r.clock_s)
+                .unwrap_or(f64::NAN),
+            rounds: report.rounds,
+            records: report.metrics.rounds.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------- journal
+
+    /// Checkpoint-grade JSON for the campaign journal: every float as a
+    /// bit pattern, records in [`RoundRecord::to_ckpt_json`] form — a
+    /// resumed campaign re-renders the exact bytes the cell produced.
+    pub fn to_journal_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", self.index.into()),
+            ("id", self.id.as_str().into()),
+            ("seed", self.seed.into()),
+            ("config", self.config.clone()),
+            ("final_accuracy_hex", f64_to_hex(self.final_accuracy).as_str().into()),
+            ("best_accuracy_hex", f64_to_hex(self.best_accuracy).as_str().into()),
+            ("final_loss_hex", f64_to_hex(self.final_loss).as_str().into()),
+            ("wire_bytes_hex", u64_to_hex(self.wire_bytes).as_str().into()),
+            ("clock_s_hex", f64_to_hex(self.clock_s).as_str().into()),
+            ("rounds", self.rounds.into()),
+            (
+                "records",
+                Json::arr(self.records.iter().map(RoundRecord::to_ckpt_json)),
+            ),
+        ])
+    }
+
+    /// Inverse of [`CellResult::to_journal_json`].
+    pub fn from_journal_json(j: &Json) -> Result<CellResult> {
+        let hex_f64 = |k: &str| -> Result<f64> { f64_from_hex(j.str_field(k)?) };
+        let records = j
+            .req("records")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("journal \"records\" must be an array".into()))?
+            .iter()
+            .map(RoundRecord::from_ckpt_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CellResult {
+            index: j.usize_field("index")?,
+            id: j.str_field("id")?.to_string(),
+            seed: j.req("seed")?.as_u64().ok_or_else(|| {
+                Error::Json("journal \"seed\" must be an integer".into())
+            })?,
+            config: j.req("config")?.clone(),
+            final_accuracy: hex_f64("final_accuracy_hex")?,
+            best_accuracy: hex_f64("best_accuracy_hex")?,
+            final_loss: hex_f64("final_loss_hex")?,
+            wire_bytes: u64_from_hex(j.str_field("wire_bytes_hex")?)?,
+            clock_s: hex_f64("clock_s_hex")?,
+            rounds: j.usize_field("rounds")?,
+            records,
+        })
+    }
+
+    // -------------------------------------------------------------- report
+
+    /// The deterministic slice of a round record: wall-clock `train_s` /
+    /// `aggregate_s` are dropped (see the module docs); `cluster` rides
+    /// as hex because the "no cluster" sentinel is `usize::MAX`.
+    fn det_record_json(r: &RoundRecord) -> Json {
+        Json::obj(vec![
+            ("round", r.round.into()),
+            ("cluster", u64_to_hex(r.cluster as u64).as_str().into()),
+            ("train_loss", r.train_loss.into()),
+            ("test_accuracy", r.test_accuracy.into()),
+            ("test_loss", r.test_loss.into()),
+            ("comm_byte_hops", r.comm_byte_hops.into()),
+            ("net_s", r.net_s.into()),
+            ("clock_s", r.clock_s.into()),
+            ("stragglers", Json::arr(r.stragglers.iter().map(|&s| Json::from(s)))),
+            ("deferred", Json::arr(r.deferred.iter().map(|&s| Json::from(s)))),
+        ])
+    }
+
+    /// This cell's report entry: headline metrics in decimal (human) and
+    /// hex (bit-exact baseline comparison) plus the deterministic records.
+    pub fn report_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", self.index.into()),
+            ("id", self.id.as_str().into()),
+            ("seed", self.seed.into()),
+            ("config", self.config.clone()),
+            ("final_accuracy", self.final_accuracy.into()),
+            ("final_accuracy_hex", f64_to_hex(self.final_accuracy).as_str().into()),
+            ("best_accuracy", self.best_accuracy.into()),
+            ("best_accuracy_hex", f64_to_hex(self.best_accuracy).as_str().into()),
+            ("final_loss", self.final_loss.into()),
+            ("final_loss_hex", f64_to_hex(self.final_loss).as_str().into()),
+            ("wire_bytes", self.wire_bytes.into()),
+            ("clock_s", self.clock_s.into()),
+            ("clock_s_hex", f64_to_hex(self.clock_s).as_str().into()),
+            ("rounds", self.rounds.into()),
+            ("records", Json::arr(self.records.iter().map(Self::det_record_json))),
+        ])
+    }
+}
+
+// ------------------------------------------------------------------ winners
+
+/// Pick the best finite cell under `metric`; ties keep the lowest index.
+fn best_by(
+    cells: &[CellResult],
+    metric: fn(&CellResult) -> f64,
+    minimize: bool,
+) -> Json {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, c) in cells.iter().enumerate() {
+        let v = metric(c);
+        if !v.is_finite() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((_, bv)) => {
+                let ord = v.total_cmp(&bv);
+                if minimize {
+                    ord == std::cmp::Ordering::Less
+                } else {
+                    ord == std::cmp::Ordering::Greater
+                }
+            }
+        };
+        if better {
+            best = Some((i, v));
+        }
+    }
+    match best {
+        None => Json::Null,
+        Some((i, v)) => Json::obj(vec![
+            ("cell", cells[i].id.as_str().into()),
+            ("value", v.into()),
+        ]),
+    }
+}
+
+/// Cross-cell winner tables: final loss/accuracy, cumulative wire bytes,
+/// simulated makespan.  A metric nobody evaluated is `null`.
+pub fn winners(cells: &[CellResult]) -> Json {
+    let min_wire = cells
+        .iter()
+        .min_by_key(|c| (c.wire_bytes, c.index))
+        .map(|c| {
+            Json::obj(vec![
+                ("cell", c.id.as_str().into()),
+                ("value", c.wire_bytes.into()),
+            ])
+        })
+        .unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("max_final_accuracy", best_by(cells, |c| c.final_accuracy, false)),
+        ("min_final_loss", best_by(cells, |c| c.final_loss, true)),
+        ("min_wire_bytes", min_wire),
+        ("min_clock_s", best_by(cells, |c| c.clock_s, true)),
+    ])
+}
+
+// ------------------------------------------------------------------- report
+
+/// Render the full comparison report (pretty JSON + trailing newline).
+/// Deterministic: cells in grid order, objects key-sorted, no wall-clock
+/// fields — the same spec renders the same bytes on any host.
+pub fn render_report(spec: &CampaignSpec, cells: &[CellResult]) -> String {
+    let j = Json::obj(vec![
+        ("version", REPORT_VERSION.into()),
+        ("campaign", spec.name.as_str().into()),
+        ("seed", spec.seed.into()),
+        ("spec_digest", spec.digest().as_str().into()),
+        ("cells", Json::arr(cells.iter().map(CellResult::report_json))),
+        ("winners", winners(cells)),
+    ]);
+    let mut out = j.pretty();
+    out.push('\n');
+    out
+}
+
+// ----------------------------------------------------------------- baseline
+
+/// A cell's bit-exact headline metrics as read back from a report — the
+/// comparison unit of the `--baseline` workflow.
+#[derive(Debug, Clone)]
+pub struct BaselineCell {
+    pub id: String,
+    pub final_accuracy: f64,
+    pub final_loss: f64,
+    pub wire_bytes: u64,
+    pub clock_s: f64,
+}
+
+impl BaselineCell {
+    pub fn from_result(c: &CellResult) -> BaselineCell {
+        BaselineCell {
+            id: c.id.clone(),
+            final_accuracy: c.final_accuracy,
+            final_loss: c.final_loss,
+            wire_bytes: c.wire_bytes,
+            clock_s: c.clock_s,
+        }
+    }
+}
+
+/// Parse a comparison report into its baseline view.  Rejects other
+/// schema versions — regeneration beats misinterpretation, same policy
+/// as the lint's baseline parser.
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineCell>> {
+    let j = Json::parse(text)
+        .map_err(|e| Error::Config(format!("baseline report: {e}")))?;
+    match j.get("version").and_then(Json::as_u64) {
+        Some(REPORT_VERSION) => {}
+        other => {
+            return Err(Error::Config(format!(
+                "baseline report version {other:?} unsupported (this build reads \
+                 {REPORT_VERSION}) — regenerate it"
+            )))
+        }
+    }
+    let cells = j
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config("baseline report has no \"cells\" array".into()))?;
+    let mut out = Vec::with_capacity(cells.len());
+    for c in cells {
+        out.push(BaselineCell {
+            id: c.str_field("id")?.to_string(),
+            final_accuracy: f64_from_hex(c.str_field("final_accuracy_hex")?)?,
+            final_loss: f64_from_hex(c.str_field("final_loss_hex")?)?,
+            wire_bytes: c.req("wire_bytes")?.as_u64().ok_or_else(|| {
+                Error::Config("baseline cell \"wire_bytes\" must be an integer".into())
+            })?,
+            clock_s: f64_from_hex(c.str_field("clock_s_hex")?)?,
+        });
+    }
+    Ok(out)
+}
+
+/// Compare a run against a baseline: one message per metric regression
+/// beyond the relative tolerance, empty when clean.  Cells match by id,
+/// so grid reordering and added cells never fail; a baseline cell
+/// missing from the new report does.  Strict inequalities mean a
+/// bit-identical re-run passes even at tolerance 0.
+pub fn regressions(
+    new: &[BaselineCell],
+    old: &[BaselineCell],
+    tolerance: f64,
+) -> Vec<String> {
+    let by_id: BTreeMap<&str, &BaselineCell> =
+        new.iter().map(|c| (c.id.as_str(), c)).collect();
+    let mut out = Vec::new();
+    for o in old {
+        let Some(n) = by_id.get(o.id.as_str()) else {
+            out.push(format!(
+                "cell {:?}: present in baseline but missing from this report",
+                o.id
+            ));
+            continue;
+        };
+        // "higher is worse" metrics, then accuracy (lower is worse).
+        let worse_up = [
+            ("final_loss", o.final_loss, n.final_loss),
+            ("wire_bytes", o.wire_bytes as f64, n.wire_bytes as f64),
+            ("clock_s", o.clock_s, n.clock_s),
+        ];
+        for (metric, old_v, new_v) in worse_up {
+            if !old_v.is_finite() {
+                continue; // nothing to regress from
+            }
+            if !new_v.is_finite() {
+                out.push(format!(
+                    "cell {:?}: {metric} became non-finite (baseline {old_v})",
+                    o.id
+                ));
+            } else if new_v > old_v + tolerance * old_v.abs() {
+                out.push(format!(
+                    "cell {:?}: {metric} regressed {old_v} -> {new_v} \
+                     (tolerance {tolerance})",
+                    o.id
+                ));
+            }
+        }
+        let (old_v, new_v) = (o.final_accuracy, n.final_accuracy);
+        if old_v.is_finite() {
+            if !new_v.is_finite() {
+                out.push(format!(
+                    "cell {:?}: final_accuracy became non-finite (baseline {old_v})",
+                    o.id
+                ));
+            } else if new_v < old_v - tolerance * old_v.abs() {
+                out.push(format!(
+                    "cell {:?}: final_accuracy regressed {old_v} -> {new_v} \
+                     (tolerance {tolerance})",
+                    o.id
+                ));
+            }
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------- trajectory
+
+/// Append this campaign's headline results to a `BENCH_campaign.json`
+/// trajectory file so quality/perf history accumulates across PRs.  The
+/// file is `{"version": 1, "runs": [...]}`; each run records the digest,
+/// winners, and per-cell summary — no timestamps (the run's identity is
+/// its digest, and trajectory bytes must be reproducible).  The write is
+/// atomic (tmp + rename) like checkpoint saves.
+pub fn append_bench(
+    path: &str,
+    spec: &CampaignSpec,
+    cells: &[CellResult],
+) -> Result<()> {
+    let mut runs = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let j = Json::parse(&text)
+                .map_err(|e| Error::Config(format!("trajectory {path:?}: {e}")))?;
+            match j.get("version").and_then(Json::as_u64) {
+                Some(BENCH_VERSION) => {}
+                other => {
+                    return Err(Error::Config(format!(
+                        "trajectory {path:?} version {other:?} unsupported (this \
+                         build writes {BENCH_VERSION})"
+                    )))
+                }
+            }
+            j.get("runs")
+                .and_then(Json::as_arr)
+                .map(<[Json]>::to_vec)
+                .unwrap_or_default()
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(e.into()),
+    };
+    let summary = cells.iter().map(|c| {
+        Json::obj(vec![
+            ("id", c.id.as_str().into()),
+            ("final_accuracy", c.final_accuracy.into()),
+            ("final_loss", c.final_loss.into()),
+            ("wire_bytes", c.wire_bytes.into()),
+            ("clock_s", c.clock_s.into()),
+        ])
+    });
+    runs.push(Json::obj(vec![
+        ("campaign", spec.name.as_str().into()),
+        ("spec_digest", spec.digest().as_str().into()),
+        ("cells", cells.len().into()),
+        ("winners", winners(cells)),
+        ("cells_summary", Json::arr(summary)),
+    ]));
+    let out = Json::obj(vec![
+        ("version", BENCH_VERSION.into()),
+        ("runs", Json::arr(runs)),
+    ]);
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, format!("{}\n", out.pretty()))?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(id: &str, idx: usize, loss: f64, acc: f64, wire: u64, clock: f64) -> CellResult {
+        CellResult {
+            index: idx,
+            id: id.into(),
+            seed: 1,
+            config: Json::obj(vec![]),
+            final_accuracy: acc,
+            best_accuracy: acc,
+            final_loss: loss,
+            wire_bytes: wire,
+            clock_s: clock,
+            rounds: 1,
+            records: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn winners_pick_extremes_and_skip_nan() {
+        let cells = vec![
+            cell("a", 0, 0.5, 0.8, 100, 3.0),
+            cell("b", 1, 0.4, f64::NAN, 200, 2.0),
+            cell("c", 2, 0.4, 0.9, 300, 4.0),
+        ];
+        let w = winners(&cells);
+        let get = |table: &str| {
+            w.get(table)
+                .and_then(|t| t.get("cell"))
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_default()
+        };
+        assert_eq!(get("max_final_accuracy"), "c");
+        assert_eq!(get("min_final_loss"), "b", "ties keep the earlier index");
+        assert_eq!(get("min_wire_bytes"), "a");
+        assert_eq!(get("min_clock_s"), "b");
+        // all-NaN metric yields null, not a panic
+        let nan = vec![cell("x", 0, f64::NAN, f64::NAN, 1, f64::NAN)];
+        assert!(matches!(
+            winners(&nan).get("max_final_accuracy"),
+            Some(Json::Null)
+        ));
+    }
+
+    #[test]
+    fn regressions_fire_only_beyond_tolerance() {
+        let old = vec![cell("a", 0, 0.50, 0.80, 100, 3.0)]
+            .iter()
+            .map(BaselineCell::from_result)
+            .collect::<Vec<_>>();
+        // identical run: clean at tolerance 0
+        assert!(regressions(&old, &old, 0.0).is_empty());
+        // worse loss fails at 0, passes within 10%
+        let worse = vec![BaselineCell {
+            final_loss: 0.54,
+            ..old[0].clone()
+        }];
+        assert_eq!(regressions(&worse, &old, 0.0).len(), 1);
+        assert!(regressions(&worse, &old, 0.1).is_empty());
+        // lower accuracy is a regression; higher is not
+        let lower = vec![BaselineCell { final_accuracy: 0.7, ..old[0].clone() }];
+        assert_eq!(regressions(&lower, &old, 0.0).len(), 1);
+        let higher = vec![BaselineCell { final_accuracy: 0.9, ..old[0].clone() }];
+        assert!(regressions(&higher, &old, 0.0).is_empty());
+        // NaN where the baseline was finite is always a regression
+        let nan = vec![BaselineCell { final_accuracy: f64::NAN, ..old[0].clone() }];
+        assert_eq!(regressions(&nan, &old, 1.0).len(), 1);
+        // a missing cell fails; an added cell does not
+        assert_eq!(regressions(&[], &old, 0.0).len(), 1);
+        let mut added = vec![old[0].clone()];
+        added.push(BaselineCell { id: "new".into(), ..old[0].clone() });
+        assert!(regressions(&added, &old, 0.0).is_empty());
+    }
+
+    #[test]
+    fn journal_round_trip_is_bit_exact() {
+        let mut c = cell("a+b", 3, 0.5, f64::NAN, 123, 9.25);
+        c.records.push(RoundRecord {
+            round: 0,
+            cluster: usize::MAX,
+            train_loss: 0.5,
+            test_accuracy: f64::NAN,
+            test_loss: f64::NAN,
+            comm_byte_hops: 7,
+            train_s: 0.001,
+            aggregate_s: 0.002,
+            net_s: 1.5,
+            clock_s: 9.25,
+            stragglers: vec![1, 2],
+            deferred: vec![],
+        });
+        let text = c.to_journal_json().dump();
+        let back =
+            CellResult::from_journal_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, c.id);
+        assert_eq!(back.index, c.index);
+        assert_eq!(back.wire_bytes, c.wire_bytes);
+        assert_eq!(back.final_loss.to_bits(), c.final_loss.to_bits());
+        assert_eq!(back.final_accuracy.to_bits(), c.final_accuracy.to_bits());
+        assert_eq!(back.clock_s.to_bits(), c.clock_s.to_bits());
+        assert_eq!(back.records.len(), 1);
+        assert_eq!(back.records[0].cluster, usize::MAX);
+        assert_eq!(
+            back.records[0].test_loss.to_bits(),
+            c.records[0].test_loss.to_bits()
+        );
+        // report entries for the original and the round-tripped result
+        // render the same bytes (the resume byte-identity contract)
+        assert_eq!(back.report_json().pretty(), c.report_json().pretty());
+    }
+}

@@ -1,0 +1,468 @@
+//! Declarative campaign specs: a `base` [`ExperimentConfig`] plus named
+//! sweep axes, expanded into a deterministic cell grid.
+//!
+//! A spec is JSON (see `examples/campaign_small.json`):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "name": "sweep",
+//!   "seed": 7,
+//!   "base": { "engine": "native", "rounds": 4, ... },
+//!   "axes": [
+//!     { "axis": "algorithm", "cells": [
+//!       { "cell": "seq",  "delta": { "algorithm": "edgeflow_seq" } },
+//!       { "cell": "hier", "delta": { "algorithm": "hierfl" } } ] },
+//!     { "axis": "codec", "cells": [
+//!       { "cell": "raw",   "delta": { "codec": "none" } },
+//!       { "cell": "top10", "delta": { "codec": "top10" } } ] }
+//!   ],
+//!   "workers": 2, "cell_workers": 1, "tolerance": 0.0
+//! }
+//! ```
+//!
+//! The grid is the cartesian product of the axes in declaration order
+//! (last axis fastest).  Each grid cell applies its axis deltas to the
+//! base through [`crate::config::apply_json_delta`] — the file parser's
+//! own vocabulary and validation — and gets a per-cell seed derived from
+//! `(campaign seed, cell index)` by a splitmix64 finalizer, so cells are
+//! decorrelated but fully reproducible from the spec alone.  Unknown
+//! fields anywhere in the spec are typed errors, not silent no-ops.
+
+use std::collections::BTreeSet;
+
+use crate::config::{apply_json_delta, ExperimentConfig};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Spec schema version, the `"version"` key of the file format.
+pub const SPEC_VERSION: u64 = 1;
+
+/// Top-level keys [`CampaignSpec::from_json`] accepts.
+const SPEC_KEYS: [&str; 8] =
+    ["version", "name", "seed", "base", "axes", "workers", "cell_workers", "tolerance"];
+
+/// One named choice on an axis: a config delta over the campaign base.
+#[derive(Debug, Clone)]
+pub struct AxisCell {
+    /// Choice label; cell grid ids join these across axes.
+    pub name: String,
+    /// JSON object of [`ExperimentConfig`] fields this choice overrides.
+    pub delta: Json,
+}
+
+/// One sweep dimension: a named list of [`AxisCell`] choices.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub cells: Vec<AxisCell>,
+}
+
+/// A declarative experiment campaign (see the module docs for the file
+/// format).  Every field round-trips through [`CampaignSpec::to_json`] /
+/// [`CampaignSpec::from_json`] — the config-surface-parity lint contract
+/// covers this struct like it covers `ExperimentConfig`.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Campaign label: prefixes cell run names and derives the default
+    /// report/journal paths.
+    pub name: String,
+    /// Campaign master seed; per-cell seeds derive from it (see
+    /// [`cell_seed`]).
+    pub seed: u64,
+    /// The config every cell starts from; axis deltas override it.
+    pub base: ExperimentConfig,
+    /// Sweep axes, outermost first (the last axis varies fastest).
+    pub axes: Vec<Axis>,
+    /// Core budget for the campaign (0 = one per core), split between
+    /// the cell pool and per-cell round pools exactly like
+    /// [`crate::fl::experiments::SuiteOptions::workers`].
+    pub workers: usize,
+    /// Worker threads inside each cell's round loop (the other half of
+    /// the budget split; 0/1 = sequential rounds).
+    pub cell_workers: usize,
+    /// Relative regression tolerance for `--baseline` comparisons
+    /// (0 = any worsening beyond bit-equality fails).
+    pub tolerance: f64,
+}
+
+/// One expanded grid cell: the resolved config plus its identity.
+#[derive(Debug, Clone)]
+pub struct CampaignCell {
+    /// Row-major position in the grid — the seed-derivation input, so
+    /// ids can be renamed without reshuffling randomness.
+    pub index: usize,
+    /// Axis choice names joined with `+` (unique across the grid).
+    pub id: String,
+    /// Derived per-cell seed (already applied to `cfg`).
+    pub seed: u64,
+    /// The fully-resolved cell config.
+    pub cfg: ExperimentConfig,
+    /// The merged delta this cell applied over the base (for display).
+    pub delta: Json,
+}
+
+/// Derive a cell's seed from the campaign seed and its grid index: a
+/// splitmix64 finalizer over the pair, with the index spread by the
+/// golden-ratio increment so neighbouring cells land in unrelated
+/// streams.  Masked to 48 bits so the value survives the config JSON
+/// round-trip (numbers travel as f64) exactly.
+pub fn cell_seed(campaign_seed: u64, cell_index: u64) -> u64 {
+    let mut z = campaign_seed
+        .wrapping_add(cell_index.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)) & 0xFFFF_FFFF_FFFF
+}
+
+/// FNV-1a 64-bit, the digest behind [`CampaignSpec::digest`].
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn require_str(v: &Json, key: &str, what: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| {
+            Error::Config(format!("{what} needs a non-empty string {key:?} field"))
+        })
+}
+
+fn reject_unknown_keys(v: &Json, known: &[&str], what: &str) -> Result<()> {
+    if let Json::Obj(m) = v {
+        for k in m.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown field {k:?} in {what} (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    } else {
+        Err(Error::Config(format!("{what} must be a JSON object, got {}", v.dump())))
+    }
+}
+
+impl CampaignSpec {
+    // ------------------------------------------------------------- JSON I/O
+
+    pub fn to_json(&self) -> Json {
+        let axes = self.axes.iter().map(|ax| {
+            Json::obj(vec![
+                ("axis", ax.name.as_str().into()),
+                (
+                    "cells",
+                    Json::arr(ax.cells.iter().map(|c| {
+                        Json::obj(vec![
+                            ("cell", c.name.as_str().into()),
+                            ("delta", c.delta.clone()),
+                        ])
+                    })),
+                ),
+            ])
+        });
+        Json::obj(vec![
+            ("version", SPEC_VERSION.into()),
+            ("name", self.name.as_str().into()),
+            ("seed", self.seed.into()),
+            ("base", self.base.to_json()),
+            ("axes", Json::arr(axes)),
+            ("workers", self.workers.into()),
+            ("cell_workers", self.cell_workers.into()),
+            ("tolerance", self.tolerance.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CampaignSpec> {
+        reject_unknown_keys(v, &SPEC_KEYS, "campaign spec")?;
+        if let Some(ver) = v.get("version") {
+            match ver.as_u64() {
+                Some(SPEC_VERSION) => {}
+                _ => {
+                    return Err(Error::Config(format!(
+                        "campaign spec version {} unsupported (this build reads {})",
+                        ver.dump(),
+                        SPEC_VERSION
+                    )))
+                }
+            }
+        }
+        let name = require_str(v, "name", "campaign spec")?;
+        let seed = match v.get("seed") {
+            None => 0,
+            Some(s) => s.as_u64().ok_or_else(|| {
+                Error::Config("campaign \"seed\" must be a non-negative integer".into())
+            })?,
+        };
+        let base = match v.get("base") {
+            None => ExperimentConfig::default(),
+            Some(b) => ExperimentConfig::from_json(b)?,
+        };
+        let axes_json = v
+            .get("axes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("campaign needs an \"axes\" array".into()))?;
+        if axes_json.is_empty() {
+            return Err(Error::Config(
+                "campaign \"axes\" is empty — a campaign sweeps at least one axis"
+                    .into(),
+            ));
+        }
+        let mut axes = Vec::with_capacity(axes_json.len());
+        for ax in axes_json {
+            reject_unknown_keys(ax, &["axis", "cells"], "axis")?;
+            let axis_name = require_str(ax, "axis", "axis")?;
+            let cells_json = ax.get("cells").and_then(Json::as_arr).ok_or_else(|| {
+                Error::Config(format!("axis {axis_name:?} needs a \"cells\" array"))
+            })?;
+            if cells_json.is_empty() {
+                return Err(Error::Config(format!(
+                    "axis {axis_name:?} has no cells — every axis sweeps at least \
+                     one choice"
+                )));
+            }
+            let mut cells = Vec::with_capacity(cells_json.len());
+            let mut seen = BTreeSet::new();
+            for c in cells_json {
+                reject_unknown_keys(c, &["cell", "delta"], "axis cell")?;
+                let cell_name = require_str(c, "cell", "axis cell")?;
+                if !seen.insert(cell_name.clone()) {
+                    return Err(Error::Config(format!(
+                        "axis {axis_name:?} names cell {cell_name:?} twice"
+                    )));
+                }
+                let delta = c.get("delta").cloned().unwrap_or_else(|| Json::obj(vec![]));
+                // Validate the delta's vocabulary eagerly (against the
+                // campaign base) so `campaign validate` catches typos even
+                // in cells later merges would shadow.
+                apply_json_delta(&base, &delta)?;
+                cells.push(AxisCell { name: cell_name, delta });
+            }
+            axes.push(Axis { name: axis_name, cells });
+        }
+        {
+            let mut seen = BTreeSet::new();
+            for ax in &axes {
+                if !seen.insert(ax.name.clone()) {
+                    return Err(Error::Config(format!(
+                        "campaign names axis {:?} twice",
+                        ax.name
+                    )));
+                }
+            }
+        }
+        let usize_field = |k: &str, dflt: usize| -> Result<usize> {
+            match v.get(k) {
+                None => Ok(dflt),
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    Error::Config(format!("campaign {k:?} must be an integer"))
+                }),
+            }
+        };
+        let workers = usize_field("workers", 1)?;
+        let cell_workers = usize_field("cell_workers", 1)?;
+        let tolerance = match v.get("tolerance") {
+            None => 0.0,
+            Some(t) => t.as_f64().filter(|t| t.is_finite() && *t >= 0.0).ok_or_else(
+                || {
+                    Error::Config(
+                        "campaign \"tolerance\" must be a finite number >= 0".into(),
+                    )
+                },
+            )?,
+        };
+        Ok(CampaignSpec { name, seed, base, axes, workers, cell_workers, tolerance })
+    }
+
+    /// Load a spec from a JSON file.
+    pub fn load(path: &str) -> Result<CampaignSpec> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("cannot read campaign spec {path:?}: {e}"))
+        })?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    // ------------------------------------------------------------ expansion
+
+    /// Number of grid cells (product of axis sizes).
+    pub fn grid_size(&self) -> usize {
+        self.axes.iter().map(|a| a.cells.len()).product()
+    }
+
+    /// Expand the axes into the full cell grid, row-major with the last
+    /// axis varying fastest.  Deltas apply in axis order; the derived
+    /// per-cell seed overrides any `seed` a delta sets (the grid owns
+    /// cell randomness — sweep `seed` by adding a campaign, not an axis).
+    pub fn expand(&self) -> Result<Vec<CampaignCell>> {
+        let total = self.grid_size();
+        let mut cells = Vec::with_capacity(total);
+        for index in 0..total {
+            // Decompose the row-major index into per-axis choices.
+            let mut rem = index;
+            let mut picks = vec![0usize; self.axes.len()];
+            for (ai, ax) in self.axes.iter().enumerate().rev() {
+                picks[ai] = rem % ax.cells.len();
+                rem /= ax.cells.len();
+            }
+            let mut cfg = self.base.clone();
+            let mut merged = Json::obj(vec![]);
+            let mut parts = Vec::with_capacity(self.axes.len());
+            for (ax, &pick) in self.axes.iter().zip(&picks) {
+                let choice = &ax.cells[pick];
+                cfg = apply_json_delta(&cfg, &choice.delta)?;
+                if let (Json::Obj(acc), Json::Obj(d)) = (&mut merged, &choice.delta) {
+                    for (k, val) in d {
+                        acc.insert(k.clone(), val.clone());
+                    }
+                }
+                parts.push(choice.name.as_str());
+            }
+            let id = parts.join("+");
+            let seed = cell_seed(self.seed, index as u64);
+            cfg.seed = seed;
+            cfg.name = format!("{}_{}", self.name, id);
+            cells.push(CampaignCell { index, id, seed, cfg, delta: merged });
+        }
+        Ok(cells)
+    }
+
+    /// Semantic digest of the campaign: FNV-1a over the canonical dump of
+    /// `(name, seed, base, axes)`.  Execution knobs (`workers`,
+    /// `cell_workers`, the base's `workers`, `tolerance`) are excluded —
+    /// they change how fast the grid runs, never what it computes, and
+    /// journals/reports must stay interchangeable across budget splits.
+    pub fn digest(&self) -> String {
+        let mut base = match self.base.to_json() {
+            Json::Obj(m) => m,
+            _ => Default::default(),
+        };
+        base.remove("workers");
+        let spec = self.to_json();
+        let axes =
+            spec.get("axes").cloned().unwrap_or_else(|| Json::arr(Vec::new()));
+        let canonical = Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("seed", self.seed.into()),
+            ("base", Json::Obj(base)),
+            ("axes", axes),
+        ]);
+        format!("{:016x}", fnv1a64(canonical.dump().as_bytes()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+
+    fn tiny_spec() -> Json {
+        Json::parse(
+            r#"{
+              "version": 1,
+              "name": "t",
+              "seed": 9,
+              "base": {"engine": "native", "optimizer": "momentum", "lr": 0.05,
+                       "clients": 8, "clusters": 2, "rounds": 2,
+                       "batch_size": 4, "samples_per_client": 8,
+                       "test_samples": 16, "eval_every": 1},
+              "axes": [
+                {"axis": "algorithm", "cells": [
+                  {"cell": "seq",  "delta": {"algorithm": "edgeflow_seq"}},
+                  {"cell": "hier", "delta": {"algorithm": "hierfl"}}]},
+                {"axis": "codec", "cells": [
+                  {"cell": "raw",   "delta": {"codec": "none"}},
+                  {"cell": "top10", "delta": {"codec": "top10"}}]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn grid_expands_row_major_with_derived_seeds() {
+        let spec = CampaignSpec::from_json(&tiny_spec()).unwrap();
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        let ids: Vec<&str> = cells.iter().map(|c| c.id.as_str()).collect();
+        assert_eq!(ids, ["seq+raw", "seq+top10", "hier+raw", "hier+top10"]);
+        assert_eq!(cells[2].cfg.algorithm, Algorithm::HierFl);
+        // base fields survive under the deltas
+        assert!(cells.iter().all(|c| c.cfg.clients == 8 && c.cfg.rounds == 2));
+        // seeds are derived, distinct, and stable under re-expansion
+        let seeds: BTreeSet<u64> = cells.iter().map(|c| c.seed).collect();
+        assert_eq!(seeds.len(), 4);
+        for c in &cells {
+            assert_eq!(c.seed, cell_seed(9, c.index as u64));
+            assert_eq!(c.cfg.seed, c.seed);
+            assert!(c.seed < (1 << 53), "seed must survive a JSON f64");
+        }
+        let again = spec.expand().unwrap();
+        assert!(cells
+            .iter()
+            .zip(&again)
+            .all(|(a, b)| a.id == b.id && a.seed == b.seed));
+    }
+
+    #[test]
+    fn spec_round_trips_and_digest_ignores_execution_knobs() {
+        let spec = CampaignSpec::from_json(&tiny_spec()).unwrap();
+        let back = CampaignSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.seed, spec.seed);
+        assert_eq!(back.axes.len(), spec.axes.len());
+        assert_eq!(back.digest(), spec.digest());
+        // workers / cell_workers / tolerance do not perturb the digest...
+        let mut exec = spec.clone();
+        exec.workers = 7;
+        exec.cell_workers = 3;
+        exec.tolerance = 0.25;
+        assert_eq!(exec.digest(), spec.digest());
+        // ...but a semantic change does
+        let mut other = spec.clone();
+        other.seed = 10;
+        assert_ne!(other.digest(), spec.digest());
+    }
+
+    #[test]
+    fn unknown_fields_and_empty_axes_are_typed_errors() {
+        let mut v = tiny_spec();
+        if let Json::Obj(m) = &mut v {
+            m.insert("tolerence".into(), 0.1.into());
+        }
+        let err = CampaignSpec::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("tolerence"), "{err}");
+
+        let empty = Json::parse(r#"{"name": "t", "axes": []}"#).unwrap();
+        assert!(CampaignSpec::from_json(&empty).is_err());
+
+        let empty_axis =
+            Json::parse(r#"{"name": "t", "axes": [{"axis": "a", "cells": []}]}"#)
+                .unwrap();
+        assert!(CampaignSpec::from_json(&empty_axis).is_err());
+
+        // a delta typo is caught at parse time, not at run time
+        let typo = Json::parse(
+            r#"{"name": "t", "axes": [{"axis": "a", "cells": [
+                 {"cell": "x", "delta": {"algorithrm": "hierfl"}}]}]}"#,
+        )
+        .unwrap();
+        let err = CampaignSpec::from_json(&typo).unwrap_err();
+        assert!(err.to_string().contains("algorithrm"), "{err}");
+
+        // duplicate cell names would collide in the grid id space
+        let dup = Json::parse(
+            r#"{"name": "t", "axes": [{"axis": "a", "cells": [
+                 {"cell": "x", "delta": {}}, {"cell": "x", "delta": {}}]}]}"#,
+        )
+        .unwrap();
+        assert!(CampaignSpec::from_json(&dup).is_err());
+    }
+}

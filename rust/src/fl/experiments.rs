@@ -12,8 +12,11 @@
 //! [`TrainBackend`] (under the XLA engine that shares one
 //! compiled-executable cache; `SuiteOptions::engine = native` runs the
 //! same suites artifact-free).  Cell results are collected in cell
-//! order, so suite output is identical at any worker count; per-cell
-//! runners stay sequential to avoid oversubscribing the host.
+//! order, so suite output is identical at any worker count.  The core
+//! budget splits between the cell pool and the per-cell round loops via
+//! [`split_budget`] ([`SuiteOptions::cell_workers`] threads inside each
+//! cell, pool width shrunk to fit) — both layers reduce in fixed order,
+//! so any split reproduces the same bits.
 //!
 //! Cells drive the stepwise session API directly — `step()` until done,
 //! then `report()` — rather than the `run()` convenience loop, so suite
@@ -38,13 +41,35 @@ use crate::topology::route::RouteTable;
 use crate::util::error::Result;
 use crate::util::table::{Align, Table};
 
-/// Drive one experiment cell through the stepwise session API.
-fn run_cell(backend: &Arc<dyn TrainBackend>, cfg: ExperimentConfig) -> Result<RunReport> {
+/// Drive one experiment cell through the stepwise session API.  Shared
+/// by the suites here and by [`crate::fl::campaign`], which fans its
+/// grid over the same pool pattern.
+pub fn run_cell(
+    backend: &Arc<dyn TrainBackend>,
+    cfg: ExperimentConfig,
+) -> Result<RunReport> {
     let mut r = Runner::with_backend(backend.clone(), cfg)?;
     while !r.is_done() {
         r.step()?;
     }
     Ok(r.report())
+}
+
+/// Split a core budget between the cell pool and the per-cell round
+/// pools: `(pool_workers, cell_workers)` with
+/// `pool_workers * cell_workers <= budget` always.  `budget = 0` means
+/// one per available core (the [`WorkerPool`] convention); `cell_workers
+/// = 0` is normalized to 1 (sequential rounds inside each cell, the
+/// historical suite behavior).  The per-cell width is clamped to the
+/// budget first, then the pool takes whatever multiple still fits.
+pub fn split_budget(budget: usize, cell_workers: usize) -> (usize, usize) {
+    let total = if budget == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        budget
+    };
+    let per_cell = cell_workers.max(1).min(total);
+    (total / per_cell, per_cell)
 }
 
 /// Scale knobs for the training suites.
@@ -56,8 +81,14 @@ pub struct SuiteOptions {
     pub eval_every: usize,
     pub seed: u64,
     pub lr: f64,
-    /// Concurrent experiment cells (0 = one per core, 1 = sequential).
+    /// Core budget for the whole suite (0 = one per core, 1 = sequential).
+    /// Split between the cell pool and per-cell round pools by
+    /// [`split_budget`] with [`SuiteOptions::cell_workers`].
     pub workers: usize,
+    /// Worker threads inside each cell's round loop (client fan-out).
+    /// 0/1 = sequential cells, the historical default; the cell pool
+    /// shrinks so `pool * cell_workers` never exceeds `workers`.
+    pub cell_workers: usize,
     /// Which engine the cells train on; must match the backend handed to
     /// the suite functions (native cells support sgd|momentum|adam — pick
     /// an `optimizer`/`lr` pair suited to the trainer, e.g. `momentum` at
@@ -79,10 +110,19 @@ impl Default for SuiteOptions {
             seed: 0,
             lr: 1e-3,
             workers: 1,
+            cell_workers: 1,
             engine: EngineKind::Xla,
             optimizer: None,
             batch_size: None,
         }
+    }
+}
+
+impl SuiteOptions {
+    /// The resolved `(pool_workers, per_cell_workers)` split of this
+    /// suite's core budget (see [`split_budget`]).
+    pub fn budget(&self) -> (usize, usize) {
+        split_budget(self.workers, self.cell_workers)
     }
 }
 
@@ -112,6 +152,7 @@ fn base_config(
         eval_every: o.eval_every,
         seed: o.seed,
         lr: o.lr,
+        workers: o.budget().1,
         engine: o.engine,
         optimizer: o.optimizer.clone().unwrap_or_else(|| d.optimizer.clone()),
         batch_size: o.batch_size.unwrap_or(d.batch_size),
@@ -156,7 +197,7 @@ pub fn table1(
         .iter()
         .flat_map(|(ds, dist)| algs.iter().map(|&alg| (*ds, dist.clone(), alg)))
         .collect();
-    let pool = WorkerPool::new(o.workers);
+    let pool = WorkerPool::new(o.budget().0);
     let reports = pool.try_run(specs.len(), |i, _w| {
         let (ds, dist, alg) = &specs[i];
         let cfg = base_config(*ds, dist.clone(), *alg, o);
@@ -216,7 +257,7 @@ pub fn fig3a(
     for &n_m in cluster_sizes {
         assert!(100 % n_m == 0, "N_m must divide 100");
     }
-    let pool = WorkerPool::new(o.workers);
+    let pool = WorkerPool::new(o.budget().0);
     let reports = pool.try_run(cluster_sizes.len(), |i, _w| {
         let n_m = cluster_sizes[i];
         let mut cfg = base_config(
@@ -239,7 +280,7 @@ pub fn fig3b(
     o: &SuiteOptions,
     ks: &[usize],
 ) -> Result<Vec<(usize, RunReport)>> {
-    let pool = WorkerPool::new(o.workers);
+    let pool = WorkerPool::new(o.budget().0);
     let reports = pool.try_run(ks.len(), |i, _w| {
         let k = ks[i];
         let mut cfg = base_config(
@@ -417,6 +458,45 @@ pub fn fig4(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn split_budget_never_exceeds_the_core_budget() {
+        for budget in 1..=16usize {
+            for cell in 0..=20usize {
+                let (pool, per_cell) = split_budget(budget, cell);
+                assert!(pool >= 1, "budget={budget} cell={cell}");
+                assert!(per_cell >= 1, "budget={budget} cell={cell}");
+                assert!(
+                    pool * per_cell <= budget,
+                    "budget={budget} cell={cell} -> pool={pool} per_cell={per_cell}"
+                );
+            }
+        }
+        // 0 = all cores resolves to a positive split too.
+        let (pool, per_cell) = split_budget(0, 2);
+        assert!(pool >= 1 && per_cell >= 1);
+        // The historical default (cell_workers unset) keeps the whole
+        // budget on the cell pool with sequential cells.
+        assert_eq!(split_budget(8, 0), (8, 1));
+        assert_eq!(split_budget(8, 1), (8, 1));
+        // Splits divide the budget; an oversized per-cell ask is clamped.
+        assert_eq!(split_budget(8, 2), (4, 2));
+        assert_eq!(split_budget(4, 3), (1, 3));
+        assert_eq!(split_budget(1, 4), (1, 1));
+    }
+
+    #[test]
+    fn suite_options_budget_reaches_cell_configs() {
+        let o = SuiteOptions { workers: 4, cell_workers: 2, ..SuiteOptions::default() };
+        assert_eq!(o.budget(), (2, 2));
+        let cfg = base_config(
+            DatasetKind::SynthFashion,
+            Distribution::Iid,
+            Algorithm::EdgeFlowSeq,
+            &o,
+        );
+        assert_eq!(cfg.workers, 2, "per-cell round loops get the split's width");
+    }
 
     #[test]
     fn fig4_edgeflow_beats_fedavg_on_deep_topologies() {

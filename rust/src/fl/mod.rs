@@ -17,8 +17,13 @@
 //!   adaptive deadlines), built-in progress/metrics observers, and the
 //!   straggler re-inclusion pool behind `straggler_policy = defer`.
 //! * [`theory`] — Theorem 1's convergence bound (Eq. 8), term by term.
+//! * [`campaign`] — declarative multi-axis experiment campaigns over the
+//!   [`experiments`] cell pool: resumable journaled runs, comparison
+//!   reports with baseline regression checks, `BENCH_campaign.json`
+//!   trajectories.
 
 pub mod aggregate;
+pub mod campaign;
 pub mod comm;
 pub mod compress;
 pub mod experiments;

@@ -9,14 +9,21 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use edgeflow::cli::{
-    apply_overrides, flag, flag_def, switch, workers_flag, Args, Cli, CommandSpec,
+    apply_overrides, cell_workers_flag, flag, flag_def, switch, workers_flag, Args,
+    Cli, CommandSpec,
 };
 use edgeflow::config::{
     preset, Algorithm, DatasetKind, Distribution, EngineKind, ExperimentConfig,
     TopologyKind, PRESETS,
 };
 use edgeflow::data::partition::build_federation;
-use edgeflow::fl::experiments::{fig3a, fig3b, fig4, table1, SuiteOptions};
+use edgeflow::fl::campaign::{
+    append_bench, parse_baseline, regressions, render_report, run_campaign,
+    winners, BaselineCell, CampaignOptions, CampaignSpec, CellResult,
+};
+use edgeflow::fl::experiments::{
+    fig3a, fig3b, fig4, split_budget, table1, SuiteOptions,
+};
 use edgeflow::fl::runner::{
     find_latest_checkpoint, prune_checkpoints, round_stamped_path, Runner,
     RunnerCheckpoint,
@@ -29,6 +36,7 @@ use edgeflow::runtime::manifest::Manifest;
 use edgeflow::topology::builder::{build as build_topo, TopologyParams};
 use edgeflow::topology::route::RouteTable;
 use edgeflow::util::error::{Error, Result};
+use edgeflow::util::json::Json;
 use edgeflow::util::table::{Align, Table};
 
 fn cli() -> Cli {
@@ -168,6 +176,7 @@ fn cli() -> Cli {
                     flag_def("samples", "samples per client", "120"),
                     flag("seed", "master seed"),
                     workers_flag(),
+                    cell_workers_flag(),
                     switch("fast", "fashion cells only"),
                     flag("out", "write cell results CSV here"),
                     switch("verbose", "debug logging"),
@@ -191,6 +200,7 @@ fn cli() -> Cli {
                     flag_def("window", "smoothing window", "5"),
                     flag("seed", "master seed"),
                     workers_flag(),
+                    cell_workers_flag(),
                     flag("out", "write curves CSV here"),
                     switch("verbose", "debug logging"),
                 ],
@@ -260,6 +270,54 @@ fn cli() -> Cli {
                 positional: vec![],
             },
             CommandSpec {
+                name: "campaign",
+                about: "declarative multi-axis experiment campaigns \
+                        (validate the grid, run it resumably, compare reports)",
+                flags: vec![
+                    flag_def("artifacts", "artifact directory (XLA cells)", "artifacts"),
+                    flag("out", "report path (default <campaign>_report.json)"),
+                    flag(
+                        "journal",
+                        "resume journal path (default <campaign>.journal.jsonl); \
+                         completed cells are skipped on re-run",
+                    ),
+                    switch("no-journal", "run without the resume journal"),
+                    flag(
+                        "baseline",
+                        "older report to compare against; regressions beyond \
+                         the tolerance fail the command",
+                    ),
+                    flag(
+                        "tolerance",
+                        "relative regression tolerance for --baseline \
+                         (overrides the spec's; 0 = only bit-identical or \
+                         better passes)",
+                    ),
+                    flag_def(
+                        "bench",
+                        "trajectory file to append headline results to",
+                        "BENCH_campaign.json",
+                    ),
+                    switch("no-bench", "skip the trajectory append"),
+                    flag(
+                        "max-cells",
+                        "stop after N fresh cells this invocation (0 = all); \
+                         the journal keeps the partial progress",
+                    ),
+                    workers_flag(),
+                    cell_workers_flag(),
+                    switch("verbose", "debug logging"),
+                ],
+                positional: vec![
+                    ("action", "run | validate | report"),
+                    (
+                        "file",
+                        "campaign spec JSON (run|validate) or an existing \
+                         report JSON (report)",
+                    ),
+                ],
+            },
+            CommandSpec {
                 name: "presets",
                 about: "list named experiment presets",
                 flags: vec![],
@@ -282,6 +340,9 @@ fn suite_options(a: &Args) -> Result<SuiteOptions> {
     }
     if let Some(v) = a.get_usize("workers")? {
         o.workers = v;
+    }
+    if let Some(v) = a.get_usize("cell-workers")? {
+        o.cell_workers = v;
     }
     if let Some(s) = a.get("engine") {
         o.engine = EngineKind::parse(s)?;
@@ -730,6 +791,222 @@ fn cmd_inspect(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load a campaign spec and fold the execution-knob CLI overrides onto
+/// it.  Only the knobs the digest ignores are overridable — the sweep
+/// itself always comes from the file.
+fn campaign_spec(a: &Args, path: &str) -> Result<CampaignSpec> {
+    let mut spec = CampaignSpec::load(path)?;
+    if let Some(v) = a.get_usize("workers")? {
+        spec.workers = v;
+    }
+    if let Some(v) = a.get_usize("cell-workers")? {
+        spec.cell_workers = v;
+    }
+    if let Some(v) = campaign_tolerance(a)? {
+        spec.tolerance = v;
+    }
+    Ok(spec)
+}
+
+fn campaign_tolerance(a: &Args) -> Result<Option<f64>> {
+    match a.get_f64("tolerance")? {
+        None => Ok(None),
+        Some(v) if v.is_finite() && v >= 0.0 => Ok(Some(v)),
+        Some(v) => Err(Error::Usage(format!(
+            "--tolerance expects a finite number >= 0, got {v}"
+        ))),
+    }
+}
+
+fn print_winners(w: &Json) {
+    println!("winners:");
+    if let Some(tables) = w.as_obj() {
+        for (metric, v) in tables {
+            match v {
+                Json::Null => println!("  {metric:<20} -"),
+                v => println!(
+                    "  {metric:<20} {}  ({})",
+                    v.get("cell").and_then(Json::as_str).unwrap_or("?"),
+                    v.get("value").map(|x| x.dump()).unwrap_or_default()
+                ),
+            }
+        }
+    }
+}
+
+/// `campaign validate`: expand the grid and print it without training —
+/// the dry run that catches spec typos (typed errors, not panics).
+fn campaign_validate(a: &Args, path: &str) -> Result<()> {
+    let spec = campaign_spec(a, path)?;
+    let cells = spec.expand()?;
+    let (pool, per_cell) = split_budget(spec.workers, spec.cell_workers);
+    println!(
+        "campaign {:?}: {} axes, {} cells, spec digest {}",
+        spec.name,
+        spec.axes.len(),
+        cells.len(),
+        spec.digest()
+    );
+    println!(
+        "budget: {} cell-pool slots x {} round workers per cell",
+        pool, per_cell
+    );
+    let mut t = Table::new(&["#", "cell", "seed", "delta"])
+        .align(1, Align::Left)
+        .align(3, Align::Left);
+    for c in &cells {
+        t.row(&[
+            c.index.to_string(),
+            c.id.clone(),
+            c.seed.to_string(),
+            c.delta.dump(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `campaign run`: execute the grid (resuming from the journal), write
+/// the comparison report, append the trajectory, check the baseline.
+fn campaign_run(a: &Args, path: &str) -> Result<()> {
+    let spec = campaign_spec(a, path)?;
+    let cells = spec.expand()?;
+    let journal = if a.has("no-journal") {
+        None
+    } else {
+        Some(
+            a.get("journal")
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{}.journal.jsonl", spec.name)),
+        )
+    };
+    let opts = CampaignOptions {
+        artifacts: a.get("artifacts").unwrap().to_string(),
+        journal,
+        max_cells: a.get_usize("max-cells")?.unwrap_or(0),
+    };
+    let outcome = run_campaign(&spec, &cells, &opts)?;
+    println!(
+        "campaign {}: {} cells — {} from the journal, {} run now",
+        spec.name,
+        cells.len(),
+        outcome.skipped,
+        outcome.executed
+    );
+    let Some(results) = outcome.complete_results() else {
+        let pending = outcome.results.iter().filter(|r| r.is_none()).count();
+        println!("{pending} cell(s) pending — re-run to continue from the journal");
+        return Ok(());
+    };
+    let out = a
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{}_report.json", spec.name));
+    std::fs::write(&out, render_report(&spec, &results))?;
+    println!("wrote {out}");
+    let mut t = Table::new(&[
+        "cell", "final acc", "loss", "wire bytes", "clock_s", "rounds",
+    ])
+    .align(0, Align::Left);
+    for c in &results {
+        t.row(&[
+            c.id.clone(),
+            format!("{:.2}%", c.final_accuracy * 100.0),
+            format!("{:.4}", c.final_loss),
+            c.wire_bytes.to_string(),
+            format!("{:.3}", c.clock_s),
+            c.rounds.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    print_winners(&winners(&results));
+    if !a.has("no-bench") {
+        let bench = a.get("bench").unwrap();
+        append_bench(bench, &spec, &results)?;
+        println!("appended trajectory run -> {bench}");
+    }
+    if let Some(bpath) = a.get("baseline") {
+        let old = parse_baseline(&std::fs::read_to_string(bpath)?)?;
+        let new: Vec<BaselineCell> =
+            results.iter().map(BaselineCell::from_result).collect();
+        let regs = regressions(&new, &old, spec.tolerance);
+        if !regs.is_empty() {
+            for r in &regs {
+                eprintln!("REGRESSION: {r}");
+            }
+            return Err(Error::Config(format!(
+                "{} regression(s) vs baseline {bpath} (tolerance {})",
+                regs.len(),
+                spec.tolerance
+            )));
+        }
+        println!("baseline {bpath}: clean at tolerance {}", spec.tolerance);
+    }
+    Ok(())
+}
+
+/// `campaign report`: print an existing report, optionally comparing it
+/// against a baseline report (regressions fail the command).
+fn campaign_report(a: &Args, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let cells = parse_baseline(&text)?;
+    let j = Json::parse(&text)?;
+    println!(
+        "campaign {:?} report ({} cells, spec digest {})",
+        j.get("campaign").and_then(Json::as_str).unwrap_or("?"),
+        cells.len(),
+        j.get("spec_digest").and_then(Json::as_str).unwrap_or("?"),
+    );
+    let mut t = Table::new(&["cell", "final acc", "loss", "wire bytes", "clock_s"])
+        .align(0, Align::Left);
+    for c in &cells {
+        t.row(&[
+            c.id.clone(),
+            format!("{:.2}%", c.final_accuracy * 100.0),
+            format!("{:.4}", c.final_loss),
+            c.wire_bytes.to_string(),
+            format!("{:.3}", c.clock_s),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(w) = j.get("winners") {
+        print_winners(w);
+    }
+    if let Some(bpath) = a.get("baseline") {
+        let old = parse_baseline(&std::fs::read_to_string(bpath)?)?;
+        let tol = campaign_tolerance(a)?.unwrap_or(0.0);
+        let regs = regressions(&cells, &old, tol);
+        if !regs.is_empty() {
+            for r in &regs {
+                eprintln!("REGRESSION: {r}");
+            }
+            return Err(Error::Config(format!(
+                "{} regression(s) vs baseline {bpath} (tolerance {tol})",
+                regs.len()
+            )));
+        }
+        println!("baseline {bpath}: clean at tolerance {tol}");
+    }
+    Ok(())
+}
+
+fn cmd_campaign(a: &Args) -> Result<()> {
+    let action = a.positional.first().map(String::as_str).ok_or_else(|| {
+        Error::Usage("campaign needs an action: run | validate | report".into())
+    })?;
+    let file = a.positional.get(1).map(String::as_str).ok_or_else(|| {
+        Error::Usage(format!("campaign {action} needs a file argument"))
+    })?;
+    match action {
+        "validate" => campaign_validate(a, file),
+        "run" => campaign_run(a, file),
+        "report" => campaign_report(a, file),
+        other => Err(Error::Usage(format!(
+            "unknown campaign action {other:?} (expected run | validate | report)"
+        ))),
+    }
+}
+
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let c = cli();
@@ -742,6 +1019,7 @@ fn run() -> Result<()> {
         "comm-sim" => cmd_comm_sim(&a),
         "theory" => cmd_theory(&a),
         "inspect" => cmd_inspect(&a),
+        "campaign" => cmd_campaign(&a),
         "presets" => {
             for p in PRESETS {
                 let cfg = preset(p)?;

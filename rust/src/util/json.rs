@@ -315,6 +315,11 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json> {
         match self.peek() {
             Some(b'n') => self.lit("null", Json::Null),
+            // The writer renders a NaN f64 as the bare token `NaN`
+            // (unevaluated metrics rounds carry NaN on purpose), so the
+            // parser accepts it back — our emit/parse pair stays closed
+            // even though RFC 8259 has no NaN literal.
+            Some(b'N') => self.lit("NaN", Json::Num(f64::NAN)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'"') => Ok(Json::Str(self.string()?)),
@@ -549,6 +554,20 @@ mod tests {
         assert!(v.usize_field("a").is_err());
         assert!(v.str_field("missing").is_err());
         assert_eq!(v.str_field("a").unwrap(), "x");
+    }
+
+    #[test]
+    fn nan_round_trips_through_own_writer() {
+        // The writer emits NaN as a bare token; the parser must take it
+        // back so NaN-bearing metrics exports stay self-consistent.
+        assert_eq!(Json::Num(f64::NAN).dump(), "NaN");
+        let v = Json::parse("{\"a\": NaN}").unwrap();
+        assert!(v.get("a").unwrap().as_f64().unwrap().is_nan());
+        // NaN is a number, not an integer.
+        assert!(v.get("a").unwrap().as_u64().is_none());
+        // Near-miss literals still fail cleanly.
+        assert!(Json::parse("Na").is_err());
+        assert!(Json::parse("NaNaN").is_err());
     }
 
     #[test]

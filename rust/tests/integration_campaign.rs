@@ -1,0 +1,299 @@
+//! End-to-end tests for the `fl::campaign` subsystem on the native
+//! engine (zero artifacts): grid expansion from a spec file, the
+//! nested-parallelism budget split's report bit-identity, journal-based
+//! resume byte-identity, the `--baseline` regression semantics, and the
+//! `BENCH_campaign.json` trajectory accumulation.
+
+use std::path::PathBuf;
+
+use edgeflow::config::Algorithm;
+use edgeflow::fl::campaign::{
+    append_bench, parse_baseline, regressions, render_report, run_campaign,
+    BaselineCell, CampaignOptions, CampaignSpec,
+};
+use edgeflow::util::json::Json;
+
+/// The acceptance sweep: {edgeflow_seq, edgeflow_latency, hierfl} x
+/// {raw, top10}, sized for CI (2 rounds over 8 clients in 2 clusters).
+fn sweep_spec_json() -> Json {
+    Json::parse(
+        r#"{
+          "version": 1,
+          "name": "sweep",
+          "seed": 11,
+          "base": {"engine": "native", "model": "fashion_mlp",
+                   "optimizer": "momentum", "lr": 0.01,
+                   "clients": 8, "clusters": 2, "local_steps": 1,
+                   "rounds": 2, "batch_size": 4, "samples_per_client": 8,
+                   "test_samples": 16, "eval_every": 1},
+          "axes": [
+            {"axis": "algorithm", "cells": [
+              {"cell": "seq",  "delta": {"algorithm": "edgeflow_seq"}},
+              {"cell": "lat",  "delta": {"algorithm": "edgeflow_latency"}},
+              {"cell": "hier", "delta": {"algorithm": "hierfl"}}]},
+            {"axis": "codec", "cells": [
+              {"cell": "raw",   "delta": {"codec": "none"}},
+              {"cell": "top10", "delta": {"codec": "top10"}}]}
+          ]
+        }"#,
+    )
+    .unwrap()
+}
+
+/// A 2x2 slice of the sweep for the cheaper structural tests.
+fn small_spec() -> CampaignSpec {
+    let mut v = sweep_spec_json();
+    if let Json::Obj(m) = &mut v {
+        m.insert("name".into(), "small".into());
+        if let Some(Json::Arr(axes)) = m.get_mut("axes") {
+            if let Some(cells) = axes[0].get("cells").and_then(Json::as_arr) {
+                let trimmed = Json::obj(vec![
+                    ("axis", "algorithm".into()),
+                    ("cells", Json::arr(cells[..2].to_vec())),
+                ]);
+                axes[0] = trimmed;
+            }
+        }
+    }
+    CampaignSpec::from_json(&v).unwrap()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+fn tmp_str(name: &str) -> String {
+    tmp(name).to_str().unwrap().to_string()
+}
+
+fn no_journal() -> CampaignOptions {
+    CampaignOptions { artifacts: "artifacts_unused".into(), journal: None, max_cells: 0 }
+}
+
+#[test]
+fn spec_file_loads_expands_and_validates() {
+    let path = tmp_str("edgeflow_campaign_spec.json");
+    std::fs::write(&path, sweep_spec_json().pretty()).unwrap();
+    let spec = CampaignSpec::load(&path).unwrap();
+    assert_eq!(spec.grid_size(), 6);
+    let cells = spec.expand().unwrap();
+    let ids: Vec<&str> = cells.iter().map(|c| c.id.as_str()).collect();
+    assert_eq!(
+        ids,
+        ["seq+raw", "seq+top10", "lat+raw", "lat+top10", "hier+raw", "hier+top10"]
+    );
+    assert_eq!(cells[4].cfg.algorithm, Algorithm::HierFl);
+    // cell names ride into run names; seeds are the derived ones
+    assert!(cells.iter().all(|c| c.cfg.name == format!("sweep_{}", c.id)));
+    assert!(cells.iter().all(|c| c.cfg.seed == c.seed));
+
+    // a field typo in the file is a typed load error, not a silent no-op
+    let bad = sweep_spec_json().pretty().replace("\"axes\"", "\"axis\"");
+    std::fs::write(&path, bad).unwrap();
+    let err = CampaignSpec::load(&path).unwrap_err();
+    assert!(err.to_string().contains("axis"), "{err}");
+}
+
+#[test]
+fn acceptance_sweep_runs_artifact_free_and_reports() {
+    // The ISSUE's acceptance spec: three algorithms x two codecs on the
+    // native engine, no artifacts anywhere, report + winners rendered.
+    let spec = CampaignSpec::from_json(&sweep_spec_json()).unwrap();
+    let cells = spec.expand().unwrap();
+    let outcome = run_campaign(&spec, &cells, &no_journal()).unwrap();
+    assert!(outcome.is_complete());
+    assert_eq!(outcome.executed, 6);
+    assert_eq!(outcome.skipped, 0);
+    let results = outcome.complete_results().unwrap();
+    assert!(results.iter().all(|r| r.final_loss.is_finite()));
+    assert!(results.iter().all(|r| r.rounds == 2 && r.records.len() == 2));
+    assert!(results.iter().all(|r| r.wire_bytes > 0 && r.clock_s > 0.0));
+    // top10 compresses the wire against its raw sibling, same algorithm
+    for pair in results.chunks(2) {
+        assert!(
+            pair[1].wire_bytes < pair[0].wire_bytes,
+            "{}: top10 must shrink wire vs {}",
+            pair[1].id,
+            pair[0].id
+        );
+    }
+    let report = render_report(&spec, &results);
+    let j = Json::parse(&report).unwrap();
+    assert_eq!(j.get("version").and_then(Json::as_u64), Some(1));
+    assert_eq!(j.get("spec_digest").and_then(Json::as_str), Some(spec.digest().as_str()));
+    assert_eq!(j.get("cells").and_then(Json::as_arr).unwrap().len(), 6);
+    let winners = j.get("winners").unwrap();
+    for table in ["max_final_accuracy", "min_final_loss", "min_wire_bytes", "min_clock_s"] {
+        assert!(
+            winners.get(table).and_then(|t| t.get("cell")).is_some(),
+            "winner table {table} missing"
+        );
+    }
+    // the wire winner is one of the top10 cells by construction
+    let wire_winner = winners
+        .get("min_wire_bytes")
+        .and_then(|t| t.get("cell"))
+        .and_then(Json::as_str)
+        .unwrap();
+    assert!(wire_winner.ends_with("+top10"), "{wire_winner}");
+}
+
+#[test]
+fn reports_are_byte_identical_across_budget_splits() {
+    // The nested-parallelism contract: however the core budget is split
+    // between the cell pool and per-cell round pools, the rendered
+    // report is the same bytes.
+    let run_with = |workers: usize, cell_workers: usize| {
+        let mut spec = small_spec();
+        spec.workers = workers;
+        spec.cell_workers = cell_workers;
+        let cells = spec.expand().unwrap();
+        let outcome = run_campaign(&spec, &cells, &no_journal()).unwrap();
+        render_report(&spec, &outcome.complete_results().unwrap())
+    };
+    let reference = run_with(1, 1);
+    for (w, cw) in [(4, 1), (4, 2), (2, 2), (0, 0)] {
+        assert_eq!(
+            run_with(w, cw),
+            reference,
+            "report bytes diverged at workers={w} cell_workers={cw}"
+        );
+    }
+}
+
+#[test]
+fn interrupted_campaign_resumes_to_byte_identical_report() {
+    let journal = tmp_str("edgeflow_campaign_resume.jsonl");
+    let _ = std::fs::remove_file(&journal);
+    let spec = small_spec();
+    let cells = spec.expand().unwrap();
+
+    // Uninterrupted reference run (no journal).
+    let reference = {
+        let outcome = run_campaign(&spec, &cells, &no_journal()).unwrap();
+        render_report(&spec, &outcome.complete_results().unwrap())
+    };
+
+    // "Interrupt" after 2 of 4 cells: max_cells emulates the kill.
+    let opts = CampaignOptions {
+        artifacts: "artifacts_unused".into(),
+        journal: Some(journal.clone()),
+        max_cells: 2,
+    };
+    let partial = run_campaign(&spec, &cells, &opts).unwrap();
+    assert!(!partial.is_complete());
+    assert_eq!(partial.executed, 2);
+    assert_eq!(partial.skipped, 0);
+    let text = std::fs::read_to_string(&journal).unwrap();
+    assert_eq!(text.lines().count(), 3, "header + 2 cell records");
+
+    // Re-run to completion: journaled cells are skipped, not re-trained.
+    let opts = CampaignOptions { max_cells: 0, ..opts };
+    let finished = run_campaign(&spec, &cells, &opts).unwrap();
+    assert!(finished.is_complete());
+    assert_eq!(finished.skipped, 2);
+    assert_eq!(finished.executed, 2);
+    let resumed = render_report(&spec, &finished.complete_results().unwrap());
+    assert_eq!(resumed, reference, "resumed report must be byte-identical");
+
+    // A third run touches nothing: everything comes from the journal.
+    let again = run_campaign(&spec, &cells, &opts).unwrap();
+    assert_eq!(again.skipped, 4);
+    assert_eq!(again.executed, 0);
+
+    // The journal is bound to the spec: a semantic change refuses it.
+    let mut other = spec.clone();
+    other.seed = 12345;
+    let other_cells = other.expand().unwrap();
+    let err = run_campaign(&other, &other_cells, &opts).unwrap_err();
+    assert!(err.to_string().contains("digest"), "{err}");
+}
+
+#[test]
+fn truncated_final_journal_record_is_dropped_not_fatal() {
+    let journal = tmp_str("edgeflow_campaign_truncated.jsonl");
+    let _ = std::fs::remove_file(&journal);
+    let spec = small_spec();
+    let cells = spec.expand().unwrap();
+    let opts = CampaignOptions {
+        artifacts: "artifacts_unused".into(),
+        journal: Some(journal.clone()),
+        max_cells: 2,
+    };
+    run_campaign(&spec, &cells, &opts).unwrap();
+    // Cut the last record in half, as a kill mid-append would.
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let cut = text.len() - 40;
+    std::fs::write(&journal, &text[..cut]).unwrap();
+    let outcome = run_campaign(&spec, &cells, &opts).unwrap();
+    // One record survived, the torn one re-ran (max_cells=2 allows it),
+    // so at least 3 of 4 cells are now journaled.
+    assert_eq!(outcome.skipped, 1);
+    assert_eq!(outcome.executed, 2);
+}
+
+#[test]
+fn baseline_passes_itself_and_ordering_shifts_fails_regressions() {
+    let spec = small_spec();
+    let cells = spec.expand().unwrap();
+    let outcome = run_campaign(&spec, &cells, &no_journal()).unwrap();
+    let results = outcome.complete_results().unwrap();
+    let report = render_report(&spec, &results);
+
+    // A report is clean against itself at tolerance 0.
+    let baseline = parse_baseline(&report).unwrap();
+    let fresh: Vec<BaselineCell> =
+        results.iter().map(BaselineCell::from_result).collect();
+    assert!(regressions(&fresh, &baseline, 0.0).is_empty());
+
+    // Pure ordering shifts are not regressions: cells match by id.
+    let mut reversed = fresh.clone();
+    reversed.reverse();
+    assert!(regressions(&reversed, &baseline, 0.0).is_empty());
+
+    // A seeded regression fails: one cell's loss nudged up...
+    let mut worse = fresh.clone();
+    worse[1].final_loss += 0.05;
+    let regs = regressions(&worse, &baseline, 0.0);
+    assert_eq!(regs.len(), 1, "{regs:?}");
+    assert!(regs[0].contains("final_loss"), "{regs:?}");
+    assert!(regs[0].contains(&fresh[1].id), "{regs:?}");
+    // ...unless the tolerance absorbs it.
+    assert!(regressions(&worse, &baseline, 0.5).is_empty());
+
+    // Version drift is a parse error, never a misread.
+    let drifted = report.replacen("\"version\": 1", "\"version\": 2", 1);
+    assert!(parse_baseline(&drifted).is_err());
+}
+
+#[test]
+fn bench_trajectory_accumulates_runs_atomically() {
+    let path = tmp_str("edgeflow_campaign_bench.json");
+    let _ = std::fs::remove_file(&path);
+    let spec = small_spec();
+    let cells = spec.expand().unwrap();
+    let results = run_campaign(&spec, &cells, &no_journal())
+        .unwrap()
+        .complete_results()
+        .unwrap();
+    append_bench(&path, &spec, &results).unwrap();
+    append_bench(&path, &spec, &results).unwrap();
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(j.get("version").and_then(Json::as_u64), Some(1));
+    let runs = j.get("runs").and_then(Json::as_arr).unwrap();
+    assert_eq!(runs.len(), 2, "two appends accumulate two runs");
+    for run in runs {
+        assert_eq!(
+            run.get("spec_digest").and_then(Json::as_str),
+            Some(spec.digest().as_str())
+        );
+        assert_eq!(run.get("cells").and_then(Json::as_usize), Some(4));
+        assert_eq!(
+            run.get("cells_summary").and_then(Json::as_arr).unwrap().len(),
+            4
+        );
+        assert!(run.get("winners").is_some());
+    }
+    // identical inputs append identical run records (no timestamps)
+    assert_eq!(runs[0].dump(), runs[1].dump());
+}
