@@ -251,7 +251,7 @@ fn local_rules(fa: &mut FileAnalysis, file_is_test: bool, regions: &[(usize, usi
                     Rule::WallClockInSim,
                     "wall-clock time in a simulated-time module; ride \
                      NetSim's clock (allowlist: util/logging, util/timer, \
-                     bench/, runtime/executor)"
+                     bench/, runtime/executor, obs/wallclock)"
                         .into(),
                 );
             }

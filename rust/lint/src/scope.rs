@@ -9,23 +9,27 @@
 use crate::Rule;
 
 /// Modules allowed to read the wall clock: logging timestamps, the
-/// phase timer, the bench harness, and the executor's compile/phase
-/// timing.  Everything else under `rust/src/` — in particular the
+/// phase timer, the bench harness, the executor's compile/phase
+/// timing, and the wall-clock half of the obs dual-clock span model
+/// (`obs/wallclock.rs` — the rest of `obs/` handles opaque marks).
+/// Everything else under `rust/src/` — in particular the
 /// simulated-time modules `netsim/` and `fl/` — must ride `NetSim`'s
 /// clock.
-pub const WALL_CLOCK_ALLOW: [&str; 4] = [
+pub const WALL_CLOCK_ALLOW: [&str; 5] = [
     "rust/src/bench/",
     "rust/src/util/logging.rs",
     "rust/src/util/timer.rs",
     "rust/src/runtime/executor.rs",
+    "rust/src/obs/wallclock.rs",
 ];
 
 /// Determinism-critical modules where unordered containers are banned
 /// outright: aggregation order decides report bits, the runner and
 /// session own checkpoint serialization, metrics and the JSON/CSV
-/// writers are the export surface, and `runtime/params.rs` serializes
-/// model state.
-pub const UNORDERED_SCOPE: [&str; 7] = [
+/// writers are the export surface, `runtime/params.rs` serializes
+/// model state, and `obs/` promises bit-identical traces and metrics
+/// at any worker count.
+pub const UNORDERED_SCOPE: [&str; 8] = [
     "rust/src/fl/aggregate.rs",
     "rust/src/fl/runner.rs",
     "rust/src/fl/session.rs",
@@ -33,11 +37,14 @@ pub const UNORDERED_SCOPE: [&str; 7] = [
     "rust/src/util/json.rs",
     "rust/src/util/csv.rs",
     "rust/src/runtime/params.rs",
+    "rust/src/obs/",
 ];
 
 /// Library layers that must surface typed `util::error` results
-/// instead of panicking.
-pub const UNWRAP_SCOPE: [&str; 2] = ["rust/src/fl/", "rust/src/runtime/"];
+/// instead of panicking.  `obs/` rides inside the training loop, so a
+/// tracing panic would take the run down with it.
+pub const UNWRAP_SCOPE: [&str; 3] =
+    ["rust/src/fl/", "rust/src/runtime/", "rust/src/obs/"];
 
 /// Whether `rule` is enforced for the file at `rel_path`.
 pub fn rule_applies(rule: Rule, rel_path: &str) -> bool {
@@ -78,13 +85,16 @@ pub fn describe(rule: Rule) -> &'static str {
         }
         Rule::WallClockInSim => {
             "rust/src/** except bench/, util/logging.rs, util/timer.rs, \
-             runtime/executor.rs"
+             runtime/executor.rs, obs/wallclock.rs"
         }
         Rule::UnorderedIteration => {
             "fl/aggregate, fl/runner, fl/session, metrics/, util/json, \
-             util/csv, runtime/params"
+             util/csv, runtime/params, obs/"
         }
-        Rule::UnwrapInLibrary => "rust/src/fl/** and rust/src/runtime/** (non-test code)",
+        Rule::UnwrapInLibrary => {
+            "rust/src/fl/**, rust/src/runtime/** and rust/src/obs/** \
+             (non-test code)"
+        }
         Rule::UnsafeAudit => "everywhere",
         Rule::CheckpointParity => {
             "the checkpointed session types (contract table in \
@@ -120,6 +130,13 @@ mod tests {
             Rule::WallClockInSim,
             "rust/src/runtime/executor.rs"
         ));
+        // Only the wall-clock half of obs may read the clock.
+        assert!(rule_applies(Rule::WallClockInSim, "rust/src/obs/mod.rs"));
+        assert!(rule_applies(Rule::WallClockInSim, "rust/src/obs/chrome.rs"));
+        assert!(!rule_applies(
+            Rule::WallClockInSim,
+            "rust/src/obs/wallclock.rs"
+        ));
         // Outside rust/src the rule does not apply at all (benches and
         // examples measure the process, not the simulation).
         assert!(!rule_applies(
@@ -135,6 +152,7 @@ mod tests {
             Rule::UnwrapInLibrary,
             "rust/src/runtime/pool.rs"
         ));
+        assert!(rule_applies(Rule::UnwrapInLibrary, "rust/src/obs/mod.rs"));
         assert!(!rule_applies(Rule::UnwrapInLibrary, "rust/src/main.rs"));
         assert!(!rule_applies(Rule::UnwrapInLibrary, "rust/src/cli/mod.rs"));
         assert!(!rule_applies(
@@ -151,6 +169,10 @@ mod tests {
         ));
         assert!(rule_applies(Rule::UnorderedIteration, "rust/src/metrics/mod.rs"));
         assert!(rule_applies(Rule::UnorderedIteration, "rust/src/util/json.rs"));
+        assert!(rule_applies(
+            Rule::UnorderedIteration,
+            "rust/src/obs/metrics.rs"
+        ));
         assert!(!rule_applies(
             Rule::UnorderedIteration,
             "rust/src/topology/graph.rs"

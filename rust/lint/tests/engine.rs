@@ -59,6 +59,32 @@ fn wall_clock_fires_in_sim_modules_only() {
 }
 
 #[test]
+fn obs_wall_clock_fixture_triple() {
+    // Fire: the obs core must not read the clock directly...
+    let fire = include_str!("fixtures/obs_wall_clock_fire.rs");
+    let out = lint_source("rust/src/obs/mod.rs", fire);
+    assert_eq!(out.diagnostics.len(), 3, "{:#?}", out.diagnostics);
+    assert!(out.diagnostics.iter().all(|d| d.rule == Rule::WallClockInSim));
+    // ...while the wall-clock half of the dual-clock span is
+    // allowlisted for identical code.
+    let out = lint_source("rust/src/obs/wallclock.rs", fire);
+    assert!(out.diagnostics.is_empty(), "{:#?}", out.diagnostics);
+
+    // Clean: opaque marks need no clock and no pragma.
+    let clean = include_str!("fixtures/obs_wall_clock_clean.rs");
+    let out = lint_sources(&[("rust/src/obs/mod.rs", clean)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+
+    // Pragma: a justified grant suppresses and is not stale under the
+    // whole-set pipeline.
+    let pragma = include_str!("fixtures/obs_wall_clock_pragma.rs");
+    let out = lint_sources(&[("rust/src/obs/mod.rs", pragma)]);
+    assert!(out.clean(), "{:#?}", out.diagnostics);
+    assert_eq!(out.suppressed.len(), 1, "{:#?}", out.suppressed);
+    assert_eq!(out.suppressed[0].rule, Rule::WallClockInSim);
+}
+
+#[test]
 fn unordered_fires_in_determinism_critical_modules_only() {
     let fire = include_str!("fixtures/unordered_fire.rs");
     let out = lint_source("rust/src/fl/aggregate.rs", fire);

@@ -1,0 +1,8 @@
+// Fixture: the obs core handling opaque marks only — no clock reads,
+// no pragmas needed.  Clean under any rust/src/obs/ path.
+
+pub struct Mark(u64);
+
+pub fn rel_ns(epoch_ns: u64, mark: &Mark) -> u64 {
+    mark.0.saturating_sub(epoch_ns)
+}

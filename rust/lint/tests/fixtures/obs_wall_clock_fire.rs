@@ -1,0 +1,9 @@
+// Fixture: raw wall-clock reads in the obs core.  Linted under
+// rust/src/obs/mod.rs this fires three times; under the allowlisted
+// rust/src/obs/wallclock.rs the scope table keeps it silent.
+
+use std::time::Instant;
+
+pub fn mark() -> Instant {
+    Instant::now()
+}

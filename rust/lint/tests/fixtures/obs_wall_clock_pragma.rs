@@ -1,0 +1,7 @@
+// Fixture: a justified wall-clock grant inside the obs core.  The
+// pragma suppresses exactly one finding and is therefore not stale.
+
+pub struct Mark {
+    // lint:allow(wall-clock-in-sim): opaque wall-clock mark storage; only wallclock.rs reads the clock.
+    pub at: std::time::Instant,
+}

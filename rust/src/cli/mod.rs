@@ -249,6 +249,21 @@ pub fn cell_workers_flag() -> FlagSpec {
     )
 }
 
+/// The shared `--trace` flag: structured JSONL trace output path (see
+/// `crate::obs`).  No declared default so a `trace` value in a config
+/// file stays distinguishable from flag absence.
+pub fn trace_flag() -> FlagSpec {
+    flag("trace", "write a structured dual-clock trace to this JSONL path")
+}
+
+/// The shared `--trace-level` flag, companion to [`trace_flag`].
+pub fn trace_level_flag() -> FlagSpec {
+    flag(
+        "trace-level",
+        "trace verbosity: off | round | phase | full (default full)",
+    )
+}
+
 /// Apply the experiment-shaping CLI flags onto a base config (preset,
 /// file, or default) and validate the result.  This is the CLI arm of
 /// the config surface: every [`ExperimentConfig`] field is expected to
@@ -334,6 +349,12 @@ pub fn apply_overrides(mut cfg: ExperimentConfig, a: &Args) -> Result<Experiment
     }
     if let Some(v) = a.get_usize("workers")? {
         cfg.workers = v;
+    }
+    if let Some(s) = a.get("trace") {
+        cfg.trace = s.to_string();
+    }
+    if let Some(s) = a.get("trace-level") {
+        cfg.trace_level = s.to_string();
     }
     cfg.validate()
 }

@@ -336,6 +336,15 @@ pub struct ExperimentConfig {
     /// A loss improvement smaller than this counts as "no improvement"
     /// for `plateau_rounds` (default 0 = any decrease resets the counter).
     pub plateau_min_delta: f64,
+    /// Structured trace output path (JSONL, see [`crate::obs`]).  Empty
+    /// string disables tracing entirely — the runner then carries a
+    /// no-op [`crate::obs::Tracer`] and every report stays byte-identical
+    /// to an untraced run.
+    pub trace: String,
+    /// Trace verbosity when `trace` is set: `round` (round spans and
+    /// control events), `phase` (adds per-phase spans), or `full` (adds
+    /// per-client and per-transfer spans).  Ignored when `trace` is empty.
+    pub trace_level: String,
 }
 
 impl Default for ExperimentConfig {
@@ -366,6 +375,8 @@ impl Default for ExperimentConfig {
             codec: Codec::None,
             plateau_rounds: 0,
             plateau_min_delta: 0.0,
+            trace: String::new(),
+            trace_level: "full".into(),
         }
     }
 }
@@ -423,6 +434,9 @@ impl ExperimentConfig {
                 self.plateau_min_delta
             )));
         }
+        // `off` is accepted for symmetry with `--trace-level`; an empty
+        // `trace` path is the canonical way to disable tracing.
+        crate::obs::TraceLevel::parse(&self.trace_level)?;
         if self.samples_per_client < self.batch_size {
             return Err(Error::Config(format!(
                 "samples_per_client ({}) < batch_size ({}) — a client cannot \
@@ -462,6 +476,8 @@ impl ExperimentConfig {
             ("codec", self.codec.name().as_str().into()),
             ("plateau_rounds", self.plateau_rounds.into()),
             ("plateau_min_delta", self.plateau_min_delta.into()),
+            ("trace", self.trace.as_str().into()),
+            ("trace_level", self.trace_level.as_str().into()),
         ];
         // The decimal percent inside "codec" is the human-readable form;
         // a top-k fraction also travels as exact bits so a checkpoint's
@@ -564,6 +580,12 @@ impl ExperimentConfig {
                 .get("plateau_min_delta")
                 .and_then(Json::as_f64)
                 .unwrap_or(d.plateau_min_delta),
+            trace: v.get("trace").and_then(Json::as_str).unwrap_or(&d.trace).to_string(),
+            trace_level: v
+                .get("trace_level")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.trace_level)
+                .to_string(),
         };
         cfg.validate()
     }
@@ -575,13 +597,13 @@ impl ExperimentConfig {
     }
 }
 
-/// Every JSON key [`ExperimentConfig::from_json`] accepts: the 25 field
+/// Every JSON key [`ExperimentConfig::from_json`] accepts: the 27 field
 /// keys plus the `codec_keep_hex` bit-exact side channel and the legacy
 /// `parallel_clients` alias.  `from_json` itself ignores unknown keys
 /// (old checkpoints may carry retired fields); surfaces that take a
 /// config *delta* — where a typo would silently no-op — validate against
 /// this list instead (see [`apply_json_delta`]).
-pub const CONFIG_JSON_KEYS: [&str; 27] = [
+pub const CONFIG_JSON_KEYS: [&str; 29] = [
     "name",
     "algorithm",
     "dataset",
@@ -608,6 +630,8 @@ pub const CONFIG_JSON_KEYS: [&str; 27] = [
     "codec_keep_hex",
     "plateau_rounds",
     "plateau_min_delta",
+    "trace",
+    "trace_level",
     "parallel_clients",
 ];
 
@@ -950,6 +974,27 @@ mod tests {
             }
             other => panic!("expected object, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn trace_fields_roundtrip_and_validate() {
+        let cfg = ExperimentConfig {
+            trace: "out/run.trace.jsonl".into(),
+            trace_level: "phase".into(),
+            ..ExperimentConfig::default()
+        };
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.trace, "out/run.trace.jsonl");
+        assert_eq!(back.trace_level, "phase");
+        // absent fields keep tracing off at the default verbosity
+        let none = Json::parse("{}").unwrap();
+        let d = ExperimentConfig::from_json(&none).unwrap();
+        assert_eq!(d.trace, "");
+        assert_eq!(d.trace_level, "full");
+        // a bogus level is a typed error
+        let mut c = ExperimentConfig::default();
+        c.trace_level = "verbose".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::sync::Mutex;
 
-use crate::fl::experiments::{run_cell, split_budget};
+use crate::fl::experiments::{run_cell_traced, split_budget};
 use crate::runtime::backend::backend_for;
 use crate::runtime::pool::WorkerPool;
 use crate::util::error::{Error, Result};
@@ -36,6 +36,13 @@ pub struct CampaignOptions {
     /// The journal keeps the partial progress — the interruption story
     /// without needing an actual kill, used by tests and CI.
     pub max_cells: usize,
+    /// Per-cell trace output directory ("" = tracing off): every fresh
+    /// cell writes `<trace_dir>/<cell-name>.trace.jsonl` — one file per
+    /// cell, so concurrently-running cells never interleave streams.
+    /// Journal-skipped cells are not re-traced.
+    pub trace_dir: String,
+    /// Verbosity for cell traces (round | phase | full).
+    pub trace_level: String,
 }
 
 /// What a [`run_campaign`] invocation accomplished.
@@ -236,7 +243,8 @@ pub fn run_campaign(
         // its artifact cache per cell).
         let backend = backend_for(&cfg, artifacts)?;
         log::info!("campaign cell {}: {}", cell.index, cell.id);
-        let report = run_cell(&backend, cfg)?;
+        let report =
+            run_cell_traced(&backend, cfg, &opts.trace_dir, &opts.trace_level)?;
         let result = CellResult::from_report(cell, &report);
         if let Some(j) = &journal {
             let line = result.to_journal_json().dump();

@@ -36,6 +36,11 @@ pub struct RoundComm {
     /// to the sim — the runner matches these against delivery times to
     /// find deadline stragglers.  Empty when no sim was supplied.
     pub uploads: Vec<(usize, usize)>,
+    /// `(DES transfer id, kind)` for *every* sim submission this round —
+    /// uploads, downloads and migrations — in submission order; the
+    /// runner joins these against [`crate::netsim::TransferOutcome`]s to
+    /// emit per-transfer trace spans.  Empty when no sim was supplied.
+    pub submitted: Vec<(usize, &'static str)>,
 }
 
 /// Record one round's transfers into `acc` (routed on `routes` — the
@@ -57,8 +62,10 @@ pub fn record_round(
 ) -> Result<RoundComm> {
     let before = acc.byte_hops();
     let mut uploads: Vec<(usize, usize)> = Vec::new();
+    let mut submitted: Vec<(usize, &'static str)> = Vec::new();
     let mut send = |acc: &mut CommAccountant,
                     uploads: &mut Vec<(usize, usize)>,
+                    submitted: &mut Vec<(usize, &'static str)>,
                     src,
                     dst,
                     label: &'static str,
@@ -67,6 +74,7 @@ pub fn record_round(
         acc.record(topo, routes, src, dst, model_bytes, label, round)?;
         if let Some((sim, sim_routes, at_s)) = sim.as_mut() {
             let id = sim.submit(sim_routes, src, dst, model_bytes, *at_s)?;
+            submitted.push((id, label));
             if let Some(c) = client {
                 uploads.push((c, id));
             }
@@ -83,9 +91,9 @@ pub fn record_round(
                 for &id in &plan.groups[0].1 {
                     let c = topo.client(id)?;
                     if opts.count_downloads {
-                        send(acc, &mut uploads, cloud, c, "download", None)?;
+                        send(acc, &mut uploads, &mut submitted, cloud, c, "download", None)?;
                     }
-                    send(acc, &mut uploads, c, cloud, "upload", Some(id))?;
+                    send(acc, &mut uploads, &mut submitted, c, cloud, "upload", Some(id))?;
                 }
             } else {
                 // Hierarchical FL: clients upload to their edge BS; each BS
@@ -95,14 +103,14 @@ pub fn record_round(
                     for &id in members {
                         let c = topo.client(id)?;
                         if opts.count_downloads {
-                            send(acc, &mut uploads, bs, c, "download", None)?;
+                            send(acc, &mut uploads, &mut submitted, bs, c, "download", None)?;
                         }
-                        send(acc, &mut uploads, c, bs, "upload", Some(id))?;
+                        send(acc, &mut uploads, &mut submitted, c, bs, "upload", Some(id))?;
                     }
                     if opts.count_downloads {
-                        send(acc, &mut uploads, cloud, bs, "download", None)?;
+                        send(acc, &mut uploads, &mut submitted, cloud, bs, "download", None)?;
                     }
-                    send(acc, &mut uploads, bs, cloud, "upload", None)?;
+                    send(acc, &mut uploads, &mut submitted, bs, cloud, "upload", None)?;
                 }
             }
         }
@@ -119,19 +127,19 @@ pub fn record_round(
                 for &id in members {
                     let c = topo.client(id)?;
                     if opts.count_downloads {
-                        send(acc, &mut uploads, bs, c, "download", None)?;
+                        send(acc, &mut uploads, &mut submitted, bs, c, "download", None)?;
                     }
-                    send(acc, &mut uploads, c, bs, "upload", Some(id))?;
+                    send(acc, &mut uploads, &mut submitted, c, bs, "upload", Some(id))?;
                 }
                 if bs != site_bs {
-                    send(acc, &mut uploads, bs, site_bs, "upload", None)?;
+                    send(acc, &mut uploads, &mut submitted, bs, site_bs, "upload", None)?;
                 }
             }
             if let Some((from, to)) = plan.migration {
                 if from != to {
                     let a = topo.edge_bs(from)?;
                     let b = topo.edge_bs(to)?;
-                    send(acc, &mut uploads, a, b, "migration", None)?;
+                    send(acc, &mut uploads, &mut submitted, a, b, "migration", None)?;
                 }
             }
         }
@@ -144,19 +152,19 @@ pub fn record_round(
             let c = topo.client(id)?;
             let bs = topo.edge_bs(plan.groups[0].0)?;
             if opts.count_downloads {
-                send(acc, &mut uploads, bs, c, "download", None)?;
+                send(acc, &mut uploads, &mut submitted, bs, c, "download", None)?;
             }
-            send(acc, &mut uploads, c, bs, "upload", Some(id))?;
+            send(acc, &mut uploads, &mut submitted, c, bs, "upload", Some(id))?;
             if let Some((from, to)) = plan.migration {
                 if from != to {
                     let a = topo.edge_bs(from)?;
                     let b = topo.edge_bs(to)?;
-                    send(acc, &mut uploads, a, b, "migration", None)?;
+                    send(acc, &mut uploads, &mut submitted, a, b, "migration", None)?;
                 }
             }
         }
     }
-    Ok(RoundComm { byte_hops: acc.byte_hops() - before, uploads })
+    Ok(RoundComm { byte_hops: acc.byte_hops() - before, uploads, submitted })
 }
 
 #[cfg(test)]
@@ -337,6 +345,10 @@ mod tests {
         let out = sim.run();
         assert_eq!(out.len(), 3); // 2 uploads + 1 migration
         assert!(out.iter().all(|o| o.latency_s() > 0.0));
+        // every sim submission is labeled for the trace join
+        assert_eq!(r.submitted.len(), 3);
+        assert_eq!(r.submitted.iter().filter(|(_, k)| *k == "upload").count(), 2);
+        assert_eq!(r.submitted.iter().filter(|(_, k)| *k == "migration").count(), 1);
         // upload ids map clients onto their DES transfers
         assert_eq!(r.uploads.len(), 2);
         for &(client, sim_id) in &r.uploads {

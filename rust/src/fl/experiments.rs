@@ -55,6 +55,32 @@ pub fn run_cell(
     Ok(r.report())
 }
 
+/// [`run_cell`] with per-cell tracing: when `trace_dir` is non-empty the
+/// cell's config is pointed at `<trace_dir>/<cell-name>.trace.jsonl` at
+/// `trace_level` (each cell gets its own file, so concurrently-running
+/// cells never interleave streams).  An empty `trace_dir` is exactly
+/// `run_cell`.
+pub fn run_cell_traced(
+    backend: &Arc<dyn TrainBackend>,
+    mut cfg: ExperimentConfig,
+    trace_dir: &str,
+    trace_level: &str,
+) -> Result<RunReport> {
+    if !trace_dir.is_empty() {
+        std::fs::create_dir_all(trace_dir)?;
+        cfg.trace = format!(
+            "{}/{}.trace.jsonl",
+            trace_dir.trim_end_matches('/'),
+            cfg.name
+        );
+        // An unset level (e.g. a default-constructed options struct)
+        // means the standard default verbosity.
+        cfg.trace_level =
+            if trace_level.is_empty() { "full".into() } else { trace_level.to_string() };
+    }
+    run_cell(backend, cfg)
+}
+
 /// Split a core budget between the cell pool and the per-cell round
 /// pools: `(pool_workers, cell_workers)` with
 /// `pool_workers * cell_workers <= budget` always.  `budget = 0` means
@@ -98,6 +124,11 @@ pub struct SuiteOptions {
     pub optimizer: Option<String>,
     /// Batch size override (None keeps the preset default, 64).
     pub batch_size: Option<usize>,
+    /// Per-cell trace output directory ("" = tracing off): each cell
+    /// writes `<trace_dir>/<cell-name>.trace.jsonl`.
+    pub trace_dir: String,
+    /// Verbosity for cell traces (round | phase | full).
+    pub trace_level: String,
 }
 
 impl Default for SuiteOptions {
@@ -114,6 +145,8 @@ impl Default for SuiteOptions {
             engine: EngineKind::Xla,
             optimizer: None,
             batch_size: None,
+            trace_dir: String::new(),
+            trace_level: "full".into(),
         }
     }
 }
@@ -202,7 +235,7 @@ pub fn table1(
         let (ds, dist, alg) = &specs[i];
         let cfg = base_config(*ds, dist.clone(), *alg, o);
         log::info!("table1 cell: {}", cfg.name);
-        run_cell(backend, cfg)
+        run_cell_traced(backend, cfg, &o.trace_dir, &o.trace_level)
     })?;
     let results: Vec<Cell> = specs
         .into_iter()
@@ -269,7 +302,7 @@ pub fn fig3a(
         cfg.clusters = 100 / n_m;
         cfg.name = format!("fig3a_nm{n_m}");
         log::info!("fig3a: N_m = {n_m}");
-        run_cell(backend, cfg)
+        run_cell_traced(backend, cfg, &o.trace_dir, &o.trace_level)
     })?;
     Ok(cluster_sizes.iter().copied().zip(reports).collect())
 }
@@ -292,7 +325,7 @@ pub fn fig3b(
         cfg.local_steps = k;
         cfg.name = format!("fig3b_k{k}");
         log::info!("fig3b: K = {k}");
-        run_cell(backend, cfg)
+        run_cell_traced(backend, cfg, &o.trace_dir, &o.trace_level)
     })?;
     Ok(ks.iter().copied().zip(reports).collect())
 }

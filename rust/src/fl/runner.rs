@@ -49,6 +49,7 @@ use crate::fl::session::{
 use crate::fl::strategy::{AggregationSite, Strategy};
 use crate::metrics::{ExperimentMetrics, RoundRecord};
 use crate::netsim::{NetSim, NetSimState};
+use crate::obs::{MetricsRegistry, PhaseTimer, TraceLevel, Tracer, WallMark};
 use crate::rng::{Rng, RngState};
 use crate::runtime::backend::{
     backend_for, EvalHandle, LocalUpdateHandle, TrainBackend,
@@ -61,7 +62,6 @@ use crate::topology::graph::Topology;
 use crate::topology::route::RouteTable;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
-use crate::util::timer::Timer;
 use crate::util::{bytes_from_hex, bytes_to_hex, f64_from_hex, f64_to_hex};
 
 /// Result summary of one experiment run.
@@ -121,7 +121,15 @@ pub struct Runner {
     /// Per-round records accumulated across `step()` calls (and restored
     /// by `restore()`).
     metrics: ExperimentMetrics,
-    timer: Timer,
+    /// Phase laps, folded into the trace: one measurement feeds both
+    /// `phase_seconds` and the emitted phase spans.
+    timer: PhaseTimer,
+    /// Structured trace destination (`cfg.trace`; no-op when empty).
+    tracer: Tracer,
+    /// Deterministic logical counters/histograms — worker-count- and
+    /// wall-clock-free by construction, so registry snapshots are
+    /// bit-identical across `--workers` settings.
+    reg: MetricsRegistry,
     /// Straggler re-inclusion pool (`straggler_policy = defer`).
     deferred: DeferredPool,
     observers: Vec<Box<dyn RoundObserver>>,
@@ -191,6 +199,8 @@ impl Runner {
         let observers: Vec<Box<dyn RoundObserver>> =
             vec![Box::new(ProgressObserver::new(strategy.name()))];
         let deadline_s = cfg.deadline_s;
+        let tracer = Tracer::from_config(&cfg.trace, &cfg.trace_level, &cfg.name)?;
+        let timer = PhaseTimer::new(tracer.clone());
         Ok(Runner {
             cfg,
             backend,
@@ -209,7 +219,9 @@ impl Runner {
             stopped: false,
             deadline_s,
             metrics: ExperimentMetrics::default(),
-            timer: Timer::new(),
+            timer,
+            tracer,
+            reg: MetricsRegistry::default(),
             deferred: DeferredPool::default(),
             observers,
         })
@@ -244,6 +256,12 @@ impl Runner {
     /// Metrics accumulated so far (every executed round's record).
     pub fn metrics(&self) -> &ExperimentMetrics {
         &self.metrics
+    }
+
+    /// The session's tracer (disabled unless `cfg.trace` names a path).
+    /// Observers and drivers clone it to emit into the same stream.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Next round index (== rounds executed so far).
@@ -308,6 +326,8 @@ impl Runner {
             )));
         }
         let t = self.cursor;
+        self.timer.set_round(t);
+        let round_mark = self.tracer.mark_if(TraceLevel::Round);
         self.timer.lap("idle");
         // Every model transfer this round — migrations, uploads,
         // downlinks, deferred folds — is charged the codec's wire size
@@ -345,8 +365,10 @@ impl Runner {
                     self.net.now_s(),
                     Vec::new(),
                 );
-                return self
-                    .finish(RoundOutcome::Lost { record, cause: LostCause::AllDropped });
+                return self.finish(
+                    round_mark,
+                    RoundOutcome::Lost { record, cause: LostCause::AllDropped },
+                );
             }
         }
 
@@ -376,7 +398,7 @@ impl Runner {
             Some((&mut self.net, &sim_routes, round_start)),
         )?;
         let mut byte_hops = comm.byte_hops;
-        let outcomes = self.net.run();
+        let outcomes = self.net.run_traced(&self.tracer);
         // The round's simulated network time is the makespan of its
         // transfers on the carried-forward network state.
         let net_s = outcomes
@@ -386,6 +408,7 @@ impl Runner {
             - round_start;
         let deadline = self.deadline_s;
         let mut stragglers: Vec<usize> = Vec::new();
+        let mut late_ids: Vec<usize> = Vec::new();
         if deadline > 0.0 {
             for &(client, sim_id) in &comm.uploads {
                 let late = outcomes
@@ -394,9 +417,11 @@ impl Runner {
                     .is_some_and(|o| o.delivered_s - round_start > deadline);
                 if late {
                     stragglers.push(client);
+                    late_ids.push(sim_id);
                 }
             }
             stragglers.sort_unstable();
+            late_ids.sort_unstable();
             if !stragglers.is_empty() {
                 log::debug!(
                     "round {t}: {} stragglers past deadline_s={deadline}",
@@ -404,6 +429,53 @@ impl Runner {
                 );
             }
         }
+        // Per-transfer spans: one `net` span per DES delivery, on a
+        // per-route lane, sim window submit -> deliver, kind joined from
+        // the round's submission log and the straggler verdict attached.
+        // The DES order is worker-count-independent, so so is this
+        // event sequence.
+        if self.tracer.enabled(TraceLevel::Full) {
+            let mut kind_of = std::collections::BTreeMap::new();
+            for &(id, kind) in &comm.submitted {
+                kind_of.insert(id, kind);
+            }
+            for o in &outcomes {
+                let kind = kind_of.get(&o.id).copied().unwrap_or("transfer");
+                let mut attrs = vec![
+                    ("transfer", o.id.into()),
+                    ("round", t.into()),
+                    ("bytes", o.bytes.into()),
+                    ("hops", o.hops.into()),
+                    ("queue_wait_s", o.queue_wait_s.into()),
+                ];
+                if late_ids.binary_search(&o.id).is_ok() {
+                    attrs.push(("straggler", true.into()));
+                }
+                self.tracer.span_at(
+                    TraceLevel::Full,
+                    "net",
+                    kind,
+                    &format!("route:{}->{}", o.src.0, o.dst.0),
+                    self.tracer.rel_now_ns(),
+                    0,
+                    Some((o.submitted_s, o.latency_s())),
+                    attrs,
+                );
+            }
+        }
+        self.reg.inc("transfers_total", outcomes.len() as u64);
+        self.reg.inc(
+            "transfer_bytes_total",
+            outcomes.iter().map(|o| o.bytes).sum::<u64>(),
+        );
+        for o in &outcomes {
+            self.reg.observe(
+                "transfer_latency_s",
+                &TRANSFER_LATENCY_BOUNDS,
+                o.latency_s(),
+            );
+        }
+        self.reg.inc("stragglers_total", stragglers.len() as u64);
         self.notify(|o, ctl| o.on_comm(t, &comm, net_s, &stragglers, ctl));
         self.timer.lap("comm");
 
@@ -443,23 +515,56 @@ impl Runner {
         let mut loss_terms: Vec<(f64, f64)> = Vec::new(); // (Eq. 3 weight, loss)
         let mut group_states: Vec<(f64, ModelState)> =
             Vec::with_capacity(plan.groups.len());
+        // Per-client spans are *measured* inside the pool closures (mark
+        // pairs only — no emission off the main thread) and emitted
+        // below in plan order, so the logical event stream is identical
+        // at any worker count; only the worker-lane labels and wall
+        // offsets vary.
+        let trace_clients = self.tracer.enabled(TraceLevel::Full);
         for (_m, members) in &plan.groups {
-            let results: Vec<Result<(ModelState, f32)>> = {
+            self.reg.inc("local_updates_total", members.len() as u64);
+            let results: Vec<(u64, u64, usize, Result<(ModelState, f32)>)> = {
                 let state = &self.state;
                 let loader = &self.loader;
                 let fed = &self.fed;
                 let lus = &self.lus;
                 let k = self.cfg.local_steps;
                 let lr = self.cfg.lr as f32;
-                self.pool.run(members.len(), move |i, w| {
-                    let id = members[i];
-                    let batch =
-                        loader.local_batches(&fed.train, &fed.clients[id], t, k);
-                    lus[w].run(state, &batch, lr)
-                })
+                let tracer = &self.tracer;
+                self.pool.run_spanned(
+                    tracer,
+                    "local_update",
+                    members.len(),
+                    move |i, w| {
+                        let id = members[i];
+                        let start =
+                            if trace_clients { tracer.rel_now_ns() } else { 0 };
+                        let batch = loader
+                            .local_batches(&fed.train, &fed.clients[id], t, k);
+                        let r = lus[w].run(state, &batch, lr);
+                        let dur = if trace_clients {
+                            tracer.rel_now_ns().saturating_sub(start)
+                        } else {
+                            0
+                        };
+                        (start, dur, w, r)
+                    },
+                )
             };
             let mut weighted = Vec::with_capacity(members.len());
-            for (&id, r) in members.iter().zip(results) {
+            for (&id, (start_ns, dur_ns, w, r)) in members.iter().zip(results) {
+                if trace_clients {
+                    self.tracer.span_at(
+                        TraceLevel::Full,
+                        "client",
+                        "local_update",
+                        &format!("worker{w}"),
+                        start_ns,
+                        dur_ns,
+                        None,
+                        vec![("round", t.into()), ("client", id.into())],
+                    );
+                }
                 let (s, loss) = r?;
                 if !loss.is_finite() {
                     return Err(Error::Data(format!(
@@ -579,8 +684,10 @@ impl Runner {
                 self.net.now_s(),
                 stragglers,
             );
-            return self
-                .finish(RoundOutcome::Lost { record, cause: LostCause::AllStraggled });
+            return self.finish(
+                round_mark,
+                RoundOutcome::Lost { record, cause: LostCause::AllStraggled },
+            );
         }
         let (_total_w, merged) = par_reduce_states_weighted(operands, &self.pool)?;
         let aggregate_s = self.timer.lap("aggregate").as_secs_f64();
@@ -591,6 +698,7 @@ impl Runner {
         let eval_now = t + 1 == self.cfg.rounds
             || (self.cfg.eval_every > 0 && (t + 1) % self.cfg.eval_every == 0);
         let (test_loss, test_acc) = if eval_now {
+            self.reg.inc("evals_total", 1);
             self.evaluate()?
         } else {
             (f64::NAN, f64::NAN)
@@ -619,12 +727,47 @@ impl Runner {
             stragglers,
             deferred: deferred_ids,
         };
-        self.finish(RoundOutcome::Completed { record, migration: plan.migration })
+        self.finish(
+            round_mark,
+            RoundOutcome::Completed { record, migration: plan.migration },
+        )
     }
 
-    /// Record the round, advance the cursor, fire `on_round_end`.
-    fn finish(&mut self, outcome: RoundOutcome) -> Result<RoundOutcome> {
-        self.metrics.push(outcome.record().clone());
+    /// Record the round, advance the cursor, emit the round span, fire
+    /// `on_round_end`.
+    fn finish(
+        &mut self,
+        round_mark: Option<WallMark>,
+        outcome: RoundOutcome,
+    ) -> Result<RoundOutcome> {
+        {
+            let record = outcome.record();
+            self.reg.inc("rounds_total", 1);
+            if matches!(outcome, RoundOutcome::Lost { .. }) {
+                self.reg.inc("rounds_lost_total", 1);
+            }
+            // The round's sim window: `clock_s` is the DES clock at the
+            // round's end and `net_s` its makespan, so the window starts
+            // at their difference.
+            let mut attrs = vec![
+                ("round", record.round.into()),
+                ("byte_hops", record.comm_byte_hops.into()),
+                ("stragglers", record.stragglers.len().into()),
+            ];
+            if record.cluster != usize::MAX {
+                attrs.push(("cluster", record.cluster.into()));
+            }
+            self.tracer.span(
+                TraceLevel::Round,
+                "round",
+                "round",
+                "main",
+                round_mark,
+                Some((record.clock_s - record.net_s, record.net_s)),
+                attrs,
+            );
+            self.metrics.push(record.clone());
+        }
         self.cursor += 1;
         let t = outcome.round();
         self.notify(|o, ctl| o.on_round_end(t, &outcome, ctl));
@@ -665,7 +808,7 @@ impl Runner {
     /// travel in the checkpoint), while `phase_seconds` covers only this
     /// process's work.
     pub fn report(&self) -> RunReport {
-        RunReport {
+        let report = RunReport {
             name: self.cfg.name.clone(),
             algorithm: self.strategy.name(),
             final_accuracy: self.metrics.final_accuracy(),
@@ -675,7 +818,19 @@ impl Runner {
             rounds: self.metrics.rounds.len(),
             metrics: self.metrics.clone(),
             phase_seconds: self.timer.laps(),
+        };
+        // Snapshot the deterministic registry into the trace, with the
+        // summary gauges stamped on a copy so repeated `report()` calls
+        // never mutate session state.
+        if self.tracer.enabled(TraceLevel::Round) {
+            let mut reg = self.reg.clone();
+            reg.set_gauge("final_accuracy", report.final_accuracy);
+            reg.set_gauge("best_accuracy", report.best_accuracy);
+            reg.set_gauge("sim_clock_s", self.net.now_s());
+            self.tracer.metrics(&reg);
+            self.tracer.flush();
         }
+        report
     }
 
     /// Run the session to completion: a thin loop over [`Runner::step`].
@@ -698,6 +853,14 @@ impl Runner {
     /// (The loader's minibatch stream is a pure function of
     /// `(seed, client, round)` and needs no state.)
     pub fn checkpoint(&self) -> Result<RunnerCheckpoint> {
+        self.tracer.instant(
+            TraceLevel::Round,
+            "ckpt",
+            "checkpoint",
+            "main",
+            Some(self.net.now_s()),
+            vec![("round", self.cursor.into())],
+        );
         Ok(RunnerCheckpoint {
             cfg: self.cfg.clone(),
             cursor: self.cursor,
@@ -730,7 +893,16 @@ impl Runner {
     /// accountant restarts empty — per-round byte-hops are deltas and
     /// the totals live in the restored records.
     pub fn restore(&mut self, ck: &RunnerCheckpoint) -> Result<()> {
-        if ck.cfg.to_json().dump() != self.cfg.to_json().dump() {
+        // Tracing is observability, not session state: a run may resume
+        // with tracing toggled or redirected, so the config comparison
+        // blanks the trace fields on both sides.
+        let sans_trace = |c: &ExperimentConfig| {
+            let mut c = c.clone();
+            c.trace = String::new();
+            c.trace_level = "full".into();
+            c.to_json().dump()
+        };
+        if sans_trace(&ck.cfg) != sans_trace(&self.cfg) {
             return Err(Error::Config(
                 "checkpoint was taken under a different config — build the \
                  runner from the checkpoint's cfg (Runner::resume)"
@@ -757,7 +929,16 @@ impl Runner {
         self.cursor = ck.cursor;
         self.stopped = ck.stopped;
         self.deadline_s = ck.deadline_s;
-        self.timer = Timer::new();
+        self.timer = PhaseTimer::new(self.tracer.clone());
+        self.reg = MetricsRegistry::default();
+        self.tracer.instant(
+            TraceLevel::Round,
+            "ckpt",
+            "restore",
+            "main",
+            Some(self.net.now_s()),
+            vec![("round", self.cursor.into())],
+        );
         Ok(())
     }
 
@@ -1079,6 +1260,11 @@ pub fn prune_checkpoints(base: &str, keep: usize) -> Result<Vec<String>> {
 /// Seed-mixing constant separating the loader's stream from the
 /// partitioner's and the strategies'.
 const LOADER_SEED_MIX: u64 = 0x10AD_E2B6;
+
+/// Fixed bucket bounds (simulated seconds) for the per-transfer latency
+/// histogram — fixed so registry snapshots merge and compare
+/// bit-identically across runs and worker counts.
+const TRANSFER_LATENCY_BOUNDS: [f64; 6] = [0.001, 0.01, 0.1, 1.0, 10.0, 100.0];
 
 #[cfg(test)]
 mod tests {

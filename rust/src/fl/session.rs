@@ -21,6 +21,7 @@
 use crate::fl::comm::RoundComm;
 use crate::fl::strategy::RoundPlan;
 use crate::metrics::{ExperimentMetrics, RoundRecord};
+use crate::obs::{TraceLevel, Tracer};
 use crate::runtime::params::ModelState;
 use crate::util::csv::CsvWriter;
 use std::collections::BTreeMap;
@@ -291,6 +292,9 @@ pub struct AdaptiveDeadlineObserver {
     /// Cluster the in-flight round planned — attributes the makespan
     /// `on_comm` reports to the right per-cluster estimate.
     pending: Option<usize>,
+    /// Control-decision tracing (`deadline.set` instants); off by
+    /// default.
+    tracer: Tracer,
 }
 
 impl AdaptiveDeadlineObserver {
@@ -310,7 +314,15 @@ impl AdaptiveDeadlineObserver {
             seen: 0,
             clusters: None,
             pending: None,
+            tracer: Tracer::off(),
         }
+    }
+
+    /// Emit a `control`/`deadline.set` instant every time this observer
+    /// overrides the round deadline.
+    pub fn with_tracer(mut self, tracer: Tracer) -> AdaptiveDeadlineObserver {
+        self.tracer = tracer;
+        self
     }
 
     /// Track one deadline EWMA per planned cluster instead of a single
@@ -333,16 +345,28 @@ impl AdaptiveDeadlineObserver {
     pub fn cluster_estimate_s(&self, cluster: usize) -> Option<f64> {
         self.clusters.as_ref().and_then(|m| m.get(&cluster)).map(|&(e, _)| e)
     }
+
+    fn trace_deadline(&self, t: usize, cluster: usize, deadline_s: f64) {
+        let mut attrs = vec![
+            ("round", t.into()),
+            ("deadline_s", crate::util::json::Json::Num(deadline_s)),
+        ];
+        if cluster != usize::MAX {
+            attrs.push(("cluster", cluster.into()));
+        }
+        self.tracer.instant(TraceLevel::Round, "control", "deadline.set", "main", None, attrs);
+    }
 }
 
 impl RoundObserver for AdaptiveDeadlineObserver {
-    fn on_plan(&mut self, _t: usize, plan: &RoundPlan, ctl: &mut RoundControl) {
+    fn on_plan(&mut self, t: usize, plan: &RoundPlan, ctl: &mut RoundControl) {
         self.pending = Some(plan.cluster);
         if plan.cluster != usize::MAX {
             if let Some(map) = &self.clusters {
                 if let Some(&(e, samples)) = map.get(&plan.cluster) {
                     if samples >= self.warmup {
                         ctl.set_deadline_s(self.slack * e);
+                        self.trace_deadline(t, plan.cluster, self.slack * e);
                         return;
                     }
                 }
@@ -351,6 +375,7 @@ impl RoundObserver for AdaptiveDeadlineObserver {
         if self.seen >= self.warmup {
             if let Some(e) = self.ewma {
                 ctl.set_deadline_s(self.slack * e);
+                self.trace_deadline(t, plan.cluster, self.slack * e);
             }
         }
     }
@@ -403,13 +428,28 @@ pub struct PlateauStopObserver {
     min_delta: f64,
     best: Option<f64>,
     streak: usize,
+    /// Control-decision tracing (`plateau.stop` instant); off by
+    /// default.
+    tracer: Tracer,
 }
 
 impl PlateauStopObserver {
     pub fn new(patience: usize, min_delta: f64) -> PlateauStopObserver {
         assert!(patience > 0, "patience must be positive (0 means: don't build one)");
         assert!(min_delta.is_finite() && min_delta >= 0.0, "min_delta must be finite and >= 0");
-        PlateauStopObserver { patience, min_delta, best: None, streak: 0 }
+        PlateauStopObserver {
+            patience,
+            min_delta,
+            best: None,
+            streak: 0,
+            tracer: Tracer::off(),
+        }
+    }
+
+    /// Emit a `control`/`plateau.stop` instant when the stop fires.
+    pub fn with_tracer(mut self, tracer: Tracer) -> PlateauStopObserver {
+        self.tracer = tracer;
+        self
     }
 
     /// Evaluated rounds since the last improvement.
@@ -421,7 +461,7 @@ impl PlateauStopObserver {
 impl RoundObserver for PlateauStopObserver {
     fn on_round_end(
         &mut self,
-        _t: usize,
+        t: usize,
         outcome: &RoundOutcome,
         ctl: &mut RoundControl,
     ) {
@@ -440,6 +480,21 @@ impl RoundObserver for PlateauStopObserver {
             self.streak += 1;
             if self.streak >= self.patience {
                 ctl.request_stop();
+                self.tracer.instant(
+                    TraceLevel::Round,
+                    "control",
+                    "plateau.stop",
+                    "main",
+                    None,
+                    vec![
+                        ("round", t.into()),
+                        ("plateau", self.streak.into()),
+                        (
+                            "best_test_loss",
+                            crate::util::json::Json::Num(self.best.unwrap_or(f64::NAN)),
+                        ),
+                    ],
+                );
             }
         }
     }
@@ -582,7 +637,7 @@ mod tests {
             aggregation: crate::fl::strategy::AggregationSite::None,
             migration: None,
         };
-        let comm = RoundComm { byte_hops: 0, uploads: Vec::new() };
+        let comm = RoundComm { byte_hops: 0, uploads: Vec::new(), submitted: Vec::new() };
         let mut ctl = RoundControl::default();
 
         // Warmup: no deadline request while fewer than 2 rounds observed.
@@ -634,7 +689,7 @@ mod tests {
     #[test]
     fn per_cluster_deadlines_diverge_and_fall_back_to_global() {
         // alpha 1.0 -> EWMA == last sample, so expectations are exact.
-        let comm = RoundComm { byte_hops: 0, uploads: Vec::new() };
+        let comm = RoundComm { byte_hops: 0, uploads: Vec::new(), submitted: Vec::new() };
         let mut obs = AdaptiveDeadlineObserver::with_params(2.0, 1.0, 1).per_cluster();
         let mut ctl = RoundControl::default();
 
@@ -679,7 +734,7 @@ mod tests {
     fn per_cluster_ignores_clusterless_rounds() {
         // FedAvg-style rounds plan with cluster == usize::MAX; they feed
         // the global estimate but never mint a per-cluster entry.
-        let comm = RoundComm { byte_hops: 0, uploads: Vec::new() };
+        let comm = RoundComm { byte_hops: 0, uploads: Vec::new(), submitted: Vec::new() };
         let mut obs = AdaptiveDeadlineObserver::with_params(1.0, 1.0, 1).per_cluster();
         let mut ctl = RoundControl::default();
         obs.on_plan(0, &plan_for(usize::MAX), &mut ctl);

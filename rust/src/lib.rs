@@ -46,6 +46,7 @@ pub mod data;
 pub mod fl;
 pub mod metrics;
 pub mod netsim;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod testing;

@@ -9,8 +9,8 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use edgeflow::cli::{
-    apply_overrides, cell_workers_flag, flag, flag_def, switch, workers_flag, Args,
-    Cli, CommandSpec,
+    apply_overrides, cell_workers_flag, flag, flag_def, switch, trace_flag,
+    trace_level_flag, workers_flag, Args, Cli, CommandSpec,
 };
 use edgeflow::config::{
     preset, Algorithm, DatasetKind, Distribution, EngineKind, ExperimentConfig,
@@ -142,6 +142,8 @@ fn cli() -> Cli {
             flag("eval-every", "evaluation period in rounds"),
             flag("topology", "simple|breadth_parallel|depth_linear|hybrid"),
             workers_flag(),
+            trace_flag(),
+            trace_level_flag(),
             flag("out", "write metrics CSV here"),
             flag("out-json", "write metrics JSON here"),
             flag(
@@ -177,6 +179,12 @@ fn cli() -> Cli {
                     flag("seed", "master seed"),
                     workers_flag(),
                     cell_workers_flag(),
+                    flag(
+                        "trace-dir",
+                        "write one dual-clock trace JSONL per cell into this \
+                         directory",
+                    ),
+                    trace_level_flag(),
                     switch("fast", "fashion cells only"),
                     flag("out", "write cell results CSV here"),
                     switch("verbose", "debug logging"),
@@ -201,6 +209,12 @@ fn cli() -> Cli {
                     flag("seed", "master seed"),
                     workers_flag(),
                     cell_workers_flag(),
+                    flag(
+                        "trace-dir",
+                        "write one dual-clock trace JSONL per run into this \
+                         directory",
+                    ),
+                    trace_level_flag(),
                     flag("out", "write curves CSV here"),
                     switch("verbose", "debug logging"),
                 ],
@@ -306,6 +320,13 @@ fn cli() -> Cli {
                     ),
                     workers_flag(),
                     cell_workers_flag(),
+                    flag(
+                        "trace-dir",
+                        "write one dual-clock trace JSONL per fresh cell into \
+                         this directory (journal-skipped cells are not \
+                         re-traced)",
+                    ),
+                    trace_level_flag(),
                     switch("verbose", "debug logging"),
                 ],
                 positional: vec![
@@ -315,6 +336,22 @@ fn cli() -> Cli {
                         "campaign spec JSON (run|validate) or an existing \
                          report JSON (report)",
                     ),
+                ],
+            },
+            CommandSpec {
+                name: "trace",
+                about: "summarize a dual-clock trace or export it for \
+                        Perfetto/chrome://tracing (see `train --trace`)",
+                flags: vec![
+                    flag(
+                        "chrome",
+                        "write a Chrome trace-event JSON here (export action)",
+                    ),
+                    switch("verbose", "debug logging"),
+                ],
+                positional: vec![
+                    ("action", "summarize | export"),
+                    ("file", "trace JSONL file (written by --trace/--trace-dir)"),
                 ],
             },
             CommandSpec {
@@ -355,6 +392,12 @@ fn suite_options(a: &Args) -> Result<SuiteOptions> {
     }
     if let Some(v) = a.get_f64("lr")? {
         o.lr = v;
+    }
+    if let Some(s) = a.get("trace-dir") {
+        o.trace_dir = s.to_string();
+    }
+    if let Some(s) = a.get("trace-level") {
+        o.trace_level = s.to_string();
     }
     Ok(o)
 }
@@ -420,17 +463,20 @@ fn cmd_train(a: &Args) -> Result<()> {
     }
     if adaptive_slack > 0.0 {
         let warmup = a.get_usize("adaptive-warmup")?.unwrap_or(3);
-        let mut obs = AdaptiveDeadlineObserver::with_params(adaptive_slack, 0.3, warmup);
+        let mut obs = AdaptiveDeadlineObserver::with_params(adaptive_slack, 0.3, warmup)
+            .with_tracer(runner.tracer().clone());
         if a.has("adaptive-per-cluster") {
             obs = obs.per_cluster();
         }
         runner.add_observer(Box::new(obs));
     }
     if runner.cfg.plateau_rounds > 0 {
-        runner.add_observer(Box::new(PlateauStopObserver::new(
+        let obs = PlateauStopObserver::new(
             runner.cfg.plateau_rounds,
             runner.cfg.plateau_min_delta,
-        )));
+        )
+        .with_tracer(runner.tracer().clone());
+        runner.add_observer(Box::new(obs));
     }
     // Drive the stepwise session: one step per round, with periodic
     // checkpoints when requested.  With --checkpoint-keep the files are
@@ -884,6 +930,8 @@ fn campaign_run(a: &Args, path: &str) -> Result<()> {
         artifacts: a.get("artifacts").unwrap().to_string(),
         journal,
         max_cells: a.get_usize("max-cells")?.unwrap_or(0),
+        trace_dir: a.get("trace-dir").unwrap_or("").to_string(),
+        trace_level: a.get("trace-level").unwrap_or("full").to_string(),
     };
     let outcome = run_campaign(&spec, &cells, &opts)?;
     println!(
@@ -1007,6 +1055,79 @@ fn cmd_campaign(a: &Args) -> Result<()> {
     }
 }
 
+/// `trace summarize`: per-(category, name) and per-link rollups of a
+/// JSONL trace — every line is schema-validated on the way through, so
+/// this doubles as a trace linter.
+fn trace_summarize(file: &str) -> Result<()> {
+    let s = edgeflow::obs::summary::summarize(file)?;
+    match &s.header {
+        Some(h) => println!(
+            "trace {file}: run {:?} level {} — {} events",
+            h.get("run").and_then(Json::as_str).unwrap_or("?"),
+            h.get("level").and_then(Json::as_str).unwrap_or("?"),
+            s.events
+        ),
+        None => println!("trace {file}: {} events (no header)", s.events),
+    }
+    let mut t = Table::new(&["category", "name", "count", "wall_s", "sim_s", "bytes"])
+        .align(0, Align::Left)
+        .align(1, Align::Left);
+    for ((cat, name), r) in &s.by_kind {
+        t.row(&[
+            cat.clone(),
+            name.clone(),
+            r.count.to_string(),
+            format!("{:.3}", r.wall_s),
+            format!("{:.3}", r.sim_s),
+            r.bytes.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    if !s.by_lane.is_empty() {
+        let mut t = Table::new(&["link lane", "transfers", "sim_s", "bytes"])
+            .align(0, Align::Left);
+        for (lane, r) in &s.by_lane {
+            t.row(&[
+                lane.clone(),
+                r.count.to_string(),
+                format!("{:.3}", r.sim_s),
+                r.bytes.to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if let Some(reg) = s.metrics.as_ref().and_then(|m| m.get("registry")) {
+        println!("final metrics: {}", reg.dump());
+    }
+    Ok(())
+}
+
+fn cmd_trace(a: &Args) -> Result<()> {
+    let action = a.positional.first().map(String::as_str).ok_or_else(|| {
+        Error::Usage("trace needs an action: summarize | export".into())
+    })?;
+    let file = a.positional.get(1).map(String::as_str).ok_or_else(|| {
+        Error::Usage(format!("trace {action} needs a trace file argument"))
+    })?;
+    match action {
+        "summarize" => trace_summarize(file),
+        "export" => {
+            let out = a.get("chrome").ok_or_else(|| {
+                Error::Usage("trace export needs --chrome <out.json>".into())
+            })?;
+            let n = edgeflow::obs::chrome::export_chrome(file, out)?;
+            println!("wrote {n} Chrome trace events -> {out}");
+            println!(
+                "open in Perfetto (https://ui.perfetto.dev) or chrome://tracing"
+            );
+            Ok(())
+        }
+        other => Err(Error::Usage(format!(
+            "unknown trace action {other:?} (expected summarize | export)"
+        ))),
+    }
+}
+
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let c = cli();
@@ -1020,6 +1141,7 @@ fn run() -> Result<()> {
         "theory" => cmd_theory(&a),
         "inspect" => cmd_inspect(&a),
         "campaign" => cmd_campaign(&a),
+        "trace" => cmd_trace(&a),
         "presets" => {
             for p in PRESETS {
                 let cfg = preset(p)?;

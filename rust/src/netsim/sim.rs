@@ -3,6 +3,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::obs::{TraceLevel, Tracer};
 use crate::topology::graph::{LinkId, NodeId, Topology};
 use crate::topology::route::RouteTable;
 use crate::util::error::{Error, Result};
@@ -163,6 +164,16 @@ impl NetSim {
     /// Run until all submitted transfers deliver; returns outcomes in
     /// completion order.  The simulation clock is monotone.
     pub fn run(&mut self) -> Vec<TransferOutcome> {
+        self.run_traced(&Tracer::off())
+    }
+
+    /// [`NetSim::run`] with link-occupancy tracing: at `full` trace
+    /// level every hop emits one sim-clock span on its link's lane
+    /// (`linkN`, window = transmission start → end), so the Chrome
+    /// export shows the per-link schedule the FIFO simulation actually
+    /// produced.  Event processing is identical to the untraced run.
+    pub fn run_traced(&mut self, tracer: &Tracer) -> Vec<TransferOutcome> {
+        let trace_links = tracer.enabled(TraceLevel::Full);
         let mut done = Vec::new();
         while let Some(Reverse(ev)) = self.events.pop() {
             debug_assert!(ev.time >= self.clock_s - 1e-12, "clock went backwards");
@@ -195,6 +206,23 @@ impl NetSim {
             self.link_free_s[l.0] = free_at;
             self.link_busy_s[l.0] += tx_s;
             let arrive = free_at + link.latency_ms / 1e3;
+            if trace_links {
+                tracer.span_at(
+                    TraceLevel::Full,
+                    "link",
+                    "tx",
+                    &format!("link{}", l.0),
+                    tracer.rel_now_ns(),
+                    0,
+                    Some((start, tx_s)),
+                    vec![
+                        ("transfer", p.id.into()),
+                        ("bytes", p.bytes.into()),
+                        ("hop", p.next_hop.into()),
+                        ("queue_s", crate::util::json::Json::Num(start - ev.time)),
+                    ],
+                );
+            }
             p.next_hop += 1;
             self.events.push(Reverse(Event {
                 time: arrive,
@@ -507,6 +535,50 @@ mod tests {
         bigger.add_link(b, c, 1.0, 1.0);
         let mut other = NetSim::new(&bigger);
         assert!(other.restore(&sim.state().unwrap()).is_err());
+    }
+
+    #[test]
+    fn traced_run_emits_link_spans_and_matches_untraced_timing() {
+        let t = two_node();
+        let rt = RouteTable::latency(&t);
+        let mut plain = NetSim::new(&t);
+        plain.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        plain.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let expect = plain.run();
+
+        let sink = std::sync::Arc::new(crate::obs::test_sink::MemSink::default());
+        let tracer = crate::obs::Tracer::with_sink(
+            Box::new(sink.clone()),
+            TraceLevel::Full,
+            "netsim-test",
+        );
+        let mut traced = NetSim::new(&t);
+        traced.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        traced.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let out = traced.run_traced(&tracer);
+        for (a, b) in out.iter().zip(&expect) {
+            assert_eq!(a.delivered_s.to_bits(), b.delivered_s.to_bits());
+            assert_eq!(a.queue_wait_s.to_bits(), b.queue_wait_s.to_bits());
+        }
+
+        let lines = sink.lines.lock().unwrap();
+        let spans: Vec<_> = lines
+            .iter()
+            .filter(|l| l.str_field("ev").unwrap() == "span")
+            .collect();
+        assert_eq!(spans.len(), 2, "one hop per transfer");
+        assert_eq!(spans[0].str_field("lane").unwrap(), "link0");
+        assert_eq!(spans[0].str_field("cat").unwrap(), "link");
+        // First tx occupies [0, 1); second queues behind it at [1, 2).
+        assert_eq!(spans[0].f64_field("sim_s").unwrap(), 0.0);
+        assert!((spans[0].f64_field("sim_dur_s").unwrap() - 1.0).abs() < 1e-9);
+        assert!((spans[1].f64_field("sim_s").unwrap() - 1.0).abs() < 1e-9);
+        assert!((spans[1].req("attrs").unwrap().f64_field("queue_s").unwrap() - 1.0).abs() < 1e-9);
+        // An off tracer emits nothing and is the plain run.
+        let mut silent = NetSim::new(&t);
+        silent.submit(&rt, NodeId(0), NodeId(1), 1_000_000, 0.0).unwrap();
+        let o = silent.run_traced(&crate::obs::Tracer::off());
+        assert_eq!(o.len(), 1);
     }
 
     #[test]

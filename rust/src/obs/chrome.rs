@@ -1,0 +1,257 @@
+//! Chrome trace-event export: convert a JSONL trace into the JSON
+//! format Perfetto / `chrome://tracing` load directly.
+//!
+//! The dual clocks become two trace "processes": pid 1 renders the
+//! wall clock (one lane per thread: `main`, `worker0`...), pid 2 the
+//! simulated clock (one lane per link / route).  Spans become `"X"`
+//! complete events with microsecond `ts`/`dur`; instants become `"i"`
+//! events.  Events are sorted by `(pid, tid, ts)` so every lane's
+//! timestamps are monotone — the property the viewer (and the test
+//! suite) relies on.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead as _, Write as _};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One pre-sorted Chrome event with its ordering key.
+struct ChromeEvent {
+    pid: u64,
+    tid: u64,
+    ts_us: f64,
+    json: Json,
+}
+
+const WALL_PID: u64 = 1;
+const SIM_PID: u64 = 2;
+
+/// Convert the JSONL trace at `input` into a Chrome trace-event file
+/// at `output`.  Returns the number of exported events (metadata
+/// records excluded).
+pub fn export_chrome(input: &str, output: &str) -> Result<usize> {
+    let f = std::fs::File::open(input)
+        .map_err(|e| Error::Io(std::io::Error::new(e.kind(), format!("{input}: {e}"))))?;
+    let reader = std::io::BufReader::new(f);
+
+    // Lane registry: (pid, lane name) -> tid, in first-seen order.
+    let mut lanes: BTreeMap<(u64, String), u64> = BTreeMap::new();
+    let mut next_tid: u64 = 1;
+    let mut events: Vec<ChromeEvent> = Vec::new();
+
+    let mut lane_tid = |lanes: &mut BTreeMap<(u64, String), u64>, pid: u64, lane: &str| -> u64 {
+        if let Some(t) = lanes.get(&(pid, lane.to_string())) {
+            return *t;
+        }
+        let t = next_tid;
+        next_tid += 1;
+        lanes.insert((pid, lane.to_string()), t);
+        t
+    };
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| Error::Json(format!("{input} line {}: {e}", lineno + 1)))?;
+        super::validate_event(&j)
+            .map_err(|e| Error::Json(format!("{input} line {}: {e}", lineno + 1)))?;
+        let ev = j.str_field("ev")?;
+        if ev == "header" || ev == "metrics" {
+            continue;
+        }
+        let cat = j.str_field("cat")?.to_string();
+        let name = j.str_field("name")?.to_string();
+        let lane = j.str_field("lane")?.to_string();
+        let args = j.get("attrs").cloned().unwrap_or_else(|| Json::obj(vec![]));
+        let wall_ns = j.req("wall_ns")?.as_f64().unwrap_or(0.0);
+        let sim = j.get("sim_s").and_then(Json::as_f64);
+        match ev {
+            "span" => {
+                let dur_ns = j.req("wall_dur_ns")?.as_f64().unwrap_or(0.0);
+                // Wall-axis rendering for every span.
+                let tid = lane_tid(&mut lanes, WALL_PID, &lane);
+                events.push(complete(
+                    WALL_PID,
+                    tid,
+                    wall_ns / 1e3,
+                    dur_ns / 1e3,
+                    &cat,
+                    &name,
+                    &args,
+                ));
+                // Sim-axis rendering for spans inside the simulation.
+                if let (Some(s), Some(d)) =
+                    (sim, j.get("sim_dur_s").and_then(Json::as_f64))
+                {
+                    let tid = lane_tid(&mut lanes, SIM_PID, &lane);
+                    events.push(complete(SIM_PID, tid, s * 1e6, d * 1e6, &cat, &name, &args));
+                }
+            }
+            "instant" => {
+                let tid = lane_tid(&mut lanes, WALL_PID, &lane);
+                events.push(point(WALL_PID, tid, wall_ns / 1e3, &cat, &name, &args));
+                if let Some(s) = sim {
+                    let tid = lane_tid(&mut lanes, SIM_PID, &lane);
+                    events.push(point(SIM_PID, tid, s * 1e6, &cat, &name, &args));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let exported = events.len();
+    // Monotone ts per lane: total_cmp keeps the sort total even if a
+    // poisoned trace smuggled a NaN timestamp in.
+    events.sort_by(|a, b| {
+        a.pid
+            .cmp(&b.pid)
+            .then(a.tid.cmp(&b.tid))
+            .then(a.ts_us.total_cmp(&b.ts_us))
+    });
+
+    let mut all: Vec<Json> = Vec::new();
+    for (pid, label) in [(WALL_PID, "wall clock"), (SIM_PID, "sim clock")] {
+        all.push(metadata("process_name", pid, 0, label));
+    }
+    for ((pid, lane), tid) in &lanes {
+        all.push(metadata("thread_name", *pid, *tid, lane));
+    }
+    all.extend(events.into_iter().map(|e| e.json));
+
+    let doc = Json::obj(vec![
+        ("traceEvents", Json::Arr(all)),
+        ("displayTimeUnit", "ms".into()),
+    ]);
+    let mut out = std::io::BufWriter::new(std::fs::File::create(output)?);
+    writeln!(out, "{}", doc.dump())?;
+    out.flush()?;
+    Ok(exported)
+}
+
+fn complete(
+    pid: u64,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    cat: &str,
+    name: &str,
+    args: &Json,
+) -> ChromeEvent {
+    ChromeEvent {
+        pid,
+        tid,
+        ts_us,
+        json: Json::obj(vec![
+            ("ph", "X".into()),
+            ("pid", pid.into()),
+            ("tid", tid.into()),
+            ("ts", Json::Num(ts_us)),
+            ("dur", Json::Num(dur_us)),
+            ("cat", cat.into()),
+            ("name", name.into()),
+            ("args", args.clone()),
+        ]),
+    }
+}
+
+fn point(pid: u64, tid: u64, ts_us: f64, cat: &str, name: &str, args: &Json) -> ChromeEvent {
+    ChromeEvent {
+        pid,
+        tid,
+        ts_us,
+        json: Json::obj(vec![
+            ("ph", "i".into()),
+            ("s", "t".into()),
+            ("pid", pid.into()),
+            ("tid", tid.into()),
+            ("ts", Json::Num(ts_us)),
+            ("cat", cat.into()),
+            ("name", name.into()),
+            ("args", args.clone()),
+        ]),
+    }
+}
+
+fn metadata(kind: &str, pid: u64, tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", "M".into()),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("name", kind.into()),
+        ("args", Json::obj(vec![("name", name.into())])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_trace(tag: &str, lines: &[&str]) -> (String, String) {
+        let dir = std::env::temp_dir();
+        let stamp = std::process::id();
+        let input = dir.join(format!("edgeflow_chrome_in_{tag}_{stamp}.jsonl"));
+        let output = dir.join(format!("edgeflow_chrome_out_{tag}_{stamp}.json"));
+        std::fs::write(&input, lines.join("\n")).unwrap();
+        (
+            input.to_str().unwrap().to_string(),
+            output.to_str().unwrap().to_string(),
+        )
+    }
+
+    #[test]
+    fn exports_both_clock_processes_with_monotone_lanes() {
+        let (input, output) = write_trace("ok", &[
+            r#"{"v":1,"ev":"header","format":"edgeflow-trace","level":"full","run":"t"}"#,
+            r#"{"v":1,"ev":"span","cat":"phase","name":"train","lane":"main","wall_ns":2000,"wall_dur_ns":1000,"attrs":{"round":0}}"#,
+            r#"{"v":1,"ev":"span","cat":"phase","name":"idle","lane":"main","wall_ns":0,"wall_dur_ns":2000,"attrs":{"round":0}}"#,
+            r#"{"v":1,"ev":"span","cat":"net","name":"upload","lane":"route:0->1","wall_ns":5000,"wall_dur_ns":0,"sim_s":1.5,"sim_dur_s":0.5,"attrs":{"bytes":64}}"#,
+            r#"{"v":1,"ev":"instant","cat":"control","name":"deadline.set","lane":"main","wall_ns":100,"sim_s":2.0,"attrs":{}}"#,
+        ]);
+        let n = export_chrome(&input, &output).unwrap();
+        // 3 wall spans + 1 sim span + 1 instant on each clock.
+        assert_eq!(n, 6);
+        let doc = Json::parse(std::fs::read_to_string(&output).unwrap().trim()).unwrap();
+        let evs = doc.req("traceEvents").unwrap().as_arr().unwrap();
+        // Per-lane ts monotonicity over the non-metadata events.
+        let mut last: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+        let mut sim_pid_seen = false;
+        for e in evs {
+            if e.str_field("ph").unwrap() == "M" {
+                continue;
+            }
+            let pid = e.req("pid").unwrap().as_u64().unwrap();
+            let tid = e.req("tid").unwrap().as_u64().unwrap();
+            let ts = e.f64_field("ts").unwrap();
+            if let Some(prev) = last.get(&(pid, tid)) {
+                assert!(ts >= *prev, "lane ({pid},{tid}) ts went backwards");
+            }
+            last.insert((pid, tid), ts);
+            if pid == SIM_PID {
+                sim_pid_seen = true;
+            }
+        }
+        assert!(sim_pid_seen, "sim-clock process missing");
+        // Metadata names both processes.
+        let names: Vec<String> = evs
+            .iter()
+            .filter(|e| e.str_field("ph").unwrap() == "M")
+            .map(|e| e.req("args").unwrap().str_field("name").unwrap().to_string())
+            .collect();
+        assert!(names.iter().any(|n| n == "wall clock"));
+        assert!(names.iter().any(|n| n == "sim clock"));
+        assert!(names.iter().any(|n| n == "route:0->1"));
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+
+    #[test]
+    fn rejects_invalid_trace_lines() {
+        let (input, output) = write_trace("bad", &[r#"{"v":1,"ev":"span"}"#]);
+        assert!(export_chrome(&input, &output).is_err());
+        let _ = std::fs::remove_file(&input);
+        assert!(export_chrome("/nonexistent/trace.jsonl", &output).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! Deterministic metrics registry: counters, gauges and fixed-bound
+//! histograms whose emitted form is bit-identical at any worker count.
+//!
+//! The contract has two halves.  Storage is `BTreeMap`-ordered, so
+//! serialization order never depends on insertion order.  Aggregation
+//! is *caller-ordered*: [`MetricsRegistry::merge`] folds `other` into
+//! `self` exactly as given, and [`MetricsRegistry::merge_all`] folds a
+//! slice left to right — callers hand partial registries over in a
+//! fixed order (job order, never thread-completion order), so every
+//! f64 sum performs its additions in the same sequence and the merged
+//! bits cannot vary with scheduling.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Fixed-bucket histogram: `bounds` are ascending upper bounds, with
+/// an implicit +inf bucket at the end (`counts.len() == bounds.len()
+/// + 1`).  Bounds are fixed at construction — two histograms under
+/// the same name must agree on them, which the registry enforces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            total: 0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.total += 1;
+    }
+
+    /// Fold `other`'s observations into `self` (bounds must match;
+    /// mismatched merges are a caller bug and are dropped, keeping the
+    /// registry total-function — the debug build asserts).
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.bounds.len(), other.bounds.len(), "histogram bounds mismatch");
+        if self.bounds.len() != other.bounds.len() {
+            return;
+        }
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+        self.total += other.total;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bounds", Json::arr(self.bounds.iter().map(|b| Json::Num(*b)))),
+            ("counts", Json::arr(self.counts.iter().map(|c| Json::from(*c)))),
+            ("sum", Json::Num(self.sum)),
+            ("total", self.total.into()),
+        ])
+    }
+}
+
+/// The registry.  All three families are name-keyed `BTreeMap`s; see
+/// the module docs for the determinism contract.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to a counter (created at zero on first use).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge (last write wins).
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Observe a value into a fixed-bound histogram, created with
+    /// `bounds` on first use.
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Fold `other` into `self`: counters and histogram cells add,
+    /// gauges take `other`'s value (last-merged wins).  Callers must
+    /// merge partials in a fixed order — see the module docs.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            match self.histograms.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// Fold `parts` left to right into one registry.
+    pub fn merge_all(parts: &[MetricsRegistry]) -> MetricsRegistry {
+        let mut out = MetricsRegistry::new();
+        for p in parts {
+            out.merge(p);
+        }
+        out
+    }
+
+    /// The serialized form: three name-sorted objects.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut r = MetricsRegistry::new();
+        assert!(r.is_empty());
+        r.inc("rounds", 1);
+        r.inc("rounds", 2);
+        r.set_gauge("acc", 0.5);
+        r.set_gauge("acc", 0.75);
+        assert_eq!(r.counter("rounds"), 3);
+        assert_eq!(r.counter("missing"), 0);
+        assert_eq!(r.gauge("acc"), Some(0.75));
+        assert_eq!(r.gauge("missing"), None);
+    }
+
+    #[test]
+    fn histogram_buckets_values_by_upper_bound() {
+        let mut h = Histogram::new(&[0.1, 1.0, 10.0]);
+        h.observe(0.05); // <= 0.1
+        h.observe(0.1); // boundary lands in its bucket
+        h.observe(0.5);
+        h.observe(100.0); // overflow bucket
+        assert_eq!(h.counts(), &[2, 1, 0, 1]);
+        assert_eq!(h.total(), 4);
+        assert!((h.sum() - 100.65).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_order_invariant_for_the_integer_parts() {
+        let mut a = MetricsRegistry::new();
+        a.inc("x", 1);
+        a.observe("h", &[1.0], 0.5);
+        let mut b = MetricsRegistry::new();
+        b.inc("x", 2);
+        b.inc("y", 7);
+        b.observe("h", &[1.0], 2.0);
+        let ab = MetricsRegistry::merge_all(&[a.clone(), b.clone()]);
+        assert_eq!(ab.counter("x"), 3);
+        assert_eq!(ab.counter("y"), 7);
+        let h = ab.histogram("h").expect("merged histogram");
+        assert_eq!(h.counts(), &[1, 1]);
+        assert_eq!(h.total(), 2);
+    }
+
+    #[test]
+    fn fixed_merge_order_is_bit_stable() {
+        // Simulate "the same work split across different worker
+        // counts": partial registries handed over in job order must
+        // fold to bit-identical sums regardless of how the work was
+        // sharded, because the fold order is the caller's fixed order.
+        let vals = [0.1, 0.2, 0.30000000000000004, 1e-9, 7.5];
+        let one: Vec<MetricsRegistry> = vals
+            .iter()
+            .map(|v| {
+                let mut r = MetricsRegistry::new();
+                r.observe("lat", &[1.0, 10.0], *v);
+                r.inc("n", 1);
+                r
+            })
+            .collect();
+        let merged_fine = MetricsRegistry::merge_all(&one);
+        // Same observations pre-folded into two shards (job order
+        // preserved within and across shards).
+        let mut s0 = MetricsRegistry::new();
+        let mut s1 = MetricsRegistry::new();
+        for v in &vals[..3] {
+            s0.observe("lat", &[1.0, 10.0], *v);
+            s0.inc("n", 1);
+        }
+        for v in &vals[3..] {
+            s1.observe("lat", &[1.0, 10.0], *v);
+            s1.inc("n", 1);
+        }
+        let merged_coarse = MetricsRegistry::merge_all(&[s0, s1]);
+        assert_eq!(
+            merged_fine.to_json().dump(),
+            merged_coarse.to_json().dump(),
+            "fold order fixed by the caller => identical bits"
+        );
+    }
+
+    #[test]
+    fn json_shape_is_name_sorted() {
+        let mut r = MetricsRegistry::new();
+        r.inc("z", 1);
+        r.inc("a", 1);
+        r.set_gauge("m", 1.5);
+        r.observe("h", &[1.0], 0.25);
+        let s = r.to_json().dump();
+        assert!(s.find("\"a\"").expect("a") < s.find("\"z\"").expect("z"));
+        assert!(s.contains("\"counters\""));
+        assert!(s.contains("\"gauges\""));
+        assert!(s.contains("\"histograms\""));
+        assert!(s.contains("\"bounds\""));
+    }
+}

@@ -1,0 +1,542 @@
+//! Structured observability: dual-clock tracing and deterministic
+//! metrics.
+//!
+//! A trace is a stream of events, each carrying *two* time axes:
+//!
+//! * the **wall clock** — nanoseconds since the tracer's epoch
+//!   (`wall_ns`, `wall_dur_ns`), read only through
+//!   [`wallclock`] (the one obs module the `wall-clock-in-sim` lint
+//!   allowlists);
+//! * the **simulated clock** — NetSim seconds (`sim_s`, `sim_dur_s`),
+//!   present on events that live inside the simulation (DES
+//!   transfers, link occupancy, round windows).
+//!
+//! Events are emitted through a pluggable [`TraceSink`].  The default
+//! is no sink at all — a disabled [`Tracer`] is a `None` and every
+//! instrumentation call returns immediately — and the shipping sink is
+//! [`JsonlSink`]: schema-versioned JSONL, one event per line, written
+//! through a buffered stream so a trace never holds the run in RAM.
+//! `trace export --chrome` ([`chrome`]) converts a JSONL trace to the
+//! Chrome trace-event format for Perfetto; `trace summarize`
+//! ([`summary`]) rolls it up per phase and per link.
+//!
+//! **Determinism contract.**  The *logical* content of a trace —
+//! event kinds, categories, names, attributes and every sim-clock
+//! field — is bit-identical at any `--workers` count; only wall-clock
+//! fields and worker-lane assignment are physical.  The
+//! [`metrics::MetricsRegistry`] is deterministic outright.
+
+pub mod chrome;
+pub mod metrics;
+pub mod summary;
+pub mod wallclock;
+
+pub use metrics::MetricsRegistry;
+pub use wallclock::{PhaseTimer, WallMark};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+use wallclock::WallEpoch;
+
+/// Trace schema version: the `"v"` field on every emitted line.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// How much detail a trace records.  Levels nest: each one includes
+/// everything below it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// No events.
+    Off,
+    /// Round spans, checkpoint/cell spans, control events, metrics.
+    Round,
+    /// Plus per-phase spans (plan / comm / train / aggregate / eval).
+    Phase,
+    /// Plus per-client local-update spans and per-transfer DES spans.
+    Full,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> Result<TraceLevel> {
+        match s {
+            "off" => Ok(TraceLevel::Off),
+            "round" => Ok(TraceLevel::Round),
+            "phase" => Ok(TraceLevel::Phase),
+            "full" => Ok(TraceLevel::Full),
+            other => Err(Error::Config(format!(
+                "unknown trace level {other:?} (use off | round | phase | full)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Round => "round",
+            TraceLevel::Phase => "phase",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+/// Where emitted events go.  Implementations must be thread-safe:
+/// worker-lane spans are emitted from the main thread in job order,
+/// but campaign cells emit concurrently.
+pub trait TraceSink: Send + Sync {
+    /// Write one event line.  Sinks swallow I/O errors after logging
+    /// them once — tracing must never abort a training run.
+    fn emit(&self, line: &Json);
+    fn flush(&self);
+}
+
+/// The shipping sink: one compact JSON object per line, streamed
+/// through a buffer (flushed on [`Tracer::flush`] and drop).
+pub struct JsonlSink {
+    w: Mutex<std::io::BufWriter<std::fs::File>>,
+    path: String,
+    failed: AtomicBool,
+}
+
+impl JsonlSink {
+    pub fn create(path: &str) -> Result<JsonlSink> {
+        let f = std::fs::File::create(path)?;
+        Ok(JsonlSink {
+            w: Mutex::new(std::io::BufWriter::new(f)),
+            path: path.to_string(),
+            failed: AtomicBool::new(false),
+        })
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn emit(&self, line: &Json) {
+        use std::io::Write as _;
+        if self.failed.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Ok(mut w) = self.w.lock() {
+            if let Err(e) = writeln!(w, "{}", line.dump()) {
+                log::warn!("trace sink {}: write failed ({e}); tracing disabled", self.path);
+                self.failed.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn flush(&self) {
+        use std::io::Write as _;
+        if let Ok(mut w) = self.w.lock() {
+            if let Err(e) = w.flush() {
+                log::warn!("trace sink {}: flush failed ({e})", self.path);
+            }
+        }
+    }
+}
+
+struct Inner {
+    level: TraceLevel,
+    epoch: WallEpoch,
+    sink: Box<dyn TraceSink>,
+}
+
+/// Cheap-clone tracing handle.  A disabled tracer carries no
+/// allocation and every method on it is a branch on `None` — the
+/// instrumented hot paths pay nothing when tracing is off.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Tracer {
+    /// The disabled tracer.
+    pub fn off() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// A tracer writing JSONL to `path` at `level`; emits the header
+    /// line immediately.  `level == Off` yields the disabled tracer
+    /// (no file is created).
+    pub fn jsonl(path: &str, level: TraceLevel, run: &str) -> Result<Tracer> {
+        if level == TraceLevel::Off {
+            return Ok(Tracer::off());
+        }
+        let sink = JsonlSink::create(path)?;
+        Ok(Tracer::with_sink(Box::new(sink), level, run))
+    }
+
+    /// A tracer over any sink (tests use an in-memory sink).  Emits
+    /// the header line.
+    pub fn with_sink(sink: Box<dyn TraceSink>, level: TraceLevel, run: &str) -> Tracer {
+        let t = Tracer {
+            inner: Some(Arc::new(Inner { level, epoch: WallEpoch::now(), sink })),
+        };
+        if let Some(inner) = &t.inner {
+            inner.sink.emit(&Json::obj(vec![
+                ("v", TRACE_SCHEMA_VERSION.into()),
+                ("ev", "header".into()),
+                ("format", "edgeflow-trace".into()),
+                ("level", level.as_str().into()),
+                ("run", run.into()),
+            ]));
+        }
+        t
+    }
+
+    /// Build a tracer from config fields: empty `path` (or level
+    /// `off`) disables.
+    pub fn from_config(path: &str, level: &str, run: &str) -> Result<Tracer> {
+        if path.is_empty() {
+            return Ok(Tracer::off());
+        }
+        Tracer::jsonl(path, TraceLevel::parse(level)?, run)
+    }
+
+    /// Whether events at `level` are recorded.
+    pub fn enabled(&self, level: TraceLevel) -> bool {
+        match &self.inner {
+            Some(i) => level != TraceLevel::Off && level <= i.level,
+            None => false,
+        }
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.inner.as_ref().map(|i| i.level).unwrap_or(TraceLevel::Off)
+    }
+
+    /// Take a wall mark if events at `level` are recorded (so the
+    /// clock is never read for spans that would be dropped).
+    pub fn mark_if(&self, level: TraceLevel) -> Option<WallMark> {
+        if self.enabled(level) {
+            Some(WallMark::now())
+        } else {
+            None
+        }
+    }
+
+    /// Wall offset of "now" in trace time (0 when disabled).
+    pub fn rel_now_ns(&self) -> u64 {
+        match &self.inner {
+            Some(i) => i.epoch.rel_ns(WallMark::now()),
+            None => 0,
+        }
+    }
+
+    /// Emit a span opened at `start` and closing now.  `sim` is the
+    /// optional simulated-clock window `(start_s, dur_s)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        level: TraceLevel,
+        cat: &str,
+        name: &str,
+        lane: &str,
+        start: Option<WallMark>,
+        sim: Option<(f64, f64)>,
+        attrs: Vec<(&str, Json)>,
+    ) {
+        let Some(inner) = &self.inner else { return };
+        if !self.enabled(level) {
+            return;
+        }
+        let (wall_ns, wall_dur_ns) = match start {
+            Some(m) => inner.epoch.span_ns(m),
+            None => (inner.epoch.rel_ns(WallMark::now()), 0),
+        };
+        self.emit_span(cat, name, lane, wall_ns, wall_dur_ns, sim, attrs);
+    }
+
+    /// Emit a span with explicit wall-clock placement (the phase
+    /// timer's tiled lanes; DES spans whose wall time is just the
+    /// emission point).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_at(
+        &self,
+        level: TraceLevel,
+        cat: &str,
+        name: &str,
+        lane: &str,
+        wall_ns: u64,
+        wall_dur_ns: u64,
+        sim: Option<(f64, f64)>,
+        attrs: Vec<(&str, Json)>,
+    ) {
+        if !self.enabled(level) {
+            return;
+        }
+        self.emit_span(cat, name, lane, wall_ns, wall_dur_ns, sim, attrs);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn emit_span(
+        &self,
+        cat: &str,
+        name: &str,
+        lane: &str,
+        wall_ns: u64,
+        wall_dur_ns: u64,
+        sim: Option<(f64, f64)>,
+        attrs: Vec<(&str, Json)>,
+    ) {
+        let Some(inner) = &self.inner else { return };
+        let mut pairs = vec![
+            ("v", TRACE_SCHEMA_VERSION.into()),
+            ("ev", "span".into()),
+            ("cat", cat.into()),
+            ("name", name.into()),
+            ("lane", lane.into()),
+            ("wall_ns", wall_ns.into()),
+            ("wall_dur_ns", wall_dur_ns.into()),
+        ];
+        if let Some((s, d)) = sim {
+            pairs.push(("sim_s", Json::Num(s)));
+            pairs.push(("sim_dur_s", Json::Num(d)));
+        }
+        pairs.push(("attrs", Json::obj(attrs)));
+        inner.sink.emit(&Json::obj(pairs));
+    }
+
+    /// Emit a point event (no duration).
+    pub fn instant(
+        &self,
+        level: TraceLevel,
+        cat: &str,
+        name: &str,
+        lane: &str,
+        sim_s: Option<f64>,
+        attrs: Vec<(&str, Json)>,
+    ) {
+        let Some(inner) = &self.inner else { return };
+        if !self.enabled(level) {
+            return;
+        }
+        let mut pairs = vec![
+            ("v", TRACE_SCHEMA_VERSION.into()),
+            ("ev", "instant".into()),
+            ("cat", cat.into()),
+            ("name", name.into()),
+            ("lane", lane.into()),
+            ("wall_ns", inner.epoch.rel_ns(WallMark::now()).into()),
+        ];
+        if let Some(s) = sim_s {
+            pairs.push(("sim_s", Json::Num(s)));
+        }
+        pairs.push(("attrs", Json::obj(attrs)));
+        inner.sink.emit(&Json::obj(pairs));
+    }
+
+    /// Emit the registry snapshot as one `metrics` event.
+    pub fn metrics(&self, reg: &MetricsRegistry) {
+        let Some(inner) = &self.inner else { return };
+        inner.sink.emit(&Json::obj(vec![
+            ("v", TRACE_SCHEMA_VERSION.into()),
+            ("ev", "metrics".into()),
+            ("registry", reg.to_json()),
+        ]));
+    }
+
+    pub fn flush(&self) {
+        if let Some(inner) = &self.inner {
+            inner.sink.flush();
+        }
+    }
+}
+
+/// Validate one parsed trace line against schema v1.  Used by `trace
+/// summarize` (every line is validated as it streams past) and the
+/// schema tests.
+pub fn validate_event(j: &Json) -> Result<()> {
+    let bad = |m: String| Err(Error::Json(m));
+    match j.get("v").and_then(Json::as_u64) {
+        Some(TRACE_SCHEMA_VERSION) => {}
+        other => return bad(format!("trace event version {other:?} != {TRACE_SCHEMA_VERSION}")),
+    }
+    let ev = j.str_field("ev")?;
+    match ev {
+        "header" => {
+            if j.str_field("format")? != "edgeflow-trace" {
+                return bad("header format is not edgeflow-trace".into());
+            }
+            TraceLevel::parse(j.str_field("level")?)?;
+            j.str_field("run")?;
+        }
+        "span" | "instant" => {
+            j.str_field("cat")?;
+            j.str_field("name")?;
+            j.str_field("lane")?;
+            j.req("wall_ns")?
+                .as_u64()
+                .ok_or_else(|| Error::Json("wall_ns is not an integer".into()))?;
+            if ev == "span" {
+                j.req("wall_dur_ns")?
+                    .as_u64()
+                    .ok_or_else(|| Error::Json("wall_dur_ns is not an integer".into()))?;
+            }
+            // The sim clock is optional, but a span carrying one half
+            // of the window must carry the other.
+            let has_sim = j.get("sim_s").is_some();
+            let has_sim_dur = j.get("sim_dur_s").is_some();
+            if j.get("sim_s").map(|v| v.as_f64().is_none()).unwrap_or(false) {
+                return bad("sim_s is not a number".into());
+            }
+            if j.get("sim_dur_s").map(|v| v.as_f64().is_none()).unwrap_or(false) {
+                return bad("sim_dur_s is not a number".into());
+            }
+            if ev == "span" && has_sim != has_sim_dur {
+                return bad("span carries sim_s xor sim_dur_s".into());
+            }
+            if ev == "instant" && has_sim_dur {
+                return bad("instant events carry no sim_dur_s".into());
+            }
+            if j.req("attrs")?.as_obj().is_none() {
+                return bad("attrs is not an object".into());
+            }
+        }
+        "metrics" => {
+            let reg = j.req("registry")?;
+            for part in ["counters", "gauges", "histograms"] {
+                if reg.req(part)?.as_obj().is_none() {
+                    return bad(format!("metrics registry {part} is not an object"));
+                }
+            }
+        }
+        other => return bad(format!("unknown trace event kind {other:?}")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod test_sink {
+    use super::*;
+
+    /// In-memory sink for unit tests.
+    #[derive(Default)]
+    pub struct MemSink {
+        pub lines: Mutex<Vec<Json>>,
+    }
+
+    impl TraceSink for Arc<MemSink> {
+        fn emit(&self, line: &Json) {
+            self.lines.lock().unwrap().push(line.clone());
+        }
+        fn flush(&self) {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_sink::MemSink;
+    use super::*;
+
+    fn mem_tracer(level: TraceLevel) -> (Tracer, Arc<MemSink>) {
+        let sink = Arc::new(MemSink::default());
+        let t = Tracer::with_sink(Box::new(sink.clone()), level, "test");
+        (t, sink)
+    }
+
+    #[test]
+    fn levels_nest_and_parse() {
+        assert!(TraceLevel::Round < TraceLevel::Phase);
+        assert!(TraceLevel::Phase < TraceLevel::Full);
+        for s in ["off", "round", "phase", "full"] {
+            assert_eq!(TraceLevel::parse(s).unwrap().as_str(), s);
+        }
+        assert!(TraceLevel::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn disabled_tracer_emits_nothing_and_costs_no_marks() {
+        let t = Tracer::off();
+        assert!(!t.enabled(TraceLevel::Round));
+        assert_eq!(t.level(), TraceLevel::Off);
+        assert!(t.mark_if(TraceLevel::Full).is_none());
+        t.span(TraceLevel::Round, "round", "round", "main", None, None, vec![]);
+        t.instant(TraceLevel::Round, "c", "n", "main", None, vec![]);
+        t.flush();
+    }
+
+    #[test]
+    fn level_gating_drops_finer_events() {
+        let (t, sink) = mem_tracer(TraceLevel::Phase);
+        assert!(t.enabled(TraceLevel::Round));
+        assert!(t.enabled(TraceLevel::Phase));
+        assert!(!t.enabled(TraceLevel::Full));
+        t.span(TraceLevel::Round, "round", "round", "main", None, None, vec![]);
+        t.span(TraceLevel::Full, "client", "local_update", "worker0", None, None, vec![]);
+        let lines = sink.lines.lock().unwrap();
+        // header + the round span; the Full-level span was dropped.
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].str_field("ev").unwrap(), "header");
+        assert_eq!(lines[1].str_field("cat").unwrap(), "round");
+    }
+
+    #[test]
+    fn emitted_events_validate() {
+        let (t, sink) = mem_tracer(TraceLevel::Full);
+        let m = t.mark_if(TraceLevel::Full);
+        t.span(
+            TraceLevel::Full,
+            "net",
+            "upload",
+            "route:1->2",
+            m,
+            Some((3.5, 0.25)),
+            vec![("bytes", 100usize.into())],
+        );
+        t.instant(TraceLevel::Round, "control", "deadline.set", "main", Some(1.0), vec![]);
+        let mut reg = MetricsRegistry::new();
+        reg.inc("rounds", 2);
+        t.metrics(&reg);
+        let lines = sink.lines.lock().unwrap();
+        assert_eq!(lines.len(), 4);
+        for l in lines.iter() {
+            validate_event(l).unwrap_or_else(|e| panic!("{e}: {}", l.dump()));
+        }
+    }
+
+    #[test]
+    fn validation_rejects_malformed_events() {
+        let bad = [
+            r#"{"ev":"span"}"#,
+            r#"{"v":1,"ev":"mystery"}"#,
+            r#"{"v":2,"ev":"instant"}"#,
+            r#"{"v":1,"ev":"span","cat":"c","name":"n","lane":"l","wall_ns":0,"wall_dur_ns":0,"sim_s":1.0,"attrs":{}}"#,
+            r#"{"v":1,"ev":"span","cat":"c","name":"n","lane":"l","wall_ns":0,"attrs":{}}"#,
+            r#"{"v":1,"ev":"instant","cat":"c","name":"n","lane":"l","wall_ns":0,"attrs":[]}"#,
+        ];
+        for src in bad {
+            let j = Json::parse(src).unwrap();
+            assert!(validate_event(&j).is_err(), "{src}");
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_line_per_event() {
+        let path = std::env::temp_dir().join("edgeflow_obs_jsonl_sink_test.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let t = Tracer::jsonl(&path_s, TraceLevel::Full, "demo").unwrap();
+        t.span(TraceLevel::Round, "round", "round", "main", None, None, vec![("round", 0usize.into())]);
+        t.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in &lines {
+            validate_event(&Json::parse(l).unwrap()).unwrap();
+        }
+        assert!(lines[0].contains("\"run\":\"demo\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn off_level_jsonl_creates_no_file() {
+        let path = std::env::temp_dir().join("edgeflow_obs_no_file_test.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let t = Tracer::jsonl(&path_s, TraceLevel::Off, "demo").unwrap();
+        assert!(!t.enabled(TraceLevel::Round));
+        assert!(!path.exists());
+        let t2 = Tracer::from_config("", "full", "demo").unwrap();
+        assert!(!t2.enabled(TraceLevel::Round));
+    }
+}

@@ -1,0 +1,151 @@
+//! Trace rollups for `trace summarize`: stream a JSONL trace once and
+//! aggregate per-phase and per-link totals, so traces are useful from
+//! a terminal without a browser.
+//!
+//! Every line is run through [`super::validate_event`] on the way in,
+//! so summarizing doubles as a schema check over the whole file.
+
+use std::collections::BTreeMap;
+use std::io::BufRead as _;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Aggregated totals for one rollup key.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Rollup {
+    pub count: u64,
+    pub wall_s: f64,
+    pub sim_s: f64,
+    pub bytes: u64,
+}
+
+impl Rollup {
+    fn add(&mut self, wall_dur_ns: f64, sim_dur_s: f64, bytes: u64) {
+        self.count += 1;
+        self.wall_s += wall_dur_ns / 1e9;
+        self.sim_s += sim_dur_s;
+        self.bytes += bytes;
+    }
+}
+
+/// A summarized trace: span totals grouped two ways, plus the file's
+/// header and final metrics snapshot when present.
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Spans grouped by `(cat, name)` — phases, rounds, cells...
+    pub by_kind: BTreeMap<(String, String), Rollup>,
+    /// Network spans (`net` / `link` categories) grouped by lane.
+    pub by_lane: BTreeMap<String, Rollup>,
+    pub header: Option<Json>,
+    pub metrics: Option<Json>,
+    pub events: u64,
+}
+
+/// Stream-summarize the JSONL trace at `path`.  Fails on the first
+/// malformed line (with its line number).
+pub fn summarize(path: &str) -> Result<TraceSummary> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| Error::Io(std::io::Error::new(e.kind(), format!("{path}: {e}"))))?;
+    let reader = std::io::BufReader::new(f);
+    let mut out = TraceSummary::default();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| Error::Json(format!("{path} line {}: {e}", lineno + 1)))?;
+        super::validate_event(&j)
+            .map_err(|e| Error::Json(format!("{path} line {}: {e}", lineno + 1)))?;
+        out.events += 1;
+        match j.str_field("ev")? {
+            "header" => out.header = Some(j),
+            "metrics" => out.metrics = Some(j),
+            "span" => {
+                let cat = j.str_field("cat")?.to_string();
+                let name = j.str_field("name")?.to_string();
+                let wall_dur_ns = j.req("wall_dur_ns")?.as_f64().unwrap_or(0.0);
+                let sim_dur_s = j.get("sim_dur_s").and_then(Json::as_f64).unwrap_or(0.0);
+                let bytes = j
+                    .get("attrs")
+                    .and_then(|a| a.get("bytes"))
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0);
+                if cat == "net" || cat == "link" {
+                    let lane = j.str_field("lane")?.to_string();
+                    out.by_lane.entry(lane).or_default().add(wall_dur_ns, sim_dur_s, bytes);
+                }
+                out.by_kind
+                    .entry((cat, name))
+                    .or_default()
+                    .add(wall_dur_ns, sim_dur_s, bytes);
+            }
+            _ => {} // instants carry no duration; counted in `events` only
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_trace(tag: &str, lines: &[&str]) -> String {
+        let path = std::env::temp_dir().join(format!(
+            "edgeflow_summary_{tag}_{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::write(&path, lines.join("\n")).unwrap();
+        path.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn rolls_up_phases_and_links() {
+        let path = write_trace("ok", &[
+            r#"{"v":1,"ev":"header","format":"edgeflow-trace","level":"full","run":"t"}"#,
+            r#"{"v":1,"ev":"span","cat":"phase","name":"train","lane":"main","wall_ns":0,"wall_dur_ns":2000000000,"attrs":{"round":0}}"#,
+            r#"{"v":1,"ev":"span","cat":"phase","name":"train","lane":"main","wall_ns":0,"wall_dur_ns":1000000000,"attrs":{"round":1}}"#,
+            r#"{"v":1,"ev":"span","cat":"net","name":"upload","lane":"route:0->1","wall_ns":0,"wall_dur_ns":0,"sim_s":1.0,"sim_dur_s":0.5,"attrs":{"bytes":64}}"#,
+            r#"{"v":1,"ev":"span","cat":"net","name":"upload","lane":"route:0->1","wall_ns":0,"wall_dur_ns":0,"sim_s":2.0,"sim_dur_s":0.25,"attrs":{"bytes":36}}"#,
+            r#"{"v":1,"ev":"instant","cat":"control","name":"plateau.stop","lane":"main","wall_ns":5,"attrs":{}}"#,
+            r#"{"v":1,"ev":"metrics","registry":{"counters":{"rounds":2},"gauges":{},"histograms":{}}}"#,
+        ]);
+        let s = summarize(&path).unwrap();
+        assert_eq!(s.events, 7);
+        assert!(s.header.is_some());
+        let m = s.metrics.as_ref().expect("metrics event");
+        assert_eq!(
+            m.req("registry").unwrap().req("counters").unwrap().usize_field("rounds").unwrap(),
+            2
+        );
+        let train = s
+            .by_kind
+            .get(&("phase".to_string(), "train".to_string()))
+            .expect("train rollup");
+        assert_eq!(train.count, 2);
+        assert!((train.wall_s - 3.0).abs() < 1e-9);
+        let link = s.by_lane.get("route:0->1").expect("link rollup");
+        assert_eq!(link.count, 2);
+        assert_eq!(link.bytes, 100);
+        assert!((link.sim_s - 0.75).abs() < 1e-12);
+        // net spans appear in both groupings
+        let upload = s
+            .by_kind
+            .get(&("net".to_string(), "upload".to_string()))
+            .expect("upload rollup");
+        assert_eq!(upload.bytes, 100);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reports_the_offending_line_number() {
+        let path = write_trace("bad", &[
+            r#"{"v":1,"ev":"header","format":"edgeflow-trace","level":"full","run":"t"}"#,
+            r#"{"v":1,"ev":"span","cat":"x"}"#,
+        ]);
+        let err = summarize(&path).unwrap_err();
+        assert!(format!("{err}").contains("line 2"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

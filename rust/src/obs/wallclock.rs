@@ -1,0 +1,157 @@
+//! The wall-clock half of the dual-clock span model.
+//!
+//! Every span in a trace carries two time axes: the NetSim simulated
+//! clock (seconds, owned by the DES) and the process wall clock
+//! (nanoseconds since the tracer's epoch).  This module is the *only*
+//! part of `obs` allowed to read the wall clock — the
+//! `wall-clock-in-sim` lint allowlists exactly this file — so every
+//! other obs module (and the instrumented simulation code) handles
+//! opaque [`WallMark`]s instead of raw timestamps.
+
+use std::time::{Duration, Instant};
+
+use crate::util::timer::Timer;
+
+use super::{TraceLevel, Tracer};
+
+/// An opaque point on the wall clock.  Cheap to take anywhere (worker
+/// threads included); only a [`WallEpoch`] can turn it into numbers.
+#[derive(Debug, Clone, Copy)]
+pub struct WallMark {
+    at: Instant,
+}
+
+impl WallMark {
+    pub fn now() -> WallMark {
+        WallMark { at: Instant::now() }
+    }
+}
+
+/// The tracer's time origin: wall offsets in emitted events are
+/// nanoseconds since this point, so traces start near zero and u64
+/// nanoseconds stay exactly representable in the JSON number space.
+#[derive(Debug, Clone, Copy)]
+pub struct WallEpoch {
+    at: Instant,
+}
+
+impl WallEpoch {
+    pub fn now() -> WallEpoch {
+        WallEpoch { at: Instant::now() }
+    }
+
+    /// Nanoseconds from the epoch to `mark` (0 for marks taken before
+    /// the epoch — possible only across tracer rebuilds).
+    pub fn rel_ns(&self, mark: WallMark) -> u64 {
+        mark.at.saturating_duration_since(self.at).as_nanos() as u64
+    }
+
+    /// `(start, duration)` nanoseconds for a span opened at `start`
+    /// and closing now.
+    pub fn span_ns(&self, start: WallMark) -> (u64, u64) {
+        let s = self.rel_ns(start);
+        let e = self.rel_ns(WallMark::now());
+        (s, e.saturating_sub(s))
+    }
+}
+
+/// The runner's phase timer, folded into the trace: one measurement
+/// (the wrapped [`Timer`] lap) feeds both the `phase_seconds` report
+/// surface and the emitted phase span, so the two can never disagree.
+///
+/// Spans ride a running wall cursor instead of fresh clock reads: the
+/// emitted phase lanes tile the round exactly (each span starts where
+/// the previous ended and its duration is the lap's), which keeps the
+/// Chrome export gap-free and the span durations bit-consistent with
+/// the CSV/JSON `phase_seconds`.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    timer: Timer,
+    tracer: Tracer,
+    /// Round attribute stamped on emitted phase spans.
+    round: usize,
+    /// Wall offset (ns since the tracer epoch) where the next lap's
+    /// span starts.
+    cursor_ns: u64,
+}
+
+impl PhaseTimer {
+    pub fn new(tracer: Tracer) -> PhaseTimer {
+        let cursor_ns = tracer.rel_now_ns();
+        PhaseTimer { timer: Timer::new(), tracer, round: 0, cursor_ns }
+    }
+
+    /// Stamp subsequent phase spans with this round index.
+    pub fn set_round(&mut self, t: usize) {
+        self.round = t;
+    }
+
+    /// Record time since the previous lap under `name` (accumulating,
+    /// exactly [`Timer::lap`]) and emit the matching phase span.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let d = self.timer.lap(name);
+        let dur_ns = d.as_nanos() as u64;
+        self.tracer.span_at(
+            TraceLevel::Phase,
+            "phase",
+            name,
+            "main",
+            self.cursor_ns,
+            dur_ns,
+            None,
+            vec![("round", self.round.into())],
+        );
+        self.cursor_ns += dur_ns;
+        d
+    }
+
+    /// Accumulated duration for a named lap.
+    pub fn get(&self, name: &str) -> Duration {
+        self.timer.get(name)
+    }
+
+    /// `(name, seconds)` pairs in first-seen order — the
+    /// `phase_seconds` report surface, unchanged from [`Timer::laps`].
+    pub fn laps(&self) -> Vec<(String, f64)> {
+        self.timer.laps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_offsets_are_monotone() {
+        let epoch = WallEpoch::now();
+        let a = WallMark::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = WallMark::now();
+        assert!(epoch.rel_ns(b) > epoch.rel_ns(a));
+        let (start, dur) = epoch.span_ns(a);
+        assert_eq!(start, epoch.rel_ns(a));
+        assert!(dur >= 2_000_000, "{dur}");
+    }
+
+    #[test]
+    fn marks_before_the_epoch_clamp_to_zero() {
+        let m = WallMark::now();
+        let epoch = WallEpoch::now();
+        assert_eq!(epoch.rel_ns(m), 0);
+    }
+
+    #[test]
+    fn phase_timer_mirrors_timer_laps() {
+        let mut pt = PhaseTimer::new(Tracer::off());
+        std::thread::sleep(Duration::from_millis(2));
+        pt.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        pt.lap("a");
+        pt.lap("b");
+        assert!(pt.get("a") >= Duration::from_millis(4));
+        let laps = pt.laps();
+        assert_eq!(laps.len(), 2);
+        assert_eq!(laps[0].0, "a");
+        assert_eq!(laps[1].0, "b");
+    }
+}

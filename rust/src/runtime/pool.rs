@@ -91,6 +91,41 @@ impl WorkerPool {
             .collect()
     }
 
+    /// [`Self::run`] wrapped in a wall-clock fan-out span: the whole
+    /// dispatch (spawn, all jobs, join) is emitted as one `pool`-category
+    /// span on the `main` lane with the job and worker counts attached.
+    /// Per-job timing stays the caller's concern — jobs that want their
+    /// own spans measure inside `f` and emit after the join so the event
+    /// stream remains deterministic at any worker count.
+    pub fn run_spanned<T, F>(
+        &self,
+        tracer: &crate::obs::Tracer,
+        name: &str,
+        n_jobs: usize,
+        f: F,
+    ) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        use crate::obs::TraceLevel;
+        let mark = tracer.mark_if(TraceLevel::Phase);
+        let out = self.run(n_jobs, f);
+        tracer.span(
+            TraceLevel::Phase,
+            "pool",
+            name,
+            "main",
+            mark,
+            None,
+            vec![
+                ("jobs", n_jobs.into()),
+                ("workers", self.workers.min(n_jobs.max(1)).into()),
+            ],
+        );
+        out
+    }
+
     /// [`Self::run`] for fallible jobs, with early cancel: once any job
     /// fails, jobs that have not started yet are skipped (workers
     /// already mid-job finish theirs).  The error surfaced is the first
@@ -225,6 +260,36 @@ mod tests {
         });
         assert!(r.is_err());
         assert_eq!(hits.load(Ordering::Relaxed), 3, "jobs after the failure ran");
+    }
+
+    #[test]
+    fn run_spanned_emits_one_fanout_span() {
+        use crate::obs::test_sink::MemSink;
+        use crate::obs::{TraceLevel, Tracer};
+        use std::sync::Arc;
+
+        let sink = Arc::new(MemSink::default());
+        let tracer =
+            Tracer::with_sink(Box::new(sink.clone()), TraceLevel::Full, "t");
+        let pool = WorkerPool::new(2);
+        let out = pool.run_spanned(&tracer, "local_update", 5, |i, _w| i);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        let lines = sink.lines.lock().unwrap();
+        let spans: Vec<_> = lines
+            .iter()
+            .filter(|j| j.get("ev").and_then(crate::util::json::Json::as_str) == Some("span"))
+            .collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("cat").and_then(crate::util::json::Json::as_str), Some("pool"));
+        assert_eq!(spans[0].get("name").and_then(crate::util::json::Json::as_str), Some("local_update"));
+        let attrs = spans[0].get("attrs").expect("attrs");
+        assert_eq!(attrs.get("jobs").and_then(crate::util::json::Json::as_u64), Some(5));
+        assert_eq!(attrs.get("workers").and_then(crate::util::json::Json::as_u64), Some(2));
+        drop(lines);
+        // disabled tracer: same results, no events, no clock reads
+        let off = Tracer::off();
+        let out = pool.run_spanned(&off, "local_update", 3, |i, _w| i);
+        assert_eq!(out, vec![0, 1, 2]);
     }
 
     #[test]

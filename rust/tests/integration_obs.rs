@@ -1,0 +1,303 @@
+//! End-to-end observability tests: real traced training runs on the
+//! native engine, checked against the ISSUE's acceptance criteria —
+//! schema-valid dual-clock JSONL, a logical event stream that is
+//! bit-identical at any worker count, a Perfetto-loadable Chrome
+//! export with monotone per-lane timestamps, and the zero-cost
+//! contract (tracing off leaves every report byte-identical).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use edgeflow::config::{
+    Algorithm, DatasetKind, Distribution, EngineKind, ExperimentConfig,
+};
+use edgeflow::fl::runner::Runner;
+use edgeflow::obs::{validate_event, TRACE_SCHEMA_VERSION};
+use edgeflow::runtime::backend::TrainBackend;
+use edgeflow::runtime::NativeBackend;
+use edgeflow::util::json::Json;
+
+fn backend() -> Arc<dyn TrainBackend> {
+    Arc::new(NativeBackend::new())
+}
+
+/// Unique temp path per test so parallel `cargo test` threads never
+/// collide.
+fn tmp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("edgeflow_obs_{tag}_{}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// A CPU-cheap traced federation: 12 clients in 4 clusters on the MLP,
+/// with dropout so straggler/net events are exercised.
+fn traced_cfg(tag: &str, trace: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("obs_{tag}"),
+        algorithm: Algorithm::EdgeFlowSeq,
+        dataset: DatasetKind::SynthFashion,
+        distribution: Distribution::NiidA,
+        model: "fashion_mlp".into(),
+        clients: 12,
+        clusters: 4,
+        local_steps: 1,
+        rounds: 4,
+        batch_size: 8,
+        samples_per_client: 16,
+        test_samples: 60,
+        eval_every: 2,
+        seed: 7,
+        lr: 0.01,
+        optimizer: "momentum".into(),
+        engine: EngineKind::Native,
+        dropout: 0.25,
+        trace: trace.to_string(),
+        trace_level: "full".into(),
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Read a trace back as parsed JSON lines (skipping blanks).
+fn read_trace(path: &str) -> Vec<Json> {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect()
+}
+
+/// Project a trace down to its **logical** content: wall-clock fields
+/// (timing, by nature nondeterministic) stripped, `workerN` lanes
+/// collapsed (which thread ran a client is scheduling, not logic), and
+/// the pool span's resolved worker count dropped.  Sorted, so equality
+/// is multiset equality.
+fn logical_lines(path: &str) -> Vec<String> {
+    let mut out: Vec<String> = read_trace(path)
+        .into_iter()
+        .map(|j| {
+            let Json::Obj(mut m) = j else { panic!("non-object trace line") };
+            m.remove("wall_ns");
+            m.remove("wall_dur_ns");
+            if let Some(Json::Str(lane)) = m.get_mut("lane") {
+                if lane.starts_with("worker") {
+                    *lane = "worker".into();
+                }
+            }
+            if let Some(Json::Obj(attrs)) = m.get_mut("attrs") {
+                attrs.remove("workers");
+            }
+            Json::Obj(m).dump()
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn traced_run_emits_schema_valid_dual_clock_jsonl() {
+    let path = tmp("schema");
+    let cfg = traced_cfg("schema", &path);
+    let mut r = Runner::with_backend(backend(), cfg).unwrap();
+    r.run().unwrap();
+    let lines = read_trace(&path);
+    assert!(lines.len() > 10, "traced run produced only {} events", lines.len());
+    for j in &lines {
+        validate_event(j).unwrap();
+    }
+    // First line is the schema-versioned header.
+    let h = &lines[0];
+    assert_eq!(h.str_field("ev").unwrap(), "header");
+    assert_eq!(h.str_field("format").unwrap(), "edgeflow-trace");
+    assert_eq!(h.req("v").unwrap().as_u64(), Some(TRACE_SCHEMA_VERSION));
+    assert_eq!(h.str_field("run").unwrap(), "obs_schema");
+    // Both clocks appear: wall-only client spans on worker lanes, and
+    // sim-clocked network spans on route lanes.
+    let spans: Vec<&Json> = lines
+        .iter()
+        .filter(|j| j.get("ev").and_then(Json::as_str) == Some("span"))
+        .collect();
+    assert!(spans
+        .iter()
+        .any(|j| j.str_field("cat").unwrap() == "client"
+            && j.str_field("lane").unwrap().starts_with("worker")
+            && j.req("wall_dur_ns").unwrap().as_u64().is_some()));
+    assert!(spans
+        .iter()
+        .any(|j| j.str_field("cat").unwrap() == "net"
+            && j.get("sim_dur_s").and_then(Json::as_f64).is_some()
+            && j.get("attrs").and_then(|a| a.get("bytes")).is_some()));
+    // Round spans carry the sim-clock round window; phase spans carry
+    // the wall-clock laps; the file ends with a metrics snapshot.
+    assert!(spans.iter().any(|j| j.str_field("cat").unwrap() == "round"));
+    assert!(spans.iter().any(|j| j.str_field("cat").unwrap() == "phase"));
+    let metrics: Vec<&Json> = lines
+        .iter()
+        .filter(|j| j.get("ev").and_then(Json::as_str) == Some("metrics"))
+        .collect();
+    assert_eq!(metrics.len(), 1, "exactly one final metrics snapshot");
+    let counters = metrics[0].req("registry").unwrap().req("counters").unwrap();
+    assert_eq!(counters.get("rounds_total").and_then(Json::as_u64), Some(4));
+    assert!(counters.get("transfers_total").and_then(Json::as_u64).unwrap() > 0);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn logical_event_stream_is_identical_at_any_worker_count() {
+    // The determinism tentpole: what happened (spans, attrs, sim times,
+    // metrics) is a pure function of the config — workers only change
+    // wall-clock numbers and which thread lane a client ran on.
+    let run_with = |workers: usize| {
+        let path = tmp(&format!("ident_w{workers}"));
+        let mut cfg = traced_cfg("ident", &path);
+        cfg.workers = workers;
+        let mut r = Runner::with_backend(backend(), cfg).unwrap();
+        r.run().unwrap();
+        let lines = logical_lines(&path);
+        let _ = std::fs::remove_file(&path);
+        lines
+    };
+    let seq = run_with(1);
+    assert!(!seq.is_empty());
+    for workers in [2usize, 4] {
+        let par = run_with(workers);
+        assert_eq!(
+            seq, par,
+            "logical event stream diverged at workers={workers}"
+        );
+    }
+}
+
+#[test]
+fn chrome_export_is_valid_json_with_monotone_lanes() {
+    let path = tmp("chrome_in");
+    let out = tmp("chrome_out");
+    let cfg = traced_cfg("chrome", &path);
+    Runner::with_backend(backend(), cfg).unwrap().run().unwrap();
+    let n = edgeflow::obs::chrome::export_chrome(&path, &out).unwrap();
+    assert!(n > 0);
+    let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut pids = std::collections::BTreeSet::new();
+    let mut last: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    for e in events {
+        let ph = e.str_field("ph").unwrap();
+        assert!(
+            ["X", "i", "M"].contains(&ph),
+            "unexpected Chrome phase {ph:?}"
+        );
+        if ph == "M" {
+            continue; // metadata events carry no timestamp ordering
+        }
+        let pid = e.req("pid").unwrap().as_u64().unwrap();
+        let tid = e.req("tid").unwrap().as_u64().unwrap();
+        let ts = e.req("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= 0.0);
+        pids.insert(pid);
+        if let Some(prev) = last.insert((pid, tid), ts) {
+            assert!(
+                ts >= prev,
+                "pid {pid} tid {tid}: ts went backwards ({prev} -> {ts})"
+            );
+        }
+    }
+    // Both clock domains render: wall lanes (pid 1) and sim lanes (pid 2).
+    assert_eq!(
+        pids.into_iter().collect::<Vec<_>>(),
+        vec![1, 2],
+        "expected wall + sim process groups"
+    );
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn summarize_rolls_up_a_real_run() {
+    let path = tmp("summary");
+    let cfg = traced_cfg("summary", &path);
+    Runner::with_backend(backend(), cfg).unwrap().run().unwrap();
+    let s = edgeflow::obs::summary::summarize(&path).unwrap();
+    assert!(s.events > 0);
+    assert!(s.header.is_some());
+    assert!(s.metrics.is_some());
+    let rounds = s
+        .by_kind
+        .get(&("round".to_string(), "round".to_string()))
+        .expect("round rollup");
+    assert_eq!(rounds.count, 4);
+    let clients = s
+        .by_kind
+        .get(&("client".to_string(), "local_update".to_string()))
+        .expect("client rollup");
+    assert!(clients.count > 0);
+    assert!(!s.by_lane.is_empty(), "net spans roll up per route lane");
+    assert!(s.by_lane.values().all(|r| r.bytes > 0));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tracing_off_is_byte_identical_to_traced_run() {
+    // The zero-cost contract both ways: tracing must never perturb the
+    // training numbers, and disabling it must not change a single byte
+    // of the metrics surface.
+    let path = tmp("offon");
+    let run_with = |trace: &str| {
+        let cfg = traced_cfg("offon", trace);
+        let mut r = Runner::with_backend(backend(), cfg).unwrap();
+        let rep = r.run().unwrap();
+        (r.state().data.clone(), rep)
+    };
+    let (state_off, rep_off) = run_with("");
+    let (state_on, rep_on) = run_with(&path);
+    assert_eq!(state_off, state_on, "tracing must not touch the model");
+    assert_eq!(
+        rep_off.final_accuracy.to_bits(),
+        rep_on.final_accuracy.to_bits()
+    );
+    assert_eq!(rep_off.final_loss.to_bits(), rep_on.final_loss.to_bits());
+    assert_eq!(rep_off.total_byte_hops, rep_on.total_byte_hops);
+    assert_eq!(
+        rep_off.metrics.to_csv().as_bytes(),
+        rep_on.metrics.to_csv().as_bytes(),
+        "metrics CSV must be byte-identical with tracing on or off"
+    );
+    assert_eq!(
+        rep_off.metrics.to_json().pretty(),
+        rep_on.metrics.to_json().pretty(),
+        "metrics JSON must be byte-identical with tracing on or off"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn restore_accepts_checkpoints_across_trace_settings() {
+    // Trace path and level are observability knobs, not experiment
+    // identity: a checkpoint from an untraced run restores into a traced
+    // runner (and vice versa) and replays bit-identically.
+    let mut whole = Runner::with_backend(backend(), traced_cfg("ck", "")).unwrap();
+    let ref_report = whole.run().unwrap();
+
+    let mut first = Runner::with_backend(backend(), traced_cfg("ck", "")).unwrap();
+    for _ in 0..2 {
+        first.step().unwrap();
+    }
+    let ck = first.checkpoint().unwrap();
+
+    let path = tmp("ck_resume");
+    let mut resumed =
+        Runner::with_backend(backend(), traced_cfg("ck", &path)).unwrap();
+    resumed.restore(&ck).unwrap();
+    assert_eq!(resumed.round(), 2);
+    let report = resumed.run().unwrap();
+    assert_eq!(
+        ref_report.final_loss.to_bits(),
+        report.final_loss.to_bits(),
+        "resume across trace settings must stay bit-identical"
+    );
+    assert_eq!(ref_report.total_byte_hops, report.total_byte_hops);
+    assert_eq!(whole.state().data, resumed.state().data);
+    let _ = std::fs::remove_file(&path);
+}
