@@ -1,0 +1,551 @@
+//! Layer-3 call-site resolution: walk the masked token stream of
+//! every `rust/src/` file and resolve calls against the item table
+//! ([`crate::items`] fn signatures and body spans).
+//!
+//! Resolution is best-effort and *over-approximating* — a call that
+//! could target several in-tree fns produces an edge to each.  The
+//! policy, per call shape:
+//!
+//! * `self.name(…)` — fns named `name` owned by the enclosing impl's
+//!   type (dyn/trait dispatch keeps the over-approximation sound).
+//! * `Type::name(…)` — fns named `name` owned by `Type`.  A
+//!   capitalized name with no match is treated as a tuple-struct or
+//!   enum-variant constructor (`Error::Artifact(…)`), not a call.
+//! * `module::name(…)` (lowercase qualifier) — free fns named `name`
+//!   in files whose stem is `module` (`timer::start` → a fn in
+//!   `util/timer.rs`); `self::`/`super::`/`crate::` qualifiers are
+//!   stripped and resolve like bare calls.
+//! * `recv.name(…)` — every method named `name` anywhere in the
+//!   graph; narrowed to same-file candidates when any exist.
+//! * `name(…)` — free fns named `name`, same-file first.  A
+//!   capitalized bare name with no match is a constructor, not a call.
+//!
+//! Macro invocations (`name!(…)`) and `fn` definitions are skipped.
+//! Every *other* unresolved call — typically std/core methods the
+//! tree does not define — is recorded in [`CallGraph::unresolved`],
+//! never silently dropped: the effects artifact surfaces them so a
+//! reviewer can audit what the analysis could not see through.
+//!
+//! Only files under `rust/src/` participate: roots never live in
+//! tests/benches, and indexing test helpers would let a test-only fn
+//! capture call edges by name collision.
+
+use std::collections::BTreeMap;
+
+use crate::items::{lex, Tok, Token};
+use crate::rules::FileAnalysis;
+
+/// One fn in the graph, denormalized from its [`crate::items::FnItem`].
+pub struct FnNode {
+    /// Index into the analysis slice the graph was built from.
+    pub file: usize,
+    /// Repo-relative path (copied for display convenience).
+    pub rel: String,
+    pub name: String,
+    pub owner: Option<String>,
+    pub trait_of: Option<String>,
+    pub is_pub: bool,
+    /// 1-based signature line.
+    pub line: usize,
+    /// Inclusive 1-based body span; `None` for trait signatures.
+    pub body: Option<(usize, usize)>,
+}
+
+impl FnNode {
+    /// Display name: `Owner::name` for methods, bare `name` otherwise.
+    pub fn display(&self) -> String {
+        match &self.owner {
+            Some(o) => format!("{}::{}", o, self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// A call the resolver could not map to any in-tree fn.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct UnresolvedCall {
+    /// Caller node index.
+    pub from: usize,
+    /// The callee as written (`fs::read`, `.push`, `helper`).
+    pub name: String,
+    /// 1-based call-site line.
+    pub line: usize,
+}
+
+/// The whole-tree call graph over `rust/src/` fns.
+pub struct CallGraph {
+    pub nodes: Vec<FnNode>,
+    /// Per-node outgoing edges as `(callee node, 1-based call line)`,
+    /// sorted by callee with the first call site kept.
+    pub edges: Vec<Vec<(usize, usize)>>,
+    /// Unresolved calls, sorted and deduplicated.
+    pub unresolved: Vec<UnresolvedCall>,
+}
+
+/// Keywords and call-position constructs that are never call targets.
+const NON_CALL_IDENTS: [&str; 18] = [
+    "if", "else", "while", "for", "in", "match", "loop", "return", "move",
+    "let", "as", "ref", "mut", "break", "continue", "where", "await", "fn",
+];
+
+fn is_capitalized(name: &str) -> bool {
+    name.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+}
+
+/// Build the call graph for every `rust/src/` file in `analyses`.
+pub fn build(analyses: &[FileAnalysis]) -> CallGraph {
+    let mut nodes = Vec::new();
+    // (file idx in `analyses`) -> (node range start).
+    let mut file_of_graph: Vec<usize> = Vec::new();
+    for (fi, fa) in analyses.iter().enumerate() {
+        if !fa.rel.starts_with("rust/src/") {
+            continue;
+        }
+        file_of_graph.push(fi);
+        for f in &fa.items.fns {
+            nodes.push(FnNode {
+                file: fi,
+                rel: fa.rel.clone(),
+                name: f.name.clone(),
+                owner: f.owner.clone(),
+                trait_of: f.trait_of.clone(),
+                is_pub: f.is_pub,
+                line: f.line,
+                body: f.body,
+            });
+        }
+    }
+
+    // Name → node indices, and file stem → node indices.
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut by_stem: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (ni, n) in nodes.iter().enumerate() {
+        by_name.entry(n.name.as_str()).or_default().push(ni);
+        by_stem.entry(file_stem(&n.rel)).or_default().push(ni);
+    }
+
+    let mut edges: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nodes.len()];
+    let mut unresolved: Vec<UnresolvedCall> = Vec::new();
+
+    for &fi in &file_of_graph {
+        let fa = &analyses[fi];
+        // Innermost-fn lookup for call-site attribution: nested fns
+        // have narrower spans than the fn that encloses them.
+        let mut spans: Vec<(usize, usize, usize)> = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.file == fi)
+            .filter_map(|(ni, n)| n.body.map(|(s, e)| (s, e, ni)))
+            .collect();
+        spans.sort();
+        let enclosing = |line: usize| -> Option<usize> {
+            spans
+                .iter()
+                .filter(|&&(s, e, _)| s <= line && line <= e)
+                .max_by_key(|&&(s, _, _)| s)
+                .map(|&(_, _, ni)| ni)
+        };
+
+        let toks = lex(&fa.code);
+        for j in 0..toks.len() {
+            let name = match &toks[j].tok {
+                Tok::Ident(s) => s.as_str(),
+                Tok::Punct(_) => continue,
+            };
+            if NON_CALL_IDENTS.contains(&name) || !args_follow(&toks, j) {
+                continue;
+            }
+            // `fn name(` is a definition, not a call.
+            if j > 0 && toks[j - 1].tok == Tok::Ident("fn".into()) {
+                continue;
+            }
+            let line = toks[j].line;
+            let caller = match enclosing(line) {
+                Some(c) => c,
+                // Call in const/static initializer position: no
+                // enclosing fn to attribute it to.
+                None => continue,
+            };
+            let shape = classify(&toks, j);
+            let targets = resolve(&shape, name, fi, &nodes, &by_name, &by_stem);
+            match targets {
+                Resolution::Edges(ts) => {
+                    for t in ts {
+                        edges[caller].push((t, line));
+                    }
+                }
+                Resolution::Constructor => {}
+                Resolution::Unresolved(written) => unresolved.push(UnresolvedCall {
+                    from: caller,
+                    name: written,
+                    line,
+                }),
+            }
+        }
+    }
+
+    for list in &mut edges {
+        list.sort();
+        list.dedup_by_key(|e| e.0);
+    }
+    unresolved.sort();
+    unresolved.dedup_by(|a, b| a.from == b.from && a.name == b.name);
+
+    CallGraph {
+        nodes,
+        edges,
+        unresolved,
+    }
+}
+
+/// The file stem module calls resolve against: the file name without
+/// `.rs`, or the parent directory for `mod.rs`.
+fn file_stem(rel: &str) -> String {
+    let parts: Vec<&str> = rel.split('/').collect();
+    let last = parts.last().copied().unwrap_or("");
+    let stem = last.strip_suffix(".rs").unwrap_or(last);
+    if stem == "mod" {
+        parts
+            .get(parts.len().saturating_sub(2))
+            .copied()
+            .unwrap_or("")
+            .to_string()
+    } else {
+        stem.to_string()
+    }
+}
+
+/// Whether an argument list follows the identifier at `j`, skipping a
+/// turbofish (`collect::<Vec<_>>(…)`).  A `name!(…)` macro is not a
+/// call.
+fn args_follow(toks: &[Token], j: usize) -> bool {
+    let mut k = j + 1;
+    if matches!(toks.get(k), Some(t) if t.tok == Tok::Punct('!')) {
+        return false;
+    }
+    if matches!(toks.get(k), Some(t) if t.tok == Tok::Punct(':'))
+        && matches!(toks.get(k + 1), Some(t) if t.tok == Tok::Punct(':'))
+        && matches!(toks.get(k + 2), Some(t) if t.tok == Tok::Punct('<'))
+    {
+        // Skip the turbofish generics with the same `->`-aware
+        // counting the item parser uses.
+        let mut depth = 0i64;
+        let mut prev_minus = false;
+        k += 2;
+        loop {
+            let t = match toks.get(k) {
+                Some(t) => t,
+                None => return false,
+            };
+            k += 1;
+            match t.tok {
+                Tok::Punct('<') => {
+                    depth += 1;
+                    prev_minus = false;
+                }
+                Tok::Punct('>') => {
+                    if prev_minus {
+                        prev_minus = false;
+                        continue;
+                    }
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                Tok::Punct('-') => prev_minus = true,
+                _ => prev_minus = false,
+            }
+        }
+    }
+    matches!(toks.get(k), Some(t) if t.tok == Tok::Punct('('))
+}
+
+enum Shape {
+    /// `self.name(…)` or `Self::name(…)`: owner comes from the
+    /// enclosing fn's impl block.
+    SelfMethod,
+    /// `Qual::name(…)` with a capitalized qualifier.
+    TypeQualified(String),
+    /// `qual::name(…)` with a lowercase qualifier (module path).
+    ModuleQualified(String),
+    /// `recv.name(…)`.
+    Method,
+    /// `name(…)`.
+    Bare,
+}
+
+fn classify(toks: &[Token], j: usize) -> Shape {
+    if j >= 1 {
+        if let Tok::Punct('.') = toks[j - 1].tok {
+            if j >= 2 && toks[j - 2].tok == Tok::Ident("self".into()) {
+                // `x.self` cannot occur; `self.name(` is a self call.
+                return Shape::SelfMethod;
+            }
+            return Shape::Method;
+        }
+    }
+    if j >= 2
+        && matches!(toks[j - 1].tok, Tok::Punct(':'))
+        && matches!(toks[j - 2].tok, Tok::Punct(':'))
+    {
+        if j >= 3 {
+            if let Tok::Ident(q) = &toks[j - 3].tok {
+                return match q.as_str() {
+                    "self" | "super" | "crate" => Shape::Bare,
+                    "Self" => Shape::SelfMethod,
+                    _ if is_capitalized(q) => Shape::TypeQualified(q.clone()),
+                    _ => Shape::ModuleQualified(q.clone()),
+                };
+            }
+        }
+        // `<T as Trait>::name(` and friends: fall back to by-name
+        // method resolution.
+        return Shape::Method;
+    }
+    Shape::Bare
+}
+
+enum Resolution {
+    Edges(Vec<usize>),
+    /// Capitalized non-fn in call position: a constructor, by policy.
+    Constructor,
+    Unresolved(String),
+}
+
+fn resolve(
+    shape: &Shape,
+    name: &str,
+    file: usize,
+    nodes: &[FnNode],
+    by_name: &BTreeMap<&str, Vec<usize>>,
+    by_stem: &BTreeMap<String, Vec<usize>>,
+) -> Resolution {
+    let named: &[usize] = by_name.get(name).map(|v| v.as_slice()).unwrap_or(&[]);
+    let prefer_same_file = |cands: Vec<usize>| -> Vec<usize> {
+        let local: Vec<usize> =
+            cands.iter().copied().filter(|&ni| nodes[ni].file == file).collect();
+        if local.is_empty() {
+            cands
+        } else {
+            local
+        }
+    };
+    match shape {
+        Shape::SelfMethod => {
+            // Owner of the *caller's* impl block is not threaded here;
+            // `self.name(` narrowed by owner presence is enough: a
+            // receiver call can only land on a method.
+            let cands: Vec<usize> = named
+                .iter()
+                .copied()
+                .filter(|&ni| nodes[ni].owner.is_some())
+                .collect();
+            if cands.is_empty() {
+                Resolution::Unresolved(format!("self.{name}"))
+            } else {
+                Resolution::Edges(prefer_same_file(cands))
+            }
+        }
+        Shape::TypeQualified(q) => {
+            let cands: Vec<usize> = named
+                .iter()
+                .copied()
+                .filter(|&ni| nodes[ni].owner.as_deref() == Some(q.as_str()))
+                .collect();
+            if !cands.is_empty() {
+                Resolution::Edges(cands)
+            } else if is_capitalized(name) {
+                // `Error::Artifact(…)`: an enum-variant constructor.
+                Resolution::Constructor
+            } else {
+                Resolution::Unresolved(format!("{q}::{name}"))
+            }
+        }
+        Shape::ModuleQualified(q) => {
+            let in_stem: Vec<usize> = by_stem
+                .get(q.as_str())
+                .map(|v| {
+                    v.iter()
+                        .copied()
+                        .filter(|&ni| nodes[ni].name == name)
+                        .collect()
+                })
+                .unwrap_or_default();
+            if in_stem.is_empty() {
+                Resolution::Unresolved(format!("{q}::{name}"))
+            } else {
+                Resolution::Edges(in_stem)
+            }
+        }
+        Shape::Method => {
+            let cands: Vec<usize> = named
+                .iter()
+                .copied()
+                .filter(|&ni| nodes[ni].owner.is_some())
+                .collect();
+            if cands.is_empty() {
+                Resolution::Unresolved(format!(".{name}"))
+            } else {
+                Resolution::Edges(prefer_same_file(cands))
+            }
+        }
+        Shape::Bare => {
+            let cands: Vec<usize> = named
+                .iter()
+                .copied()
+                .filter(|&ni| nodes[ni].owner.is_none())
+                .collect();
+            if !cands.is_empty() {
+                Resolution::Edges(prefer_same_file(cands))
+            } else if is_capitalized(name) {
+                // `Some(…)`, `Ok(…)`, `Wrapper(…)`: constructors.
+                Resolution::Constructor
+            } else {
+                Resolution::Unresolved(name.to_string())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::analyze;
+
+    fn graph(files: &[(&str, &str)]) -> (Vec<FileAnalysis>, CallGraph) {
+        let analyses: Vec<FileAnalysis> =
+            files.iter().map(|(rel, src)| analyze(rel, src)).collect();
+        let g = build(&analyses);
+        (analyses, g)
+    }
+
+    fn node(g: &CallGraph, disp: &str) -> usize {
+        g.nodes
+            .iter()
+            .position(|n| n.display() == disp)
+            .unwrap_or_else(|| panic!("no node {disp}"))
+    }
+
+    fn calls(g: &CallGraph, from: &str, to: &str) -> bool {
+        let f = node(g, from);
+        let t = node(g, to);
+        g.edges[f].iter().any(|&(c, _)| c == t)
+    }
+
+    #[test]
+    fn bare_and_module_qualified_calls_resolve() {
+        let (_a, g) = graph(&[
+            (
+                "rust/src/fl/a.rs",
+                "pub fn entry() {\n    helper();\n    timer::start();\n}\nfn helper() {}\n",
+            ),
+            ("rust/src/util/timer.rs", "pub fn start() {}\n"),
+        ]);
+        assert!(calls(&g, "entry", "helper"));
+        assert!(calls(&g, "entry", "start"));
+    }
+
+    #[test]
+    fn type_qualified_and_method_calls_resolve() {
+        let src_a = "\
+pub struct W;
+impl W {
+    pub fn go(&self) {
+        self.step();
+        Other::make();
+    }
+    fn step(&self) {}
+}
+";
+        let src_b = "\
+pub struct Other;
+impl Other {
+    pub fn make() {}
+    pub fn touch(&self) {}
+}
+pub fn drive(o: &Other) {
+    o.touch();
+}
+";
+        let (_a, g) =
+            graph(&[("rust/src/fl/a.rs", src_a), ("rust/src/fl/b.rs", src_b)]);
+        assert!(calls(&g, "W::go", "W::step"));
+        assert!(calls(&g, "W::go", "Other::make"));
+        assert!(calls(&g, "drive", "Other::touch"));
+    }
+
+    #[test]
+    fn constructors_and_macros_are_not_calls() {
+        let src = "\
+pub enum E { V(usize) }
+pub struct Wrap(usize);
+pub fn f() -> Wrap {
+    let _ = E::V(1);
+    let _ = Some(2);
+    println!(\"x\");
+    Wrap(3)
+}
+";
+        let (_a, g) = graph(&[("rust/src/fl/a.rs", src)]);
+        let f = node(&g, "f");
+        assert!(g.edges[f].is_empty());
+        assert!(g.unresolved.is_empty(), "{:?}", g.unresolved);
+    }
+
+    #[test]
+    fn unresolved_calls_are_recorded() {
+        let src = "\
+pub fn f(v: &mut Vec<usize>) {
+    v.push(1);
+    mystery();
+    fs::read(\"x\");
+}
+";
+        let (_a, g) = graph(&[("rust/src/fl/a.rs", src)]);
+        let names: Vec<&str> =
+            g.unresolved.iter().map(|u| u.name.as_str()).collect();
+        assert_eq!(names, [".push", "fs::read", "mystery"]);
+    }
+
+    #[test]
+    fn turbofish_is_a_call_shape() {
+        let src = "\
+pub fn f() {
+    helper::<usize>();
+}
+pub fn helper<T>() {}
+";
+        let (_a, g) = graph(&[("rust/src/fl/a.rs", src)]);
+        assert!(calls(&g, "f", "helper"));
+    }
+
+    #[test]
+    fn nested_fn_calls_attribute_to_the_inner_fn() {
+        let src = "\
+pub fn outer() {
+    fn inner() {
+        leaf();
+    }
+    inner();
+}
+fn leaf() {}
+";
+        let (_a, g) = graph(&[("rust/src/fl/a.rs", src)]);
+        assert!(calls(&g, "inner", "leaf"));
+        assert!(calls(&g, "outer", "inner"));
+        // The call inside `inner` belongs to `inner`, not `outer`.
+        assert!(!calls(&g, "outer", "leaf"));
+    }
+
+    #[test]
+    fn non_src_files_stay_out_of_the_graph() {
+        let (_a, g) = graph(&[
+            ("rust/src/fl/a.rs", "pub fn f() { helper(); }\n"),
+            ("rust/tests/t.rs", "pub fn helper() {}\n"),
+        ]);
+        assert!(g.nodes.iter().all(|n| n.rel.starts_with("rust/src/")));
+        assert_eq!(g.unresolved.len(), 1);
+        assert_eq!(g.unresolved[0].name, "helper");
+    }
+}

@@ -1,0 +1,796 @@
+//! Layer-3 interprocedural effect analysis: seed per-fn effect sets,
+//! propagate them over the call graph to a fixpoint, and enforce the
+//! three transitive determinism rules with witness call chains.
+//!
+//! Effects seeded per fn (non-test code only):
+//!
+//! * `wall-clock` — `Instant`/`SystemTime` anywhere except
+//!   `rust/src/obs/wallclock.rs` (the one sanctioned wall-clock
+//!   surface; the *local* rule's wider allowlist deliberately does
+//!   not apply here — a `util/timer.rs` read is locally fine but
+//!   still taints every caller on a determinism-critical surface).
+//! * `unordered-iteration` — `HashMap`/`HashSet` construction.
+//! * `rng-construction` — entropy-seeded RNG sources (`thread_rng`,
+//!   `from_entropy`, `OsRng`, `RandomState`); the repo's own `Rng` is
+//!   always explicitly seeded and does not taint.
+//! * `panic` — `.unwrap()`/`.expect(`/`panic!` sites.
+//! * `ambient-state` — `std::env` reads.
+//! * `unsafe` — unsafe blocks/fns (audited locally by
+//!   `unsafe-audit`; carried here for the effects artifact).
+//!
+//! A seed site suppressed by a justified local pragma
+//! (`wall-clock-in-sim`, `unwrap-in-library`) or by the transitive
+//! rule's own pragma does **not** taint: the pragma states the
+//! invariant that makes the site safe, so propagating it anyway would
+//! make every justification site poison its whole caller tree.
+//!
+//! The three rules, all reported at the *root* fn's signature line so
+//! a `lint:allow` there can carry the justification:
+//!
+//! * `transitive-wall-clock` — fns on the runner/NetSim/report/
+//!   serialization surfaces must not *reach* a wall-clock read
+//!   (depth ≥ 1; direct reads are the local rule's job).
+//! * `panic-reachability` — public `fl/`/`runtime/` API fns must not
+//!   reach an unjustified panic site (depth ≥ 1).
+//! * `pure-local-update` — `LocalUpdateHandle::run` impls must reach
+//!   no wall-clock, RNG or ambient-state effect at any depth
+//!   (including direct): a local update is a pure function of
+//!   `(state, batch, lr)`.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::callgraph::{self, CallGraph};
+use crate::report::esc;
+use crate::rules::FileAnalysis;
+use crate::{Rule, WitnessHop};
+
+pub const WALL: u8 = 1;
+pub const UNORDERED: u8 = 2;
+pub const RNG: u8 = 4;
+pub const PANIC: u8 = 8;
+pub const AMBIENT: u8 = 16;
+pub const UNSAFE: u8 = 32;
+
+/// Stable kind names, in the order chains pick a kind to blame when a
+/// target carries several banned effects.
+pub const KINDS: [(u8, &str); 6] = [
+    (WALL, "wall-clock"),
+    (RNG, "rng-construction"),
+    (AMBIENT, "ambient-state"),
+    (PANIC, "panic"),
+    (UNORDERED, "unordered-iteration"),
+    (UNSAFE, "unsafe"),
+];
+
+/// The only file allowed to seed no wall-clock effect: the dual-clock
+/// boundary of the obs layer.
+const WALL_CLOCK_SANCTUARY: &str = "rust/src/obs/wallclock.rs";
+
+/// Determinism-critical surfaces whose fns are `transitive-wall-clock`
+/// roots: the runner/session/aggregation loop, the NetSim DES, and
+/// every report/serialization path.  Mirrors `scope::UNORDERED_SCOPE`
+/// minus `obs/` (whose wall-clock half is the sanctioned dual-clock
+/// design).
+const WALL_ROOT_SURFACES: [&str; 8] = [
+    "rust/src/fl/runner.rs",
+    "rust/src/fl/session.rs",
+    "rust/src/fl/aggregate.rs",
+    "rust/src/netsim/",
+    "rust/src/metrics/",
+    "rust/src/util/json.rs",
+    "rust/src/util/csv.rs",
+    "rust/src/runtime/params.rs",
+];
+
+/// Layers whose public fns are `panic-reachability` roots.
+const PANIC_ROOT_SURFACES: [&str; 2] = ["rust/src/fl/", "rust/src/runtime/"];
+
+/// Anchor trait of the `pure-local-update` contract, declared here so
+/// a rename in `runtime/backend.rs` breaks the lint loudly instead of
+/// silently guarding nothing.
+const LOCAL_UPDATE_TRAIT: &str = "LocalUpdateHandle";
+const LOCAL_UPDATE_METHOD: &str = "run";
+const LOCAL_UPDATE_ANCHOR_FILE: &str = "rust/src/runtime/backend.rs";
+
+const PURE_BANNED: u8 = WALL | RNG | AMBIENT;
+
+/// One fn's effect sets in the machine-readable artifact.
+#[derive(Clone, Debug)]
+pub struct FnEffects {
+    pub func: String,
+    pub file: String,
+    /// 1-based signature line.
+    pub line: usize,
+    pub direct: Vec<&'static str>,
+    pub transitive: Vec<&'static str>,
+}
+
+/// One unresolved call in the artifact.
+#[derive(Clone, Debug)]
+pub struct UnresolvedSummary {
+    pub func: String,
+    pub file: String,
+    /// The callee as written (`fs::read`, `.push`, `helper`).
+    pub call: String,
+    /// 1-based call-site line.
+    pub line: usize,
+}
+
+/// The effects/witness artifact (`--effects-out`): every fn with a
+/// non-empty effect set, plus every call the resolver could not map
+/// to an in-tree fn (recorded, never silently dropped).
+#[derive(Default)]
+pub struct EffectsSummary {
+    pub fns: Vec<FnEffects>,
+    pub unresolved: Vec<UnresolvedSummary>,
+}
+
+/// Schema version of the effects artifact.
+pub const EFFECTS_VERSION: u64 = 1;
+
+impl EffectsSummary {
+    /// Render the artifact as deterministic JSON.
+    pub fn render_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"version\": {EFFECTS_VERSION},\n"));
+        out.push_str("  \"fns\": [");
+        for (k, f) in self.fns.iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{ \"fn\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                 \"direct\": [{}], \"transitive\": [{}] }}",
+                esc(&f.func),
+                esc(&f.file),
+                f.line,
+                kind_list(&f.direct),
+                kind_list(&f.transitive),
+            ));
+        }
+        out.push_str(if self.fns.is_empty() { "],\n" } else { "\n  ],\n" });
+        out.push_str("  \"unresolved\": [");
+        for (k, u) in self.unresolved.iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{ \"fn\": \"{}\", \"file\": \"{}\", \"call\": \"{}\", \
+                 \"line\": {} }}",
+                esc(&u.func),
+                esc(&u.file),
+                esc(&u.call),
+                u.line,
+            ));
+        }
+        out.push_str(if self.unresolved.is_empty() {
+            "]\n"
+        } else {
+            "\n  ]\n"
+        });
+        out.push_str("}\n");
+        out
+    }
+}
+
+fn kind_list(kinds: &[&'static str]) -> String {
+    kinds
+        .iter()
+        .map(|k| format!("\"{k}\""))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+fn kind_names(mask: u8) -> Vec<&'static str> {
+    KINDS
+        .iter()
+        .filter(|(bit, _)| mask & bit != 0)
+        .map(|&(_, name)| name)
+        .collect()
+}
+
+/// Run the whole interprocedural pass over the analyzed tree: build
+/// the call graph, seed and propagate effects, enforce the three
+/// transitive rules, and return the artifact summary.
+pub fn apply(analyses: &mut [FileAnalysis]) -> EffectsSummary {
+    let g = callgraph::build(analyses);
+    let (direct, sites) = seed(&g, analyses);
+    let transitive = propagate(&g, &direct);
+
+    enforce_wall_clock(&g, analyses, &direct, &transitive, &sites);
+    enforce_panic_reachability(&g, analyses, &direct, &transitive, &sites);
+    enforce_pure_local_update(&g, analyses, &direct, &transitive, &sites);
+
+    summarize(&g, &direct, &transitive)
+}
+
+/// First seed site per (node, effect bit), for witness terminals.
+type Sites = BTreeMap<(usize, u8), usize>;
+
+/// Scan every graph file line by line, honoring pragmas and test
+/// regions, and attribute each seed to the innermost enclosing fn.
+fn seed(g: &CallGraph, analyses: &mut [FileAnalysis]) -> (Vec<u8>, Sites) {
+    let mut direct = vec![0u8; g.nodes.len()];
+    let mut sites: Sites = BTreeMap::new();
+
+    // Per analysis file: the graph nodes with bodies in it.
+    let mut file_nodes: BTreeMap<usize, Vec<(usize, usize, usize)>> = BTreeMap::new();
+    for (ni, n) in g.nodes.iter().enumerate() {
+        if let Some((s, e)) = n.body {
+            file_nodes.entry(n.file).or_default().push((s, e, ni));
+        }
+    }
+
+    for (&fi, spans) in &file_nodes {
+        let fa = &mut analyses[fi];
+        let in_sanctuary = fa.rel == WALL_CLOCK_SANCTUARY;
+        for i in 0..fa.code.len() {
+            if fa.line_is_test(i) {
+                continue;
+            }
+            let line = std::mem::take(&mut fa.code[i]);
+            let mut mask = 0u8;
+            if !in_sanctuary
+                && crate::rules::count_word(&line, "Instant")
+                    + crate::rules::count_word(&line, "SystemTime")
+                    > 0
+            {
+                // Either pragma justifies the read; consume both so a
+                // doubled grant cannot go stale.
+                let local = fa.consume_allow(i, Rule::WallClockInSim.id());
+                let transitive = fa.consume_allow(i, Rule::TransitiveWallClock.id());
+                if !(local || transitive) {
+                    mask |= WALL;
+                }
+            }
+            if crate::rules::count_word(&line, ".unwrap()")
+                + crate::rules::count_word(&line, ".expect(")
+                + crate::rules::count_word(&line, "panic!")
+                > 0
+            {
+                let local = fa.consume_allow(i, Rule::UnwrapInLibrary.id());
+                let transitive = fa.consume_allow(i, Rule::PanicReachability.id());
+                if !(local || transitive) {
+                    mask |= PANIC;
+                }
+            }
+            if crate::rules::count_word(&line, "HashMap")
+                + crate::rules::count_word(&line, "HashSet")
+                > 0
+            {
+                mask |= UNORDERED;
+            }
+            if crate::rules::count_word(&line, "thread_rng")
+                + crate::rules::count_word(&line, "from_entropy")
+                + crate::rules::count_word(&line, "OsRng")
+                + crate::rules::count_word(&line, "RandomState")
+                > 0
+            {
+                mask |= RNG;
+            }
+            if crate::rules::count_word(&line, "env::var")
+                + crate::rules::count_word(&line, "env::vars")
+                + crate::rules::count_word(&line, "env::var_os")
+                + crate::rules::count_word(&line, "env::args")
+                + crate::rules::count_word(&line, "env::args_os")
+                > 0
+            {
+                mask |= AMBIENT;
+            }
+            if crate::rules::count_word(&line, "unsafe") > 0 {
+                mask |= UNSAFE;
+            }
+            fa.code[i] = line;
+            if mask == 0 {
+                continue;
+            }
+            let src_line = i + 1;
+            let node = spans
+                .iter()
+                .filter(|&&(s, e, _)| s <= src_line && src_line <= e)
+                .max_by_key(|&&(s, _, _)| s)
+                .map(|&(_, _, ni)| ni);
+            let ni = match node {
+                Some(ni) => ni,
+                // Seed outside any fn body (const initializer): no
+                // caller can reach it through the graph.
+                None => continue,
+            };
+            direct[ni] |= mask;
+            for (bit, _) in KINDS {
+                if mask & bit != 0 {
+                    sites.entry((ni, bit)).or_insert(src_line);
+                }
+            }
+        }
+    }
+    (direct, sites)
+}
+
+/// Propagate effect sets along call edges to a fixpoint.
+fn propagate(g: &CallGraph, direct: &[u8]) -> Vec<u8> {
+    let mut trans = direct.to_vec();
+    loop {
+        let mut changed = false;
+        for ni in 0..g.nodes.len() {
+            let mut m = trans[ni];
+            for &(callee, _) in &g.edges[ni] {
+                m |= trans[callee];
+            }
+            if m != trans[ni] {
+                trans[ni] = m;
+                changed = true;
+            }
+        }
+        if !changed {
+            return trans;
+        }
+    }
+}
+
+/// BFS a shortest witness chain from `root` to any fn whose *direct*
+/// effects intersect `mask`.  With `include_root`, a direct effect on
+/// the root itself is a one-hop chain; otherwise the search starts at
+/// the root's callees (direct effects are the local rules' job).
+/// Deterministic: edges are sorted and BFS order is fixed.
+fn find_chain(
+    g: &CallGraph,
+    root: usize,
+    mask: u8,
+    include_root: bool,
+    direct: &[u8],
+    sites: &Sites,
+) -> Option<Vec<WitnessHop>> {
+    let hit = |ni: usize| direct[ni] & mask != 0;
+    let terminal = |ni: usize| -> WitnessHop {
+        let bit = KINDS
+            .iter()
+            .map(|&(b, _)| b)
+            .find(|b| direct[ni] & b & mask != 0)
+            .unwrap_or(0);
+        WitnessHop {
+            func: g.nodes[ni].display(),
+            file: g.nodes[ni].rel.clone(),
+            line: sites
+                .get(&(ni, bit))
+                .copied()
+                .unwrap_or(g.nodes[ni].line),
+        }
+    };
+    if include_root && hit(root) {
+        return Some(vec![terminal(root)]);
+    }
+    let mut parent: Vec<Option<(usize, usize)>> = vec![None; g.nodes.len()];
+    let mut visited = vec![false; g.nodes.len()];
+    visited[root] = true;
+    let mut queue = VecDeque::from([root]);
+    while let Some(u) = queue.pop_front() {
+        for &(v, line) in &g.edges[u] {
+            if visited[v] {
+                continue;
+            }
+            visited[v] = true;
+            parent[v] = Some((u, line));
+            if hit(v) {
+                // Reconstruct root → … → v.
+                let mut rev: Vec<(usize, usize)> = Vec::new();
+                let mut cur = v;
+                while let Some((p, l)) = parent[cur] {
+                    rev.push((cur, l));
+                    cur = p;
+                }
+                let mut hops: Vec<WitnessHop> = Vec::new();
+                let mut at = root;
+                for &(next, call_line) in rev.iter().rev() {
+                    hops.push(WitnessHop {
+                        func: g.nodes[at].display(),
+                        file: g.nodes[at].rel.clone(),
+                        line: call_line,
+                    });
+                    at = next;
+                }
+                hops.push(terminal(v));
+                return Some(hops);
+            }
+            queue.push_back(v);
+        }
+    }
+    None
+}
+
+/// `A -> B -> C` chain text plus the effect site, for the message.
+fn chain_text(hops: &[WitnessHop], verb: &str) -> String {
+    let funcs: Vec<&str> = hops.iter().map(|h| h.func.as_str()).collect();
+    let last = hops.last().expect("chains have at least one hop");
+    format!(
+        "{} {} at {}:{}",
+        funcs.join(" -> "),
+        verb,
+        last.file,
+        last.line
+    )
+}
+
+/// Whether a node is eligible as a rule root: has a body and is not
+/// test code.
+fn is_root_candidate(
+    g: &CallGraph,
+    analyses: &[FileAnalysis],
+    ni: usize,
+) -> bool {
+    let n = &g.nodes[ni];
+    n.body.is_some() && !analyses[n.file].line_is_test(n.line.saturating_sub(1))
+}
+
+fn enforce_wall_clock(
+    g: &CallGraph,
+    analyses: &mut [FileAnalysis],
+    direct: &[u8],
+    transitive: &[u8],
+    sites: &Sites,
+) {
+    for ni in 0..g.nodes.len() {
+        let rel = g.nodes[ni].rel.clone();
+        if !WALL_ROOT_SURFACES.iter().any(|p| rel.starts_with(p))
+            || !is_root_candidate(g, analyses, ni)
+        {
+            continue;
+        }
+        // Depth ≥ 1 only: does any callee transitively reach a seed?
+        let reaches = g.edges[ni]
+            .iter()
+            .any(|&(c, _)| transitive[c] & WALL != 0);
+        if !reaches {
+            continue;
+        }
+        let hops = match find_chain(g, ni, WALL, false, direct, sites) {
+            Some(h) => h,
+            None => continue,
+        };
+        let msg = format!(
+            "wall-clock read reachable from determinism-critical fn \
+             `{}`: {}; route timing through obs::wallclock, or justify \
+             the seed site or this fn with lint:allow(transitive-wall-clock)",
+            g.nodes[ni].display(),
+            chain_text(&hops, "reads the wall clock"),
+        );
+        let line_idx = g.nodes[ni].line - 1;
+        let file = g.nodes[ni].file;
+        analyses[file].report_witnessed(line_idx, Rule::TransitiveWallClock, msg, hops);
+    }
+}
+
+fn enforce_panic_reachability(
+    g: &CallGraph,
+    analyses: &mut [FileAnalysis],
+    direct: &[u8],
+    transitive: &[u8],
+    sites: &Sites,
+) {
+    for ni in 0..g.nodes.len() {
+        let n = &g.nodes[ni];
+        if !n.is_pub
+            || !PANIC_ROOT_SURFACES.iter().any(|p| n.rel.starts_with(p))
+            || !is_root_candidate(g, analyses, ni)
+        {
+            continue;
+        }
+        let reaches = g.edges[ni]
+            .iter()
+            .any(|&(c, _)| transitive[c] & PANIC != 0);
+        if !reaches {
+            continue;
+        }
+        let hops = match find_chain(g, ni, PANIC, false, direct, sites) {
+            Some(h) => h,
+            None => continue,
+        };
+        let msg = format!(
+            "unjustified panic site reachable from public API fn `{}`: \
+             {}; return a typed util::error Result along the chain, \
+             justify the panic site, or justify this fn with \
+             lint:allow(panic-reachability)",
+            g.nodes[ni].display(),
+            chain_text(&hops, "can panic"),
+        );
+        let line_idx = g.nodes[ni].line - 1;
+        let file = g.nodes[ni].file;
+        analyses[file].report_witnessed(line_idx, Rule::PanicReachability, msg, hops);
+    }
+}
+
+fn enforce_pure_local_update(
+    g: &CallGraph,
+    analyses: &mut [FileAnalysis],
+    direct: &[u8],
+    transitive: &[u8],
+    sites: &Sites,
+) {
+    let mut found_impl = false;
+    for ni in 0..g.nodes.len() {
+        let n = &g.nodes[ni];
+        if n.trait_of.as_deref() != Some(LOCAL_UPDATE_TRAIT)
+            || n.name != LOCAL_UPDATE_METHOD
+            || n.body.is_none()
+        {
+            continue;
+        }
+        found_impl = true;
+        if transitive[ni] & PURE_BANNED == 0 {
+            continue;
+        }
+        let hops = match find_chain(g, ni, PURE_BANNED, true, direct, sites) {
+            Some(h) => h,
+            None => continue,
+        };
+        let kinds = kind_names(transitive[ni] & PURE_BANNED).join(", ");
+        let msg = format!(
+            "{}::{} impl `{}` reaches a non-pure effect ({}): {}; a \
+             local update must be a pure function of (state, batch, \
+             lr) — hoist the effect into backend setup or justify \
+             with lint:allow(pure-local-update)",
+            LOCAL_UPDATE_TRAIT,
+            LOCAL_UPDATE_METHOD,
+            g.nodes[ni].display(),
+            kinds,
+            chain_text(&hops, "performs the effect"),
+        );
+        let line_idx = g.nodes[ni].line - 1;
+        let file = g.nodes[ni].file;
+        analyses[file].report_witnessed(line_idx, Rule::PureLocalUpdate, msg, hops);
+    }
+    // Anchor guard: if the trait's home file is in the scanned tree
+    // but no impl parses anywhere, the contract guards nothing.
+    if !found_impl {
+        if let Some(fi) = analyses
+            .iter()
+            .position(|fa| fa.rel == LOCAL_UPDATE_ANCHOR_FILE)
+        {
+            analyses[fi].report(
+                0,
+                Rule::PureLocalUpdate,
+                format!(
+                    "trait `{LOCAL_UPDATE_TRAIT}` has no impls anywhere in \
+                     the scanned tree — the pure-local-update contract \
+                     guards nothing; update the anchor in \
+                     lint/src/effects.rs if the trait was renamed or moved"
+                ),
+            );
+        }
+    }
+}
+
+fn summarize(g: &CallGraph, direct: &[u8], transitive: &[u8]) -> EffectsSummary {
+    let mut fns: Vec<FnEffects> = (0..g.nodes.len())
+        .filter(|&ni| direct[ni] | transitive[ni] != 0)
+        .map(|ni| FnEffects {
+            func: g.nodes[ni].display(),
+            file: g.nodes[ni].rel.clone(),
+            line: g.nodes[ni].line,
+            direct: kind_names(direct[ni]),
+            transitive: kind_names(transitive[ni]),
+        })
+        .collect();
+    fns.sort_by(|a, b| {
+        (&a.file, a.line, &a.func).cmp(&(&b.file, b.line, &b.func))
+    });
+    let mut unresolved: Vec<UnresolvedSummary> = g
+        .unresolved
+        .iter()
+        .map(|u| UnresolvedSummary {
+            func: g.nodes[u.from].display(),
+            file: g.nodes[u.from].rel.clone(),
+            call: u.name.clone(),
+            line: u.line,
+        })
+        .collect();
+    unresolved.sort_by(|a, b| {
+        (&a.file, a.line, &a.call).cmp(&(&b.file, b.line, &b.call))
+    });
+    EffectsSummary { fns, unresolved }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::analyze;
+
+    fn run(files: &[(&str, &str)]) -> (Vec<FileAnalysis>, EffectsSummary) {
+        let mut analyses: Vec<FileAnalysis> =
+            files.iter().map(|(rel, src)| analyze(rel, src)).collect();
+        let summary = apply(&mut analyses);
+        for fa in &mut analyses {
+            fa.finish();
+        }
+        (analyses, summary)
+    }
+
+    fn all_diags(analyses: &[FileAnalysis]) -> Vec<&crate::Diagnostic> {
+        analyses.iter().flat_map(|fa| fa.diagnostics.iter()).collect()
+    }
+
+    #[test]
+    fn two_hop_wall_clock_chain_is_found() {
+        let runner = "\
+pub fn drive() {
+    middle();
+}
+";
+        let util = "\
+pub fn middle() {
+    leaf();
+}
+pub fn leaf() {
+    let _t = std::time::Instant::now();
+}
+";
+        let (analyses, _s) = run(&[
+            ("rust/src/fl/runner.rs", runner),
+            ("rust/src/fl/support.rs", util),
+        ]);
+        let diags = all_diags(&analyses);
+        let wall: Vec<_> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::TransitiveWallClock)
+            .collect();
+        assert_eq!(wall.len(), 1, "{diags:?}");
+        assert_eq!(wall[0].file, "rust/src/fl/runner.rs");
+        assert_eq!(wall[0].line, 1);
+        let funcs: Vec<&str> =
+            wall[0].witness.iter().map(|h| h.func.as_str()).collect();
+        assert_eq!(funcs, ["drive", "middle", "leaf"]);
+        // Terminal hop points at the effect site, not the fn line.
+        assert_eq!(wall[0].witness[2].line, 5);
+    }
+
+    #[test]
+    fn direct_wall_clock_is_left_to_the_local_rule() {
+        let runner = "\
+pub fn drive() {
+    let _t = std::time::Instant::now();
+}
+";
+        let (analyses, _s) = run(&[("rust/src/fl/runner.rs", runner)]);
+        let diags = all_diags(&analyses);
+        assert!(
+            diags.iter().any(|d| d.rule == Rule::WallClockInSim),
+            "{diags:?}"
+        );
+        assert!(
+            !diags.iter().any(|d| d.rule == Rule::TransitiveWallClock),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn pragma_at_seed_site_stops_the_taint() {
+        let runner = "\
+pub fn drive() {
+    middle();
+}
+";
+        let util = "\
+pub fn middle() {
+    // lint:allow(transitive-wall-clock): log-only timing, never
+    // enters any report or simulated-time decision.
+    let _t = std::time::Instant::now();
+}
+";
+        let (analyses, _s) = run(&[
+            ("rust/src/fl/runner.rs", runner),
+            ("rust/src/fl/support.rs", util),
+        ]);
+        let diags = all_diags(&analyses);
+        assert!(
+            !diags.iter().any(|d| d.rule == Rule::TransitiveWallClock),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn panic_reachability_spares_private_and_test_fns() {
+        let src = "\
+pub fn api() {
+    helper();
+}
+fn helper() {
+    inner_panics();
+}
+fn inner_panics() {
+    panic!(\"boom\");
+}
+#[cfg(test)]
+mod tests {
+    pub fn test_only() {
+        super::inner_panics();
+    }
+}
+";
+        let (analyses, _s) = run(&[("rust/src/runtime/pool.rs", src)]);
+        let diags = all_diags(&analyses);
+        let hits: Vec<_> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::PanicReachability)
+            .collect();
+        // Only the public root fires; private helpers and the test fn
+        // do not (the panic! itself also trips the local rule).
+        assert_eq!(hits.len(), 1, "{diags:?}");
+        assert_eq!(hits[0].line, 1);
+        let funcs: Vec<&str> =
+            hits[0].witness.iter().map(|h| h.func.as_str()).collect();
+        assert_eq!(funcs, ["api", "helper", "inner_panics"]);
+    }
+
+    #[test]
+    fn pure_local_update_catches_direct_and_transitive_effects() {
+        let src = "\
+pub trait LocalUpdateHandle {
+    fn run(&self) -> usize;
+}
+pub struct B;
+impl LocalUpdateHandle for B {
+    fn run(&self) -> usize {
+        seeded();
+        0
+    }
+}
+fn seeded() {
+    let _ = thread_rng();
+}
+";
+        let (analyses, _s) = run(&[("rust/src/runtime/backend.rs", src)]);
+        let diags = all_diags(&analyses);
+        let hits: Vec<_> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::PureLocalUpdate)
+            .collect();
+        assert_eq!(hits.len(), 1, "{diags:?}");
+        assert_eq!(hits[0].line, 6);
+        assert!(hits[0].message.contains("rng-construction"));
+    }
+
+    #[test]
+    fn missing_local_update_anchor_is_loud() {
+        let src = "\
+pub trait RenamedHandle {
+    fn run(&self) -> usize;
+}
+";
+        let (analyses, _s) = run(&[("rust/src/runtime/backend.rs", src)]);
+        let diags = all_diags(&analyses);
+        assert!(
+            diags.iter().any(|d| d.rule == Rule::PureLocalUpdate
+                && d.message.contains("has no impls")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn summary_records_effects_and_unresolved_calls() {
+        let src = "\
+pub fn a() {
+    b();
+}
+fn b() {
+    let _t = std::time::Instant::now();
+    mystery();
+}
+";
+        let (_analyses, s) = run(&[("rust/src/topology/graph.rs", src)]);
+        let a = s.fns.iter().find(|f| f.func == "a").expect("a");
+        assert!(a.direct.is_empty());
+        assert_eq!(a.transitive, ["wall-clock"]);
+        let b = s.fns.iter().find(|f| f.func == "b").expect("b");
+        assert_eq!(b.direct, ["wall-clock"]);
+        // Both calls the resolver cannot see through are recorded:
+        // `Instant::now` (std) and the undefined `mystery`.
+        let calls: Vec<&str> =
+            s.unresolved.iter().map(|u| u.call.as_str()).collect();
+        assert_eq!(calls, ["Instant::now", "mystery"]);
+        // The artifact renders and stays deterministic.
+        let json = s.render_json();
+        assert!(json.contains("\"wall-clock\""));
+        assert!(json.contains("\"mystery\""));
+    }
+}

@@ -50,6 +50,13 @@ pub struct FnItem {
     /// The implementing type when the fn sits in an `impl` block
     /// (`impl Foo` and `impl Trait for Foo` both yield `Foo`).
     pub owner: Option<String>,
+    /// The trait's last path segment when the fn sits in an
+    /// `impl Trait for Type` block (`impl fmt::Display for Foo`
+    /// yields `Display`); `None` in inherent impls and free fns.
+    pub trait_of: Option<String>,
+    /// Whether the fn carries a `pub` / `pub(crate)` / `pub(in …)`
+    /// visibility qualifier.
+    pub is_pub: bool,
     pub line: usize,
     /// Body span as inclusive 1-based lines (opening `{` line to the
     /// matching `}` line); `None` for body-less trait signatures.
@@ -114,18 +121,18 @@ impl FileItems {
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
-enum Tok {
+pub(crate) enum Tok {
     Ident(String),
     Punct(char),
 }
 
-struct Token {
-    tok: Tok,
+pub(crate) struct Token {
+    pub(crate) tok: Tok,
     /// 1-based source line.
-    line: usize,
+    pub(crate) line: usize,
 }
 
-fn lex(code: &[String]) -> Vec<Token> {
+pub(crate) fn lex(code: &[String]) -> Vec<Token> {
     let mut toks = Vec::new();
     for (idx, line) in code.iter().enumerate() {
         let chars: Vec<char> = line.chars().collect();
@@ -315,8 +322,8 @@ pub fn parse_items(code: &[String]) -> FileItems {
     let toks = lex(code);
     let mut p = Parser { toks: &toks, i: 0 };
     let mut items = FileItems::default();
-    // (owner of the enclosing impl, brace depth just outside it)
-    let mut impl_stack: Vec<(Option<String>, i64)> = Vec::new();
+    // (owner of the enclosing impl, its trait, brace depth just outside it)
+    let mut impl_stack: Vec<(Option<String>, Option<String>, i64)> = Vec::new();
     let mut depth = 0i64;
 
     while let Some(t) = p.peek(0) {
@@ -327,7 +334,7 @@ pub fn parse_items(code: &[String]) -> FileItems {
             }
             Tok::Punct('}') => {
                 depth -= 1;
-                if let Some(&(_, d)) = impl_stack.last() {
+                if let Some(&(_, _, d)) = impl_stack.last() {
                     if depth == d {
                         impl_stack.pop();
                     }
@@ -341,14 +348,16 @@ pub fn parse_items(code: &[String]) -> FileItems {
             Tok::Ident(w) if w == "struct" => parse_struct(&mut p, &mut items),
             Tok::Ident(w) if w == "enum" => parse_enum(&mut p, &mut items),
             Tok::Ident(w) if w == "fn" => {
-                let owner = impl_stack
-                    .last()
-                    .and_then(|(o, _)| o.clone());
-                parse_fn(&mut p, &mut items, owner);
+                let (owner, trait_of) = match impl_stack.last() {
+                    Some((o, t, _)) => (o.clone(), t.clone()),
+                    None => (None, None),
+                };
+                let is_pub = pub_before(&toks, p.i);
+                parse_fn(&mut p, &mut items, owner, trait_of, is_pub);
             }
             Tok::Ident(w) if w == "impl" => {
-                let owner = parse_impl_header(&mut p);
-                impl_stack.push((owner, depth));
+                let (owner, trait_of) = parse_impl_header(&mut p);
+                impl_stack.push((owner, trait_of, depth));
             }
             Tok::Ident(w) if w == "const" => parse_const(&mut p, &mut items),
             Tok::Ident(w) if w == "match" => parse_match(&mut p, &mut items),
@@ -515,7 +524,55 @@ fn parse_enum(p: &mut Parser<'_>, items: &mut FileItems) {
     });
 }
 
-fn parse_fn(p: &mut Parser<'_>, items: &mut FileItems, owner: Option<String>) {
+/// Walk backwards from the `fn` token over visibility and qualifier
+/// tokens (`const` / `async` / `unsafe` / `extern "C"` and a
+/// `pub(…)` restriction) to decide whether the fn is `pub`.
+fn pub_before(toks: &[Token], fn_idx: usize) -> bool {
+    let mut j = fn_idx;
+    loop {
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+        match &toks[j].tok {
+            Tok::Ident(w)
+                if w == "const" || w == "async" || w == "unsafe" || w == "extern" =>
+            {
+                continue
+            }
+            // The masked string view leaves `extern "C"` as bare quotes.
+            Tok::Punct('"') => continue,
+            Tok::Punct(')') => {
+                // Rewind over a `( crate )` / `( in path )` restriction.
+                let mut depth = 0i64;
+                while j > 0 {
+                    match toks[j].tok {
+                        Tok::Punct(')') => depth += 1,
+                        Tok::Punct('(') => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j -= 1;
+                }
+                continue;
+            }
+            Tok::Ident(w) if w == "pub" => return true,
+            _ => return false,
+        }
+    }
+}
+
+fn parse_fn(
+    p: &mut Parser<'_>,
+    items: &mut FileItems,
+    owner: Option<String>,
+    trait_of: Option<String>,
+    is_pub: bool,
+) {
     p.bump(); // `fn`
     let (name, line) = match p.ident() {
         Some(x) => x,
@@ -581,20 +638,24 @@ fn parse_fn(p: &mut Parser<'_>, items: &mut FileItems, owner: Option<String>) {
     items.fns.push(FnItem {
         name: name.to_string(),
         owner,
+        trait_of,
+        is_pub,
         line,
         body,
     });
 }
 
 /// Parse an `impl` header up to — but not through — its `{`, and
-/// return the implementing type's last path segment (`impl Foo` and
-/// `impl fmt::Display for Foo` both yield `Foo`).
-fn parse_impl_header(p: &mut Parser<'_>) -> Option<String> {
+/// return `(implementing type, trait)` as last path segments:
+/// `impl Foo` yields `(Foo, None)`; `impl fmt::Display for Foo`
+/// yields `(Foo, Some(Display))`.
+fn parse_impl_header(p: &mut Parser<'_>) -> (Option<String>, Option<String>) {
     p.bump(); // `impl`
     if p.is_punct(0, '<') {
         p.skip_generics();
     }
     let mut owner: Option<String> = None;
+    let mut trait_of: Option<String> = None;
     let mut done = false;
     while let Some(t) = p.peek(0) {
         match &t.tok {
@@ -607,11 +668,14 @@ fn parse_impl_header(p: &mut Parser<'_>) -> Option<String> {
                 p.skip_balanced('(', ')');
             }
             Tok::Ident(w) if w == "for" => {
-                owner = None;
+                trait_of = owner.take();
                 p.bump();
             }
             Tok::Ident(w) if w == "where" => {
                 done = true;
+                p.bump();
+            }
+            Tok::Ident(w) if w == "dyn" => {
                 p.bump();
             }
             Tok::Ident(w) => {
@@ -625,7 +689,7 @@ fn parse_impl_header(p: &mut Parser<'_>) -> Option<String> {
             }
         }
     }
-    owner
+    (owner, trait_of)
 }
 
 fn parse_const(p: &mut Parser<'_>, items: &mut FileItems) {
@@ -884,6 +948,49 @@ fn free() -> usize {
         let free = items.fn_named("free", None).unwrap();
         assert_eq!(free.owner, None);
         assert_eq!(free.body, Some((13, 15)));
+    }
+
+    #[test]
+    fn fn_visibility_and_impl_trait_are_recorded() {
+        let src = "\
+impl LocalUpdateHandle for NativeLocalUpdate {
+    fn run(&self) -> usize {
+        0
+    }
+}
+impl Engine {
+    pub fn load() {}
+    pub(crate) const fn k() -> usize { 1 }
+    fn private() {}
+}
+pub async fn drive() {}
+pub unsafe extern \"C\" fn hook() {}
+fn plain() {}
+";
+        let items = parse(src);
+        let run = items.fn_named("run", Some("NativeLocalUpdate")).unwrap();
+        assert_eq!(run.trait_of.as_deref(), Some("LocalUpdateHandle"));
+        assert!(!run.is_pub);
+        let load = items.fn_named("load", Some("Engine")).unwrap();
+        assert!(load.is_pub);
+        assert_eq!(load.trait_of, None);
+        assert!(items.fn_named("k", Some("Engine")).unwrap().is_pub);
+        assert!(!items.fn_named("private", Some("Engine")).unwrap().is_pub);
+        assert!(items.fn_named("drive", None).unwrap().is_pub);
+        assert!(items.fn_named("hook", None).unwrap().is_pub);
+        assert!(!items.fn_named("plain", None).unwrap().is_pub);
+    }
+
+    #[test]
+    fn qualified_trait_paths_keep_last_segment() {
+        let src = "\
+impl fmt::Display for Diagnostic {
+    fn fmt(&self) {}
+}
+";
+        let items = parse(src);
+        let f = items.fn_named("fmt", Some("Diagnostic")).unwrap();
+        assert_eq!(f.trait_of.as_deref(), Some("Display"));
     }
 
     #[test]

@@ -28,6 +28,20 @@
 //! | `config-surface-parity` | config JSON/CLI surface completeness  |
 //! | `stale-pragma`          | `lint:allow` grants that died of churn|
 //!
+//! Interprocedural (whole-tree only, [`callgraph`] + [`effects`]):
+//! call sites are resolved against the item table, per-fn effect sets
+//! are seeded and propagated to a fixpoint, and violations carry a
+//! *witness call chain* from the root fn to the effect site:
+//!
+//! | rule | guards |
+//! |------|--------|
+//! | `transitive-wall-clock` | no wall-clock read reachable from the  |
+//! |                         | runner/NetSim/report surfaces          |
+//! | `panic-reachability`    | no unjustified panic reachable from a  |
+//! |                         | public `fl/`/`runtime/` API fn         |
+//! | `pure-local-update`     | `LocalUpdateHandle::run` stays a pure  |
+//! |                         | function (PR 4 contract)               |
+//!
 //! Diagnostics print as `file:line:rule: message`; `--format json`
 //! emits the stable machine-readable schema ([`report`]), and
 //! `--baseline` diffs against a previous JSON report so migrations
@@ -41,7 +55,9 @@ use std::fmt;
 use std::io;
 use std::path::{Path, PathBuf};
 
+pub mod callgraph;
 pub mod contracts;
+pub mod effects;
 pub mod items;
 pub mod report;
 pub mod rules;
@@ -62,13 +78,16 @@ pub enum Rule {
     CheckpointParity,
     CsvSchemaParity,
     ConfigSurfaceParity,
+    TransitiveWallClock,
+    PanicReachability,
+    PureLocalUpdate,
     StalePragma,
     Pragma,
 }
 
 impl Rule {
     /// The rules a `lint:allow` pragma may name.
-    pub const ENFORCED: [Rule; 9] = [
+    pub const ENFORCED: [Rule; 12] = [
         Rule::FloatOrdering,
         Rule::WallClockInSim,
         Rule::UnorderedIteration,
@@ -77,6 +96,9 @@ impl Rule {
         Rule::CheckpointParity,
         Rule::CsvSchemaParity,
         Rule::ConfigSurfaceParity,
+        Rule::TransitiveWallClock,
+        Rule::PanicReachability,
+        Rule::PureLocalUpdate,
         Rule::StalePragma,
     ];
 
@@ -91,6 +113,9 @@ impl Rule {
             Rule::CheckpointParity => "checkpoint-parity",
             Rule::CsvSchemaParity => "csv-schema-parity",
             Rule::ConfigSurfaceParity => "config-surface-parity",
+            Rule::TransitiveWallClock => "transitive-wall-clock",
+            Rule::PanicReachability => "panic-reachability",
+            Rule::PureLocalUpdate => "pure-local-update",
             Rule::StalePragma => "stale-pragma",
             Rule::Pragma => "pragma",
         }
@@ -109,6 +134,18 @@ impl fmt::Display for Rule {
     }
 }
 
+/// One hop of a witness call chain.  For intermediate hops `line` is
+/// the call site inside `func` that reaches the next hop; for the
+/// terminal hop it is the effect site itself.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WitnessHop {
+    /// Display name: `Owner::name` for methods, `name` for free fns.
+    pub func: String,
+    pub file: String,
+    /// 1-based source line (call site, or effect site on the last hop).
+    pub line: usize,
+}
+
 /// One violation, formatted as `file:line:rule: message`.
 #[derive(Clone, Debug)]
 pub struct Diagnostic {
@@ -120,6 +157,9 @@ pub struct Diagnostic {
     /// The trimmed raw source line the finding points at (baseline
     /// diffing keys on it, so findings survive pure line shifts).
     pub snippet: String,
+    /// Witness call chain from the root fn to the effect site; empty
+    /// for every rule outside the interprocedural layer.
+    pub witness: Vec<WitnessHop>,
 }
 
 impl fmt::Display for Diagnostic {
@@ -142,6 +182,10 @@ pub struct Report {
     /// whole so the JSON report can show them with `pragma:allowed`).
     pub suppressed: Vec<Diagnostic>,
     pub files_scanned: usize,
+    /// Per-fn effect sets and unresolved calls from the
+    /// interprocedural pass; empty for local-only scans
+    /// ([`lint_paths`]).
+    pub effects: effects::EffectsSummary,
 }
 
 impl Report {
@@ -188,15 +232,14 @@ pub fn lint_tree(repo_root: &Path) -> io::Result<Report> {
 }
 
 /// Lint a set of in-memory `(rel_path, source)` files with the full
-/// pipeline — local rules, default contract tables, stale-pragma.
-/// [`lint_tree`] is this over the real tree; the fixture tests drive
-/// it with synthetic files under the contract anchor paths.
+/// pipeline — local rules, default contract tables, interprocedural
+/// effects, stale-pragma.  [`lint_tree`] is this over the real tree;
+/// the fixture tests drive it with synthetic files under the contract
+/// anchor paths.
 pub fn lint_sources(files: &[(&str, &str)]) -> Report {
-    let mut analyses: Vec<rules::FileAnalysis> = files
-        .iter()
-        .map(|(rel, source)| rules::analyze(rel, source))
-        .collect();
+    let mut analyses = analyze_all(files);
     contracts::apply(&mut analyses);
+    let summary = effects::apply(&mut analyses);
     let mut diagnostics = Vec::new();
     let mut suppressed = Vec::new();
     for fa in &mut analyses {
@@ -208,7 +251,59 @@ pub fn lint_sources(files: &[(&str, &str)]) -> Report {
         diagnostics,
         suppressed,
         files_scanned: files.len(),
+        effects: summary,
     }
+}
+
+/// How many worker threads the per-file analysis uses: the
+/// `EDGEFLOW_LINT_THREADS` override, else available parallelism, else
+/// 1.  The file analysis is pure and results are stitched back in
+/// input order, so the thread count never changes the report.
+fn lint_threads() -> usize {
+    if let Ok(v) = std::env::var("EDGEFLOW_LINT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run [`rules::analyze`] over every file, fanned out across std
+/// scoped threads in contiguous chunks.  Each chunk's analyses come
+/// back in chunk order and chunks are concatenated in order, so the
+/// output is byte-for-byte identical to a sequential map regardless
+/// of thread count (pinned by a test in `tests/engine.rs`).
+fn analyze_all(files: &[(&str, &str)]) -> Vec<rules::FileAnalysis> {
+    let threads = lint_threads().min(files.len().max(1));
+    if threads <= 1 {
+        return files
+            .iter()
+            .map(|(rel, source)| rules::analyze(rel, source))
+            .collect();
+    }
+    let chunk = files.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = files
+            .chunks(chunk)
+            .map(|part| {
+                s.spawn(move || {
+                    part.iter()
+                        .map(|(rel, source)| rules::analyze(rel, source))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(files.len());
+        for h in handles {
+            match h.join() {
+                Ok(mut part) => out.append(&mut part),
+                // A worker panic is an engine bug; re-raise it rather
+                // than returning a silently truncated report.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        out
+    })
 }
 
 /// Lint explicit files or directories (still rooted at `repo_root`
@@ -242,6 +337,7 @@ pub fn lint_paths(repo_root: &Path, paths: &[PathBuf]) -> io::Result<Report> {
         diagnostics,
         suppressed,
         files_scanned: files.len(),
+        effects: effects::EffectsSummary::default(),
     })
 }
 
@@ -289,6 +385,7 @@ mod tests {
             rule: Rule::FloatOrdering,
             message: "msg".into(),
             snippet: "let x = a.partial_cmp(&b);".into(),
+            witness: Vec::new(),
         };
         assert_eq!(
             d.to_string(),

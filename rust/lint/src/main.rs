@@ -32,15 +32,30 @@ OPTIONS:
     --check             Lint the full tree (the default when no PATHs given)
     --root <dir>        Repo root to resolve scopes against (default: auto-detect)
     --format <fmt>      Output format: text (default) or json (stable schema,
-                        version 1: rule, file, line, pragma state, message,
-                        snippet, plus a summary block)
+                        version 2: rule, file, line, pragma state, message,
+                        snippet, witness call chain, plus a summary block with
+                        per-rule suppression counts)
     --out <file>        Also write the report to <file> in the chosen format
                         (CI uploads the json form as a build artifact)
+    --effects-out <f>   Write the interprocedural effects artifact to <f>:
+                        every fn with a non-empty direct/transitive effect
+                        set, plus every call the resolver could not map to an
+                        in-tree fn (whole-tree scans only; empty otherwise)
     --baseline <file>   Diff against a previous --format json report: exit 1
                         only on findings NOT present in the baseline, keyed by
                         (rule, file, snippet) so pure line shifts don't fail
+    --explain <rule>    Explain one rule — scope, rationale — and walk every
+                        current finding of it hop by hop (witness call chains
+                        for the interprocedural rules); always exits 0
     --list-rules        Print each rule id and its scope, then exit 0
     --help              Print this help, then exit 0
+
+The three interprocedural rules (transitive-wall-clock,
+panic-reachability, pure-local-update) reason over the whole call
+graph: each finding lands on the *root* fn and carries a witness
+chain root -> ... -> effect site.  Suppress at the root fn's
+signature line, or at the effect's seed site (which un-taints every
+chain through it).
 
 Suppress a finding with a justified inline pragma on (or in the
 comment block directly above) the offending line; the reason is
@@ -75,7 +90,9 @@ fn run() -> Result<bool, String> {
     let mut paths: Vec<PathBuf> = Vec::new();
     let mut format = Format::Text;
     let mut out_file: Option<PathBuf> = None;
+    let mut effects_file: Option<PathBuf> = None;
     let mut baseline_file: Option<PathBuf> = None;
+    let mut explain: Option<String> = None;
     let mut args = env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -119,6 +136,18 @@ fn run() -> Result<bool, String> {
                     .ok_or_else(|| "--baseline requires a file argument".to_string())?;
                 baseline_file = Some(PathBuf::from(f));
             }
+            "--effects-out" => {
+                let f = args
+                    .next()
+                    .ok_or_else(|| "--effects-out requires a file argument".to_string())?;
+                effects_file = Some(PathBuf::from(f));
+            }
+            "--explain" => {
+                let r = args
+                    .next()
+                    .ok_or_else(|| "--explain requires a rule id argument".to_string())?;
+                explain = Some(r);
+            }
             other if other.starts_with('-') => {
                 return Err(format!("unknown flag {other:?}"));
             }
@@ -143,6 +172,18 @@ fn run() -> Result<bool, String> {
         lint_paths(&root, &paths)
     }
     .map_err(|e| format!("scan failed: {e}"))?;
+
+    if let Some(path) = &effects_file {
+        std::fs::write(path, lint_report.effects.render_json())
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    }
+
+    if let Some(rule_id) = explain {
+        let rule = Rule::from_id(&rule_id)
+            .ok_or_else(|| format!("unknown rule {rule_id:?}; see --list-rules"))?;
+        print!("{}", explain_report(&lint_report, rule));
+        return Ok(true);
+    }
 
     let rendered_json = report::render_json(&lint_report);
     match format {
@@ -194,6 +235,7 @@ fn text_report(report: &Report) -> String {
     for diag in &report.diagnostics {
         out.push_str(&diag.to_string());
         out.push('\n');
+        out.push_str(&witness_lines(diag, "    "));
     }
     out.push_str(&format!(
         "edgeflow-lint: {} violation(s), {} suppressed by pragmas, {} file(s) scanned\n",
@@ -201,7 +243,133 @@ fn text_report(report: &Report) -> String {
         report.suppressed.len(),
         report.files_scanned
     ));
+    let by_rule = report::suppressed_by_rule(report);
+    if !by_rule.is_empty() {
+        let parts: Vec<String> = by_rule
+            .iter()
+            .map(|(rule, n)| format!("{rule}={n}"))
+            .collect();
+        out.push_str(&format!(
+            "edgeflow-lint: suppressions by rule: {}\n",
+            parts.join(", ")
+        ));
+    }
     out
+}
+
+/// Render a diagnostic's witness chain, one hop per line: intermediate
+/// hops show the call site into the next hop, the terminal hop (`=>`)
+/// shows the effect site itself.
+fn witness_lines(diag: &edgeflow_lint::Diagnostic, indent: &str) -> String {
+    let mut out = String::new();
+    for (k, hop) in diag.witness.iter().enumerate() {
+        let arrow = if k + 1 == diag.witness.len() { "=>" } else { "->" };
+        out.push_str(&format!(
+            "{indent}{arrow} {} ({}:{})\n",
+            hop.func, hop.file, hop.line
+        ));
+    }
+    out
+}
+
+/// The `--explain <rule>` view: scope, rationale, then every current
+/// finding of the rule walked hop by hop.
+fn explain_report(report: &Report, rule: Rule) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("rule: {}\n", rule.id()));
+    out.push_str(&format!("scope: {}\n", scope::describe(rule)));
+    out.push_str(&format!("rationale: {}\n", rationale(rule)));
+    let hits: Vec<_> = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.rule == rule)
+        .collect();
+    let allowed: Vec<_> = report
+        .suppressed
+        .iter()
+        .filter(|d| d.rule == rule)
+        .collect();
+    out.push_str(&format!(
+        "\ncurrent findings: {} violation(s), {} suppressed by pragmas\n",
+        hits.len(),
+        allowed.len()
+    ));
+    for diag in hits {
+        out.push_str(&format!("\n{diag}\n"));
+        out.push_str(&witness_lines(diag, "    "));
+    }
+    for diag in allowed {
+        out.push_str(&format!("\n[allowed by pragma] {diag}\n"));
+        out.push_str(&witness_lines(diag, "    "));
+    }
+    out
+}
+
+/// One-paragraph rationale per rule, for `--explain`.
+fn rationale(rule: Rule) -> &'static str {
+    match rule {
+        Rule::FloatOrdering => {
+            "NaN-unsound comparisons make sort order depend on data; the \
+             bit-identity contract needs total orders everywhere."
+        }
+        Rule::WallClockInSim => {
+            "simulated-time modules that read the wall clock produce \
+             run-to-run different traces; NetSim's clock is the only time \
+             source there."
+        }
+        Rule::UnorderedIteration => {
+            "HashMap/HashSet iteration order is unspecified, so any \
+             serialization or aggregation driven by it breaks bit-identity."
+        }
+        Rule::UnwrapInLibrary => {
+            "library layers must surface typed util::error Results; a panic \
+             in the training loop takes the whole run down."
+        }
+        Rule::UnsafeAudit => {
+            "every unsafe block needs a SAFETY: comment stating the \
+             invariant that makes it sound."
+        }
+        Rule::CheckpointParity => {
+            "checkpointed types must serialize every field they carry, or \
+             resume silently diverges from the uninterrupted run."
+        }
+        Rule::CsvSchemaParity => {
+            "the CSV header, the record struct and the row encoder must \
+             agree column for column."
+        }
+        Rule::ConfigSurfaceParity => {
+            "config fields must round-trip through JSON emit/parse and the \
+             CLI override surface, or experiments silently drop settings."
+        }
+        Rule::TransitiveWallClock => {
+            "a wall-clock read is no safer two calls deep: any fn a \
+             determinism-critical surface can reach must not read \
+             Instant/SystemTime outside obs::wallclock.  The witness chain \
+             shows one shortest path from the surface fn to the read; fix \
+             the seed site, or justify it (or the root) with \
+             lint:allow(transitive-wall-clock)."
+        }
+        Rule::PanicReachability => {
+            "public fl/ and runtime/ API fns promise typed errors; this \
+             rule walks the call graph to find panic sites their callees \
+             can still reach.  The witness chain is one shortest path from \
+             the public fn to the panic."
+        }
+        Rule::PureLocalUpdate => {
+            "a LocalUpdateHandle::run impl is the unit of migration replay: \
+             it must be a pure function of (state, batch, lr), so no \
+             wall-clock, RNG-construction or ambient-state effect may be \
+             reachable from it at any depth."
+        }
+        Rule::StalePragma => {
+            "a lint:allow whose finding disappeared is dead weight that \
+             rots; delete it or justify keeping it."
+        }
+        Rule::Pragma => {
+            "suppressions are part of the contract surface: every \
+             lint:allow must name known rules and carry a reason."
+        }
+    }
 }
 
 fn print_report(report: &Report) {

@@ -5,16 +5,25 @@
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
 //!   "files_scanned": 42,
 //!   "findings": [
 //!     { "rule": "…", "file": "…", "line": 7,
 //!       "pragma": "none" | "allowed",
-//!       "message": "…", "snippet": "…" }
+//!       "message": "…", "snippet": "…",
+//!       "witness": [
+//!         { "fn": "Engine::load", "file": "…", "line": 12 }
+//!       ] }
 //!   ],
-//!   "summary": { "violations": 2, "suppressed": 5 }
+//!   "summary": { "violations": 2, "suppressed": 5,
+//!                "suppressed_by_rule": { "unwrap-in-library": 4 } }
 //! }
 //! ```
+//!
+//! `witness` is the interprocedural rules' call chain: each hop names
+//! a fn, its file, and — for intermediate hops — the line of the call
+//! into the *next* hop; the terminal hop's line is the effect site
+//! itself.  Local rules render an empty chain.
 //!
 //! `--baseline <file>` takes a previous JSON report and fails only on
 //! findings that are *new* relative to it.  Identity is the multiset
@@ -32,10 +41,11 @@ use std::collections::BTreeMap;
 
 use crate::{Diagnostic, Report};
 
-/// Schema version stamped into every JSON report.
-pub const VERSION: u64 = 1;
+/// Schema version stamped into every JSON report.  v2 added the
+/// per-finding `witness` chain and `summary.suppressed_by_rule`.
+pub const VERSION: u64 = 2;
 
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -84,7 +94,24 @@ pub fn render_json(report: &Report) -> String {
         out.push_str(&format!("      \"line\": {},\n", d.line));
         out.push_str(&format!("      \"pragma\": \"{pragma}\",\n"));
         out.push_str(&format!("      \"message\": \"{}\",\n", esc(&d.message)));
-        out.push_str(&format!("      \"snippet\": \"{}\"\n", esc(&d.snippet)));
+        out.push_str(&format!("      \"snippet\": \"{}\",\n", esc(&d.snippet)));
+        out.push_str("      \"witness\": [");
+        for (h, hop) in d.witness.iter().enumerate() {
+            if h > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n        {{ \"fn\": \"{}\", \"file\": \"{}\", \"line\": {} }}",
+                esc(&hop.func),
+                esc(&hop.file),
+                hop.line
+            ));
+        }
+        if d.witness.is_empty() {
+            out.push_str("]\n");
+        } else {
+            out.push_str("\n      ]\n");
+        }
         out.push_str("    }");
     }
     if findings.is_empty() {
@@ -92,17 +119,40 @@ pub fn render_json(report: &Report) -> String {
     } else {
         out.push_str("\n  ],\n");
     }
+    let by_rule = suppressed_by_rule(report);
     out.push_str("  \"summary\": {\n");
     out.push_str(&format!(
         "    \"violations\": {},\n",
         report.diagnostics.len()
     ));
     out.push_str(&format!(
-        "    \"suppressed\": {}\n",
+        "    \"suppressed\": {},\n",
         report.suppressed.len()
     ));
+    out.push_str("    \"suppressed_by_rule\": {");
+    for (k, (rule, n)) in by_rule.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n      \"{rule}\": {n}"));
+    }
+    if by_rule.is_empty() {
+        out.push_str("}\n");
+    } else {
+        out.push_str("\n    }\n");
+    }
     out.push_str("  }\n}\n");
     out
+}
+
+/// Suppression counts per rule id, sorted by id — the pragma-debt
+/// ledger the text summary and JSON both show.
+pub fn suppressed_by_rule(report: &Report) -> Vec<(&'static str, usize)> {
+    let mut by_rule: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for d in &report.suppressed {
+        *by_rule.entry(d.rule.id()).or_insert(0) += 1;
+    }
+    by_rule.into_iter().collect()
 }
 
 /// One baseline entry: the identity triple of a previous finding.
@@ -409,21 +459,31 @@ mod tests {
             rule,
             message: format!("{} message", rule.id()),
             snippet: snippet.to_string(),
+            witness: Vec::new(),
+        }
+    }
+
+    fn report(diagnostics: Vec<Diagnostic>, suppressed: Vec<Diagnostic>, files: usize) -> Report {
+        Report {
+            diagnostics,
+            suppressed,
+            files_scanned: files,
+            effects: crate::effects::EffectsSummary::default(),
         }
     }
 
     #[test]
     fn json_round_trips_through_own_parser() {
-        let report = Report {
-            diagnostics: vec![diag(
+        let report = report(
+            vec![diag(
                 Rule::FloatOrdering,
                 "rust/src/a.rs",
                 3,
                 "x.partial_cmp(&y) // \"quoted\"",
             )],
-            suppressed: vec![diag(Rule::UnwrapInLibrary, "rust/src/b.rs", 9, "v.unwrap()")],
-            files_scanned: 2,
-        };
+            vec![diag(Rule::UnwrapInLibrary, "rust/src/b.rs", 9, "v.unwrap()")],
+            2,
+        );
         let text = render_json(&report);
         let v = parse_json(&text).expect("own output parses");
         assert_eq!(v.get("version").and_then(Json::as_u64), Some(VERSION));
@@ -445,60 +505,106 @@ mod tests {
         let base = parse_baseline(&text).expect("baseline parses");
         assert_eq!(base.len(), 1);
         assert_eq!(base[0].rule, "float-ordering");
+        // The per-rule suppression ledger is in the summary.
+        let summary = v.get("summary").expect("summary");
+        let by_rule = summary.get("suppressed_by_rule").expect("by_rule");
+        assert_eq!(
+            by_rule.get("unwrap-in-library").and_then(Json::as_u64),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn witness_chains_round_trip_through_json() {
+        let mut d = diag(
+            Rule::TransitiveWallClock,
+            "rust/src/fl/runner.rs",
+            40,
+            "pub fn drive() {",
+        );
+        d.witness = vec![
+            crate::WitnessHop {
+                func: "drive".to_string(),
+                file: "rust/src/fl/runner.rs".to_string(),
+                line: 41,
+            },
+            crate::WitnessHop {
+                func: "Engine::compile_file".to_string(),
+                file: "rust/src/runtime/executor.rs".to_string(),
+                line: 115,
+            },
+        ];
+        let text = render_json(&report(vec![d], Vec::new(), 1));
+        let v = parse_json(&text).expect("parses");
+        let findings = match v.get("findings") {
+            Some(Json::Arr(items)) => items,
+            other => panic!("findings: {other:?}"),
+        };
+        let witness = match findings[0].get("witness") {
+            Some(Json::Arr(items)) => items,
+            other => panic!("witness: {other:?}"),
+        };
+        assert_eq!(witness.len(), 2);
+        assert_eq!(witness[0].get("fn").and_then(Json::as_str), Some("drive"));
+        assert_eq!(
+            witness[1].get("fn").and_then(Json::as_str),
+            Some("Engine::compile_file")
+        );
+        assert_eq!(witness[1].get("line").and_then(Json::as_u64), Some(115));
+        // Local findings carry an empty chain, and the baseline parser
+        // is witness-agnostic.
+        assert!(parse_baseline(&text).is_ok());
     }
 
     #[test]
     fn baseline_absorbs_old_but_not_new() {
-        let old = Report {
-            diagnostics: vec![diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 5, "v.unwrap()")],
-            suppressed: Vec::new(),
-            files_scanned: 1,
-        };
+        let old = report(
+            vec![diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 5, "v.unwrap()")],
+            Vec::new(),
+            1,
+        );
         let base = parse_baseline(&render_json(&old)).expect("baseline");
 
         // Same finding moved to another line: covered.
-        let moved = Report {
-            diagnostics: vec![diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 12, "v.unwrap()")],
-            suppressed: Vec::new(),
-            files_scanned: 1,
-        };
+        let moved = report(
+            vec![diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 12, "v.unwrap()")],
+            Vec::new(),
+            1,
+        );
         assert!(new_findings(&moved, &base).is_empty());
 
         // A second occurrence of the same snippet: multiset says new.
-        let doubled = Report {
-            diagnostics: vec![
+        let doubled = report(
+            vec![
                 diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 5, "v.unwrap()"),
                 diag(Rule::UnwrapInLibrary, "rust/src/fl/a.rs", 30, "v.unwrap()"),
             ],
-            suppressed: Vec::new(),
-            files_scanned: 1,
-        };
+            Vec::new(),
+            1,
+        );
         assert_eq!(new_findings(&doubled, &base).len(), 1);
 
         // A different rule on the same snippet: new.
-        let other_rule = Report {
-            diagnostics: vec![diag(Rule::FloatOrdering, "rust/src/fl/a.rs", 5, "v.unwrap()")],
-            suppressed: Vec::new(),
-            files_scanned: 1,
-        };
+        let other_rule = report(
+            vec![diag(Rule::FloatOrdering, "rust/src/fl/a.rs", 5, "v.unwrap()")],
+            Vec::new(),
+            1,
+        );
         assert_eq!(new_findings(&other_rule, &base).len(), 1);
     }
 
     #[test]
     fn baseline_rejects_other_versions() {
-        let text = "{\"version\": 2, \"findings\": []}";
+        let text = "{\"version\": 1, \"findings\": []}";
         assert!(parse_baseline(text).is_err());
     }
 
     #[test]
     fn empty_report_renders_empty_findings() {
-        let report = Report {
-            diagnostics: Vec::new(),
-            suppressed: Vec::new(),
-            files_scanned: 7,
-        };
+        let report = report(Vec::new(), Vec::new(), 7);
         let text = render_json(&report);
         assert!(text.contains("\"findings\": [],"), "{text}");
+        assert!(text.contains("\"suppressed_by_rule\": {}"), "{text}");
         let base = parse_baseline(&text).expect("parses");
         assert!(base.is_empty());
     }

@@ -32,7 +32,7 @@ use std::collections::BTreeSet;
 use crate::items::{self, FileItems};
 use crate::scope;
 use crate::tokenize::mask;
-use crate::{Diagnostic, Rule};
+use crate::{Diagnostic, Rule, WitnessHop};
 
 /// What linting one file produced.
 pub struct LintOutcome {
@@ -74,6 +74,10 @@ pub struct FileAnalysis {
     /// Indices into `allows` that suppressed at least one finding.
     used: BTreeSet<usize>,
     safety_ok: Vec<bool>,
+    /// Whether the whole file is test code ([`scope::is_test_path`]).
+    pub(crate) is_test_file: bool,
+    /// `#[cfg(test)]` regions as inclusive 0-based line ranges.
+    pub(crate) test_regions: Vec<(usize, usize)>,
 }
 
 impl FileAnalysis {
@@ -81,25 +85,56 @@ impl FileAnalysis {
     /// if an allow atom for the rule attaches to that line (all such
     /// atoms are marked used), a violation otherwise.
     pub fn report(&mut self, line_idx: usize, rule: Rule, message: String) {
+        self.report_witnessed(line_idx, rule, message, Vec::new());
+    }
+
+    /// [`report`](Self::report) with a witness call chain attached
+    /// (the interprocedural rules use this).
+    pub fn report_witnessed(
+        &mut self,
+        line_idx: usize,
+        rule: Rule,
+        message: String,
+        witness: Vec<WitnessHop>,
+    ) {
         let diag = Diagnostic {
             file: self.rel.clone(),
             line: line_idx + 1,
             rule,
             message,
             snippet: snippet(&self.raw, line_idx),
+            witness,
         };
-        let mut hit = false;
-        for (k, atom) in self.allows.iter().enumerate() {
-            if atom.attach == Some(line_idx) && atom.rule == rule.id() {
-                self.used.insert(k);
-                hit = true;
-            }
-        }
-        if hit {
+        if self.consume_allow(line_idx, rule.id()) {
             self.suppressed.push(diag);
         } else {
             self.diagnostics.push(diag);
         }
+    }
+
+    /// Mark every allow atom for `rule_id` attached to `line_idx` as
+    /// used, returning whether any existed.  The effect seeder calls
+    /// this directly: a justified pragma on a seed line keeps that
+    /// site from tainting every caller.
+    pub(crate) fn consume_allow(&mut self, line_idx: usize, rule_id: &str) -> bool {
+        let mut hit = false;
+        for (k, atom) in self.allows.iter().enumerate() {
+            if atom.attach == Some(line_idx) && atom.rule == rule_id {
+                self.used.insert(k);
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    /// Whether 0-based `line_idx` is test code (test file or inside a
+    /// `#[cfg(test)]` region).
+    pub(crate) fn line_is_test(&self, line_idx: usize) -> bool {
+        self.is_test_file
+            || self
+                .test_regions
+                .iter()
+                .any(|&(s, e)| s <= line_idx && line_idx <= e)
     }
 
     /// Sort both finding lists into (line, rule) order.
@@ -201,6 +236,8 @@ pub fn analyze(rel_path: &str, source: &str) -> FileAnalysis {
         allows,
         used: BTreeSet::new(),
         safety_ok,
+        is_test_file: file_is_test,
+        test_regions: regions.clone(),
     };
     local_rules(&mut fa, file_is_test, &regions);
     fa
@@ -343,6 +380,7 @@ pub fn stale_pragma_pass(fa: &mut FileAnalysis) {
                 rule: Rule::StalePragma,
                 message,
                 snippet: snippet(&fa.raw, line_idx),
+                witness: Vec::new(),
             };
             // Suppression: a stale-pragma atom attached to the same
             // code line as the stale atom.  Meta-round findings and
@@ -497,6 +535,7 @@ fn pragma_diag(rel: &str, line: usize, raw: &[String], message: &str) -> Diagnos
         rule: Rule::Pragma,
         message: message.to_string(),
         snippet: snippet(raw, line.saturating_sub(1)),
+        witness: Vec::new(),
     }
 }
 

@@ -58,6 +58,13 @@ pub fn rule_applies(rule: Rule, rel_path: &str) -> bool {
         | Rule::CsvSchemaParity
         | Rule::ConfigSurfaceParity
         | Rule::StalePragma => true,
+        // The interprocedural rules pick their own roots from the
+        // effects tables in `effects.rs` (surface lists, visibility,
+        // the LocalUpdateHandle anchor); path-wise they apply to the
+        // whole graph, which only indexes rust/src/**.
+        Rule::TransitiveWallClock
+        | Rule::PanicReachability
+        | Rule::PureLocalUpdate => rel.starts_with("rust/src/"),
         Rule::WallClockInSim => {
             rel.starts_with("rust/src/")
                 && !WALL_CLOCK_ALLOW.iter().any(|p| rel.starts_with(p))
@@ -107,6 +114,22 @@ pub fn describe(rule: Rule) -> &'static str {
         Rule::ConfigSurfaceParity => {
             "ExperimentConfig JSON emit/parse and CLI override arms, \
              CampaignSpec JSON emit/parse; whole-tree scans only"
+        }
+        Rule::TransitiveWallClock => {
+            "fns on the runner/session/aggregate, netsim/, metrics/, \
+             json/csv and runtime/params surfaces whose *callees* reach \
+             Instant/SystemTime (direct reads are wall-clock-in-sim's \
+             job); whole-tree scans only"
+        }
+        Rule::PanicReachability => {
+            "public fns in rust/src/fl/** and rust/src/runtime/** from \
+             which an unjustified panic site is reachable through at \
+             least one call; whole-tree scans only"
+        }
+        Rule::PureLocalUpdate => {
+            "every LocalUpdateHandle::run impl: no wall-clock, RNG or \
+             ambient-state effect reachable at any depth; whole-tree \
+             scans only"
         }
         Rule::StalePragma => {
             "every lint:allow pragma (an unused grant is a violation); \

@@ -1,0 +1,5 @@
+// Fixture: the leaf made total — no panic site anywhere on the chain.
+
+pub fn pick_first(v: &[f32]) -> f32 {
+    v.first().copied().unwrap_or(0.0)
+}

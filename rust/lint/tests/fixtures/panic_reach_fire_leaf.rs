@@ -1,0 +1,6 @@
+// Fixture: the panic leaf, linted as rust/src/data/fixture.rs where
+// unwrap-in-library does not apply.
+
+pub fn pick_first(v: &[f32]) -> f32 {
+    *v.first().unwrap()
+}

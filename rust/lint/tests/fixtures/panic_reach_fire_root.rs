@@ -1,0 +1,7 @@
+// Fixture: panic-reachability root (linted as rust/src/fl/fixture.rs).
+// The unwrap lives one call away in data/, outside the local unwrap
+// rule's scope — only the transitive rule connects them.
+
+pub fn api_mean(v: &[f32]) -> f32 {
+    pick_first(v)
+}

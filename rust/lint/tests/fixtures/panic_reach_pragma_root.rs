@@ -1,0 +1,7 @@
+// Fixture: the fire root with a justified grant on the public fn.
+
+// lint:allow(panic-reachability): callers pass compile-time non-empty
+// batches; the reachable unwrap is unreachable in practice.
+pub fn api_mean(v: &[f32]) -> f32 {
+    pick_first(v)
+}

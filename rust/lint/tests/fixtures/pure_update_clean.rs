@@ -1,0 +1,18 @@
+// Fixture: a pure LocalUpdateHandle::run impl — deterministic helper
+// chain, no effects at any depth.
+
+pub trait LocalUpdateHandle {
+    fn run(&self) -> u32;
+}
+
+pub struct Sgd;
+
+impl LocalUpdateHandle for Sgd {
+    fn run(&self) -> u32 {
+        step(41)
+    }
+}
+
+fn step(x: u32) -> u32 {
+    x + 1
+}

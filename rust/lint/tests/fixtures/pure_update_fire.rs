@@ -1,0 +1,24 @@
+// Fixture: a LocalUpdateHandle::run impl that reaches an
+// entropy-seeded RNG through a helper — pure-local-update fires with
+// a witness chain; no local rule knows about RNG construction.
+
+pub trait LocalUpdateHandle {
+    fn run(&self) -> u32;
+}
+
+pub struct Jittery;
+
+impl LocalUpdateHandle for Jittery {
+    fn run(&self) -> u32 {
+        jitter_seed()
+    }
+}
+
+fn jitter_seed() -> u32 {
+    let state = std::collections::hash_map::RandomState::new();
+    hash_of(&state)
+}
+
+fn hash_of(_s: &std::collections::hash_map::RandomState) -> u32 {
+    0
+}

@@ -1,0 +1,25 @@
+// Fixture: the fire impl with a justified grant at the impl's run
+// signature.
+
+pub trait LocalUpdateHandle {
+    fn run(&self) -> u32;
+}
+
+pub struct Jittery;
+
+impl LocalUpdateHandle for Jittery {
+    // lint:allow(pure-local-update): ablation-only handle, never used
+    // in replayed migrations; the jitter models stragglers.
+    fn run(&self) -> u32 {
+        jitter_seed()
+    }
+}
+
+fn jitter_seed() -> u32 {
+    let state = std::collections::hash_map::RandomState::new();
+    hash_of(&state)
+}
+
+fn hash_of(_s: &std::collections::hash_map::RandomState) -> u32 {
+    0
+}

@@ -1,0 +1,10 @@
+// Fixture: same call shape as transitive_wall_fire_leaf.rs but the
+// leaf never reads the clock — the whole chain is clean.
+
+pub fn stamp_all() -> u64 {
+    ticks()
+}
+
+fn ticks() -> u64 {
+    7
+}

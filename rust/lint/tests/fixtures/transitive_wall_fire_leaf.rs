@@ -1,0 +1,11 @@
+// Fixture: the wall-clock leaf, linted as rust/src/runtime/executor.rs
+// (allowlisted for the local rule — wall-clock-in-sim stays silent).
+
+pub fn stamp_all() -> u64 {
+    ticks()
+}
+
+fn ticks() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}

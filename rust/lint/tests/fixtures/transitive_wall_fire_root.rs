@@ -1,0 +1,8 @@
+// Fixture: interprocedural wall-clock root (linted as
+// rust/src/metrics/fixture.rs).  The clock read sits two calls away
+// in a locally-allowlisted file, so no local rule fires anywhere —
+// only transitive-wall-clock can see it.
+
+pub fn export_rounds() -> u64 {
+    stamp_all()
+}

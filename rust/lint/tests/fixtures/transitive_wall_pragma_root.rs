@@ -1,0 +1,8 @@
+// Fixture: the fire root with a justified grant at the root fn's
+// signature line (the other suppression point is the seed site).
+
+// lint:allow(transitive-wall-clock): export timing is log-only here;
+// the exported rows carry simulated time from NetSim.
+pub fn export_rounds() -> u64 {
+    stamp_all()
+}

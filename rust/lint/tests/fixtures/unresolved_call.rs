@@ -1,0 +1,7 @@
+// Fixture: a call the resolver cannot map to any in-tree fn — it must
+// land in the effects artifact's unresolved list, and no rule may
+// invent a finding for it.
+
+pub fn relay(v: &[f32]) -> f32 {
+    mystery_sink(v)
+}

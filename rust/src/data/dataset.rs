@@ -82,6 +82,8 @@ impl Dataset {
         assert!(!idx.is_empty() && idx.len() <= target);
         let mut full = idx.to_vec();
         while full.len() < target {
+            // lint:allow(panic-reachability): unreachable — the assert
+            // above guarantees idx is non-empty.
             full.push(*idx.last().unwrap());
         }
         (self.gather(&full), idx.len())

@@ -112,6 +112,8 @@ impl Engine {
             return Ok(hit.clone());
         }
         let path = self.manifest.file(file);
+        // lint:allow(transitive-wall-clock): compile timing is log-only
+        // and never enters reports or simulated time.
         let t = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);

@@ -106,7 +106,9 @@ pub fn build(p: &TopologyParams) -> Result<Topology> {
             for w in bs.windows(2) {
                 t.add_link(w[0], w[1], p.edge_mbps, p.edge_ms);
             }
-            t.add_link(*bs.last().unwrap(), cloud, p.backbone_mbps, p.backbone_ms);
+            if let Some(&tail) = bs.last() {
+                t.add_link(tail, cloud, p.backbone_mbps, p.backbone_ms);
+            }
         }
         TopologyKind::Hybrid => {
             // Chains of `chain_len`; chain heads fan into routers; routers
@@ -128,7 +130,8 @@ pub fn build(p: &TopologyParams) -> Result<Topology> {
                 // the backbone.
                 if ci + 1 < chains.len() {
                     t.add_link(
-                        *chain.last().unwrap(),
+                        // chunks() never yields an empty slice
+                        chain[chain.len() - 1],
                         chains[ci + 1][0],
                         p.edge_mbps,
                         p.edge_ms,

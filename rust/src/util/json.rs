@@ -479,7 +479,8 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let txt = std::str::from_utf8(&self.s[start..self.i]).unwrap();
+        let txt = std::str::from_utf8(&self.s[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
         txt.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

@@ -19,12 +19,18 @@ impl Default for Timer {
 
 impl Timer {
     pub fn new() -> Timer {
+        // lint:allow(transitive-wall-clock): phase timing is wall-clock
+        // observability by design and never feeds simulated time or
+        // report bits; NetSim owns the simulated clock.
         let now = Instant::now();
         Timer { start: now, laps: Vec::new(), last: now }
     }
 
     /// Record time since the previous lap (or start) under `name`.
     pub fn lap(&mut self, name: &str) -> Duration {
+        // lint:allow(transitive-wall-clock): same observability-only
+        // policy as `new` — lap times decorate logs and traces, never
+        // the deterministic outputs.
         let now = Instant::now();
         let d = now - self.last;
         self.last = now;
